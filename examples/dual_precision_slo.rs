@@ -1,0 +1,96 @@
+//! Dual-precision SLO study on the simulated H100 — an interactive
+//! version of Figure 1b with tunable load.
+//!
+//! Replays an Azure-like bursty trace slice against llama-3.1-8b (cost
+//! model) under the three policies and prints the TPOT distribution, SLO
+//! violations, and the controller's mode timeline.
+//!
+//! Run: `cargo run --release --offline --example dual_precision_slo
+//!       [-- --scale 0.16 --seconds 120 --model mistral-small-24b]`
+
+use nestedfp::coordinator::backend::SimBackend;
+use nestedfp::coordinator::engine::{Engine, EngineConfig};
+use nestedfp::coordinator::precision::{PrecisionPolicy, SloConfig};
+use nestedfp::gpusim::WeightFormat;
+use nestedfp::model::zoo;
+use nestedfp::trace::azure::{self, AzureTraceConfig};
+use nestedfp::trace::workload::{build_requests, poisson_arrivals, WorkloadConfig};
+use nestedfp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.get_f64("scale", 0.16);
+    let seconds = args.get_usize("seconds", 120);
+    let model = args.get_or("model", "llama31-8b").to_string();
+    let spec = zoo::find(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (see model::zoo)"))?;
+
+    println!("== dual_precision_slo: {model}, {seconds}s slice at {scale}x scale ==");
+    let cfg = AzureTraceConfig::default();
+    let rates = azure::generate_rate_series(&cfg);
+    let start = cfg.busy_minute_start - seconds / 2;
+    let slice = azure::downscale(&rates[start..start + seconds], scale);
+    let arrivals = poisson_arrivals(&slice, 33);
+    println!(
+        "workload: {} requests over {seconds}s (avg {:.1} req/s)",
+        arrivals.len(),
+        arrivals.len() as f64 / seconds as f64
+    );
+
+    let slo = SloConfig::default();
+    for (name, policy) in [
+        ("fp16-only      ", PrecisionPolicy::Fp16Only),
+        ("fp8-only       ", PrecisionPolicy::Fp8Only),
+        ("dual (NestedFP)", PrecisionPolicy::Dual),
+    ] {
+        let max_seq = 2048;
+        let wl = WorkloadConfig {
+            seed: 5,
+            input_len: 0,
+            output_len: 0,
+            chunk_align: 64,
+        };
+        let mut requests = build_requests(&arrivals, &wl, max_seq);
+        for r in &mut requests {
+            r.max_new_tokens = r.max_new_tokens.min(256);
+        }
+        let backend = SimBackend::new(
+            spec,
+            WeightFormat::Nested16,
+            WeightFormat::Nested8,
+            64,
+            max_seq,
+            64 * (max_seq / 16 + 1) * 2,
+        );
+        let mut engine = Engine::new(
+            backend,
+            EngineConfig {
+                policy,
+                slo,
+                physical_kv: false,
+                ..Default::default()
+            },
+        );
+        let mut report = engine.run(requests)?;
+        let tp = report.metrics.tpot_summary();
+        println!(
+            "{name}  p50 {:6.1} ms  p90 {:6.1} ms  p99 {:6.1} ms  viol {:>3}s  fp16-time {:>3.0}%  switches {}",
+            tp.p50 * 1e3,
+            tp.p90 * 1e3,
+            tp.p99 * 1e3,
+            report.metrics.slo_violation_seconds(&slo),
+            report.controller.fp16_fraction() * 100.0,
+            report.controller.switches,
+        );
+        if policy == PrecisionPolicy::Dual && !report.mode_timeline.is_empty() {
+            let line: Vec<String> = report
+                .mode_timeline
+                .iter()
+                .take(14)
+                .map(|&(t, fp8)| format!("{:.1}s->{}", t, if fp8 { "fp8" } else { "fp16" }))
+                .collect();
+            println!("    mode timeline: {}", line.join("  "));
+        }
+    }
+    Ok(())
+}

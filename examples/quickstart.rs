@@ -1,0 +1,91 @@
+//! Quickstart: load the NestedFP artifacts, run one decode step in every
+//! mode, and show the dual-precision property in action — the SAME weight
+//! store serves both FP16 (lossless) and FP8 execution.
+//!
+//! Run: `cargo run --release --offline --example quickstart`
+//! (requires `make artifacts` first)
+
+use std::path::Path;
+
+use nestedfp::runtime::{HostTensor, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+
+    println!("== NestedFP quickstart ==");
+    let rt = ModelRuntime::load(dir, &["fp16", "nested16", "nested8"], &["decode"])?;
+    let m = &rt.manifest.model;
+    println!(
+        "model: d_model={} layers={} heads={} vocab={} (train loss {:.3})",
+        m.d_model,
+        m.n_layers,
+        m.n_heads,
+        m.vocab,
+        rt.manifest.final_train_loss.unwrap_or(f64::NAN)
+    );
+    println!(
+        "weight store: {:.2} MiB nested planes (== one fp16 copy) vs {:.2} MiB to co-deploy fp16+fp8 separately",
+        rt.weights.nested_plane_bytes() as f64 / (1 << 20) as f64,
+        (rt.weights.f16_linear_bytes() + rt.weights.f16_linear_bytes() / 2) as f64
+            / (1 << 20) as f64,
+    );
+
+    // one decode step, batch 2, empty KV cache
+    let b = 2usize;
+    let (l, h, s, dh) = (m.n_layers, m.n_heads, m.max_seq, m.head_dim);
+    let tokens = HostTensor::from_i32(vec![b], &[b'C' as i32, b'A' as i32]);
+    let positions = HostTensor::from_i32(vec![b], &[0, 0]);
+    let kv = vec![0f32; b * l * h * s * dh];
+    let cache_k = HostTensor::from_f32(vec![b, l, h, s, dh], &kv);
+    let cache_v = HostTensor::from_f32(vec![b, l, h, s, dh], &kv);
+
+    let mut logits: Vec<(String, Vec<f32>)> = Vec::new();
+    for mode in ["fp16", "nested16", "nested8"] {
+        let step = rt.step("decode", mode, b)?;
+        let out = rt.run(
+            step,
+            &[
+                tokens.clone(),
+                positions.clone(),
+                cache_k.clone(),
+                cache_v.clone(),
+            ],
+        )?;
+        let lg = out.tensors[0].as_f32()?;
+        let argmax = lg[..m.vocab]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        println!(
+            "mode {mode:<9} exec {:>6} us   logits[0][..4] = {:?}   argmax = {argmax} ({:?})",
+            out.exec_micros,
+            &lg[..4],
+            argmax as u8 as char
+        );
+        logits.push((mode.to_string(), lg));
+    }
+
+    // the losslessness claim: fp16 and nested16 agree to f32 round-off
+    let a = &logits[0].1;
+    let nb = &logits[1].1;
+    let max_diff = a
+        .iter()
+        .zip(nb)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    println!("fp16 vs nested16 max |Δlogit| = {max_diff:.2e} (reconstruction is lossless)");
+    let c = &logits[2].1;
+    let rel = {
+        let num: f32 = a.iter().zip(c).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f32 = a.iter().map(|x| x * x).sum();
+        (num / den).sqrt()
+    };
+    println!("fp16 vs nested8  rel Δ = {rel:.3} (E4M3 quantization noise)");
+    Ok(())
+}

@@ -1,0 +1,473 @@
+"""AOT compile path: checkpoint -> NestedFP weight store + HLO artifacts.
+
+This is the *only* place Python runs; its outputs are everything the Rust
+serving binary needs:
+
+  artifacts/weights.bin     — the single NestedFP weight store (upper /
+                              lower uint8 planes + fp16 masters + norms)
+                              in a simple length-prefixed binary format
+                              (see rust/src/runtime/weights.rs).
+  artifacts/manifest.json   — executable index: for every (kind, mode,
+                              bucket) the HLO file, input signature and
+                              shapes; plus model config and act scales.
+  artifacts/<name>.hlo.txt  — HLO text per step function, lowered from
+                              jax.jit(...).lower(...) via stablehlo ->
+                              XlaComputation (text interchange because
+                              xla_extension 0.5.1 rejects jax>=0.5's
+                              64-bit-id protos; see /opt/xla-example).
+
+Step executables take (weight arrays..., dynamic inputs...) in manifest
+order. Weights are passed at call time — the Rust side owns the single
+16-bit store and feeds whichever executable the precision controller
+picked; that is the paper's zero-extra-memory dual-precision story.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model
+from .kernels import ref
+
+SEED = 20250710
+
+# batch buckets per step kind (fixed AOT shapes; the batcher pads to these)
+DECODE_BUCKETS = (1, 2, 4, 8)
+PREFILL_CHUNKS = (32, 64)
+MODES = ("fp16", "nested16", "nested8", "fp8base")
+
+# standalone GEMM artifacts for the runtime micro-bench (examples/kernel_tour)
+GEMM_SHAPES = ((32, 256, 256), (32, 704, 256))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# weights.bin
+# ---------------------------------------------------------------------------
+
+_DTYPE_CODES = {"u8": 0, "u16": 1, "f32": 2, "i32": 3}
+
+
+def write_weights_bin(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Format: magic 'NFPW', u32 version, u32 count, then per tensor:
+    u16 name_len, name bytes, u8 dtype code, u8 ndim, u32 dims...,
+    u64 byte_len, raw little-endian data."""
+    with open(path, "wb") as f:
+        f.write(b"NFPW")
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in sorted(tensors.items()):
+            if arr.dtype == np.uint8:
+                code, payload = 0, arr.tobytes()
+            elif arr.dtype == np.uint16 or arr.dtype == np.float16:
+                code, payload = 1, arr.view(np.uint16).tobytes()
+            elif arr.dtype == np.float32:
+                code, payload = 2, arr.tobytes()
+            elif arr.dtype == np.int32:
+                code, payload = 3, arr.tobytes()
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+# ---------------------------------------------------------------------------
+# Activation-scale calibration (static per-tensor, paper section 5.1)
+# ---------------------------------------------------------------------------
+
+
+def calibrate_act_scales(cfg, params, n_batches=4, batch=8, seqlen=48) -> dict[str, float]:
+    """Run the fp32 training forward on corpus batches, record per-linear
+    input absmax, return scale = 448 / absmax (with 10% headroom)."""
+    data = np.frombuffer(corpus.gen_corpus_bytes(SEED + 7, 200_000), np.uint8).astype(np.int32)
+    n_seq = len(data) // seqlen
+    data = data[: n_seq * seqlen].reshape(n_seq, seqlen)
+
+    maxes: dict[str, float] = {}
+
+    # re-implement the forward, capturing linear inputs (cheap: few batches)
+    def record(name, x):
+        m = float(jnp.max(jnp.abs(x)))
+        maxes[name] = max(maxes.get(name, 0.0), m)
+
+    for b in range(n_batches):
+        tokens = jnp.asarray(data[b * batch : (b + 1) * batch])
+        bsz, t = tokens.shape
+        x = params["embed"][tokens]
+        h, dh = cfg.n_heads, cfg.head_dim
+        positions = jnp.arange(t)
+        half = dh // 2
+        freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(cfg.rope_theta) / half))
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+        def rope_t(v):
+            v1, v2 = v[..., :half], v[..., half:]
+            return jnp.concatenate(
+                [v1 * cos[None, :, None, :] - v2 * sin[None, :, None, :],
+                 v1 * sin[None, :, None, :] + v2 * cos[None, :, None, :]], axis=-1)
+
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        for i, layer in enumerate(params["layers"]):
+            y = model.rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+            for nm in ("wq", "wk", "wv"):
+                record(f"layers.{i}.{nm}", y)
+            q = (y @ layer["wq"].T).reshape(bsz, t, h, dh)
+            k = (y @ layer["wk"].T).reshape(bsz, t, h, dh)
+            v = (y @ layer["wv"].T).reshape(bsz, t, h, dh)
+            q, k = rope_t(q), rope_t(k)
+            scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+            scores = jnp.where(mask[None, None], scores, -1e30)
+            ctx = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v).reshape(bsz, t, cfg.d_model)
+            record(f"layers.{i}.wo", ctx)
+            x = x + ctx @ layer["wo"].T
+            y = model.rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+            record(f"layers.{i}.w_gate", y)
+            record(f"layers.{i}.w_up", y)
+            g = y @ layer["w_gate"].T
+            u = y @ layer["w_up"].T
+            act = jax.nn.silu(g) * u
+            record(f"layers.{i}.w_down", act)
+            x = x + act @ layer["w_down"].T
+
+    return {
+        name: 448.0 / (m * 1.1) if m > 0 else 1.0
+        for name, m in maxes.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def weight_input_order(cfg) -> list[tuple[str, str]]:
+    """Deterministic (tensor_name, role) order of weight inputs shared by
+    all executables of a given mode. role in {f16, upper, lower, norm}."""
+    order: list[tuple[str, str]] = [("embed", "f16")]
+    for i in range(cfg.n_layers):
+        order.append((f"layers.{i}.attn_norm", "norm"))
+        order.append((f"layers.{i}.mlp_norm", "norm"))
+        for nm in model.LINEAR_NAMES:
+            order.append((f"layers.{i}.{nm}", "linear"))
+    order.append(("final_norm", "norm"))
+    order.append(("lm_head", "f16"))
+    return order
+
+
+def mode_weight_inputs(cfg, serving: dict, mode: str) -> list[tuple[str, np.ndarray]]:
+    """Flat list of (input_name, example_array) for a mode, in order."""
+    out: list[tuple[str, np.ndarray]] = []
+    for name, role in weight_input_order(cfg):
+        if role in ("f16",):
+            out.append((name, np.asarray(serving[name]).view(np.uint16)))
+        elif role == "norm":
+            out.append((name, np.asarray(serving[name])))
+        else:  # linear
+            exception = bool(serving[f"{name}.exception"])
+            if mode == "fp16" or exception:
+                out.append((f"{name}.f16", np.asarray(serving[f"{name}.f16"]).view(np.uint16)))
+            elif mode == "nested16":
+                out.append((f"{name}.upper", np.asarray(serving[f"{name}.upper"])))
+                out.append((f"{name}.lower", np.asarray(serving[f"{name}.lower"])))
+            elif mode == "nested8":
+                out.append((f"{name}.upper", np.asarray(serving[f"{name}.upper"])))
+            elif mode == "fp8base":
+                out.append((f"{name}.fq16", np.asarray(serving[f"{name}.fq16"]).view(np.uint16)))
+            else:
+                raise ValueError(mode)
+    return out
+
+
+def rebuild_weights(cfg, serving: dict, mode: str, arrays: list[jnp.ndarray]) -> dict:
+    """Inverse of mode_weight_inputs: reassemble the weights dict the model
+    expects from the flat traced arrays (f16 views arrive as u16)."""
+    w: dict = {}
+    it = iter(arrays)
+    for name, role in weight_input_order(cfg):
+        if role == "f16":
+            w[name] = next(it).view(jnp.float16)
+        elif role == "norm":
+            w[name] = next(it)
+        else:
+            exception = bool(serving[f"{name}.exception"])
+            shape = serving[f"{name}.f16"].shape
+            zeros8 = jnp.zeros(shape, jnp.uint8)
+            zeros16 = jnp.zeros(shape, jnp.float16)
+            if mode == "fp16" or exception:
+                w[f"{name}.f16"] = next(it).view(jnp.float16)
+                w[f"{name}.fq16"] = zeros16
+                w[f"{name}.upper"] = zeros8
+                w[f"{name}.lower"] = zeros8
+            elif mode == "nested16":
+                w[f"{name}.f16"] = zeros16
+                w[f"{name}.fq16"] = zeros16
+                w[f"{name}.upper"] = next(it)
+                w[f"{name}.lower"] = next(it)
+            elif mode == "nested8":
+                w[f"{name}.f16"] = zeros16
+                w[f"{name}.fq16"] = zeros16
+                w[f"{name}.upper"] = next(it)
+                w[f"{name}.lower"] = zeros8
+            else:  # fp8base
+                w[f"{name}.f16"] = zeros16
+                w[f"{name}.fq16"] = next(it).view(jnp.float16)
+                w[f"{name}.upper"] = zeros8
+                w[f"{name}.lower"] = zeros8
+            w[f"{name}.exception"] = exception
+    # rename flat keys to the names model.py expects
+    out = {}
+    for key, val in w.items():
+        out[key] = val
+    return out
+
+
+def _spec(arr) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(np.asarray(arr).shape, np.asarray(arr).dtype)
+
+
+def lower_step(cfg, serving, act_scales, mode: str, kind: str, size: int,
+               use_pallas: bool) -> tuple[str, dict]:
+    """Lower one step function; returns (hlo_text, signature dict)."""
+    l, h, s, dh = cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim
+    winputs = mode_weight_inputs(cfg, serving, mode)
+    wspecs = [_spec(a) for _, a in winputs]
+    scales = act_scales if mode in ("nested8", "fp8base") else None
+
+    if kind == "decode":
+        b = size
+        dyn_specs = [
+            jax.ShapeDtypeStruct((b,), jnp.int32),            # tokens
+            jax.ShapeDtypeStruct((b,), jnp.int32),            # positions
+            jax.ShapeDtypeStruct((b, l, h, s, dh), jnp.float32),  # cache_k
+            jax.ShapeDtypeStruct((b, l, h, s, dh), jnp.float32),  # cache_v
+        ]
+
+        def fn(*args):
+            warrs = list(args[: len(wspecs)])
+            tokens, positions, ck, cv = args[len(wspecs):]
+            weights = rebuild_weights(cfg, serving, mode, warrs)
+            logits, nk, nv = model.decode_step(
+                cfg, weights, tokens, positions, ck, cv, mode, scales, use_pallas
+            )
+            return (logits, nk, nv)
+
+    elif kind == "prefill":
+        t = size
+        dyn_specs = [
+            jax.ShapeDtypeStruct((t,), jnp.int32),            # tokens
+            jax.ShapeDtypeStruct((), jnp.int32),              # start_pos
+            jax.ShapeDtypeStruct((l, h, s, dh), jnp.float32),  # cache_k
+            jax.ShapeDtypeStruct((l, h, s, dh), jnp.float32),  # cache_v
+        ]
+
+        def fn(*args):
+            warrs = list(args[: len(wspecs)])
+            tokens, start, ck, cv = args[len(wspecs):]
+            weights = rebuild_weights(cfg, serving, mode, warrs)
+            logits, nk, nv = model.prefill_step(
+                cfg, weights, tokens, start, ck, cv, mode, scales, use_pallas
+            )
+            return (logits, nk, nv)
+
+    else:
+        raise ValueError(kind)
+
+    lowered = jax.jit(fn).lower(*wspecs, *dyn_specs)
+    sig = {
+        "kind": kind,
+        "mode": mode,
+        "size": size,
+        "weight_inputs": [
+            {"name": n, "shape": list(np.asarray(a).shape),
+             "dtype": str(np.asarray(a).dtype)}
+            for n, a in winputs
+        ],
+        "dynamic_inputs": [
+            {"shape": list(sp.shape), "dtype": str(np.dtype(sp.dtype))}
+            for sp in dyn_specs
+        ],
+        "outputs": ["logits", "new_k", "new_v"],
+    }
+    return to_hlo_text(lowered), sig
+
+
+def lower_gemm(cfg, serving, mode: str, m: int, n: int, k: int, use_pallas: bool):
+    """Standalone GEMM artifact over layer-0 wq-shaped planes (runtime
+    micro-bench / kernel_tour example)."""
+    name = "layers.0.wq" if (n, k) == (cfg.d_model, cfg.d_model) else "layers.0.w_gate"
+    up = np.asarray(serving[f"{name}.upper"])
+    lo = np.asarray(serving[f"{name}.lower"])
+    w16 = np.asarray(serving[f"{name}.f16"]).view(np.uint16)
+    assert up.shape == (n, k), (up.shape, (n, k))
+
+    if mode == "nested16":
+        def fn(x, u, lw):
+            if use_pallas:
+                from .kernels import nested as knl
+                return (knl.nested_fp16_gemm(x, u, lw, block_m=min(m, 32)),)
+            return (ref.gemm_fp16_nested(x, u, lw),)
+        specs = [
+            jax.ShapeDtypeStruct((m, k), jnp.float16),
+            jax.ShapeDtypeStruct((n, k), jnp.uint8),
+            jax.ShapeDtypeStruct((n, k), jnp.uint8),
+        ]
+    elif mode == "nested8":
+        def fn(x, u):
+            if use_pallas:
+                from .kernels import nested as knl
+                return (knl.nested_fp8_gemm(x, u, block_m=min(m, 32)),)
+            w8 = ref.upper_to_weight_f32(u)
+            return (jnp.dot(x, w8.T, preferred_element_type=jnp.float32),)
+        specs = [
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((n, k), jnp.uint8),
+        ]
+    else:  # fp16
+        def fn(x, w_u16):
+            return (ref.gemm_fp16_plain(x, w_u16.view(jnp.float16)),)
+        specs = [
+            jax.ShapeDtypeStruct((m, k), jnp.float16),
+            jax.ShapeDtypeStruct((n, k), jnp.uint16),
+        ]
+    lowered = jax.jit(fn).lower(*specs)
+    sig = {
+        "kind": "gemm", "mode": mode, "m": m, "n": n, "k": k,
+        # distinguish gemm shapes via size (= N); all inputs are dynamic
+        "size": n,
+        "weight_name": name,
+        "weight_inputs": [],
+        "dynamic_inputs": [
+            {"shape": list(sp.shape), "dtype": str(np.dtype(sp.dtype))}
+            for sp in specs
+        ],
+    }
+    return to_hlo_text(lowered), sig
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip pallas kernels in step functions (ref path; "
+                         "identical numerics, quicker lowering)")
+    ap.add_argument("--train-steps", type=int, default=2000)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    cfg = model.ModelConfig()
+
+    ckpt_path = args.checkpoint or os.path.join(out, "checkpoint.npz")
+    if not os.path.exists(ckpt_path):
+        print(f"checkpoint {ckpt_path} missing; training {args.train_steps} steps...",
+              flush=True)
+        from . import train as train_mod
+        params, losses = train_mod.train(cfg, args.train_steps)
+        flat = train_mod.flatten_params(params)
+        flat["__losses__"] = np.asarray(losses, np.float32)
+        np.savez(ckpt_path, **flat)
+    flat = dict(np.load(ckpt_path))
+    losses = flat.pop("__losses__", None)
+    from .train import unflatten_params
+    params = unflatten_params(flat, cfg)
+
+    print("calibrating activation scales...", flush=True)
+    act_scales = calibrate_act_scales(cfg, params)
+
+    print("building serving weight store...", flush=True)
+    serving = model.to_serving_weights(params)
+
+    # ---- weights.bin -----------------------------------------------------
+    tensors: dict[str, np.ndarray] = {}
+    exceptions: dict[str, bool] = {}
+    for key, val in serving.items():
+        if key.endswith(".exception"):
+            exceptions[key[: -len(".exception")]] = bool(val)
+            continue
+        arr = np.asarray(val)
+        tensors[key] = arr
+    write_weights_bin(os.path.join(out, "weights.bin"), tensors)
+
+    # ---- executables ------------------------------------------------------
+    manifest: dict = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "head_dim": cfg.head_dim,
+        },
+        "seed": SEED,
+        "act_scales": act_scales,
+        "exception_layers": {k: v for k, v in exceptions.items() if v},
+        "decode_buckets": list(DECODE_BUCKETS),
+        "prefill_chunks": list(PREFILL_CHUNKS),
+        "modes": list(MODES),
+        "executables": [],
+        "final_train_loss": float(losses[-1]) if losses is not None else None,
+    }
+
+    use_pallas = not args.fast
+    jobs = []
+    for mode in MODES:
+        for b in DECODE_BUCKETS:
+            jobs.append(("decode", mode, b))
+        for t in PREFILL_CHUNKS:
+            jobs.append(("prefill", mode, t))
+
+    for kind, mode, size in jobs:
+        name = f"{kind}_{mode}_b{size}"
+        print(f"lowering {name} ...", flush=True)
+        hlo, sig = lower_step(cfg, serving, act_scales, mode, kind, size, use_pallas)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out, path), "w") as f:
+            f.write(hlo)
+        sig["path"] = path
+        manifest["executables"].append(sig)
+
+    for mode in MODES:
+        for (m, n, k) in GEMM_SHAPES:
+            name = f"gemm_{mode}_m{m}n{n}k{k}"
+            print(f"lowering {name} ...", flush=True)
+            hlo, sig = lower_gemm(cfg, serving, mode, m, n, k, use_pallas)
+            path = f"{name}.hlo.txt"
+            with open(os.path.join(out, path), "w") as f:
+                f.write(hlo)
+            sig["path"] = path
+            manifest["executables"].append(sig)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['executables'])} executables + weights.bin + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Synthetic training/eval corpus for the in-repo tiny model.
+
+Three byte-level "downstream tasks" stand in for the paper's Minerva Math
+/ MMLU-Pro / BBH (see DESIGN.md section 2 for the substitution argument):
+
+  copy  —  "C:abcd=abcd;"            (sequence fidelity)
+  sort  —  "S:dcba=abcd;"            (symbol manipulation)
+  add   —  "A:12+34=46;"             (2-digit arithmetic)
+
+The grammar is deliberately tiny and *shared verbatim* with the Rust eval
+harness (rust/src/eval/tasks.rs): both sides generate the same prompts
+from the same PCG64 stream so accuracy numbers are comparable.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# PCG64 (XSL-RR 128/64) — mirror of rust/src/util/rng.rs so prompt streams
+# match bit-for-bit across the language boundary.
+# ---------------------------------------------------------------------------
+
+_MASK128 = (1 << 128) - 1
+_PCG_MULT = 0x2360ED051FC65DA44385DF649FCCF645
+_DEFAULT_STREAM = 0xDA3E39CB94B95BDB
+
+
+class Pcg64:
+    def __init__(self, seed: int, stream: int = _DEFAULT_STREAM):
+        self.inc = ((stream << 1) | 1) & _MASK128
+        self.state = 0
+        self.state = (self.state * _PCG_MULT + self.inc) & _MASK128
+        self.state = (self.state + seed) & _MASK128
+        self.state = (self.state * _PCG_MULT + self.inc) & _MASK128
+
+    def next_u64(self) -> int:
+        self.state = (self.state * _PCG_MULT + self.inc) & _MASK128
+        rot = self.state >> 122
+        xored = ((self.state >> 64) ^ self.state) & ((1 << 64) - 1)
+        if rot == 0:
+            return xored
+        return ((xored >> rot) | (xored << (64 - rot))) & ((1 << 64) - 1)
+
+    def range(self, lo: int, hi: int) -> int:
+        span = hi - lo
+        zone = ((1 << 64) - 1) - (((1 << 64) - 1) % span)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return lo + v % span
+
+
+LETTERS = "abcdefghijklmnopqrstuvwxyz"
+TASKS = ("copy", "sort", "add")
+
+
+def gen_example(rng: Pcg64, task: str) -> tuple[str, str]:
+    """Returns (prompt, answer); full training line is prompt+answer."""
+    if task == "copy":
+        n = rng.range(3, 7)
+        s = "".join(LETTERS[rng.range(0, 26)] for _ in range(n))
+        return f"C:{s}=", f"{s};"
+    if task == "sort":
+        n = rng.range(3, 7)
+        s = "".join(LETTERS[rng.range(0, 26)] for _ in range(n))
+        return f"S:{s}=", "".join(sorted(s)) + ";"
+    if task == "add":
+        a = rng.range(0, 100)
+        b = rng.range(0, 100)
+        return f"A:{a}+{b}=", f"{a + b};"
+    raise ValueError(task)
+
+
+def gen_line(rng: Pcg64) -> str:
+    task = TASKS[rng.range(0, 3)]
+    p, a = gen_example(rng, task)
+    return p + a
+
+
+def gen_corpus_bytes(seed: int, n_bytes: int) -> bytes:
+    """Concatenated task lines, exactly n_bytes long."""
+    rng = Pcg64(seed)
+    parts: list[str] = []
+    total = 0
+    while total < n_bytes:
+        line = gen_line(rng)
+        parts.append(line)
+        total += len(line)
+    return "".join(parts).encode("ascii")[:n_bytes]
+
+
+def eval_prompts(seed: int, task: str, n: int) -> list[tuple[str, str]]:
+    """Held-out eval set (seed disjoint from training by convention:
+    training uses seed, eval uses seed+1000+task index)."""
+    rng = Pcg64(seed + 1000 + TASKS.index(task))
+    return [gen_example(rng, task) for _ in range(n)]

@@ -1,0 +1,155 @@
+"""Pure-jnp reference oracles for the NestedFP format and GEMMs.
+
+Everything here is the *specification*: the Pallas kernels in
+``nested.py`` and the Rust implementation (``rust/src/format``) are both
+tested against these functions (and against each other through the
+exhaustive bit sweeps in ``python/tests``).
+
+Bit layout recap (paper section 4.2):
+
+  FP16 (E5M10):   S EEEEE MMMMMMMMMM
+  upper (E4M3):   S E[2:5] M'[1:3]     -- RNE-rounded 3-bit mantissa,
+                                          value == fp16 * 2^8 as E4M3
+  lower:          M[3:10]              -- MSB is the pre-rounding M3
+                                          (the checksum bit)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Decomposition / reconstruction on uint16 bit patterns
+# ---------------------------------------------------------------------------
+
+
+def is_eligible_u16(bits: jnp.ndarray) -> jnp.ndarray:
+    """Eligibility mask (|v| <= 1.75) on raw fp16 bit patterns (uint16)."""
+    bits = bits.astype(jnp.uint32)
+    e = (bits >> 10) & 0x1F
+    m = bits & 0x3FF
+    return (e < 15) | ((e == 15) & (m <= 0x300))
+
+
+def decompose_u16(bits: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split eligible fp16 bit patterns into (upper, lower) uint8 planes.
+
+    Round-to-nearest-even on the dropped 7 mantissa bits, applied to the
+    7-bit integer E[2:5]||M[1:3] so carries propagate into the exponent.
+    """
+    b = bits.astype(jnp.uint32)
+    s = (b >> 15) & 1
+    base = (b >> 7) & 0x7F
+    rem = b & 0x7F
+    round_up = (rem > 64) | ((rem == 64) & ((base & 1) == 1))
+    upper7 = base + round_up.astype(jnp.uint32)
+    upper = (s << 7) | upper7
+    lower = b & 0xFF
+    return upper.astype(jnp.uint8), lower.astype(jnp.uint8)
+
+
+def reconstruct_u16(upper: jnp.ndarray, lower: jnp.ndarray) -> jnp.ndarray:
+    """Branch-free lossless reconstruction (paper Fig. 6) -> uint16 bits."""
+    u = upper.astype(jnp.uint32)
+    low = lower.astype(jnp.uint32)
+    s = (u >> 7) & 1
+    m3 = (low >> 7) & 1
+    corrected = (u & 0x7F) - m3  # cannot underflow for valid encodings
+    top6 = (corrected >> 1) & 0x3F
+    bits = (s << 15) | (top6 << 8) | low
+    return bits.astype(jnp.uint16)
+
+
+def decompose_f16(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Decompose an fp16 array into (upper, lower) uint8 planes."""
+    assert w.dtype == jnp.float16, w.dtype
+    return decompose_u16(w.view(jnp.uint16))
+
+
+def reconstruct_f16(upper: jnp.ndarray, lower: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct fp16 values from the two planes."""
+    return reconstruct_u16(upper, lower).view(jnp.float16)
+
+
+# ---------------------------------------------------------------------------
+# E4M3 semantics of the upper plane (FP8 path)
+# ---------------------------------------------------------------------------
+
+
+def e4m3_decode_u8(codes: jnp.ndarray) -> jnp.ndarray:
+    """Decode OCP E4M3 bytes to f32 (S.1111.111 -> NaN)."""
+    c = codes.astype(jnp.uint32)
+    s = jnp.where(((c >> 7) & 1) == 1, -1.0, 1.0).astype(jnp.float32)
+    e = ((c >> 3) & 0xF).astype(jnp.int32)
+    m = (c & 0x7).astype(jnp.float32)
+    normal = (1.0 + m / 8.0) * jnp.exp2((e - 7).astype(jnp.float32))
+    subnormal = (m / 8.0) * jnp.exp2(jnp.float32(-6))
+    v = jnp.where(e == 0, subnormal, normal)
+    v = jnp.where((e == 0xF) & (c & 0x7 == 7), jnp.nan, v)
+    return s * v
+
+
+def upper_to_weight_f32(upper: jnp.ndarray) -> jnp.ndarray:
+    """FP8-path weight values: E4M3(upper) * 2^-8."""
+    return e4m3_decode_u8(upper) * jnp.float32(2.0**-8)
+
+
+def e4m3_fake_quant(x: jnp.ndarray) -> jnp.ndarray:
+    """RNE quantize-dequantize of f32 values onto the E4M3 grid with
+    saturation to +-448 (per-element; scaling handled by the caller)."""
+    x = x.astype(jnp.float32)
+    sat = jnp.clip(x, -448.0, 448.0)
+    a = jnp.abs(sat)
+    # exponent of the E4M3 bucket; subnormal floor at 2^-6
+    e = jnp.floor(jnp.log2(jnp.maximum(a, jnp.float32(1e-30))))
+    e = jnp.clip(e, -6.0, 8.0)
+    q = jnp.exp2(e - 3.0)  # ulp = 2^(e-3) for a 3-bit mantissa
+    # round-to-nearest-even in units of the ulp (jnp.round is RNE)
+    k = a / q
+    kr = jnp.round(k)
+    # a value exactly at a bucket's top edge (k == 16) carries into the next
+    # exponent; kr*q still represents it exactly, no special case needed.
+    out = jnp.sign(sat) * kr * q
+    return jnp.where(a == 0.0, 0.0 * sat, out).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Reference GEMMs
+#
+# Activations are [M, K]; weights are stored output-major [N, K] as in the
+# paper (and in every LLM serving stack), so GEMM computes x @ w.T.
+# ---------------------------------------------------------------------------
+
+
+def gemm_fp16_plain(x: jnp.ndarray, w_f16: jnp.ndarray) -> jnp.ndarray:
+    """Baseline FP16 GEMM: x [M,K] times w [N,K] -> [M,N] f32 accumulate."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w_f16.astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gemm_fp16_nested(x: jnp.ndarray, upper: jnp.ndarray, lower: jnp.ndarray) -> jnp.ndarray:
+    """NestedFP16 GEMM reference: reconstruct then matmul. Must be
+    *bitwise identical* to gemm_fp16_plain on the original weights."""
+    w = reconstruct_f16(upper, lower)
+    return gemm_fp16_plain(x, w)
+
+
+def act_scale_per_tensor(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor activation scale: 448 / absmax (paper section 5.1)."""
+    m = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.where(m > 0, 448.0 / m, 1.0).astype(jnp.float32)
+
+
+def gemm_fp8_nested(
+    x: jnp.ndarray, upper: jnp.ndarray, act_scale: jnp.ndarray | float = 1.0
+) -> jnp.ndarray:
+    """NestedFP8 GEMM reference: absmax-quantized activations (per-tensor
+    scale, computed offline as the paper does) times the upper-plane
+    weights at the global 2^-8 scale."""
+    scale = jnp.asarray(act_scale, dtype=jnp.float32)
+    xs = e4m3_fake_quant(x.astype(jnp.float32) * scale) / scale
+    w8 = upper_to_weight_f32(upper)
+    return jnp.dot(xs, w8.T, preferred_element_type=jnp.float32)

@@ -1,0 +1,513 @@
+"""Layer-2: the JAX transformer whose linear layers consume NestedFP.
+
+A small Llama-style decoder (RMSNorm, RoPE, SwiGLU MLP) sized so the whole
+serving stack runs comfortably on the CPU PJRT client while still being a
+*real* autoregressive LM (it is trained in-repo by ``train.py``).
+
+Three linear-layer execution modes, matching the paper's comparison:
+
+* ``fp16``    — plain FP16 weights (the torch.matmul/cuBLAS baseline).
+* ``nested16``— weights stored as NestedFP (upper, lower) uint8 planes;
+                reconstructed on the fly by the Pallas kernel. Bitwise
+                identical outputs to ``fp16`` (the losslessness claim).
+* ``nested8`` — FP8 path: only the upper plane is read; activations are
+                quantized per-tensor with *static* scales calibrated
+                offline (the paper's activation-scaling configuration).
+* ``fp8base`` — the paper's FP8 *baseline* (Tables 1-2): per-channel
+                absmax E4M3 weight fake-quant (baked offline into an fp16
+                plane) + the same per-tensor activation quantization.
+
+The step functions (``prefill_step``, ``decode_step``) are pure, take
+weights as explicit inputs (the Rust side owns the single weight store),
+and are AOT-lowered per (mode, batch bucket) by ``aot.py``.
+
+Exception layers: a layer whose weights exceed |1.75| cannot be nested and
+stays in plain FP16 in *every* mode (paper section 4.2 "Handling Exception
+Layers"). The trained tiny model has no such layers, but the machinery is
+exercised by tests and by the model-zoo analysis on the Rust side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import nested as knl
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-Llama configuration (defaults are the in-repo trained model)."""
+
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 704
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def linear_shapes(self) -> dict[str, tuple[int, int]]:
+        """[N, K] shapes of every linear-layer kind (GEMM1..4 analog)."""
+        d, f = self.d_model, self.d_ff
+        return {
+            "wq": (d, d),
+            "wk": (d, d),
+            "wv": (d, d),
+            "wo": (d, d),
+            "w_gate": (f, d),
+            "w_up": (f, d),
+            "w_down": (d, f),
+        }
+
+
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (fp32 master; train.py optimizes these)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    """Scaled-init fp32 parameters."""
+    keys = jax.random.split(key, cfg.n_layers * len(LINEAR_NAMES) + 2)
+    ki = iter(range(len(keys)))
+    d = cfg.d_model
+
+    def dense(k, n, kk, scale):
+        return jax.random.normal(keys[k], (n, kk), jnp.float32) * scale
+
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[next(ki)], (cfg.vocab, d), jnp.float32) * 0.02,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    out_scale = 0.02 / (2.0 * cfg.n_layers) ** 0.5
+    for _ in range(cfg.n_layers):
+        layer = {
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(ki), d, d, 0.02),
+            "wk": dense(next(ki), d, d, 0.02),
+            "wv": dense(next(ki), d, d, 0.02),
+            "wo": dense(next(ki), d, d, out_scale),
+            "w_gate": dense(next(ki), cfg.d_ff, d, 0.02),
+            "w_up": dense(next(ki), cfg.d_ff, d, 0.02),
+            "w_down": dense(next(ki), d, cfg.d_ff, out_scale),
+        }
+        params["layers"].append(layer)
+    params["lm_head"] = jax.random.normal(keys[next(ki)], (cfg.vocab, d), jnp.float32) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Serving-format weights
+# ---------------------------------------------------------------------------
+
+
+def to_serving_weights(params: dict[str, Any]) -> dict[str, Any]:
+    """Convert fp32 training params into the serving store:
+
+    linear layers -> fp16 master + NestedFP (upper, lower) planes,
+    everything else -> fp16/fp32 as appropriate.
+
+    Returns a dict with, per layer i and linear name L:
+      ``layers.i.L.f16``   uint16 view  (plain fp16 weights)
+      ``layers.i.L.upper`` uint8        (NestedFP upper plane)
+      ``layers.i.L.lower`` uint8        (NestedFP lower plane)
+      ``layers.i.L.exception`` bool     (True -> not nestable, FP16 only)
+    plus embed / norms / lm_head.
+    """
+    out: dict[str, Any] = {}
+    out["embed"] = params["embed"].astype(jnp.float16)
+    out["final_norm"] = params["final_norm"].astype(jnp.float32)
+    out["lm_head"] = params["lm_head"].astype(jnp.float16)
+    for i, layer in enumerate(params["layers"]):
+        out[f"layers.{i}.attn_norm"] = layer["attn_norm"].astype(jnp.float32)
+        out[f"layers.{i}.mlp_norm"] = layer["mlp_norm"].astype(jnp.float32)
+        for name in LINEAR_NAMES:
+            w16 = layer[name].astype(jnp.float16)
+            eligible = bool(jnp.all(ref.is_eligible_u16(w16.view(jnp.uint16))))
+            out[f"layers.{i}.{name}.f16"] = w16
+            out[f"layers.{i}.{name}.exception"] = not eligible
+            # FP8-baseline plane: per-channel absmax E4M3 fake-quant of the
+            # fp16 weights, stored as fp16 (the numerics the baseline GEMM
+            # sees on FP8 tensor cores)
+            wf = w16.astype(jnp.float32)
+            absmax = jnp.max(jnp.abs(wf), axis=1, keepdims=True)
+            scale = jnp.where(absmax > 0, 448.0 / absmax, 1.0)
+            fq = ref.e4m3_fake_quant(wf * scale) / scale
+            out[f"layers.{i}.{name}.fq16"] = fq.astype(jnp.float16)
+            if eligible:
+                up, lo = ref.decompose_f16(w16)
+            else:
+                # exception layer: planes still emitted (unused) to keep a
+                # uniform artifact layout; flagged so no mode reads them.
+                up = jnp.zeros(w16.shape, jnp.uint8)
+                lo = jnp.zeros(w16.shape, jnp.uint8)
+            out[f"layers.{i}.{name}.upper"] = up
+            out[f"layers.{i}.{name}.lower"] = lo
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Linear layer dispatch
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(x: jnp.ndarray, multiple: int) -> tuple[jnp.ndarray, int]:
+    m = x.shape[0]
+    pad = (-m) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def linear(
+    x: jnp.ndarray,
+    wrec: dict[str, jnp.ndarray],
+    mode: str,
+    act_scale: float | None = None,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Apply one linear layer in the given execution mode.
+
+    ``x`` is [M, K] (f16 storage, f32 accumulate); returns [M, N] f32.
+    ``wrec`` holds the planes for one weight (f16 / upper / lower /
+    exception flag resolved at trace time — it is a python bool).
+    """
+    exception = bool(wrec["exception"])
+    if mode == "fp16" or exception:
+        return ref.gemm_fp16_plain(x, wrec["f16"])
+
+    if mode == "nested16":
+        if use_pallas:
+            xp, m = _pad_rows(x, 8)
+            bm = min(xp.shape[0], 32)
+            out = knl.nested_fp16_gemm(
+                xp.astype(jnp.float16),
+                wrec["upper"],
+                wrec["lower"],
+                block_m=bm,
+                block_n=64,
+                block_k=64,
+            )
+            return out[:m]
+        return ref.gemm_fp16_nested(x, wrec["upper"], wrec["lower"])
+
+    if mode == "fp8base":
+        assert act_scale is not None, "fp8base needs a calibrated act scale"
+        s = jnp.float32(act_scale)
+        xq = ref.e4m3_fake_quant(x.astype(jnp.float32) * s) / s
+        return jnp.dot(
+            xq,
+            wrec["fq16"].astype(jnp.float32).T,
+            preferred_element_type=jnp.float32,
+        )
+
+    if mode == "nested8":
+        assert act_scale is not None, "nested8 needs a calibrated act scale"
+        s = jnp.float32(act_scale)
+        xq = ref.e4m3_fake_quant(x.astype(jnp.float32) * s) / s
+        if use_pallas:
+            xp, m = _pad_rows(xq, 8)
+            bm = min(xp.shape[0], 32)
+            out = knl.nested_fp8_gemm(
+                xp, wrec["upper"], block_m=bm, block_n=64, block_k=64
+            )
+            return out[:m]
+        w8 = ref.upper_to_weight_f32(wrec["upper"])
+        return jnp.dot(xq, w8.T, preferred_element_type=jnp.float32)
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [T, H, Dh]; positions: [T]."""
+    t, h, dh = x.shape
+    half = dh // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half)
+    )  # [half]
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(ang)[:, None, :]
+    sin = jnp.sin(ang)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer_weights(weights: dict[str, Any], i: int, name: str) -> dict[str, Any]:
+    return {
+        "f16": weights[f"layers.{i}.{name}.f16"],
+        "fq16": weights.get(f"layers.{i}.{name}.fq16"),
+        "upper": weights[f"layers.{i}.{name}.upper"],
+        "lower": weights[f"layers.{i}.{name}.lower"],
+        "exception": weights[f"layers.{i}.{name}.exception"],
+    }
+
+
+def _block(
+    cfg: ModelConfig,
+    weights: dict[str, Any],
+    i: int,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    kv_k: jnp.ndarray,
+    kv_v: jnp.ndarray,
+    kv_len_mask: jnp.ndarray,
+    mode: str,
+    act_scales: dict[str, float] | None,
+    use_pallas: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decoder block over T new tokens with an external KV cache.
+
+    x: [T, D]; kv_k/kv_v: [H, S, Dh] *including* the slots where the new
+    tokens will be written (the caller pre-scattered them or we write here).
+    kv_len_mask: [S] float mask, 1 for valid positions.
+    Returns (x_out, new_k [T,H,Dh], new_v [T,H,Dh]).
+    """
+    t = x.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    def scale_of(name: str) -> float | None:
+        if act_scales is None:
+            return None
+        return act_scales.get(f"layers.{i}.{name}", 1.0)
+
+    attn_in = rms_norm(x, weights[f"layers.{i}.attn_norm"], cfg.norm_eps)
+    attn_in = attn_in.astype(jnp.float16)
+
+    q = linear(attn_in, _layer_weights(weights, i, "wq"), mode, scale_of("wq"), use_pallas)
+    k = linear(attn_in, _layer_weights(weights, i, "wk"), mode, scale_of("wk"), use_pallas)
+    v = linear(attn_in, _layer_weights(weights, i, "wv"), mode, scale_of("wv"), use_pallas)
+
+    q = rope(q.reshape(t, h, dh), positions, cfg.rope_theta)
+    new_k = rope(k.reshape(t, h, dh), positions, cfg.rope_theta)
+    new_v = v.reshape(t, h, dh)
+
+    # merge the new tokens into the cache view for attention
+    s = kv_k.shape[1]
+    # scatter new tokens at their positions
+    kk = kv_k.at[:, positions, :].set(jnp.swapaxes(new_k, 0, 1))
+    vv = kv_v.at[:, positions, :].set(jnp.swapaxes(new_v, 0, 1))
+
+    # attention: q [T,H,Dh] x kk [H,S,Dh] -> scores [H,T,S]
+    qh = jnp.swapaxes(q, 0, 1)  # [H,T,Dh]
+    scores = jnp.einsum("htd,hsd->hts", qh, kk) / jnp.sqrt(float(dh))
+    # causal + validity mask: position j visible to query at position p iff
+    # j <= p and j < current length (mask covers both: kv_len_mask already
+    # marks filled slots plus the new tokens)
+    pos_ids = jnp.arange(s)[None, None, :]
+    causal = pos_ids <= positions[None, :, None]
+    valid = kv_len_mask[None, None, :] > 0
+    scores = jnp.where(causal & valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hts,hsd->htd", probs, vv)  # [H,T,Dh]
+    ctx = jnp.swapaxes(ctx, 0, 1).reshape(t, cfg.d_model).astype(jnp.float16)
+
+    attn_out = linear(ctx, _layer_weights(weights, i, "wo"), mode, scale_of("wo"), use_pallas)
+    x = x + attn_out
+
+    mlp_in = rms_norm(x, weights[f"layers.{i}.mlp_norm"], cfg.norm_eps).astype(jnp.float16)
+    g = linear(mlp_in, _layer_weights(weights, i, "w_gate"), mode, scale_of("w_gate"), use_pallas)
+    u = linear(mlp_in, _layer_weights(weights, i, "w_up"), mode, scale_of("w_up"), use_pallas)
+    act = (jax.nn.silu(g) * u).astype(jnp.float16)
+    d = linear(act, _layer_weights(weights, i, "w_down"), mode, scale_of("w_down"), use_pallas)
+    x = x + d
+    return x, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# Step functions (AOT entry points)
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(
+    cfg: ModelConfig,
+    weights: dict[str, Any],
+    tokens: jnp.ndarray,  # [T] int32 (one request chunk)
+    start_pos: jnp.ndarray,  # scalar int32
+    cache_k: jnp.ndarray,  # [L, H, S, Dh] f32 — past context
+    cache_v: jnp.ndarray,
+    mode: str,
+    act_scales: dict[str, float] | None = None,
+    use_pallas: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Process a chunk of T prompt tokens for one sequence.
+
+    Returns (logits_last [V], new_k [L,T,H,Dh], new_v [L,T,H,Dh]).
+    The Rust KV manager scatters new_k/new_v into the slot's cache.
+    """
+    t = tokens.shape[0]
+    s = cache_k.shape[2]
+    positions = start_pos + jnp.arange(t, dtype=jnp.int32)
+    # valid slots: everything before start_pos (past) plus the new tokens
+    slot_ids = jnp.arange(s, dtype=jnp.int32)
+    len_mask = (slot_ids < start_pos + t).astype(jnp.float32)
+
+    x = weights["embed"].astype(jnp.float32)[tokens]
+    new_ks, new_vs = [], []
+    for i in range(cfg.n_layers):
+        x, nk, nv = _block(
+            cfg, weights, i, x, positions, cache_k[i], cache_v[i], len_mask,
+            mode, act_scales, use_pallas,
+        )
+        new_ks.append(nk)
+        new_vs.append(nv)
+    x = rms_norm(x, weights["final_norm"], cfg.norm_eps)
+    logits = ref.gemm_fp16_plain(x[-1:].astype(jnp.float16), weights["lm_head"])[0]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    weights: dict[str, Any],
+    tokens: jnp.ndarray,  # [B] int32 — one new token per sequence
+    positions: jnp.ndarray,  # [B] int32 — its position (= current length)
+    cache_k: jnp.ndarray,  # [B, L, H, S, Dh] f32 — gathered per-slot caches
+    cache_v: jnp.ndarray,
+    mode: str,
+    act_scales: dict[str, float] | None = None,
+    use_pallas: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode iteration over a batch of B sequences.
+
+    Linear layers run over the flattened [B, D] batch (ORCA-style batching:
+    every sequence contributes one token). Attention runs per sequence over
+    its own cache. Returns (logits [B,V], new_k [B,L,H,Dh], new_v).
+    """
+    b = tokens.shape[0]
+    s = cache_k.shape[3]
+    x = weights["embed"].astype(jnp.float32)[tokens]  # [B, D]
+
+    # Attention is per-sequence; linear layers are batched. We interleave:
+    # for each block, run the linears on [B, D], then do B independent
+    # single-token attentions via vmap.
+    new_ks, new_vs = [], []
+    h, dh = cfg.n_heads, cfg.head_dim
+
+    def scale_of(i: int, name: str) -> float | None:
+        if act_scales is None:
+            return None
+        return act_scales.get(f"layers.{i}.{name}", 1.0)
+
+    for i in range(cfg.n_layers):
+        attn_in = rms_norm(x, weights[f"layers.{i}.attn_norm"], cfg.norm_eps).astype(jnp.float16)
+        q = linear(attn_in, _layer_weights(weights, i, "wq"), mode, scale_of(i, "wq"), use_pallas)
+        k = linear(attn_in, _layer_weights(weights, i, "wk"), mode, scale_of(i, "wk"), use_pallas)
+        v = linear(attn_in, _layer_weights(weights, i, "wv"), mode, scale_of(i, "wv"), use_pallas)
+
+        q = q.reshape(b, h, dh)
+        k = k.reshape(b, h, dh)
+        v = v.reshape(b, h, dh)
+
+        # RoPE at each sequence's own position
+        def rope1(vec, pos):
+            return rope(vec[None, :, :], pos[None], cfg.rope_theta)[0]
+
+        q = jax.vmap(rope1)(q, positions)
+        nk = jax.vmap(rope1)(k, positions)
+        nv = v
+        new_ks.append(nk)
+        new_vs.append(nv)
+
+        def attend(qi, ki_cache, vi_cache, nki, nvi, pos):
+            # qi [H,Dh]; caches [H,S,Dh]; write the new token then attend
+            kk = ki_cache.at[:, pos, :].set(nki)
+            vv = vi_cache.at[:, pos, :].set(nvi)
+            scores = jnp.einsum("hd,hsd->hs", qi, kk) / jnp.sqrt(float(dh))
+            slot = jnp.arange(s)
+            scores = jnp.where(slot[None, :] <= pos, scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            return jnp.einsum("hs,hsd->hd", probs, vv)
+
+        ctx = jax.vmap(attend)(
+            q, cache_k[:, i], cache_v[:, i], nk, nv, positions
+        )  # [B,H,Dh]
+        ctx = ctx.reshape(b, cfg.d_model).astype(jnp.float16)
+        attn_out = linear(ctx, _layer_weights(weights, i, "wo"), mode, scale_of(i, "wo"), use_pallas)
+        x = x + attn_out
+
+        mlp_in = rms_norm(x, weights[f"layers.{i}.mlp_norm"], cfg.norm_eps).astype(jnp.float16)
+        g = linear(mlp_in, _layer_weights(weights, i, "w_gate"), mode, scale_of(i, "w_gate"), use_pallas)
+        u = linear(mlp_in, _layer_weights(weights, i, "w_up"), mode, scale_of(i, "w_up"), use_pallas)
+        act = (jax.nn.silu(g) * u).astype(jnp.float16)
+        dwn = linear(act, _layer_weights(weights, i, "w_down"), mode, scale_of(i, "w_down"), use_pallas)
+        x = x + dwn
+
+    x = rms_norm(x, weights["final_norm"], cfg.norm_eps)
+    logits = ref.gemm_fp16_plain(x.astype(jnp.float16), weights["lm_head"])
+    return logits, jnp.stack(new_ks, axis=1), jnp.stack(new_vs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Training-time forward (fp32, plain) — used by train.py and calibration
+# ---------------------------------------------------------------------------
+
+
+def train_forward(cfg: ModelConfig, params: dict[str, Any], tokens: jnp.ndarray) -> jnp.ndarray:
+    """Causal LM forward over [B, T] token batches -> logits [B, T, V]."""
+    b, t = tokens.shape
+    x = params["embed"][tokens]  # [B,T,D]
+    h, dh = cfg.n_heads, cfg.head_dim
+    positions = jnp.arange(t)
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(cfg.rope_theta) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def rope_t(v):  # [B,T,H,Dh]
+        v1, v2 = v[..., :half], v[..., half:]
+        c = cos[None, :, None, :]
+        s_ = sin[None, :, None, :]
+        return jnp.concatenate([v1 * c - v2 * s_, v1 * s_ + v2 * c], axis=-1)
+
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for layer in params["layers"]:
+        y = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        q = (y @ layer["wq"].T).reshape(b, t, h, dh)
+        k = (y @ layer["wk"].T).reshape(b, t, h, dh)
+        v = (y @ layer["wv"].T).reshape(b, t, h, dh)
+        q, k = rope_t(q), rope_t(k)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(scores, -1), v)
+        x = x + ctx.reshape(b, t, cfg.d_model) @ layer["wo"].T
+        y = rms_norm(x, layer["mlp_norm"], cfg.norm_eps)
+        g = y @ layer["w_gate"].T
+        u = y @ layer["w_up"].T
+        x = x + (jax.nn.silu(g) * u) @ layer["w_down"].T
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"].T
+
+
+def lm_loss(cfg: ModelConfig, params: dict[str, Any], tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy over [B, T]."""
+    logits = train_forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

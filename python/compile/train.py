@@ -1,0 +1,146 @@
+"""Build-time training of the in-repo tiny model on the synthetic corpus.
+
+Stands in for the paper's production checkpoints (DESIGN.md section 2):
+the format-level claims only need a *real* autoregressive LM with realistic
+weight distributions, which a few hundred Adam steps on the task corpus
+provides. Runs once at `make artifacts`; the checkpoint is cached in
+artifacts/checkpoint.npz.
+
+Usage: python -m compile.train [--steps N] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+SEED = 20250710
+
+
+def make_batches(cfg: model.ModelConfig, n_bytes: int, batch: int, seqlen: int):
+    data = np.frombuffer(corpus.gen_corpus_bytes(SEED, n_bytes), dtype=np.uint8)
+    data = data.astype(np.int32)
+    n_seq = len(data) // seqlen
+    data = data[: n_seq * seqlen].reshape(n_seq, seqlen)
+    rng = np.random.default_rng(SEED)
+
+    def batches():
+        while True:
+            idx = rng.integers(0, n_seq, size=batch)
+            yield jnp.asarray(data[idx])
+
+    return batches()
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-9):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: model.ModelConfig, steps: int, batch: int = 32, seqlen: int = 48,
+          init_params_from=None, base_lr: float = 3e-3):
+    if init_params_from is not None:
+        params = init_params_from
+    else:
+        params = model.init_params(cfg, jax.random.PRNGKey(SEED))
+    opt = adam_init(params)
+    data = make_batches(cfg, n_bytes=2_000_000, batch=batch, seqlen=seqlen)
+
+    warmup = max(1, steps // 20)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, lr):
+        loss, grads = jax.value_and_grad(lambda p: model.lm_loss(cfg, p, tokens))(params)
+        params, opt = adam_step(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        if i < warmup:
+            lr = base_lr * (i + 1) / warmup
+        else:
+            frac = (i - warmup) / max(1, steps - warmup)
+            lr = base_lr * 0.5 * (1 + np.cos(np.pi * frac))
+        tokens = next(data)
+        params, opt, loss = step_fn(params, opt, tokens, jnp.float32(lr))
+        losses.append(float(loss))
+        if i % 25 == 0 or i == steps - 1:
+            print(
+                f"step {i:4d}  loss {float(loss):.4f}  lr {lr:.2e}  "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params, losses
+
+
+def flatten_params(params) -> dict[str, np.ndarray]:
+    out = {
+        "embed": np.asarray(params["embed"]),
+        "final_norm": np.asarray(params["final_norm"]),
+        "lm_head": np.asarray(params["lm_head"]),
+    }
+    for i, layer in enumerate(params["layers"]):
+        for k, v in layer.items():
+            out[f"layers.{i}.{k}"] = np.asarray(v)
+    return out
+
+
+def unflatten_params(flat: dict[str, np.ndarray], cfg: model.ModelConfig):
+    params = {
+        "embed": jnp.asarray(flat["embed"]),
+        "final_norm": jnp.asarray(flat["final_norm"]),
+        "lm_head": jnp.asarray(flat["lm_head"]),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        layer = {}
+        for k in ("attn_norm", "mlp_norm", *model.LINEAR_NAMES):
+            layer[k] = jnp.asarray(flat[f"layers.{i}.{k}"])
+        params["layers"].append(layer)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default="../artifacts/checkpoint.npz")
+    ap.add_argument("--resume", default=None, help="continue from a checkpoint")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+    cfg = model.ModelConfig()
+    init = None
+    if args.resume:
+        flat = dict(np.load(args.resume))
+        flat.pop("__losses__", None)
+        init = unflatten_params(flat, cfg)
+    params, losses = train(cfg, args.steps, init_params_from=init, base_lr=args.lr)
+    flat = flatten_params(params)
+    flat["__losses__"] = np.asarray(losses, np.float32)
+    np.savez(args.out, **flat)
+    print(f"saved checkpoint to {args.out} (final loss {losses[-1]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Format-level tests: decompose/reconstruct vs the bit-level spec.
+
+Mirrors rust/tests/format_exhaustive.rs — the same exhaustive sweeps over
+the full 2^16 FP16 space, pinning the Python/JAX implementation to the
+Rust one.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+
+def all_f16_bits():
+    return jnp.arange(0, 1 << 16, dtype=jnp.uint32).astype(jnp.uint16)
+
+
+@pytest.fixture(scope="module")
+def eligible_bits():
+    bits = all_f16_bits()
+    mask = ref.is_eligible_u16(bits)
+    return bits[np.asarray(mask)]
+
+
+def test_eligibility_rule_matches_value_rule():
+    bits = all_f16_bits()
+    mask = np.asarray(ref.is_eligible_u16(bits))
+    vals = np.asarray(bits.view(jnp.float16)).astype(np.float64)
+    expected = np.isfinite(vals) & (np.abs(vals) <= 1.75)
+    np.testing.assert_array_equal(mask, expected)
+
+
+def test_eligible_count():
+    bits = all_f16_bits()
+    assert int(ref.is_eligible_u16(bits).sum()) == 32_258
+
+
+def test_exhaustive_lossless_roundtrip(eligible_bits):
+    up, lo = ref.decompose_u16(eligible_bits)
+    back = ref.reconstruct_u16(up, lo)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(eligible_bits))
+
+
+def test_upper_never_nan_pattern(eligible_bits):
+    up, _ = ref.decompose_u16(eligible_bits)
+    assert not np.any((np.asarray(up) & 0x7F) == 0x7F)
+
+
+def test_exhaustive_upper_matches_e4m3_times_256(eligible_bits):
+    """decode(upper) must equal RNE-E4M3(value * 2^8) for every value."""
+    up, _ = ref.decompose_u16(eligible_bits)
+    decoded = np.asarray(ref.e4m3_decode_u8(up)).astype(np.float64)
+    vals = np.asarray(eligible_bits.view(jnp.float16)).astype(np.float64)
+    direct = np.asarray(ref.e4m3_fake_quant(jnp.asarray(vals * 256.0, jnp.float32)))
+    np.testing.assert_array_equal(decoded, direct.astype(np.float64))
+
+
+def test_fp8_weight_error_bound(eligible_bits):
+    up, _ = ref.decompose_u16(eligible_bits)
+    w8 = np.asarray(ref.upper_to_weight_f32(up)).astype(np.float64)
+    w16 = np.asarray(eligible_bits.view(jnp.float16)).astype(np.float64)
+    nz = w16 != 0
+    rel = np.abs((w8[nz] - w16[nz]) / w16[nz])
+    absd = np.abs(w8 - w16)
+    ok = np.zeros_like(w16, dtype=bool)
+    ok[nz] = rel <= 1 / 16 + 1e-9
+    ok |= absd <= 2.0 ** -17
+    assert ok.all(), f"worst rel {rel.max()}"
+
+
+def test_checksum_rule(eligible_bits):
+    """upper LSB != lower MSB exactly when RNE rounded up."""
+    bits = np.asarray(eligible_bits).astype(np.uint32)
+    up, lo = ref.decompose_u16(eligible_bits)
+    m3 = (np.asarray(lo) >> 7) & 1
+    m3p = np.asarray(up) & 1
+    base = (bits >> 7) & 0x7F
+    rem = bits & 0x7F
+    rounded_up = (rem > 64) | ((rem == 64) & ((base & 1) == 1))
+    np.testing.assert_array_equal(m3 != m3p, rounded_up)
+
+
+def test_e4m3_decode_known_values():
+    codes = jnp.array([0x00, 0x38, 0x3E, 0x7E, 0x01, 0x08, 0xBE], jnp.uint8)
+    vals = np.asarray(ref.e4m3_decode_u8(codes))
+    np.testing.assert_allclose(
+        vals, [0.0, 1.0, 1.75, 448.0, 2.0**-9, 2.0**-6, -1.75], rtol=0
+    )
+
+
+def test_e4m3_fake_quant_fixed_points():
+    """Every exact E4M3 value must be a fixed point of the quantizer."""
+    codes = jnp.arange(256, dtype=jnp.uint8)
+    vals = ref.e4m3_decode_u8(codes)
+    finite = np.isfinite(np.asarray(vals))
+    v = np.asarray(vals)[finite]
+    q = np.asarray(ref.e4m3_fake_quant(jnp.asarray(v)))
+    np.testing.assert_array_equal(q, v)
+
+
+def test_e4m3_fake_quant_saturates():
+    q = np.asarray(ref.e4m3_fake_quant(jnp.asarray([1e9, -1e9, 460.0], jnp.float32)))
+    np.testing.assert_array_equal(q, [448.0, -448.0, 448.0])

@@ -1,0 +1,191 @@
+"""Model-level tests: the three execution modes, KV-cache step functions,
+and the end-to-end losslessness claim (nested16 == fp16, bitwise)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = model.ModelConfig(n_layers=2, max_seq=64)
+    params = model.init_params(cfg, jax.random.PRNGKey(42))
+    serving = model.to_serving_weights(params)
+    scales = {
+        f"layers.{i}.{n}": 30.0
+        for i in range(cfg.n_layers)
+        for n in model.LINEAR_NAMES
+    }
+    return cfg, params, serving, scales
+
+
+def empty_cache(cfg, batch=None):
+    shape = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    if batch is not None:
+        shape = (batch,) + shape
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def test_serving_weights_structure(setup):
+    cfg, params, serving, _ = setup
+    assert serving["embed"].dtype == jnp.float16
+    up = serving["layers.0.wq.upper"]
+    lo = serving["layers.0.wq.lower"]
+    assert up.dtype == jnp.uint8 and lo.dtype == jnp.uint8
+    assert up.shape == (cfg.d_model, cfg.d_model)
+    # scaled init keeps everything within +-1.75 -> no exception layers
+    for i in range(cfg.n_layers):
+        for n in model.LINEAR_NAMES:
+            assert serving[f"layers.{i}.{n}.exception"] is False
+
+
+def test_nested_planes_reconstruct_weights(setup):
+    cfg, params, serving, _ = setup
+    w16 = serving["layers.0.w_gate.f16"]
+    up = serving["layers.0.w_gate.upper"]
+    lo = serving["layers.0.w_gate.lower"]
+    rec = ref.reconstruct_f16(up, lo)
+    np.testing.assert_array_equal(
+        np.asarray(rec.view(jnp.uint16)), np.asarray(w16.view(jnp.uint16))
+    )
+
+
+def test_decode_nested16_bitwise_equals_fp16(setup):
+    """The paper's losslessness claim, end-to-end through the model."""
+    cfg, _, serving, _ = setup
+    ck, cv = empty_cache(cfg, batch=2)
+    tokens = jnp.array([10, 200], jnp.int32)
+    pos = jnp.array([0, 3], jnp.int32)
+    lg_a, ka, va = model.decode_step(cfg, serving, tokens, pos, ck, cv, "fp16")
+    lg_b, kb, vb = model.decode_step(
+        cfg, serving, tokens, pos, ck, cv, "nested16", use_pallas=False
+    )
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+
+
+def test_decode_pallas_close_to_ref(setup):
+    cfg, _, serving, _ = setup
+    ck, cv = empty_cache(cfg, batch=4)
+    tokens = jnp.array([1, 2, 3, 4], jnp.int32)
+    pos = jnp.zeros(4, jnp.int32)
+    lg_a, _, _ = model.decode_step(cfg, serving, tokens, pos, ck, cv, "fp16")
+    lg_p, _, _ = model.decode_step(
+        cfg, serving, tokens, pos, ck, cv, "nested16", use_pallas=True
+    )
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_p), atol=2e-3)
+
+
+def test_decode_nested8_reasonable(setup):
+    cfg, _, serving, scales = setup
+    ck, cv = empty_cache(cfg, batch=2)
+    tokens = jnp.array([7, 9], jnp.int32)
+    pos = jnp.zeros(2, jnp.int32)
+    lg16, _, _ = model.decode_step(cfg, serving, tokens, pos, ck, cv, "fp16")
+    lg8, _, _ = model.decode_step(
+        cfg, serving, tokens, pos, ck, cv, "nested8", scales, use_pallas=False
+    )
+    # quantization noise, but the same model: top-logit sets overlap heavily
+    denom = float(jnp.linalg.norm(lg16))
+    rel = float(jnp.linalg.norm(lg8 - lg16)) / denom
+    assert rel < 0.25, rel
+
+
+def test_prefill_then_decode_consistency(setup):
+    """Prefilling T tokens then decoding token T must equal prefilling
+    T+1 tokens: the KV hand-off works."""
+    cfg, _, serving, _ = setup
+    prompt = jnp.arange(9, dtype=jnp.int32) + 60
+
+    # full prefill of 9 tokens
+    ck, cv = empty_cache(cfg)
+    lg_full, nk, nv = model.prefill_step(
+        cfg, serving, prompt, jnp.int32(0), ck, cv, "fp16"
+    )
+
+    # prefill 8, scatter kv, then decode token 8
+    ck8, cv8 = empty_cache(cfg)
+    _, nk8, nv8 = model.prefill_step(
+        cfg, serving, prompt[:8], jnp.int32(0), ck8, cv8, "fp16"
+    )
+    # scatter new kv into per-slot cache: nk8 [L,T,H,Dh] -> cache [L,H,S,Dh]
+    ck8 = ck8.at[:, :, :8, :].set(jnp.swapaxes(nk8, 1, 2))
+    cv8 = cv8.at[:, :, :8, :].set(jnp.swapaxes(nv8, 1, 2))
+
+    lg_dec, _, _ = model.decode_step(
+        cfg,
+        serving,
+        prompt[8:9],
+        jnp.array([8], jnp.int32),
+        ck8[None],
+        cv8[None],
+        "fp16",
+    )
+    # different contraction orders (batched prefill vs single-token decode)
+    # accumulate ~1e-3 relative f32 noise through the layers
+    np.testing.assert_allclose(
+        np.asarray(lg_full), np.asarray(lg_dec[0]), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_decode_batch_independence(setup):
+    """Each sequence in a decode batch must be computed independently:
+    running [a, b] together equals running them alone."""
+    cfg, _, serving, _ = setup
+    ck, cv = empty_cache(cfg, batch=2)
+    tokens = jnp.array([11, 33], jnp.int32)
+    pos = jnp.array([0, 0], jnp.int32)
+    both, _, _ = model.decode_step(cfg, serving, tokens, pos, ck, cv, "fp16")
+    ck1, cv1 = empty_cache(cfg, batch=1)
+    alone0, _, _ = model.decode_step(
+        cfg, serving, tokens[:1], pos[:1], ck1, cv1, "fp16"
+    )
+    alone1, _, _ = model.decode_step(
+        cfg, serving, tokens[1:], pos[1:], ck1, cv1, "fp16"
+    )
+    # different batch sizes tile the XLA matmuls differently -> ~1e-4 f32
+    # reassociation noise; independence holds to that tolerance
+    np.testing.assert_allclose(np.asarray(both[0]), np.asarray(alone0[0]), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(both[1]), np.asarray(alone1[0]), rtol=1e-3, atol=1e-3)
+
+
+def test_exception_layer_forced_fp16(setup):
+    """A layer with |w| > 1.75 must be flagged and executed via the f16
+    plane in every mode."""
+    cfg, params, _, scales = setup
+    import copy
+
+    p2 = jax.tree.map(lambda x: x, params)
+    # blow up one weight beyond the threshold
+    p2["layers"][0]["wq"] = p2["layers"][0]["wq"].at[0, 0].set(3.5)
+    serving2 = model.to_serving_weights(p2)
+    assert serving2["layers.0.wq.exception"] is True
+    ck, cv = empty_cache(cfg, batch=1)
+    tokens = jnp.array([5], jnp.int32)
+    pos = jnp.zeros(1, jnp.int32)
+    # nested16 must still work (exception layer takes the f16 path) and be
+    # bitwise equal to fp16 mode
+    lg16, _, _ = model.decode_step(cfg, serving2, tokens, pos, ck, cv, "fp16")
+    lgN, _, _ = model.decode_step(
+        cfg, serving2, tokens, pos, ck, cv, "nested16", use_pallas=False
+    )
+    np.testing.assert_array_equal(np.asarray(lg16), np.asarray(lgN))
+    # nested8 also runs (exception layer in fp16) without NaNs
+    lg8, _, _ = model.decode_step(
+        cfg, serving2, tokens, pos, ck, cv, "nested8", scales, use_pallas=False
+    )
+    assert np.isfinite(np.asarray(lg8)).all()
+
+
+def test_train_forward_loss_decreases_sanity(setup):
+    cfg, params, _, _ = setup
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, size=(2, 16), dtype=np.int32)
+    )
+    loss = model.lm_loss(cfg, params, tokens)
+    # random init: loss near ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0

@@ -1,0 +1,286 @@
+//! Custom bench harness (criterion is unavailable offline; Cargo.toml
+//! sets `harness = false`).
+//!
+//! Benches the serving hot paths:
+//!   format      — decompose / reconstruct / E4M3 throughput (bit ops)
+//!   kv          — KV gather/scatter (the per-iteration memcpy cost)
+//!   scheduler   — iteration planning over a large request table
+//!   gpusim      — one autotuned GEMM query (config search cost)
+//!   json        — manifest parsing
+//!   engine-sim  — full simulated serving iteration loop
+//!   runtime     — PJRT decode step (skipped unless artifacts/ exists)
+//!
+//! Run: `cargo bench --offline` (add `-- <filter>` to select).
+
+use std::time::Duration;
+
+use nestedfp::coordinator::backend::SimBackend;
+use nestedfp::coordinator::engine::{Engine, EngineConfig};
+use nestedfp::coordinator::kv::{KvCacheManager, KvGeometry};
+use nestedfp::coordinator::precision::PrecisionPolicy;
+use nestedfp::coordinator::request::{Request, RequestState};
+use nestedfp::coordinator::scheduler::Scheduler;
+use nestedfp::format::{e4m3, fp16::F16, nested};
+use nestedfp::gpusim::{self, GemmQuery, OptLevel, WeightFormat};
+use nestedfp::model::zoo;
+use nestedfp::util::json::Json;
+use nestedfp::util::rng::Pcg64;
+use nestedfp::util::timer::{bench, fmt_ns};
+
+fn should_run(name: &str) -> bool {
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()))
+}
+
+fn report(name: &str, per_elem: Option<(f64, &str)>, stats: nestedfp::util::timer::BenchStats) {
+    print!("{name:<34} {stats}");
+    if let Some((n, unit)) = per_elem {
+        let rate = n / (stats.mean_ns * 1e-9);
+        print!("   [{:.2} M{unit}/s]", rate / 1e6);
+    }
+    println!();
+}
+
+fn bench_format() {
+    let mut rng = Pcg64::seeded(1);
+    let weights: Vec<u16> = (0..1 << 20)
+        .map(|_| F16::from_f32((rng.normal() as f32 * 0.3).clamp(-1.7, 1.7)).to_bits())
+        .collect();
+    let n = weights.len() as f64;
+
+    let s = bench(3, 200, Duration::from_secs(2), || {
+        let mut acc = 0u32;
+        for &w in &weights {
+            let (u, l) = nested::decompose(F16::from_bits(w));
+            acc = acc.wrapping_add(u as u32).wrapping_add(l as u32);
+        }
+        std::hint::black_box(acc);
+    });
+    report("format/decompose 1M", Some((n, "elem")), s);
+
+    let planes: Vec<(u8, u8)> = weights
+        .iter()
+        .map(|&w| nested::decompose(F16::from_bits(w)))
+        .collect();
+    let s = bench(3, 200, Duration::from_secs(2), || {
+        let mut acc = 0u32;
+        for &(u, l) in &planes {
+            acc = acc.wrapping_add(nested::reconstruct(u, l).to_bits() as u32);
+        }
+        std::hint::black_box(acc);
+    });
+    report("format/reconstruct 1M", Some((n, "elem")), s);
+
+    let floats: Vec<f32> = weights.iter().map(|&w| F16::from_bits(w).to_f32()).collect();
+    let s = bench(3, 50, Duration::from_secs(2), || {
+        let mut acc = 0u32;
+        for &v in &floats {
+            acc = acc.wrapping_add(e4m3::encode_sat(v * 256.0) as u32);
+        }
+        std::hint::black_box(acc);
+    });
+    report("format/e4m3-encode 1M", Some((n, "elem")), s);
+}
+
+fn bench_kv() {
+    let geo = KvGeometry {
+        n_layers: 4,
+        n_heads: 8,
+        max_seq: 256,
+        head_dim: 32,
+        block_size: 16,
+        total_blocks: 4096,
+        n_slots: 8,
+    };
+    let mut kv = KvCacheManager::new(geo);
+    let slots: Vec<usize> = (0..8).map(|_| kv.allocate(64).unwrap()).collect();
+    let per = geo.n_layers * geo.n_heads * geo.head_dim;
+    let newk = vec![0.5f32; per];
+    let newv = vec![0.25f32; per];
+    let s = bench(3, 2000, Duration::from_secs(2), || {
+        for &sl in &slots {
+            kv.scatter_decode(sl, 100, &newk, &newv);
+        }
+    });
+    report("kv/scatter-decode x8", Some((8.0 * per as f64, "f32")), s);
+
+    let mut bk = Vec::new();
+    let mut bv = Vec::new();
+    let s = bench(3, 500, Duration::from_secs(3), || {
+        kv.gather_batch(&slots, &mut bk, &mut bv);
+        std::hint::black_box(bk.len());
+    });
+    report(
+        "kv/gather-batch x8 (16 MiB)",
+        Some((2.0 * 8.0 * geo.slot_elems() as f64, "f32")),
+        s,
+    );
+}
+
+fn bench_scheduler() {
+    let geo = KvGeometry {
+        n_layers: 1,
+        n_heads: 1,
+        max_seq: 2048,
+        head_dim: 1,
+        block_size: 16,
+        total_blocks: 1 << 16,
+        n_slots: 512,
+    };
+    let kv = KvCacheManager::accounting_only(geo);
+    let mut sched = Scheduler::new(vec![64, 128, 256], 256);
+    let mut requests: Vec<Request> = (0..512)
+        .map(|i| {
+            let mut r = Request::new(i, vec![1; 128], 128, i as f64 * 0.001);
+            r.state = if i % 3 == 0 {
+                RequestState::Queued
+            } else {
+                RequestState::Decoding
+            };
+            r
+        })
+        .collect();
+    for r in requests.iter_mut() {
+        if r.state == RequestState::Decoding {
+            r.generated.push(1);
+        }
+    }
+    let s = bench(10, 5000, Duration::from_secs(2), || {
+        std::hint::black_box(sched.plan(&requests, &kv));
+    });
+    report("scheduler/plan 512 reqs", None, s);
+}
+
+fn bench_gpusim() {
+    let q = GemmQuery {
+        m: 256,
+        n: 14336,
+        k: 4096,
+        format: WeightFormat::Nested16,
+        opt: OptLevel::Level3,
+    };
+    let s = bench(3, 2000, Duration::from_secs(2), || {
+        std::hint::black_box(gpusim::best_config(&q));
+    });
+    report("gpusim/config-search (105 cfgs)", None, s);
+
+    let spec = zoo::find("llama31-8b").unwrap();
+    let sq = gpusim::StepQuery {
+        kind: gpusim::StepKind::Decode,
+        m: 64,
+        ctx: 512,
+        seqs: 64,
+        format: WeightFormat::Nested16,
+        opt: OptLevel::Level3,
+    };
+    let s = bench(3, 5000, Duration::from_secs(2), || {
+        std::hint::black_box(gpusim::step_latency(spec, &sq));
+    });
+    report("gpusim/step-latency (cached)", None, s);
+}
+
+fn bench_json() {
+    let manifest = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = manifest {
+        let bytes = text.len() as f64;
+        let s = bench(3, 500, Duration::from_secs(2), || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        });
+        report("json/parse manifest", Some((bytes, "B")), s);
+    } else {
+        println!("json/parse manifest               (skipped: no artifacts)");
+    }
+}
+
+fn bench_engine_sim() {
+    let spec = zoo::find("llama31-8b").unwrap();
+    let s = bench(1, 20, Duration::from_secs(10), || {
+        let backend = SimBackend::new(
+            spec,
+            WeightFormat::Nested16,
+            WeightFormat::Nested8,
+            64,
+            1024,
+            64 * 65 * 2,
+        );
+        let mut engine = Engine::new(
+            backend,
+            EngineConfig {
+                policy: PrecisionPolicy::Dual,
+                physical_kv: false,
+                ..Default::default()
+            },
+        );
+        let requests: Vec<Request> = (0..64)
+            .map(|i| Request::new(i, vec![65; 128], 64, i as f64 * 0.01))
+            .collect();
+        std::hint::black_box(engine.run(requests).unwrap());
+    });
+    // 64 requests x 64 tokens = 4096 generated tokens per loop run
+    report("engine-sim/64req x 64tok", Some((4096.0, "tok")), s);
+}
+
+fn bench_runtime() {
+    use nestedfp::runtime::{HostTensor, ModelRuntime};
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime/decode-step               (skipped: no artifacts)");
+        return;
+    }
+    let rt = match ModelRuntime::load(dir, &["nested16"], &["decode"]) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("runtime/decode-step               (skipped: {e})");
+            return;
+        }
+    };
+    let (l, h, s_, dh) = (
+        rt.manifest.model.n_layers,
+        rt.manifest.model.n_heads,
+        rt.manifest.model.max_seq,
+        rt.manifest.model.head_dim,
+    );
+    let b = 4usize;
+    let tokens = HostTensor::from_i32(vec![b], &vec![65; b]);
+    let positions = HostTensor::from_i32(vec![b], &vec![0; b]);
+    let kvbuf = vec![0f32; b * l * h * s_ * dh];
+    let ck = HostTensor::from_f32(vec![b, l, h, s_, dh], &kvbuf);
+    let cv = HostTensor::from_f32(vec![b, l, h, s_, dh], &kvbuf);
+    let step = rt.step("decode", "nested16", b).unwrap();
+    let stats = bench(2, 30, Duration::from_secs(15), || {
+        std::hint::black_box(
+            rt.run(step, &[tokens.clone(), positions.clone(), ck.clone(), cv.clone()])
+                .unwrap(),
+        );
+    });
+    report("runtime/decode-step b=4 (PJRT)", Some((b as f64, "tok")), stats);
+}
+
+fn main() {
+    println!("nestedfp bench harness (std timer; criterion unavailable offline)\n");
+    if should_run("format") {
+        bench_format();
+    }
+    if should_run("kv") {
+        bench_kv();
+    }
+    if should_run("scheduler") {
+        bench_scheduler();
+    }
+    if should_run("gpusim") {
+        bench_gpusim();
+    }
+    if should_run("json") {
+        bench_json();
+    }
+    if should_run("engine-sim") {
+        bench_engine_sim();
+    }
+    if should_run("runtime") {
+        bench_runtime();
+    }
+    let _ = fmt_ns(0.0);
+}

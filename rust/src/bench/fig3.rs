@@ -1,0 +1,125 @@
+//! Figure 3: (a) weight distributions of linear layers; (b) per-model
+//! weight range and NestedFP-eligible layer counts.
+//!
+//! The in-repo trained model is analyzed from its real checkpoint
+//! (weights.bin); the zoo models go through the calibrated sampler.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bench::report::Report;
+use crate::format::fp16::F16;
+use crate::model::applicability::{self, analyze_tensor};
+use crate::model::zoo;
+use crate::runtime::WeightStore;
+
+/// Figure 3a analog: magnitude histogram of the trained model's linear
+/// weights (log-ish buckets), plus eligibility share.
+pub fn fig3a(artifacts: &Path) -> Result<Report> {
+    let ws = WeightStore::load(&artifacts.join("weights.bin"))?;
+    let mut rep = Report::new(
+        "Fig 3a — |w| distribution of the in-repo model's linear layers",
+        &["bucket", "count", "share"],
+    );
+    let buckets = [0.0f32, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 1.75, f32::INFINITY];
+    let mut counts = vec![0usize; buckets.len() - 1];
+    let mut total = 0usize;
+    let mut max_abs = 0.0f32;
+    for (name, t) in &ws.tensors {
+        if !name.ends_with(".f16") {
+            continue;
+        }
+        for bits in t.as_u16()? {
+            let a = F16::from_bits(bits).abs().to_f32();
+            max_abs = max_abs.max(a);
+            total += 1;
+            for i in 0..buckets.len() - 1 {
+                if a >= buckets[i] && a < buckets[i + 1] {
+                    counts[i] += 1;
+                    break;
+                }
+            }
+        }
+    }
+    for i in 0..counts.len() {
+        let hi = if buckets[i + 1].is_infinite() {
+            ">1.75".to_string()
+        } else {
+            format!("{:.2}-{:.2}", buckets[i], buckets[i + 1])
+        };
+        rep.row(vec![
+            hi,
+            counts[i].to_string(),
+            format!("{:.2}%", counts[i] as f64 / total as f64 * 100.0),
+        ]);
+    }
+    rep.note(format!(
+        "max |w| = {max_abs:.3}; eligible share = {:.3}% (paper: vast majority <= 1.75)",
+        counts[..counts.len() - 1].iter().sum::<usize>() as f64 / total as f64 * 100.0
+    ));
+    Ok(rep)
+}
+
+/// Figure 3b analog: per-model weight range + eligible layer counts
+/// (trained model measured; zoo models calibrated).
+pub fn fig3b(artifacts: &Path) -> Result<Report> {
+    let mut rep = Report::new(
+        "Fig 3b — per-model weight range and NestedFP-eligible layers",
+        &["model", "weight_range", "eligible_layers", "share"],
+    );
+
+    // the in-repo model, measured from the checkpoint
+    if let Ok(ws) = WeightStore::load(&artifacts.join("weights.bin")) {
+        let mut app = 0usize;
+        let mut tot = 0usize;
+        let mut max_abs = 0.0f32;
+        for (name, t) in &ws.tensors {
+            if !name.ends_with(".f16") || name == "embed" || name == "lm_head" {
+                continue;
+            }
+            let (mx, elig) = analyze_tensor(&t.as_u16()?);
+            max_abs = max_abs.max(mx);
+            tot += 1;
+            if elig {
+                app += 1;
+            }
+        }
+        rep.row(vec![
+            "tiny-repo (measured)".into(),
+            format!("[-{max_abs:.2}, {max_abs:.2}]"),
+            format!("{app}/{tot}"),
+            format!("{:.1}%", app as f64 / tot as f64 * 100.0),
+        ]);
+    }
+
+    for spec in zoo::main_four() {
+        let report = applicability::analyze_zoo_model(spec, 42);
+        let (app, tot) = report.total_counts();
+        let (lo, hi) = report.weight_range();
+        rep.row(vec![
+            spec.name.to_string(),
+            format!("[{lo:.2}, {hi:.2}]"),
+            format!("{app}/{tot}"),
+            format!("{:.1}%", app as f64 / tot as f64 * 100.0),
+        ]);
+    }
+    rep.note("paper: 3 of 4 models fully eligible; Phi-4 has 8.75% exception layers");
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3b_zoo_rows_match_table3() {
+        // phi-4 must show its exception layers
+        let spec = zoo::find("phi-4-14b").unwrap();
+        let report = applicability::analyze_zoo_model(spec, 42);
+        let (app, tot) = report.total_counts();
+        assert_eq!((app, tot), (146, 160));
+        // 14/160 = 8.75% — exactly the paper's number
+        assert!(((tot - app) as f64 / tot as f64 - 0.0875).abs() < 1e-9);
+    }
+}

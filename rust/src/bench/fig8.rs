@@ -1,0 +1,125 @@
+//! Figures 8 and 10: end-to-end serving throughput on the simulated H100
+//! through the real coordinator (continuous batching + chunked prefill),
+//! for the four main models under FP16 / NestedFP16 / FP8 / NestedFP8.
+
+use anyhow::Result;
+
+use crate::bench::report::Report;
+use crate::coordinator::backend::SimBackend;
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::precision::PrecisionPolicy;
+use crate::coordinator::request::Request;
+use crate::gpusim::WeightFormat;
+use crate::model::zoo::{self, ModelSpec};
+
+/// Closed-loop throughput of one (model, format, batch, in/out) config:
+/// 3x`batch` identical requests all arriving at t=0; engine runs them to
+/// completion at max decode batch = `batch`.
+pub fn throughput(
+    spec: &'static ModelSpec,
+    format: WeightFormat,
+    batch: usize,
+    input_len: usize,
+    output_len: usize,
+) -> Result<f64> {
+    let max_seq = (input_len + output_len + 64).next_multiple_of(64);
+    // KV budget sized to hold ~1.5x the target batch at full context
+    let blocks_per_seq = (max_seq).div_ceil(16) + 1;
+    let total_blocks = blocks_per_seq * batch * 3 / 2;
+    let backend = SimBackend::new(spec, format, format, batch, max_seq, total_blocks);
+    let mut engine = Engine::new(
+        backend,
+        EngineConfig {
+            policy: PrecisionPolicy::Fp16Only, // fixed format via SimBackend
+            physical_kv: false,
+            ..Default::default()
+        },
+    );
+    let n_req = batch * 3;
+    let requests: Vec<Request> = (0..n_req)
+        .map(|i| Request::new(i as u64, vec![65; input_len], output_len, 0.0))
+        .collect();
+    let report = engine.run(requests)?;
+    Ok(report.metrics.throughput_tok_s())
+}
+
+/// Figure 8: 256-in/512-out, batch swept 32..512.
+pub fn fig8() -> Result<Vec<Report>> {
+    let mut out = Vec::new();
+    for spec in zoo::main_four() {
+        let mut rep = Report::new(
+            &format!("Fig 8 — e2e throughput, {} (256 in / 512 out)", spec.name),
+            &["batch", "fp16_tok_s", "nested16_tok_s", "nested8_tok_s", "n16_ovh", "n8_speedup"],
+        );
+        let mut speedups = Vec::new();
+        let mut ovhs = Vec::new();
+        for batch in [32usize, 64, 128, 256, 512] {
+            let t16 = throughput(spec, WeightFormat::Fp16, batch, 256, 512)?;
+            let n16 = throughput(spec, WeightFormat::Nested16, batch, 256, 512)?;
+            let n8 = throughput(spec, WeightFormat::Nested8, batch, 256, 512)?;
+            ovhs.push(1.0 - n16 / t16);
+            speedups.push(n8 / n16);
+            rep.row(vec![
+                batch.to_string(),
+                format!("{t16:.0}"),
+                format!("{n16:.0}"),
+                format!("{n8:.0}"),
+                format!("{:.2}%", (1.0 - n16 / t16) * 100.0),
+                format!("{:.2}x", n8 / n16),
+            ]);
+        }
+        let avg_ovh = ovhs.iter().sum::<f64>() / ovhs.len() as f64 * 100.0;
+        let avg_sp = speedups.iter().sum::<f64>() / speedups.len() as f64;
+        rep.note(format!(
+            "avg NestedFP16 overhead {avg_ovh:.2}% (paper: 2.69-4.51%), avg NestedFP8 speedup {avg_sp:.2}x (paper: 1.24-1.53x)"
+        ));
+        out.push(rep);
+    }
+    Ok(out)
+}
+
+/// Figure 10 (Appendix C): four in/out configs, including Torch FP8.
+pub fn fig10() -> Result<Vec<Report>> {
+    let configs = [(32usize, 512usize), (1024, 512), (32, 32), (1024, 32)];
+    let mut out = Vec::new();
+    for (ilen, olen) in configs {
+        let mut rep = Report::new(
+            &format!("Fig 10 — e2e throughput ({ilen} in / {olen} out)"),
+            &["model", "fp16", "nested16", "fp8", "nested8", "n8/fp8"],
+        );
+        rep.note("paper: NestedFP8 at 96.8-98.8% of Torch FP8 throughput");
+        let batch = 128;
+        for spec in zoo::main_four() {
+            let t16 = throughput(spec, WeightFormat::Fp16, batch, ilen, olen)?;
+            let n16 = throughput(spec, WeightFormat::Nested16, batch, ilen, olen)?;
+            let t8 = throughput(spec, WeightFormat::Fp8, batch, ilen, olen)?;
+            let n8 = throughput(spec, WeightFormat::Nested8, batch, ilen, olen)?;
+            rep.row(vec![
+                spec.name.to_string(),
+                format!("{t16:.0}"),
+                format!("{n16:.0}"),
+                format!("{t8:.0}"),
+                format!("{n8:.0}"),
+                format!("{:.1}%", n8 / t8 * 100.0),
+            ]);
+        }
+        out.push(rep);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_ordering_holds() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        let t16 = throughput(spec, WeightFormat::Fp16, 32, 64, 64).unwrap();
+        let n16 = throughput(spec, WeightFormat::Nested16, 32, 64, 64).unwrap();
+        let n8 = throughput(spec, WeightFormat::Nested8, 32, 64, 64).unwrap();
+        assert!(t16 > 0.0);
+        assert!(n16 <= t16 * 1.001, "nested16 {n16} should not beat fp16 {t16}");
+        assert!(n8 > n16, "fp8 should beat fp16-mode");
+    }
+}

@@ -1,0 +1,13 @@
+//! The reproduction harness: one module per paper table/figure, invoked
+//! via `repro reproduce <exp>`. Each prints the same rows/series the
+//! paper reports (shape-level reproduction; see DESIGN.md §5).
+
+pub mod report;
+pub mod table1;
+pub mod table3;
+pub mod fig1;
+pub mod fig3;
+pub mod fig7;
+pub mod fig8;
+
+pub use report::Report;

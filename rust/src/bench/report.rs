@@ -1,0 +1,121 @@
+//! Experiment output: aligned-table printing + machine-readable JSON.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// A tabular experiment report.
+pub struct Report {
+    pub title: String,
+    pub notes: Vec<String>,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, header: &[&str]) -> Report {
+        Report {
+            title: title.to_string(),
+            notes: Vec::new(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        for n in &self.notes {
+            let _ = writeln!(out, "   {n}");
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Machine-readable JSON for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("title".into(), Json::Str(self.title.clone()));
+        obj.insert(
+            "header".into(),
+            Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        obj.insert(
+            "rows".into(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj)
+    }
+}
+
+/// Format seconds as milliseconds with 3 significant decimals.
+pub fn ms(t: f64) -> String {
+    format!("{:.3}", t * 1e3)
+}
+
+/// Format a ratio as a percentage delta ("+6.2%").
+pub fn pct(ratio: f64) -> String {
+    format!("{:+.2}%", (ratio - 1.0) * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut r = Report::new("t", &["a", "long_header"]);
+        r.row(vec!["1".into(), "2".into()]);
+        let s = r.render();
+        assert!(s.contains("long_header"));
+        assert!(s.contains("== t =="));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn row_width_checked() {
+        let mut r = Report::new("t", &["a"]);
+        r.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(ms(0.00125), "1.250");
+        assert_eq!(pct(1.062), "+6.20%");
+    }
+}

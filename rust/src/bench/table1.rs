@@ -1,0 +1,93 @@
+//! Tables 1 and 2: downstream-task accuracy under FP16 / FP8(baseline) /
+//! NestedFP8, on the in-repo trained model via real PJRT execution, plus
+//! the weight-level quantization-error comparison.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::bench::report::Report;
+use crate::eval::accuracy::{evaluate_mode, TaskAccuracy};
+use crate::eval::quanterr;
+use crate::eval::tasks::Task;
+use crate::format::tensor::Tensor2;
+use crate::runtime::{ModelRuntime, WeightStore};
+
+fn acc_of(rows: &[TaskAccuracy], t: Task) -> f64 {
+    rows.iter()
+        .find(|a| a.task == t)
+        .map(|a| a.accuracy() * 100.0)
+        .unwrap_or(f64::NAN)
+}
+
+/// Tables 1+2 (model level): accuracy per task per mode.
+///
+/// `n` eval examples per task (paper uses full LM-eval tasks; we default
+/// to a few dozen — the engine decodes them with real batching).
+pub fn table12(artifacts: &Path, n: usize) -> Result<Report> {
+    let mut rep = Report::new(
+        "Tables 1-2 — task accuracy (%), in-repo model, real PJRT execution",
+        &["task", "FP16", "FP8(B)", "FP8(N)", "d_B", "d_N"],
+    );
+    rep.note("FP8(B): per-channel absmax baseline; FP8(N): NestedFP8 (global 2^8 scale)");
+    rep.note("paper's claim: FP8(N) ~ FP8(B), both slightly below FP16");
+
+    let mut per_mode = Vec::new();
+    for mode in ["fp16", "fp8base", "nested8"] {
+        let rt = ModelRuntime::load(artifacts, &[mode], &["decode", "prefill"])?;
+        per_mode.push(evaluate_mode(rt, Box::leak(mode.to_string().into_boxed_str()), n, 20250710)?);
+    }
+    for task in Task::ALL {
+        let f16 = acc_of(&per_mode[0], task);
+        let b = acc_of(&per_mode[1], task);
+        let nst = acc_of(&per_mode[2], task);
+        rep.row(vec![
+            task.name().into(),
+            format!("{f16:.1}"),
+            format!("{b:.1}"),
+            format!("{nst:.1}"),
+            format!("{:+.1}", b - f16),
+            format!("{:+.1}", nst - f16),
+        ]);
+    }
+    Ok(rep)
+}
+
+/// Table 2 (weight level): FP8(B) vs FP8(N) quantization error on every
+/// linear layer of the trained checkpoint.
+pub fn table2_weights(artifacts: &Path) -> Result<Report> {
+    let ws = WeightStore::load(&artifacts.join("weights.bin"))?;
+    let mut rep = Report::new(
+        "Table 2 (weight level) — relative Frobenius quantization error",
+        &["layer", "FP8(B)", "FP8(N)", "N/B"],
+    );
+    let mut ratios = Vec::new();
+    for (name, t) in &ws.tensors {
+        if !name.ends_with(".f16") || name == "embed" || name == "lm_head" {
+            continue;
+        }
+        let vals: Vec<f32> = t
+            .as_u16()?
+            .into_iter()
+            .map(|b| crate::format::fp16::F16::from_bits(b).to_f32())
+            .collect();
+        let w = Tensor2::from_vec(t.dims[0], t.dims[1], vals);
+        let (base, nested) = quanterr::compare_fp8_variants(&w);
+        ratios.push(nested.rel_fro / base.rel_fro);
+        // print one row per layer kind of layer 0 only, plus the summary
+        if name.starts_with("layers.0.") {
+            rep.row(vec![
+                name.trim_end_matches(".f16").into(),
+                format!("{:.4}", base.rel_fro),
+                format!("{:.4}", nested.rel_fro),
+                format!("{:.2}", nested.rel_fro / base.rel_fro),
+            ]);
+        }
+    }
+    let avg = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    rep.note(format!(
+        "mean error ratio FP8(N)/FP8(B) over all {} linear layers: {avg:.2} (1.0 = parity)",
+        ratios.len()
+    ));
+    Ok(rep)
+}

@@ -1,0 +1,330 @@
+//! Execution backends: real PJRT artifacts or the gpusim cost model.
+
+use anyhow::{anyhow, Result};
+
+use crate::gpusim::{self, StepKind, StepQuery, WeightFormat};
+use crate::model::zoo::ModelSpec;
+use crate::runtime::{HostTensor, ModelRuntime};
+
+use super::kv::{KvCacheManager, KvGeometry};
+use super::precision::Precision;
+
+/// Result of one backend step.
+pub struct StepRun {
+    /// Flattened logits ([V] for prefill, [B, V] for decode); None for
+    /// the simulation backend.
+    pub logits: Option<Vec<f32>>,
+    /// Latency this step contributed, seconds (wall for real, modelled
+    /// for sim).
+    pub latency: f64,
+}
+
+/// A model-execution backend for the engine.
+pub trait Backend {
+    fn geometry(&self) -> KvGeometry;
+    fn prefill_chunks(&self) -> Vec<usize>;
+    fn max_decode_batch(&self) -> usize;
+
+    /// Prefill `tokens` for `slot` starting at `start_pos`; scatter the
+    /// new KV into the slot.
+    fn prefill(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slot: usize,
+        start_pos: usize,
+        tokens: &[i32],
+        precision: Precision,
+    ) -> Result<StepRun>;
+
+    /// One decode iteration over `slots`/`tokens`/`positions` (parallel
+    /// arrays); scatters each sequence's new KV.
+    fn decode(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slots: &[usize],
+        tokens: &[i32],
+        positions: &[i32],
+        precision: Precision,
+    ) -> Result<StepRun>;
+}
+
+// ---------------------------------------------------------------------------
+// Real backend: PJRT CPU execution of the AOT artifacts
+// ---------------------------------------------------------------------------
+
+/// Maps the controller's precision to artifact modes.
+#[derive(Clone, Copy, Debug)]
+pub struct ModeMap {
+    /// Artifact mode used when the controller says FP16.
+    pub fp16_mode: &'static str,
+    /// Artifact mode used when the controller says FP8.
+    pub fp8_mode: &'static str,
+}
+
+impl Default for ModeMap {
+    fn default() -> Self {
+        // NestedFP serving: both modes come from the single nested store
+        ModeMap {
+            fp16_mode: "nested16",
+            fp8_mode: "nested8",
+        }
+    }
+}
+
+/// Executes the compiled step functions; used by the e2e examples and the
+/// integration tests.
+pub struct RealBackend {
+    pub rt: ModelRuntime,
+    pub modes: ModeMap,
+    geo: KvGeometry,
+}
+
+impl RealBackend {
+    pub fn new(rt: ModelRuntime, modes: ModeMap, n_slots: usize, total_blocks: usize) -> RealBackend {
+        let m = &rt.manifest.model;
+        let geo = KvGeometry {
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            max_seq: m.max_seq,
+            head_dim: m.head_dim,
+            block_size: 16,
+            total_blocks,
+            n_slots,
+        };
+        RealBackend { rt, modes, geo }
+    }
+
+    fn mode_str(&self, p: Precision) -> &'static str {
+        match p {
+            Precision::Fp16 => self.modes.fp16_mode,
+            Precision::Fp8 => self.modes.fp8_mode,
+        }
+    }
+}
+
+impl Backend for RealBackend {
+    fn geometry(&self) -> KvGeometry {
+        self.geo
+    }
+
+    fn prefill_chunks(&self) -> Vec<usize> {
+        self.rt.manifest.prefill_chunks.clone()
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.rt.manifest.decode_buckets.iter().copied().max().unwrap_or(1)
+    }
+
+    fn prefill(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slot: usize,
+        start_pos: usize,
+        tokens: &[i32],
+        precision: Precision,
+    ) -> Result<StepRun> {
+        let mode = self.mode_str(precision);
+        let chunk = tokens.len();
+        let step = self.rt.step("prefill", mode, chunk)?;
+        let g = self.geo;
+        let s = kv.slot(slot);
+        let dims = vec![g.n_layers, g.n_heads, g.max_seq, g.head_dim];
+        let ck = HostTensor::from_f32(dims.clone(), &s.k);
+        let cv = HostTensor::from_f32(dims, &s.v);
+        let t0 = std::time::Instant::now();
+        let out = self.rt.run(
+            step,
+            &[
+                HostTensor::from_i32(vec![chunk], tokens),
+                HostTensor::from_i32(vec![], &[start_pos as i32]),
+                ck,
+                cv,
+            ],
+        )?;
+        let latency = t0.elapsed().as_secs_f64();
+        let logits = out.tensors[0].as_f32()?;
+        let nk = out.tensors[1].as_f32()?;
+        let nv = out.tensors[2].as_f32()?;
+        kv.scatter_prefill(slot, start_pos, chunk, &nk, &nv);
+        Ok(StepRun {
+            logits: Some(logits),
+            latency,
+        })
+    }
+
+    fn decode(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slots: &[usize],
+        tokens: &[i32],
+        positions: &[i32],
+        precision: Precision,
+    ) -> Result<StepRun> {
+        let mode = self.mode_str(precision);
+        let n = slots.len();
+        let bucket = self.rt.manifest.decode_bucket_for(n);
+        if n > bucket {
+            return Err(anyhow!("decode batch {n} exceeds largest bucket {bucket}"));
+        }
+        // pad the batch to the bucket: padding lanes reuse slot 0's cache
+        // geometry with token 0 / pos 0; their outputs are discarded
+        let mut pad_slots: Vec<usize> = slots.to_vec();
+        let mut pad_tokens: Vec<i32> = tokens.to_vec();
+        let mut pad_pos: Vec<i32> = positions.to_vec();
+        while pad_slots.len() < bucket {
+            pad_slots.push(slots[0]);
+            pad_tokens.push(0);
+            pad_pos.push(0);
+        }
+
+        let g = self.geo;
+        let mut bk = Vec::new();
+        let mut bv = Vec::new();
+        kv.gather_batch(&pad_slots, &mut bk, &mut bv);
+        let dims = vec![bucket, g.n_layers, g.n_heads, g.max_seq, g.head_dim];
+        let step = self.rt.step("decode", mode, bucket)?;
+        let t0 = std::time::Instant::now();
+        let out = self.rt.run(
+            step,
+            &[
+                HostTensor::from_i32(vec![bucket], &pad_tokens),
+                HostTensor::from_i32(vec![bucket], &pad_pos),
+                HostTensor::from_f32(dims.clone(), &bk),
+                HostTensor::from_f32(dims, &bv),
+            ],
+        )?;
+        let latency = t0.elapsed().as_secs_f64();
+        let logits_all = out.tensors[0].as_f32()?;
+        let nk = out.tensors[1].as_f32()?; // [B, L, H, Dh]
+        let nv = out.tensors[2].as_f32()?;
+        let vocab = logits_all.len() / bucket;
+        let per = g.n_layers * g.n_heads * g.head_dim;
+        for (i, &slot) in slots.iter().enumerate() {
+            kv.scatter_decode(
+                slot,
+                positions[i] as usize,
+                &nk[i * per..(i + 1) * per],
+                &nv[i * per..(i + 1) * per],
+            );
+        }
+        Ok(StepRun {
+            logits: Some(logits_all[..n * vocab].to_vec()),
+            latency,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulation backend: gpusim-costed H100 serving (the paper's figures)
+// ---------------------------------------------------------------------------
+
+/// Costs iterations with the analytical H100 model; produces no logits
+/// (simulated requests run to their fixed output budget).
+pub struct SimBackend {
+    pub spec: &'static ModelSpec,
+    /// Format used when the controller says FP16 / FP8.
+    pub fp16_format: WeightFormat,
+    pub fp8_format: WeightFormat,
+    pub max_batch: usize,
+    pub chunks: Vec<usize>,
+    geo: KvGeometry,
+}
+
+impl SimBackend {
+    pub fn new(
+        spec: &'static ModelSpec,
+        fp16_format: WeightFormat,
+        fp8_format: WeightFormat,
+        max_batch: usize,
+        max_seq: usize,
+        total_blocks: usize,
+    ) -> SimBackend {
+        let geo = KvGeometry {
+            n_layers: spec.n_layers,
+            n_heads: spec.n_heads,
+            max_seq,
+            head_dim: spec.head_dim,
+            block_size: 16,
+            total_blocks,
+            n_slots: max_batch * 4,
+        };
+        SimBackend {
+            spec,
+            fp16_format,
+            fp8_format,
+            max_batch,
+            chunks: vec![64, 128, 256, 512],
+            geo,
+        }
+    }
+
+    fn fmt(&self, p: Precision) -> WeightFormat {
+        match p {
+            Precision::Fp16 => self.fp16_format,
+            Precision::Fp8 => self.fp8_format,
+        }
+    }
+}
+
+impl Backend for SimBackend {
+    fn geometry(&self) -> KvGeometry {
+        self.geo
+    }
+
+    fn prefill_chunks(&self) -> Vec<usize> {
+        self.chunks.clone()
+    }
+
+    fn max_decode_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn prefill(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slot: usize,
+        start_pos: usize,
+        tokens: &[i32],
+        precision: Precision,
+    ) -> Result<StepRun> {
+        let _ = kv.slot(slot); // accounting only
+        let q = StepQuery {
+            kind: StepKind::Prefill,
+            m: tokens.len(),
+            ctx: start_pos,
+            seqs: 1,
+            format: self.fmt(precision),
+            opt: gpusim::OptLevel::Level3,
+        };
+        Ok(StepRun {
+            logits: None,
+            latency: gpusim::step_latency(self.spec, &q),
+        })
+    }
+
+    fn decode(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slots: &[usize],
+        _tokens: &[i32],
+        positions: &[i32],
+        precision: Precision,
+    ) -> Result<StepRun> {
+        let _ = kv.free_blocks();
+        let avg_ctx = (positions.iter().map(|&p| p as usize).sum::<usize>()
+            / positions.len().max(1))
+        .max(1);
+        let q = StepQuery {
+            kind: StepKind::Decode,
+            m: slots.len(),
+            ctx: avg_ctx,
+            seqs: slots.len(),
+            format: self.fmt(precision),
+            opt: gpusim::OptLevel::Level3,
+        };
+        Ok(StepRun {
+            logits: None,
+            latency: gpusim::step_latency(self.spec, &q),
+        })
+    }
+}

@@ -1,0 +1,587 @@
+//! The serving engine: event loop over (admission → precision decision →
+//! scheduling → execution → postprocessing), generic over the backend and
+//! the clock.
+
+use anyhow::{anyhow, Result};
+
+use super::backend::{Backend, StepRun};
+use super::kv::KvCacheManager;
+use super::metrics::Metrics;
+use super::precision::{Precision, PrecisionController, PrecisionPolicy, SloConfig};
+use super::request::{FinishReason, Request, RequestState};
+use super::scheduler::{IterationPlan, Scheduler};
+
+/// Engine construction parameters.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub policy: PrecisionPolicy,
+    pub slo: SloConfig,
+    /// Use physical KV storage (real backend) or accounting only (sim).
+    pub physical_kv: bool,
+    /// Stop after this many iterations (safety valve; 0 = unlimited).
+    pub max_iterations: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: PrecisionPolicy::Dual,
+            slo: SloConfig::default(),
+            physical_kv: true,
+            max_iterations: 0,
+        }
+    }
+}
+
+/// A finished request's user-visible output.
+#[derive(Clone, Debug)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub ttft_s: f64,
+    pub mean_tpot_s: f64,
+}
+
+/// Outcome of a full run.
+pub struct RunReport {
+    pub metrics: Metrics,
+    pub controller: PrecisionController,
+    pub iterations: usize,
+    /// (engine time, precision was fp8) switch timeline.
+    pub mode_timeline: Vec<(f64, bool)>,
+    /// Per-request outputs (generation + latency).
+    pub completions: Vec<CompletedRequest>,
+}
+
+/// The engine.
+pub struct Engine<B: Backend> {
+    pub backend: B,
+    pub kv: KvCacheManager,
+    pub scheduler: Scheduler,
+    pub controller: PrecisionController,
+    cfg: EngineConfig,
+    requests: Vec<Request>,
+    now: f64,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
+        let geo = backend.geometry();
+        let kv = if cfg.physical_kv {
+            KvCacheManager::new(geo)
+        } else {
+            KvCacheManager::accounting_only(geo)
+        };
+        let scheduler = Scheduler::new(backend.prefill_chunks(), backend.max_decode_batch());
+        let controller = PrecisionController::new(cfg.policy, cfg.slo);
+        Engine {
+            backend,
+            kv,
+            scheduler,
+            controller,
+            cfg,
+            requests: Vec::new(),
+            now: 0.0,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Run a whole workload (requests with arrival timestamps) to
+    /// completion, simulating arrival times on the engine clock.
+    ///
+    /// The clock advances by each step's latency; when the engine is idle
+    /// it fast-forwards to the next arrival. (For the real backend the
+    /// step latency *is* wall time, so the clock tracks reality; we still
+    /// fast-forward idle gaps — the honest equivalent of sleeping.)
+    pub fn run(&mut self, mut workload: Vec<Request>) -> Result<RunReport> {
+        workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut pending = std::collections::VecDeque::from(workload);
+        let mut metrics = Metrics::new();
+        let mut iterations = 0usize;
+        let mut mode_timeline: Vec<(f64, bool)> = Vec::new();
+        let mut completions: Vec<CompletedRequest> = Vec::new();
+
+        loop {
+            // ---- admission of arrivals --------------------------------
+            while pending
+                .front()
+                .map(|r| r.arrival <= self.now)
+                .unwrap_or(false)
+            {
+                let r = pending.pop_front().unwrap();
+                self.requests.push(r);
+            }
+
+            let active = self
+                .requests
+                .iter()
+                .filter(|r| !r.is_finished())
+                .count();
+            if active == 0 {
+                match pending.front() {
+                    Some(next) => {
+                        // idle: fast-forward to the next arrival
+                        self.now = next.arrival;
+                        continue;
+                    }
+                    None => break, // done
+                }
+            }
+
+            // ---- precision decision -----------------------------------
+            // load signal: queued + still-prefilling requests (each one
+            // means imminent prefill iterations that stretch running
+            // sequences' inter-token gaps), plus imminent arrivals
+            let mut queue_depth = self
+                .requests
+                .iter()
+                .filter(|r| {
+                    r.state == RequestState::Queued
+                        || (r.state == RequestState::Prefilling && r.remaining_prompt() > 0)
+                })
+                .count()
+                + pending
+                    .iter()
+                    .take_while(|r| r.arrival <= self.now + 0.02)
+                    .count();
+            // prefill-token backlog is the leading indicator of decode
+            // gap growth: every 192 backlog tokens counts as extra load
+            let backlog_tokens: usize = self
+                .requests
+                .iter()
+                .filter(|r| !r.is_finished())
+                .map(|r| r.remaining_prompt())
+                .sum();
+            let decoding_now = self
+                .requests
+                .iter()
+                .any(|r| r.state == RequestState::Decoding);
+            if decoding_now {
+                queue_depth += backlog_tokens / 192;
+            }
+            let precision = self
+                .controller
+                .decide(queue_depth, self.kv.block_utilization());
+            let is_fp8 = precision == Precision::Fp8;
+            if mode_timeline
+                .last()
+                .map(|&(_, last)| last != is_fp8)
+                .unwrap_or(true)
+            {
+                mode_timeline.push((self.now, is_fp8));
+            }
+
+            // ---- plan & execute ---------------------------------------
+            let plan = self.scheduler.plan(&self.requests, &self.kv);
+            match plan {
+                IterationPlan::Idle => {
+                    // blocked on KV space with decodes all finished —
+                    // wait for arrivals (time must advance to avoid spin)
+                    match pending.front() {
+                        Some(next) => self.now = next.arrival.max(self.now + 1e-4),
+                        None => {
+                            return Err(anyhow!(
+                                "deadlock: {} active requests but nothing runnable",
+                                active
+                            ))
+                        }
+                    }
+                    continue;
+                }
+                IterationPlan::Prefill { id, chunk } => {
+                    self.run_prefill(id, chunk, precision, &mut metrics)?;
+                }
+                IterationPlan::Decode { ids } => {
+                    self.run_decode(&ids, precision, &mut metrics)?;
+                }
+            }
+
+            // ---- harvest finished requests ----------------------------
+            for r in &mut self.requests {
+                if r.state == RequestState::Finished && r.slot.is_some() {
+                    let slot = r.slot.take().unwrap();
+                    self.kv.release(slot);
+                    metrics.record_request(r);
+                    let ttft = r.first_token_at.map(|t| t - r.arrival).unwrap_or(0.0);
+                    let mean_tpot = match (r.first_token_at, r.finished_at) {
+                        (Some(f), Some(d)) if r.generated.len() > 1 => {
+                            (d - f) / (r.generated.len() - 1) as f64
+                        }
+                        _ => 0.0,
+                    };
+                    completions.push(CompletedRequest {
+                        id: r.id,
+                        tokens: r.generated.clone(),
+                        ttft_s: ttft,
+                        mean_tpot_s: mean_tpot,
+                    });
+                }
+            }
+            // drop finished request bodies to keep the table small
+            self.requests.retain(|r| !r.is_finished());
+
+            iterations += 1;
+            if self.cfg.max_iterations > 0 && iterations >= self.cfg.max_iterations {
+                break;
+            }
+        }
+
+        Ok(RunReport {
+            metrics,
+            controller: self.controller.clone(),
+            iterations,
+            mode_timeline,
+            completions,
+        })
+    }
+
+    fn request_mut(&mut self, id: u64) -> &mut Request {
+        self.requests
+            .iter_mut()
+            .find(|r| r.id == id)
+            .expect("scheduler produced unknown request id")
+    }
+
+    fn run_prefill(
+        &mut self,
+        id: u64,
+        chunk: usize,
+        precision: Precision,
+        _metrics: &mut Metrics,
+    ) -> Result<()> {
+        // admit if needed
+        let (slot, start_pos, tokens) = {
+            let reserve_len = {
+                let r = self.requests.iter().find(|r| r.id == id).unwrap();
+                // full expected context, capped by the cache geometry
+                (r.prompt.len() + r.max_new_tokens).min(self.kv.geo.max_seq)
+            };
+            let need_alloc = {
+                let r = self.requests.iter().find(|r| r.id == id).unwrap();
+                r.slot.is_none()
+            };
+            if need_alloc {
+                let slot = self.kv.allocate(reserve_len)?;
+                let r = self.request_mut(id);
+                r.slot = Some(slot);
+                r.state = RequestState::Prefilling;
+            }
+            let r = self.requests.iter().find(|r| r.id == id).unwrap();
+            let start = r.prefilled;
+            let take = chunk.min(r.remaining_prompt());
+            let mut toks: Vec<i32> = r.prompt[start..start + take].to_vec();
+            // pad the tail chunk with the final prompt byte (prompt
+            // lengths are chunk-aligned by the workload generators; this
+            // is a safety net)
+            while toks.len() < chunk {
+                toks.push(*toks.last().unwrap());
+            }
+            (r.slot.unwrap(), start, toks)
+        };
+
+        let StepRun { logits, latency } =
+            self.backend
+                .prefill(&mut self.kv, slot, start_pos, &tokens, precision)?;
+        self.now += latency;
+
+        let geo = self.kv.geo;
+        let r_done;
+        {
+            let r = self.request_mut(id);
+            r.prefilled = (start_pos + tokens.len()).min(r.prompt.len());
+            r_done = r.remaining_prompt() == 0;
+        }
+        let new_len = {
+            let r = self.requests.iter().find(|r| r.id == id).unwrap();
+            r.prefilled
+        };
+        let _ = geo;
+        self.kv.grow(slot, new_len)?;
+
+        if r_done {
+            // sample the first output token from the last chunk's logits
+            let first_tok = logits.as_ref().map(|lg| argmax(lg)).unwrap_or(0);
+            let now = self.now;
+            let r = self.request_mut(id);
+            r.state = RequestState::Decoding;
+            r.generated.push(first_tok);
+            r.first_token_at = Some(now);
+            r.last_token_at = Some(now);
+            if r.stop_token == Some(first_tok) || r.generated.len() >= r.max_new_tokens {
+                r.state = RequestState::Finished;
+                r.finish_reason = Some(if r.stop_token == Some(first_tok) {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Length
+                });
+                r.finished_at = Some(now);
+            }
+        }
+        Ok(())
+    }
+
+    fn run_decode(
+        &mut self,
+        ids: &[u64],
+        precision: Precision,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        let mut slots = Vec::with_capacity(ids.len());
+        let mut tokens = Vec::with_capacity(ids.len());
+        let mut positions = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let r = self.requests.iter().find(|r| r.id == id).unwrap();
+            slots.push(r.slot.expect("decoding request without slot"));
+            tokens.push(*r.generated.last().expect("decoding without a token"));
+            positions.push(r.context_len() as i32 - 1);
+        }
+
+        let StepRun { logits, latency } =
+            self.backend
+                .decode(&mut self.kv, &slots, &tokens, &positions, precision)?;
+        self.now += latency;
+        // true per-sequence TPOT: gap since that sequence's previous token
+        // (includes time spent waiting on other iterations)
+        let gaps: Vec<f64> = ids
+            .iter()
+            .map(|&id| {
+                let r = self.requests.iter().find(|r| r.id == id).unwrap();
+                self.now - r.last_token_at.unwrap_or(self.now - latency)
+            })
+            .collect();
+        let worst = gaps.iter().cloned().fold(0.0f64, f64::max);
+        self.controller.observe_tpot(worst);
+        metrics.record_decode_iteration(self.now, &gaps);
+
+        let vocab = logits
+            .as_ref()
+            .map(|lg| lg.len() / ids.len())
+            .unwrap_or(0);
+        let now = self.now;
+        for (i, &id) in ids.iter().enumerate() {
+            // grow KV to cover the token written at `positions[i]` + the
+            // next one
+            let slot = slots[i];
+            let new_len = positions[i] as usize + 2;
+            self.kv.grow(slot, new_len.min(self.kv.geo.max_seq))?;
+
+            let tok = match &logits {
+                Some(lg) => argmax(&lg[i * vocab..(i + 1) * vocab]),
+                None => 0,
+            };
+            let max_seq = self.kv.geo.max_seq;
+            let r = self.request_mut(id);
+            r.generated.push(tok);
+            r.last_token_at = Some(now);
+            let hit_stop = r.stop_token == Some(tok);
+            let hit_len = r.generated.len() >= r.max_new_tokens;
+            let hit_ctx = r.context_len() >= max_seq - 1;
+            if hit_stop || hit_len || hit_ctx {
+                r.state = RequestState::Finished;
+                r.finish_reason = Some(if hit_stop {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Length
+                });
+                r.finished_at = Some(now);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::StepRun;
+    use crate::coordinator::kv::KvGeometry;
+
+    /// Scripted backend for engine unit tests: fixed latency, logits that
+    /// always predict token 42.
+    struct FakeBackend {
+        geo: KvGeometry,
+        latency: f64,
+        vocab: usize,
+        pub prefills: usize,
+        pub decodes: usize,
+    }
+
+    impl FakeBackend {
+        fn new(latency: f64) -> FakeBackend {
+            FakeBackend {
+                geo: KvGeometry {
+                    n_layers: 1,
+                    n_heads: 1,
+                    max_seq: 64,
+                    head_dim: 1,
+                    block_size: 8,
+                    total_blocks: 64,
+                    n_slots: 4,
+                },
+                latency,
+                vocab: 64,
+                prefills: 0,
+                decodes: 0,
+            }
+        }
+
+        fn logits_for(&self, n: usize) -> Vec<f32> {
+            let mut lg = vec![0.0f32; n * self.vocab];
+            for i in 0..n {
+                lg[i * self.vocab + 42] = 10.0;
+            }
+            lg
+        }
+    }
+
+    impl Backend for FakeBackend {
+        fn geometry(&self) -> KvGeometry {
+            self.geo
+        }
+        fn prefill_chunks(&self) -> Vec<usize> {
+            vec![8, 16]
+        }
+        fn max_decode_batch(&self) -> usize {
+            4
+        }
+        fn prefill(
+            &mut self,
+            _kv: &mut KvCacheManager,
+            _slot: usize,
+            _start: usize,
+            _tokens: &[i32],
+            _p: Precision,
+        ) -> Result<StepRun> {
+            self.prefills += 1;
+            Ok(StepRun {
+                logits: Some(self.logits_for(1)),
+                latency: self.latency,
+            })
+        }
+        fn decode(
+            &mut self,
+            _kv: &mut KvCacheManager,
+            slots: &[usize],
+            _tokens: &[i32],
+            _pos: &[i32],
+            _p: Precision,
+        ) -> Result<StepRun> {
+            self.decodes += 1;
+            Ok(StepRun {
+                logits: Some(self.logits_for(slots.len())),
+                latency: self.latency,
+            })
+        }
+    }
+
+    fn engine(latency: f64, policy: PrecisionPolicy) -> Engine<FakeBackend> {
+        Engine::new(
+            FakeBackend::new(latency),
+            EngineConfig {
+                policy,
+                physical_kv: false,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn single_request_runs_to_length() {
+        let mut e = engine(0.001, PrecisionPolicy::Fp16Only);
+        let reqs = vec![Request::new(1, vec![1; 16], 5, 0.0)];
+        let report = e.run(reqs).unwrap();
+        assert_eq!(report.metrics.completed, 1);
+        assert_eq!(report.metrics.total_output_tokens, 5);
+        // 1 prefill (16 = one chunk) + 4 decodes (first token from prefill)
+        assert_eq!(e.backend.prefills, 1);
+        assert_eq!(e.backend.decodes, 4);
+    }
+
+    #[test]
+    fn stop_token_halts_generation() {
+        let mut e = engine(0.001, PrecisionPolicy::Fp16Only);
+        let reqs = vec![Request::new(1, vec![1; 8], 100, 0.0).with_stop(42)];
+        let report = e.run(reqs).unwrap();
+        assert_eq!(report.metrics.completed, 1);
+        // first sampled token is already 42 -> stops immediately
+        assert_eq!(report.metrics.total_output_tokens, 1);
+    }
+
+    #[test]
+    fn chunked_prefill_long_prompt() {
+        let mut e = engine(0.001, PrecisionPolicy::Fp16Only);
+        let reqs = vec![Request::new(1, vec![1; 48], 2, 0.0)];
+        let report = e.run(reqs).unwrap();
+        assert_eq!(report.metrics.completed, 1);
+        // 48 = 16+16+16 -> 3 prefill chunks
+        assert_eq!(e.backend.prefills, 3);
+    }
+
+    #[test]
+    fn batching_multiple_requests() {
+        let mut e = engine(0.001, PrecisionPolicy::Fp16Only);
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request::new(i, vec![1; 8], 10, 0.0))
+            .collect();
+        let report = e.run(reqs).unwrap();
+        assert_eq!(report.metrics.completed, 3);
+        assert_eq!(report.metrics.total_output_tokens, 30);
+        // batching means decodes << 3 * 9
+        assert!(
+            e.backend.decodes < 20,
+            "expected batched decodes, got {}",
+            e.backend.decodes
+        );
+    }
+
+    #[test]
+    fn arrivals_respect_clock() {
+        let mut e = engine(0.010, PrecisionPolicy::Fp16Only);
+        let mut r2 = Request::new(2, vec![1; 8], 2, 5.0);
+        r2.arrival = 5.0;
+        let reqs = vec![Request::new(1, vec![1; 8], 2, 0.0), r2];
+        let mut report = e.run(reqs).unwrap();
+        assert_eq!(report.metrics.completed, 2);
+        // engine must have fast-forwarded: total time >= 5.0
+        assert!(e.now() >= 5.0);
+        let s = report.metrics.ttft.summary();
+        // both requests should have small TTFT (no cross-talk)
+        assert!(s.max < 0.2, "{s}");
+    }
+
+    #[test]
+    fn dual_policy_switches_under_slow_backend() {
+        // backend latency far above the SLO forces fp8 escalation
+        let mut e = engine(0.050, PrecisionPolicy::Dual);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request::new(i, vec![1; 8], 30, 0.0))
+            .collect();
+        let report = e.run(reqs).unwrap();
+        assert!(report.controller.switches >= 1, "never switched to fp8");
+        assert!(report.controller.iters_fp8 > 0);
+    }
+
+    #[test]
+    fn metrics_timeline_populated() {
+        let mut e = engine(0.002, PrecisionPolicy::Fp16Only);
+        let reqs = vec![Request::new(1, vec![1; 8], 20, 0.0)];
+        let report = e.run(reqs).unwrap();
+        assert!(!report.metrics.tpot_by_second.is_empty());
+        assert!(report.iterations >= 20);
+    }
+}

@@ -1,0 +1,140 @@
+//! Serving metrics: TTFT / TPOT digests, SLO-violation accounting, and
+//! the per-second violation timeline used by Figure 1b.
+
+use crate::util::stats::{Digest, Summary};
+
+use super::precision::SloConfig;
+use super::request::Request;
+
+/// Aggregated metrics for one serving run.
+#[derive(Default)]
+pub struct Metrics {
+    pub ttft: Digest,
+    /// Per-token inter-arrival latencies (the TPOT samples).
+    pub tpot: Digest,
+    /// Per-request mean TPOT.
+    pub tpot_per_request: Digest,
+    /// (second index, worst TPOT in that second) timeline.
+    pub tpot_by_second: Vec<(u64, f64)>,
+    pub completed: usize,
+    pub total_prompt_tokens: usize,
+    pub total_output_tokens: usize,
+    /// Engine-clock span of the run (first arrival .. last completion).
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            t_start: f64::INFINITY,
+            ..Default::default()
+        }
+    }
+
+    /// Record one finished request.
+    pub fn record_request(&mut self, r: &Request) {
+        debug_assert!(r.is_finished());
+        self.completed += 1;
+        self.total_prompt_tokens += r.prompt.len();
+        self.total_output_tokens += r.generated.len();
+        self.t_start = self.t_start.min(r.arrival);
+        if let Some(t) = r.finished_at {
+            self.t_end = self.t_end.max(t);
+        }
+        if let Some(ft) = r.first_token_at {
+            self.ttft.add(ft - r.arrival);
+            if r.generated.len() > 1 {
+                if let Some(done) = r.finished_at {
+                    let mean_tpot = (done - ft) / (r.generated.len() - 1) as f64;
+                    self.tpot_per_request.add(mean_tpot);
+                }
+            }
+        }
+    }
+
+    /// Record one decode iteration at engine time `now`. `gaps` holds the
+    /// per-sequence inter-token times (now - that sequence's previous
+    /// token) — the true TPOT, which includes time the sequence spent
+    /// waiting while other iterations (e.g. prefill chunks) ran.
+    pub fn record_decode_iteration(&mut self, now: f64, gaps: &[f64]) {
+        let mut worst = 0.0f64;
+        for &g in gaps {
+            self.tpot.add(g);
+            worst = worst.max(g);
+        }
+        let sec = now as u64;
+        match self.tpot_by_second.last_mut() {
+            Some((s, w)) if *s == sec => *w = w.max(worst),
+            _ => self.tpot_by_second.push((sec, worst)),
+        }
+    }
+
+    /// Seconds of the run whose worst TPOT violated the SLO (Fig 1b's
+    /// "seconds of SLO violation").
+    pub fn slo_violation_seconds(&self, slo: &SloConfig) -> usize {
+        self.tpot_by_second
+            .iter()
+            .filter(|(_, worst)| *worst > slo.tpot_target)
+            .count()
+    }
+
+    /// Output-token throughput over the run, tokens/second.
+    pub fn throughput_tok_s(&self) -> f64 {
+        let span = self.t_end - self.t_start;
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.total_output_tokens as f64 / span
+    }
+
+    pub fn ttft_summary(&mut self) -> Summary {
+        self.ttft.summary()
+    }
+
+    pub fn tpot_summary(&mut self) -> Summary {
+        self.tpot.summary()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{FinishReason, Request, RequestState};
+
+    fn finished_request(arrival: f64, first: f64, done: f64, n_out: usize) -> Request {
+        let mut r = Request::new(1, vec![1, 2], 64, arrival);
+        r.state = RequestState::Finished;
+        r.prefilled = 2;
+        r.generated = vec![0; n_out];
+        r.first_token_at = Some(first);
+        r.finished_at = Some(done);
+        r.finish_reason = Some(FinishReason::Length);
+        r
+    }
+
+    #[test]
+    fn ttft_and_tpot_math() {
+        let mut m = Metrics::new();
+        // arrival 1.0, first token 1.2, done 2.2, 11 tokens
+        m.record_request(&finished_request(1.0, 1.2, 2.2, 11));
+        assert_eq!(m.completed, 1);
+        let s = m.ttft_summary();
+        assert!((s.p50 - 0.2).abs() < 1e-9);
+        let tp = m.tpot_per_request.percentile(50.0);
+        assert!((tp - 0.1).abs() < 1e-9, "{tp}");
+        assert!((m.throughput_tok_s() - 11.0 / 1.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn violation_seconds() {
+        let mut m = Metrics::new();
+        let slo = SloConfig::default();
+        m.record_decode_iteration(0.5, &[0.010; 4]); // fine
+        m.record_decode_iteration(1.2, &[0.050; 4]); // violation in second 1
+        m.record_decode_iteration(1.8, &[0.020; 4]); // same second, fine
+        m.record_decode_iteration(2.1, &[0.040; 4]); // violation in second 2
+        assert_eq!(m.slo_violation_seconds(&slo), 2);
+        assert_eq!(m.tpot.len(), 16);
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer 3: the vLLM-style serving coordinator.
+//!
+//! The engine implements continuous batching (ORCA-style iteration-level
+//! scheduling) with chunked prefill (Sarathi-style), a slot/block KV-cache
+//! manager, latency metrics, and the paper's contribution: an
+//! **iteration-level dual-precision controller** that picks FP16 or FP8
+//! execution per scheduling step from the same NestedFP weight store.
+//!
+//! The engine is generic over a [`backend::Backend`]:
+//! * [`backend::RealBackend`] — executes the AOT artifacts on the PJRT
+//!   CPU client (real logits, greedy decoding; the e2e example).
+//! * [`backend::SimBackend`] — costs each iteration with the `gpusim`
+//!   H100 model and advances a virtual clock (the performance figures).
+
+pub mod request;
+pub mod kv;
+pub mod scheduler;
+pub mod precision;
+pub mod metrics;
+pub mod backend;
+pub mod engine;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig};
+pub use precision::{PrecisionPolicy, SloConfig};
+pub use request::{Request, RequestId, RequestState};

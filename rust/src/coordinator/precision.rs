@@ -1,0 +1,261 @@
+//! The dual-precision controller — the paper's §3.2 proposal, made
+//! concrete: per scheduling iteration, pick FP16 (quality) or FP8
+//! (throughput) from load and SLO-pressure signals, with hysteresis so the
+//! engine does not flap between modes.
+//!
+//! Signals:
+//! * EWMA of recent TPOT vs the SLO target (33.3 ms in the paper),
+//! * queue depth (requests waiting for admission),
+//! * KV block utilization (memory pressure limits batch growth).
+
+/// SLO targets (industry-standard values from the paper's §1).
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Time-per-output-token target, seconds (paper: 33.3 ms).
+    pub tpot_target: f64,
+    /// Time-to-first-token target, seconds (paper: 200 ms).
+    pub ttft_target: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            tpot_target: 0.0333,
+            ttft_target: 0.200,
+        }
+    }
+}
+
+/// Which precision the engine should run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Fp16,
+    Fp8,
+}
+
+/// Operating policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrecisionPolicy {
+    /// Always FP16 (the quality baseline).
+    Fp16Only,
+    /// Always FP8 (the throughput baseline).
+    Fp8Only,
+    /// NestedFP dual-precision: switch per iteration.
+    Dual,
+}
+
+/// Controller state.
+#[derive(Clone, Debug)]
+pub struct PrecisionController {
+    pub policy: PrecisionPolicy,
+    pub slo: SloConfig,
+    current: Precision,
+    /// EWMA of observed TPOT, seconds.
+    ewma_tpot: f64,
+    /// Most recent worst-gap observation (fast burst signal).
+    last_tpot: f64,
+    ewma_alpha: f64,
+    /// Iterations remaining before another switch is allowed.
+    dwell: usize,
+    min_dwell_iters: usize,
+    /// Switch count (reported in experiments).
+    pub switches: usize,
+    /// Iterations spent in each precision.
+    pub iters_fp16: usize,
+    pub iters_fp8: usize,
+}
+
+/// Escalate to FP8 when the TPOT EWMA exceeds this fraction of the SLO.
+const HIGH_WATER: f64 = 0.85;
+/// Return to FP16 when it falls below this fraction.
+const LOW_WATER: f64 = 0.60;
+/// Queue depth that forces FP8 regardless of latency (burst absorber —
+/// queued requests mean imminent prefill iterations that will stretch
+/// running sequences' inter-token gaps).
+const QUEUE_PANIC: usize = 3;
+/// A single observed gap beyond this fraction of the SLO escalates
+/// immediately (the EWMA alone reacts too slowly for second-level bursts).
+const SPIKE_WATER: f64 = 0.80;
+
+impl PrecisionController {
+    pub fn new(policy: PrecisionPolicy, slo: SloConfig) -> PrecisionController {
+        PrecisionController {
+            policy,
+            slo,
+            current: match policy {
+                PrecisionPolicy::Fp8Only => Precision::Fp8,
+                _ => Precision::Fp16,
+            },
+            ewma_tpot: 0.0,
+            last_tpot: 0.0,
+            ewma_alpha: 0.25,
+            dwell: 0,
+            min_dwell_iters: 8,
+            switches: 0,
+            iters_fp16: 0,
+            iters_fp8: 0,
+        }
+    }
+
+    /// Record an iteration's observed decode latency (== TPOT for the
+    /// sequences in the batch).
+    pub fn observe_tpot(&mut self, tpot_s: f64) {
+        self.last_tpot = tpot_s;
+        if self.ewma_tpot == 0.0 {
+            self.ewma_tpot = tpot_s;
+        } else {
+            self.ewma_tpot =
+                self.ewma_alpha * tpot_s + (1.0 - self.ewma_alpha) * self.ewma_tpot;
+        }
+    }
+
+    pub fn ewma_tpot(&self) -> f64 {
+        self.ewma_tpot
+    }
+
+    /// Decide the precision for the next iteration.
+    pub fn decide(&mut self, queue_depth: usize, kv_utilization: f64) -> Precision {
+        let decided = match self.policy {
+            PrecisionPolicy::Fp16Only => Precision::Fp16,
+            PrecisionPolicy::Fp8Only => Precision::Fp8,
+            PrecisionPolicy::Dual => {
+                if self.dwell > 0 {
+                    self.dwell -= 1;
+                    self.current
+                } else {
+                    let pressure = self.ewma_tpot / self.slo.tpot_target;
+                    let spike = self.last_tpot / self.slo.tpot_target;
+                    let want = if queue_depth >= QUEUE_PANIC || kv_utilization > 0.90 {
+                        Precision::Fp8
+                    } else if pressure > HIGH_WATER || spike > SPIKE_WATER {
+                        Precision::Fp8
+                    } else if pressure < LOW_WATER
+                        && spike < LOW_WATER
+                        && queue_depth < QUEUE_PANIC
+                    {
+                        Precision::Fp16
+                    } else {
+                        self.current // hysteresis band: hold
+                    };
+                    if want != self.current {
+                        self.switches += 1;
+                        self.dwell = self.min_dwell_iters;
+                        self.current = want;
+                    }
+                    self.current
+                }
+            }
+        };
+        match decided {
+            Precision::Fp16 => self.iters_fp16 += 1,
+            Precision::Fp8 => self.iters_fp8 += 1,
+        }
+        decided
+    }
+
+    /// Fraction of iterations served at FP16 (the paper reports dual-mode
+    /// preserving FP16 for >68% of the time on the Azure trace slice).
+    pub fn fp16_fraction(&self) -> f64 {
+        let total = self.iters_fp16 + self.iters_fp8;
+        if total == 0 {
+            1.0
+        } else {
+            self.iters_fp16 as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> PrecisionController {
+        PrecisionController::new(PrecisionPolicy::Dual, SloConfig::default())
+    }
+
+    #[test]
+    fn fixed_policies_never_switch() {
+        let mut c16 = PrecisionController::new(PrecisionPolicy::Fp16Only, SloConfig::default());
+        let mut c8 = PrecisionController::new(PrecisionPolicy::Fp8Only, SloConfig::default());
+        for _ in 0..100 {
+            c16.observe_tpot(1.0); // terrible latency
+            assert_eq!(c16.decide(100, 1.0), Precision::Fp16);
+            c8.observe_tpot(0.0001);
+            assert_eq!(c8.decide(0, 0.0), Precision::Fp8);
+        }
+        assert_eq!(c16.switches, 0);
+        assert_eq!(c8.switches, 0);
+    }
+
+    #[test]
+    fn escalates_under_latency_pressure() {
+        let mut c = ctl();
+        for _ in 0..10 {
+            c.observe_tpot(0.040); // above 33.3ms SLO
+        }
+        assert_eq!(c.decide(0, 0.2), Precision::Fp8);
+        assert_eq!(c.switches, 1);
+    }
+
+    #[test]
+    fn recovers_when_load_drops() {
+        let mut c = ctl();
+        for _ in 0..10 {
+            c.observe_tpot(0.040);
+        }
+        assert_eq!(c.decide(0, 0.2), Precision::Fp8);
+        // latency falls well under the low-water mark
+        for _ in 0..40 {
+            c.observe_tpot(0.010);
+        }
+        // burn through the dwell period
+        let mut last = Precision::Fp8;
+        for _ in 0..10 {
+            last = c.decide(0, 0.2);
+        }
+        assert_eq!(last, Precision::Fp16);
+        assert_eq!(c.switches, 2);
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping() {
+        let mut c = ctl();
+        // oscillate right around the high-water mark
+        let mut switches_seen = Vec::new();
+        for i in 0..200 {
+            let t = if i % 2 == 0 { 0.0285 } else { 0.0282 }; // ~0.85*SLO
+            c.observe_tpot(t);
+            c.decide(0, 0.2);
+            switches_seen.push(c.switches);
+        }
+        assert!(
+            c.switches <= 4,
+            "controller flapped {} times around the threshold",
+            c.switches
+        );
+    }
+
+    #[test]
+    fn queue_panic_forces_fp8() {
+        let mut c = ctl();
+        c.observe_tpot(0.001); // latency is fine
+        assert_eq!(c.decide(QUEUE_PANIC, 0.1), Precision::Fp8);
+    }
+
+    #[test]
+    fn kv_pressure_forces_fp8() {
+        let mut c = ctl();
+        c.observe_tpot(0.001);
+        assert_eq!(c.decide(0, 0.95), Precision::Fp8);
+    }
+
+    #[test]
+    fn fp16_fraction_accounting() {
+        let mut c = ctl();
+        for _ in 0..10 {
+            c.observe_tpot(0.001);
+            c.decide(0, 0.0);
+        }
+        assert_eq!(c.fp16_fraction(), 1.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Request types and lifecycle.
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Lifecycle state of a request inside the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    /// Waiting in the admission queue.
+    Queued,
+    /// Admitted; prompt partially prefilled (chunked prefill in flight).
+    Prefilling,
+    /// Generating tokens.
+    Decoding,
+    /// Done (completed, or evicted on error).
+    Finished,
+}
+
+/// Why a request finished.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced max_new_tokens.
+    Length,
+    /// Emitted the stop byte (`;` terminates every task-grammar answer).
+    Stop,
+}
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt token ids (byte-level for the in-repo model).
+    pub prompt: Vec<i32>,
+    /// Generation budget.
+    pub max_new_tokens: usize,
+    /// Optional stop token (generation halts after emitting it).
+    pub stop_token: Option<i32>,
+    /// Arrival time on the engine clock, seconds.
+    pub arrival: f64,
+
+    // ---- engine-owned progress ----
+    pub state: RequestState,
+    /// Prompt tokens already prefilled.
+    pub prefilled: usize,
+    /// Generated tokens so far.
+    pub generated: Vec<i32>,
+    /// KV slot handle (valid once admitted).
+    pub slot: Option<usize>,
+    /// Clock time the first output token completed.
+    pub first_token_at: Option<f64>,
+    /// Clock time of the previous token (for TPOT accounting).
+    pub last_token_at: Option<f64>,
+    pub finish_reason: Option<FinishReason>,
+    pub finished_at: Option<f64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize, arrival: f64) -> Request {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_token: None,
+            arrival,
+            state: RequestState::Queued,
+            prefilled: 0,
+            generated: Vec::new(),
+            slot: None,
+            first_token_at: None,
+            last_token_at: None,
+            finish_reason: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn with_stop(mut self, tok: i32) -> Request {
+        self.stop_token = Some(tok);
+        self
+    }
+
+    /// Current sequence length in the KV cache (prefilled + generated).
+    pub fn context_len(&self) -> usize {
+        self.prefilled + self.generated.len()
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn remaining_prompt(&self) -> usize {
+        self.prompt.len() - self.prefilled
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == RequestState::Finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_counters() {
+        let mut r = Request::new(1, vec![1, 2, 3], 8, 0.0);
+        assert_eq!(r.remaining_prompt(), 3);
+        assert_eq!(r.context_len(), 0);
+        r.prefilled = 3;
+        r.generated.push(7);
+        assert_eq!(r.remaining_prompt(), 0);
+        assert_eq!(r.context_len(), 4);
+        assert!(!r.is_finished());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn rejects_empty_prompt() {
+        Request::new(1, vec![], 8, 0.0);
+    }
+}

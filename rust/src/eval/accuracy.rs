@@ -1,0 +1,116 @@
+//! Downstream-task accuracy on the real (PJRT) backend: greedy decoding
+//! of held-out task prompts under each precision mode — the Tables 1–2
+//! analog (DESIGN.md §2 explains the task substitution).
+
+use anyhow::Result;
+
+use crate::coordinator::backend::{ModeMap, RealBackend};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::precision::PrecisionPolicy;
+use crate::coordinator::request::Request;
+use crate::runtime::ModelRuntime;
+
+use super::tasks::{self, Task};
+
+/// Accuracy of one task under one mode.
+#[derive(Clone, Debug)]
+pub struct TaskAccuracy {
+    pub task: Task,
+    pub n: usize,
+    pub correct: usize,
+    pub exact_prefix: usize,
+}
+
+impl TaskAccuracy {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.n.max(1) as f64
+    }
+}
+
+/// Run the eval set for every task under artifact mode `mode`
+/// ("fp16" | "nested16" | "nested8").
+///
+/// `rt` must be loaded with decode+prefill kinds for that mode. Requests
+/// are all submitted at t=0, so this also exercises continuous batching.
+pub fn evaluate_mode(
+    rt: ModelRuntime,
+    mode: &'static str,
+    n_per_task: usize,
+    seed: u64,
+) -> Result<Vec<TaskAccuracy>> {
+    let chunk_align = rt
+        .manifest
+        .prefill_chunks
+        .iter()
+        .copied()
+        .min()
+        .unwrap_or(32);
+    let n_slots = rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
+    let max_seq = rt.manifest.model.max_seq;
+    let backend = RealBackend::new(
+        rt,
+        ModeMap {
+            fp16_mode: mode,
+            fp8_mode: mode,
+        },
+        n_slots,
+        // generous block budget: eval contexts are short
+        n_slots * max_seq / 16 + 64,
+    );
+    let mut engine = Engine::new(
+        backend,
+        EngineConfig {
+            policy: PrecisionPolicy::Fp16Only, // fixed mode via ModeMap
+            physical_kv: true,
+            ..Default::default()
+        },
+    );
+
+    // build all requests
+    let mut requests = Vec::new();
+    let mut keys = Vec::new(); // (task, answer)
+    let mut id = 0u64;
+    for task in Task::ALL {
+        for (i, (prompt, answer)) in tasks::eval_prompts(seed, task, n_per_task)
+            .into_iter()
+            .enumerate()
+        {
+            let toks = tasks::chunk_aligned_prompt(&prompt, chunk_align, seed + i as u64);
+            let max_new = answer.len() + 4;
+            requests.push(
+                Request::new(id, toks, max_new, 0.0).with_stop(b';' as i32),
+            );
+            keys.push((task, answer));
+            id += 1;
+        }
+    }
+
+    let report = engine.run(requests)?;
+    let mut out: Vec<TaskAccuracy> = Task::ALL
+        .iter()
+        .map(|&t| TaskAccuracy {
+            task: t,
+            n: 0,
+            correct: 0,
+            exact_prefix: 0,
+        })
+        .collect();
+    for c in &report.completions {
+        let (task, answer) = &keys[c.id as usize];
+        let slot = out
+            .iter_mut()
+            .find(|a| a.task == *task)
+            .unwrap();
+        slot.n += 1;
+        let text: String = c.tokens.iter().map(|&t| (t as u8) as char).collect();
+        if text == *answer {
+            slot.correct += 1;
+        }
+        if answer.starts_with(text.trim_end_matches(';'))
+            || text.starts_with(&answer[..answer.len().min(2)])
+        {
+            slot.exact_prefix += 1;
+        }
+    }
+    Ok(out)
+}

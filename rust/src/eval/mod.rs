@@ -1,0 +1,10 @@
+//! Accuracy harness: the substitute for the paper's LM-Eval-Harness runs
+//! (Tables 1–2). Compares FP16 / baseline-FP8 / NestedFP8 on the in-repo
+//! trained model using three synthetic downstream tasks plus logit-level
+//! and weight-level error metrics.
+
+pub mod tasks;
+pub mod quanterr;
+pub mod accuracy;
+
+pub use tasks::{eval_prompts, gen_example, Task};

@@ -1,0 +1,123 @@
+//! Weight-level quantization-error metrics: the fast, model-free half of
+//! the Table 1/2 comparison. Quantifies how close NestedFP8's upper plane
+//! (global 2^8 scale) is to per-channel absmax E4M3 — the paper's claim
+//! that the fixed-scale nested format "achieves accuracy comparable to
+//! the FP8 baseline despite foregoing fine-grained quantization".
+
+use crate::format::nested::{self, DecomposeResult};
+use crate::format::quant;
+use crate::format::tensor::Tensor2;
+use crate::format::fp16::F16;
+
+/// Error metrics of a quantized weight tensor vs its fp16 original.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantError {
+    /// Relative Frobenius error ||q - w|| / ||w||.
+    pub rel_fro: f64,
+    /// Mean per-element relative error (non-zero elements).
+    pub mean_rel: f64,
+    /// Worst per-element relative error.
+    pub max_rel: f64,
+}
+
+fn error_of(q: &[f32], w: &[f32]) -> QuantError {
+    assert_eq!(q.len(), w.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    let mut sum_rel = 0.0f64;
+    let mut n_rel = 0usize;
+    let mut max_rel = 0.0f64;
+    for (a, b) in q.iter().zip(w) {
+        let d = (*a as f64 - *b as f64).powi(2);
+        num += d;
+        den += (*b as f64).powi(2);
+        if *b != 0.0 {
+            let r = ((*a - *b) / *b).abs() as f64;
+            sum_rel += r;
+            n_rel += 1;
+            if r > max_rel {
+                max_rel = r;
+            }
+        }
+    }
+    QuantError {
+        rel_fro: (num / den.max(1e-300)).sqrt(),
+        mean_rel: sum_rel / n_rel.max(1) as f64,
+        max_rel,
+    }
+}
+
+/// Compare the two FP8 representations of an fp16 weight tensor
+/// (elements must be NestedFP-eligible).
+pub fn compare_fp8_variants(w: &Tensor2) -> (QuantError, QuantError) {
+    // reference fp16 values (exactly representable)
+    let w16: Vec<u16> = w
+        .data
+        .iter()
+        .map(|&v| F16::from_f32(v).to_bits())
+        .collect();
+    let w_vals: Vec<f32> = w16.iter().map(|&b| F16::from_bits(b).to_f32()).collect();
+
+    // baseline: per-channel absmax E4M3
+    let w_t = Tensor2::from_vec(w.rows, w.cols, w_vals.clone());
+    let baseline = quant::fake_quantize_weight_per_channel(&w_t);
+    let err_base = error_of(&baseline.data, &w_vals);
+
+    // NestedFP8: upper plane at the global 2^8 scale
+    let nested = match nested::decompose_tensor(w.rows, w.cols, &w16) {
+        DecomposeResult::Nested(t) => t,
+        DecomposeResult::Exception { .. } => panic!("ineligible tensor in comparison"),
+    };
+    let w8 = nested.fp8_weights_f32();
+    let err_nested = error_of(&w8, &w_vals);
+
+    (err_base, err_nested)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn gauss_tensor(rows: usize, cols: usize, std: f32, seed: u64) -> Tensor2 {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.normal() as f32 * std).clamp(-1.7, 1.7))
+            .collect();
+        Tensor2::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn nested_error_comparable_to_baseline() {
+        // the Table-2 claim at the weight level: NestedFP8's error is the
+        // same order as per-channel absmax (both are 3-bit-mantissa FP)
+        let w = gauss_tensor(64, 256, 0.05, 9);
+        let (base, nested) = compare_fp8_variants(&w);
+        assert!(base.rel_fro > 0.0 && nested.rel_fro > 0.0);
+        let ratio = nested.rel_fro / base.rel_fro;
+        assert!(
+            ratio < 2.0,
+            "nested {:.4} vs baseline {:.4} (ratio {ratio:.2})",
+            nested.rel_fro,
+            base.rel_fro
+        );
+    }
+
+    #[test]
+    fn both_errors_bounded_by_e4m3_ulp() {
+        let w = gauss_tensor(32, 128, 0.1, 11);
+        let (base, nested) = compare_fp8_variants(&w);
+        // 3-bit mantissa -> <= 2^-4 relative, up to subnormal effects
+        assert!(base.mean_rel < 0.04, "{base:?}");
+        assert!(nested.mean_rel < 0.04, "{nested:?}");
+    }
+
+    #[test]
+    fn nested_loses_no_range_within_eligibility() {
+        // large (but eligible) weights: nested handles them with zero
+        // saturation because 1.75*2^8 == 448 == E4M3 max
+        let w = Tensor2::from_vec(1, 4, vec![1.75, -1.75, 1.0, -0.001]);
+        let (_, nested) = compare_fp8_variants(&w);
+        assert!(nested.max_rel < 0.07, "{nested:?}");
+    }
+}

@@ -1,0 +1,151 @@
+//! The synthetic downstream tasks — a bit-exact Rust mirror of
+//! `python/compile/corpus.py` (same PCG64 stream, same grammar), so the
+//! eval prompts here match the training distribution exactly and the two
+//! languages can cross-check each other.
+
+use crate::util::rng::Pcg64;
+
+const LETTERS: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+
+/// The three tasks (stand-ins for Minerva Math / MMLU-Pro / BBH).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Copy,
+    Sort,
+    Add,
+}
+
+impl Task {
+    pub const ALL: [Task; 3] = [Task::Copy, Task::Sort, Task::Add];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Copy => "copy",
+            Task::Sort => "sort",
+            Task::Add => "add",
+        }
+    }
+
+    fn index(self) -> u64 {
+        match self {
+            Task::Copy => 0,
+            Task::Sort => 1,
+            Task::Add => 2,
+        }
+    }
+}
+
+/// Generate one (prompt, answer) pair — mirrors corpus.gen_example.
+pub fn gen_example(rng: &mut Pcg64, task: Task) -> (String, String) {
+    match task {
+        Task::Copy => {
+            let n = rng.range_u64(3, 7) as usize;
+            let s: String = (0..n)
+                .map(|_| LETTERS[rng.range_u64(0, 26) as usize] as char)
+                .collect();
+            (format!("C:{s}="), format!("{s};"))
+        }
+        Task::Sort => {
+            let n = rng.range_u64(3, 7) as usize;
+            let s: String = (0..n)
+                .map(|_| LETTERS[rng.range_u64(0, 26) as usize] as char)
+                .collect();
+            let mut sorted: Vec<u8> = s.bytes().collect();
+            sorted.sort_unstable();
+            (
+                format!("S:{s}="),
+                format!("{};", String::from_utf8(sorted).unwrap()),
+            )
+        }
+        Task::Add => {
+            let a = rng.range_u64(0, 100);
+            let b = rng.range_u64(0, 100);
+            (format!("A:{a}+{b}="), format!("{};", a + b))
+        }
+    }
+}
+
+/// Held-out eval set — mirrors corpus.eval_prompts (seed + 1000 + task
+/// index, default PCG stream).
+pub fn eval_prompts(seed: u64, task: Task, n: usize) -> Vec<(String, String)> {
+    let mut rng = Pcg64::seeded(seed + 1000 + task.index());
+    (0..n).map(|_| gen_example(&mut rng, task)).collect()
+}
+
+/// Pad a prompt to a chunk-aligned length by prepending full task lines
+/// (benign, in-distribution context). Returns byte tokens.
+pub fn chunk_aligned_prompt(prompt: &str, align: usize, filler_seed: u64) -> Vec<i32> {
+    if prompt.len() % align == 0 {
+        return prompt.bytes().map(|b| b as i32).collect();
+    }
+    let mut rng = Pcg64::seeded(filler_seed);
+    let mut prefix = String::new();
+    // grow the prefix with whole task lines past the next multiple, then
+    // trim the prefix head to land exactly on a multiple of `align`
+    let target0 = prompt.len().div_ceil(align) * align;
+    while prefix.len() + prompt.len() < target0 {
+        let t = Task::ALL[rng.range_u64(0, 3) as usize];
+        let (p, a) = gen_example(&mut rng, t);
+        prefix.push_str(&p);
+        prefix.push_str(&a);
+    }
+    let total = prefix.len() + prompt.len();
+    let trim = total % align; // always <= prefix.len(); see tests
+    prefix.drain(..trim);
+    let full = format!("{prefix}{prompt}");
+    debug_assert_eq!(full.len() % align, 0, "alignment failed: {}", full.len());
+    full.bytes().map(|b| b as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grammar_shapes() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..50 {
+            let (p, a) = gen_example(&mut rng, Task::Copy);
+            assert!(p.starts_with("C:") && p.ends_with('='));
+            assert!(a.ends_with(';'));
+            assert_eq!(&p[2..p.len() - 1], &a[..a.len() - 1]);
+
+            let (p, a) = gen_example(&mut rng, Task::Sort);
+            let src = &p[2..p.len() - 1];
+            let mut sorted: Vec<u8> = src.bytes().collect();
+            sorted.sort_unstable();
+            assert_eq!(a.as_bytes()[..a.len() - 1], sorted[..]);
+
+            let (p, a) = gen_example(&mut rng, Task::Add);
+            let body = &p[2..p.len() - 1];
+            let (x, y) = body.split_once('+').unwrap();
+            let sum: u64 = x.parse::<u64>().unwrap() + y.parse::<u64>().unwrap();
+            assert_eq!(a, format!("{sum};"));
+        }
+    }
+
+    #[test]
+    fn eval_sets_deterministic_and_distinct() {
+        let a = eval_prompts(100, Task::Copy, 10);
+        let b = eval_prompts(100, Task::Copy, 10);
+        assert_eq!(a, b);
+        let c = eval_prompts(100, Task::Sort, 10);
+        assert_ne!(a[0].0, c[0].0);
+    }
+
+    #[test]
+    fn chunk_alignment() {
+        for align in [8usize, 16, 32] {
+            for prompt in ["C:abc=", "A:12+34=", "S:zyxwvu="] {
+                let toks = chunk_aligned_prompt(prompt, align, 5);
+                assert_eq!(toks.len() % align, 0, "{prompt} align {align}");
+                // the prompt itself must be the suffix
+                let tail: String = toks[toks.len() - prompt.len()..]
+                    .iter()
+                    .map(|&t| t as u8 as char)
+                    .collect();
+                assert_eq!(tail, prompt);
+            }
+        }
+    }
+}

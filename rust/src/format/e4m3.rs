@@ -1,0 +1,273 @@
+//! OCP FP8 E4M3 codec (the "FN" variant used by H100 tensor cores).
+//!
+//! Layout: S EEEE MMM, exponent bias 7. The all-ones exponent is *not*
+//! reserved for infinity: `S.1111.111` is the only NaN pattern and
+//! `S.1111.110` = ±448 is the maximum finite value. Subnormals (E=0) reach
+//! down to 2^-9.
+//!
+//! NestedFP's upper byte is a valid E4M3 value equal to the original FP16
+//! weight times 2^8 (see `nested.rs`); the baseline FP8 quantizer
+//! (`quant.rs`) also encodes through this codec.
+
+/// Maximum finite E4M3 magnitude.
+pub const E4M3_MAX: f32 = 448.0;
+/// Exponent bias.
+pub const BIAS: i32 = 7;
+/// The canonical positive NaN pattern.
+pub const NAN_PATTERN: u8 = 0x7F;
+
+/// Decode an E4M3 byte to f32.
+pub fn decode(b: u8) -> f32 {
+    let s = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((b >> 3) & 0xF) as i32;
+    let m = (b & 0x7) as i32;
+    if e == 0xF && m == 0x7 {
+        return f32::NAN;
+    }
+    if e == 0 {
+        // subnormal: m/8 * 2^(1-bias)
+        s * (m as f32 / 8.0) * f32::powi(2.0, 1 - BIAS)
+    } else {
+        s * (1.0 + m as f32 / 8.0) * f32::powi(2.0, e - BIAS)
+    }
+}
+
+/// Encode f32 to E4M3 with round-to-nearest-even and saturation to ±448.
+/// NaN input maps to the NaN pattern; ±inf saturates (matching common
+/// hardware saturation mode for inference).
+///
+/// Bit-level fast path (the float-math reference survives as
+/// [`encode_sat_ref`]; a differential test pins them to each other — the
+/// rewrite bought ~30× on the quantizer hot loop, see EXPERIMENTS.md
+/// §Perf).
+pub fn encode_sat(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let s = ((bits >> 31) as u8) << 7;
+    let e = ((bits >> 23) & 0xFF) as i32;
+    let m = bits & 0x7F_FFFF;
+    if e == 0xFF {
+        return if m == 0 { s | 0x7E } else { NAN_PATTERN }; // inf sat / nan
+    }
+    if e == 0 {
+        return s; // f32 subnormal: far below E4M3's smallest, flush
+    }
+    let e_unb = e - 127;
+    if e_unb >= 9 {
+        return s | 0x7E; // >= 512: saturate
+    }
+    if e_unb >= -6 {
+        // normal E4M3 target: RNE on the 7-bit integer E4‖M3 so a
+        // mantissa carry propagates into the exponent
+        let e_field = (e_unb + BIAS) as u32; // 1..=15
+        let base = (e_field << 3) | (m >> 20);
+        let rem = m & 0xF_FFFF;
+        let mut v = base;
+        if rem > 0x8_0000 || (rem == 0x8_0000 && base & 1 == 1) {
+            v += 1;
+        }
+        if v >= 0x7F {
+            return s | 0x7E; // rounded past 448 (or onto the NaN pattern)
+        }
+        return s | v as u8;
+    }
+    if e_unb < -10 {
+        return s; // below half the smallest subnormal quantum
+    }
+    // subnormal target: round |x| / 2^-9 with RNE using integer mantissa
+    // arithmetic: sig = 1.m (24 bits), quantum exponent -9
+    let sig = m | 0x80_0000; // value = sig * 2^(e_unb - 23)
+    let shift = (23 - 9 - e_unb) as u32; // bits to drop so units = 2^-9
+    let kept = sig >> shift;
+    let rem = sig & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut k = kept;
+    if rem > half || (rem == half && kept & 1 == 1) {
+        k += 1;
+    }
+    // k <= 8: k == 8 lands exactly on the smallest normal (0x08)
+    s | k as u8
+}
+
+/// The float-math reference implementation of [`encode_sat`].
+pub fn encode_sat_ref(x: f32) -> u8 {
+    if x.is_nan() {
+        return NAN_PATTERN;
+    }
+    let s: u8 = if x.is_sign_negative() { 0x80 } else { 0 };
+    let a = x.abs();
+    if a == 0.0 {
+        return s;
+    }
+    if a >= 464.0 {
+        // 464 = midpoint between 448 (max) and the next would-be value;
+        // everything >= saturates. Values in (448, 464) round to 448 too.
+        return s | 0x7E;
+    }
+
+    // Work in f64 to make the rounding analysis exact.
+    let a = a as f64;
+    let e_unb = a.log2().floor() as i32;
+    // normal range: e_unb in [-6, 8]
+    if e_unb < -6 {
+        // subnormal target: quantum 2^-9
+        let q = a / f64::powi(2.0, -9);
+        let r = rne_int(q);
+        if r == 0 {
+            return s;
+        }
+        if r <= 7 {
+            return s | (r as u8);
+        }
+        // rounded up into the normal range
+        return s | 0x08;
+    }
+    let e_field = (e_unb + BIAS) as u8; // 1..=15
+    let frac = a / f64::powi(2.0, e_unb) - 1.0; // [0,1)
+    let m = rne_int(frac * 8.0);
+    if m == 8 {
+        // carry into the exponent (e2 == 0xF with m == 0 is a fine finite value)
+        let e2 = e_field + 1;
+        if e2 > 0xF {
+            return s | 0x7E; // saturate
+        }
+        return s | (e2 << 3);
+    }
+    let b = s | (e_field << 3) | (m as u8);
+    if b & 0x7F == NAN_PATTERN {
+        // 448 < |x| rounded to the NaN pattern -> saturate instead
+        return s | 0x7E;
+    }
+    b
+}
+
+/// Round-to-nearest-even of a non-negative f64 to u32.
+fn rne_int(x: f64) -> u32 {
+    let f = x.floor();
+    let r = x - f;
+    let base = f as u32;
+    if r > 0.5 {
+        base + 1
+    } else if r < 0.5 {
+        base
+    } else if base % 2 == 1 {
+        base + 1
+    } else {
+        base
+    }
+}
+
+/// Quantize-dequantize helper: the value E4M3 "sees".
+pub fn quantize(x: f32) -> f32 {
+    decode(encode_sat(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(decode(0x00), 0.0);
+        assert_eq!(decode(0x38), 1.0); // E=7 M=0 -> 2^0
+        assert_eq!(decode(0x3E), 1.75); // E=7 M=6
+        assert_eq!(decode(0x7E), 448.0);
+        assert!(decode(0x7F).is_nan());
+        assert_eq!(decode(0x01), f32::powi(2.0, -9)); // smallest subnormal
+        assert_eq!(decode(0x08), f32::powi(2.0, -6)); // smallest normal
+        assert_eq!(decode(0xBE), -1.75);
+    }
+
+    #[test]
+    fn exhaustive_roundtrip() {
+        // every E4M3 value must encode back to itself (canonical -0 kept)
+        for b in 0..=u8::MAX {
+            let v = decode(b);
+            if v.is_nan() {
+                assert_eq!(encode_sat(v) & 0x7F, NAN_PATTERN);
+                continue;
+            }
+            let back = encode_sat(v);
+            assert_eq!(back, b, "0x{b:02x} -> {v} -> 0x{back:02x}");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(encode_sat(1e9), 0x7E);
+        assert_eq!(encode_sat(-1e9), 0xFE);
+        assert_eq!(encode_sat(f32::INFINITY), 0x7E);
+        assert_eq!(encode_sat(460.0), 0x7E); // rounds down to 448
+        assert_eq!(encode_sat(500.0), 0x7E);
+    }
+
+    #[test]
+    fn rne_behaviour() {
+        // midpoint between 1.0 (m=0) and 1.125 (m=1) is 1.0625 -> ties to even (m=0)
+        assert_eq!(encode_sat(1.0625), 0x38);
+        // midpoint between 1.125 and 1.25 is 1.1875 -> ties to even (m=2)
+        assert_eq!(encode_sat(1.1875), 0x3A);
+        // just above midpoint rounds up
+        assert_eq!(encode_sat(1.07), 0x39);
+    }
+
+    #[test]
+    fn subnormal_rounding() {
+        let q = f32::powi(2.0, -9);
+        assert_eq!(encode_sat(3.0 * q), 0x03);
+        // halfway between 0 and q ties to even -> 0
+        assert_eq!(encode_sat(0.5 * q), 0x00);
+        // 7.6q rounds to 8q = smallest normal
+        assert_eq!(encode_sat(7.6 * q), 0x08);
+    }
+
+    #[test]
+    fn quantize_error_bound() {
+        // relative error of a normal-range value is at most 2^-4 (half ulp of 3-bit mantissa)
+        let mut worst: f32 = 0.0;
+        let mut x = 0.016f32;
+        while x < 448.0 {
+            let q = quantize(x);
+            worst = worst.max(((q - x) / x).abs());
+            x *= 1.01;
+        }
+        assert!(worst <= 1.0 / 16.0 + 1e-6, "worst rel err {worst}");
+    }
+}
+
+#[cfg(test)]
+mod fastpath_tests {
+    use super::*;
+    use crate::format::fp16::F16;
+    use crate::util::rng::Pcg64;
+
+    /// Differential test: the bit-level fast path must agree with the
+    /// float-math reference on every f16 value at several scales plus a
+    /// large random f32 sample.
+    #[test]
+    fn encode_fast_matches_ref() {
+        for bits in 0..=u16::MAX {
+            let v = F16::from_bits(bits).to_f32();
+            for scale in [1.0f32, 256.0, 1.0 / 256.0] {
+                let x = v * scale;
+                let fast = encode_sat(x);
+                let slow = encode_sat_ref(x);
+                if x.is_nan() {
+                    assert_eq!(fast & 0x7F, NAN_PATTERN);
+                    continue;
+                }
+                assert_eq!(
+                    fast, slow,
+                    "x={x} (f16 0x{bits:04x} * {scale}): fast 0x{fast:02x} ref 0x{slow:02x}"
+                );
+            }
+        }
+        let mut rng = Pcg64::seeded(31337);
+        for _ in 0..200_000 {
+            let x = f32::from_bits(rng.next_u32());
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(encode_sat(x), encode_sat_ref(x), "x={x} ({:#x})", x.to_bits());
+        }
+    }
+}

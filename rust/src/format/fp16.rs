@@ -1,0 +1,255 @@
+//! Software IEEE 754 binary16 (E5M10).
+//!
+//! `F16` is a transparent wrapper over the 16-bit pattern. Conversions use
+//! round-to-nearest-even and handle subnormals, infinities and NaN — this
+//! matters because NestedFP's eligibility rule and reconstruction are
+//! defined directly on the bit layout.
+
+/// IEEE binary16 value as its raw bit pattern.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct F16(pub u16);
+
+pub const EXP_BITS: u32 = 5;
+pub const MAN_BITS: u32 = 10;
+pub const EXP_BIAS: i32 = 15;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+    /// Largest finite magnitude (65504).
+    pub const MAX: F16 = F16(0x7BFF);
+
+    #[inline]
+    pub fn from_bits(b: u16) -> F16 {
+        F16(b)
+    }
+
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Sign bit (0 or 1).
+    #[inline]
+    pub fn sign(self) -> u16 {
+        self.0 >> 15
+    }
+
+    /// Raw 5-bit exponent field.
+    #[inline]
+    pub fn exp_field(self) -> u16 {
+        (self.0 >> MAN_BITS) & 0x1F
+    }
+
+    /// Raw 10-bit mantissa field.
+    #[inline]
+    pub fn man_field(self) -> u16 {
+        self.0 & 0x3FF
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.exp_field() == 0x1F && self.man_field() != 0
+    }
+
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        self.exp_field() == 0x1F && self.man_field() == 0
+    }
+
+    #[inline]
+    pub fn is_subnormal(self) -> bool {
+        self.exp_field() == 0 && self.man_field() != 0
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 & 0x7FFF == 0
+    }
+
+    /// Convert to f32 (exact — every f16 is representable in f32).
+    pub fn to_f32(self) -> f32 {
+        let s = (self.0 >> 15) as u32;
+        let e = self.exp_field() as u32;
+        let m = self.man_field() as u32;
+        let bits = if e == 0 {
+            if m == 0 {
+                s << 31 // signed zero
+            } else {
+                // subnormal: value = m * 2^-24; normalize into f32.
+                // lz = leading zeros within the 10-bit field; the implicit
+                // one lands at 2^(-15 - lz).
+                let lz = m.leading_zeros() - 22;
+                let m_norm = (m << (lz + 1)) & 0x3FF;
+                let e_f32 = 112 - lz; // 127 + (-15 - lz)
+                (s << 31) | (e_f32 << 23) | (m_norm << 13)
+            }
+        } else if e == 0x1F {
+            if m == 0 {
+                (s << 31) | 0x7F80_0000
+            } else {
+                (s << 31) | 0x7FC0_0000 | (m << 13)
+            }
+        } else {
+            (s << 31) | ((e + 127 - 15) << 23) | (m << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    /// Convert from f32 with round-to-nearest-even, overflow to ±inf.
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let s = ((bits >> 31) as u16) << 15;
+        let e = ((bits >> 23) & 0xFF) as i32;
+        let m = bits & 0x7F_FFFF;
+
+        if e == 0xFF {
+            // inf / nan
+            return if m == 0 {
+                F16(s | 0x7C00)
+            } else {
+                F16(s | 0x7E00 | ((m >> 13) as u16 & 0x1FF))
+            };
+        }
+
+        // unbiased exponent
+        let e_unb = e - 127;
+        let e_f16 = e_unb + EXP_BIAS;
+
+        if e_f16 >= 0x1F {
+            return F16(s | 0x7C00); // overflow -> inf
+        }
+
+        if e_f16 <= 0 {
+            // subnormal or underflow-to-zero
+            if e_f16 < -10 {
+                return F16(s); // too small, flush to signed zero
+            }
+            // implicit leading one joins the mantissa
+            let full = m | 0x80_0000;
+            let shift = (14 - e_f16) as u32; // bits to drop from 24-bit sig to 10-bit field
+            let kept = full >> shift;
+            let rem = full & ((1 << shift) - 1);
+            let half = 1u32 << (shift - 1);
+            let mut out = kept as u16;
+            if rem > half || (rem == half && out & 1 == 1) {
+                out += 1; // may carry into the exponent (0 -> smallest normal): correct
+            }
+            return F16(s | out);
+        }
+
+        // normal: round 23-bit mantissa to 10 bits (drop 13)
+        let kept = (m >> 13) as u16;
+        let rem = m & 0x1FFF;
+        let mut out = (s as u32) | ((e_f16 as u32) << 10) | kept as u32;
+        if rem > 0x1000 || (rem == 0x1000 && out & 1 == 1) {
+            out += 1; // mantissa carry may bump exponent; bit layout handles it
+        }
+        // may have become inf via carry: that is IEEE-correct behavior
+        F16(out as u16)
+    }
+
+    /// Absolute value.
+    #[inline]
+    pub fn abs(self) -> F16 {
+        F16(self.0 & 0x7FFF)
+    }
+}
+
+impl std::fmt::Debug for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "F16(0x{:04x} = {})", self.0, self.to_f32())
+    }
+}
+
+impl std::fmt::Display for F16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+/// Convert a slice of f32 to f16 bit patterns.
+pub fn f32s_to_f16(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| F16::from_f32(x).to_bits()).collect()
+}
+
+/// Convert a slice of f16 bit patterns to f32.
+pub fn f16s_to_f32(xs: &[u16]) -> Vec<f32> {
+    xs.iter().map(|&b| F16::from_bits(b).to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_constants() {
+        assert_eq!(F16::from_f32(1.0).to_bits(), 0x3C00);
+        assert_eq!(F16::from_f32(-2.0).to_bits(), 0xC000);
+        assert_eq!(F16::from_f32(0.5).to_bits(), 0x3800);
+        assert_eq!(F16::from_f32(65504.0).to_bits(), 0x7BFF);
+        assert_eq!(F16::from_f32(1.75).to_bits(), 0x3F00);
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::from_f32(1e30).is_infinite());
+    }
+
+    #[test]
+    fn exhaustive_f16_to_f32_roundtrip() {
+        // every finite f16 must roundtrip exactly through f32
+        for bits in 0..=u16::MAX {
+            let h = F16::from_bits(bits);
+            if h.is_nan() {
+                assert!(F16::from_f32(h.to_f32()).is_nan());
+                continue;
+            }
+            let back = F16::from_f32(h.to_f32());
+            assert_eq!(
+                back.to_bits(),
+                bits,
+                "bits 0x{bits:04x} -> {} -> 0x{:04x}",
+                h.to_f32(),
+                back.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and 1.0+2^-10:
+        // must round to even mantissa (0) -> 1.0
+        let tie = 1.0f32 + f32::powi(2.0, -11);
+        assert_eq!(F16::from_f32(tie).to_bits(), 0x3C00);
+        // 1.0 + 3*2^-11 is halfway between m=1 and m=2 -> rounds to m=2
+        let tie2 = 1.0f32 + 3.0 * f32::powi(2.0, -11);
+        assert_eq!(F16::from_f32(tie2).to_bits(), 0x3C02);
+    }
+
+    #[test]
+    fn subnormal_conversion() {
+        // smallest positive subnormal: 2^-24
+        let tiny = f32::powi(2.0, -24);
+        assert_eq!(F16::from_f32(tiny).to_bits(), 0x0001);
+        assert_eq!(F16::from_bits(0x0001).to_f32(), tiny);
+        // largest subnormal
+        let big_sub = F16::from_bits(0x03FF);
+        assert!(big_sub.is_subnormal());
+        assert_eq!(F16::from_f32(big_sub.to_f32()).to_bits(), 0x03FF);
+    }
+
+    #[test]
+    fn signed_zero() {
+        assert_eq!(F16::from_f32(-0.0).to_bits(), 0x8000);
+        assert_eq!(F16::from_bits(0x8000).to_f32().to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn field_extraction() {
+        let h = F16::from_f32(1.75); // 0x3F00: S=0 E=01111 M=1100000000
+        assert_eq!(h.sign(), 0);
+        assert_eq!(h.exp_field(), 0b01111);
+        assert_eq!(h.man_field(), 0b11_0000_0000);
+    }
+}

@@ -1,0 +1,26 @@
+//! The NestedFP numeric format and its supporting codecs.
+//!
+//! This is the paper's §4.2 contribution, implemented bit-exactly:
+//!
+//! * [`fp16`] — software IEEE binary16 (E5M10) utilities (the environment
+//!   has no `half` crate): f32↔f16 conversion with round-to-nearest-even,
+//!   field extraction, classification.
+//! * [`e4m3`] — the OCP FP8 E4M3 codec (bias 7, max 448, S.1111.111 = NaN)
+//!   with RNE encoding and saturation, used both by the NestedFP upper
+//!   tensor semantics and by the baseline FP8 quantizer.
+//! * [`nested`] — decompose an FP16 weight into (upper, lower) bytes and
+//!   losslessly reconstruct it, including the branch-free correction of
+//!   Figure 6.
+//! * [`quant`] — the Table-1/2 baseline: per-channel absmax E4M3 weight
+//!   quantization and per-tensor/per-token activation quantization.
+//! * [`tensor`] — minimal dense tensor containers used across the crate.
+
+pub mod fp16;
+pub mod e4m3;
+pub mod nested;
+pub mod quant;
+pub mod tensor;
+
+pub use fp16::F16;
+pub use nested::{decompose, decompose_tensor, is_eligible, reconstruct, NestedTensor};
+pub use tensor::{Tensor2, TensorU8};

@@ -1,0 +1,302 @@
+//! The NestedFP format (paper §4.2, Figures 4 & 6).
+//!
+//! An FP16 weight `S EEEEE MMMMMMMMMM` (E5M10) whose magnitude is ≤ 1.75
+//! has a zero exponent MSB. NestedFP splits it into two bytes:
+//!
+//! * **upper** = `S E[2:5] M'[1:3]` — the sign, the low 4 exponent bits,
+//!   and the 10-bit mantissa rounded to 3 bits with round-to-nearest-even
+//!   (RNE applied to the 7-bit concatenation `E[2:5]‖M[1:3]` as an
+//!   integer, so a mantissa carry correctly propagates into the exponent).
+//!   Read as an OCP E4M3 byte this equals the original value × 2⁸ — i.e.
+//!   the upper tensor *is* an E4M3 quantization with a global scale 2⁸.
+//! * **lower** = `M[3:10]` — the low 8 bits of the original mantissa. Its
+//!   MSB is the *pre-rounding* bit M3, which doubles as the checksum that
+//!   lets the FP16 path undo the rounding.
+//!
+//! Reconstruction (branch-free, Figure 6): let `m3 = lower >> 7` (the
+//! original M3) and `m3' = upper & 1` (the rounded M3). Rounding added
+//! 0 or 1 to the 7-bit integer; in all four (m3, m3', carry) combinations
+//! `upper - m3` has the same top-6 bits (E[2:5], M[1:2]) as the
+//! pre-rounding value, so
+//!
+//! ```text
+//! fp16 = S<<15 | E[2:5]<<10 | M[1:2]<<8 | lower
+//! ```
+//!
+//! recovers the original bit pattern exactly. This module is the Rust
+//! reference; the Pallas kernel (`python/compile/kernels/nested.py`)
+//! performs the identical algebra on tiles, and `python/tests` +
+//! `rust/tests/format_exhaustive.rs` pin them to each other.
+
+use super::fp16::F16;
+
+/// Eligibility threshold: |w| ≤ 1.75 (paper §4.2 / Fig 3).
+///
+/// In bit terms: exponent field < 15, or == 15 with mantissa ≤ 0b1100000000
+/// (= 0.75), so the rounded 3-bit mantissa never produces the E4M3 NaN
+/// pattern `1111.111`. NaN/Inf (E=31) are automatically ineligible.
+pub fn is_eligible(h: F16) -> bool {
+    let e = h.exp_field();
+    let m = h.man_field();
+    e < 15 || (e == 15 && m <= 0b11_0000_0000)
+}
+
+/// Decompose an eligible FP16 value into (upper, lower) NestedFP bytes.
+///
+/// Panics in debug builds if the value is ineligible; release callers
+/// must check [`is_eligible`] first (the tensor-level API does).
+#[inline]
+pub fn decompose(h: F16) -> (u8, u8) {
+    debug_assert!(is_eligible(h), "decompose() on ineligible value {h:?}");
+    let bits = h.to_bits();
+    let s = (bits >> 15) as u8;
+    // 7-bit integer E[2:5] ‖ M[1:3]  (low 4 exponent bits + top 3 mantissa bits)
+    let base = ((bits >> 7) & 0x7F) as u8;
+    let rem = (bits & 0x7F) as u8; // dropped low 7 mantissa bits M[4:10]
+    // round-to-nearest-even on the dropped 7 bits (midpoint = 64)
+    let mut upper7 = base;
+    if rem > 64 || (rem == 64 && base & 1 == 1) {
+        upper7 += 1; // carry propagates M'->E inside the 7-bit integer
+    }
+    let upper = (s << 7) | upper7;
+    let lower = (bits & 0xFF) as u8; // M[3:10]; MSB is the original M3
+    (upper, lower)
+}
+
+/// Reconstruct the original FP16 bit pattern from (upper, lower).
+///
+/// Branch-free: mirrors the SIMT sequence of Figure 6 (and the Pallas
+/// kernel's tile version).
+#[inline]
+pub fn reconstruct(upper: u8, lower: u8) -> F16 {
+    let s = (upper as u16 >> 7) & 1;
+    let m3 = (lower >> 7) & 1; // original M3 (checksum bit)
+    // undo rounding: top-6 bits of (upper7 - m3) are the original E[2:5], M[1:2]
+    let corrected = (upper & 0x7F).wrapping_sub(m3);
+    let top6 = (corrected >> 1) as u16 & 0x3F; // E[2:5] (4) ‖ M[1:2] (2)
+    let bits = (s << 15) | (top6 << 8) | lower as u16; // E MSB restored as 0
+    F16::from_bits(bits)
+}
+
+/// The E4M3 value encoded by the upper byte equals `fp16_value * 2^8`
+/// (up to the 3-bit mantissa rounding). This helper returns the *weight
+/// value* the FP8 path uses: `decode_e4m3(upper) * 2^-8`.
+#[inline]
+pub fn upper_as_weight(upper: u8) -> f32 {
+    super::e4m3::decode(upper) * f32::powi(2.0, -8)
+}
+
+/// A weight matrix stored in NestedFP form: the paper's single 16-bit
+/// representation, physically laid out as two separate 8-bit tensors so
+/// the FP8 path touches only `upper` (half the memory traffic).
+#[derive(Clone, Debug)]
+pub struct NestedTensor {
+    /// Rows (output features, N).
+    pub rows: usize,
+    /// Cols (input features, K).
+    pub cols: usize,
+    /// Upper bytes (E4M3 × 2⁸), row-major, len = rows*cols.
+    pub upper: Vec<u8>,
+    /// Lower bytes (mantissa tail + checksum), row-major.
+    pub lower: Vec<u8>,
+    /// True if every element was eligible; ineligible tensors must stay
+    /// in plain FP16 (the paper's "exception layers").
+    pub fully_eligible: bool,
+}
+
+/// Decomposition outcome for a weight tensor.
+pub enum DecomposeResult {
+    /// All elements eligible: NestedFP applies.
+    Nested(NestedTensor),
+    /// Some element exceeded |1.75|: layer stays FP16 (exception layer).
+    Exception { ineligible_count: usize, max_abs: f32 },
+}
+
+/// Decompose a row-major f16 tensor. Implements the paper's all-or-nothing
+/// per-layer rule: if *any* element is ineligible the whole layer is an
+/// exception layer.
+pub fn decompose_tensor(rows: usize, cols: usize, w: &[u16]) -> DecomposeResult {
+    assert_eq!(w.len(), rows * cols);
+    let mut ineligible = 0usize;
+    let mut max_abs = 0.0f32;
+    for &bits in w {
+        let h = F16::from_bits(bits);
+        let a = h.abs().to_f32();
+        if a > max_abs {
+            max_abs = a;
+        }
+        if !is_eligible(h) {
+            ineligible += 1;
+        }
+    }
+    if ineligible > 0 {
+        return DecomposeResult::Exception {
+            ineligible_count: ineligible,
+            max_abs,
+        };
+    }
+    let mut upper = Vec::with_capacity(w.len());
+    let mut lower = Vec::with_capacity(w.len());
+    for &bits in w {
+        let (u, l) = decompose(F16::from_bits(bits));
+        upper.push(u);
+        lower.push(l);
+    }
+    DecomposeResult::Nested(NestedTensor {
+        rows,
+        cols,
+        upper,
+        lower,
+        fully_eligible: true,
+    })
+}
+
+impl NestedTensor {
+    /// Reconstruct the full FP16 tensor (bit patterns).
+    pub fn reconstruct_f16(&self) -> Vec<u16> {
+        self.upper
+            .iter()
+            .zip(&self.lower)
+            .map(|(&u, &l)| reconstruct(u, l).to_bits())
+            .collect()
+    }
+
+    /// Reconstruct to f32.
+    pub fn reconstruct_f32(&self) -> Vec<f32> {
+        self.upper
+            .iter()
+            .zip(&self.lower)
+            .map(|(&u, &l)| reconstruct(u, l).to_f32())
+            .collect()
+    }
+
+    /// The FP8-path weight values: upper bytes decoded with the 2⁻⁸ scale.
+    pub fn fp8_weights_f32(&self) -> Vec<f32> {
+        self.upper.iter().map(|&u| upper_as_weight(u)).collect()
+    }
+
+    /// Memory footprint in bytes (== one FP16 copy: the paper's headline).
+    pub fn bytes(&self) -> usize {
+        self.upper.len() + self.lower.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::e4m3;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn eligibility_boundary() {
+        assert!(is_eligible(F16::from_f32(1.75)));
+        assert!(is_eligible(F16::from_f32(-1.75)));
+        assert!(!is_eligible(F16::from_f32(1.7509766))); // next f16 above 1.75
+        assert!(!is_eligible(F16::from_f32(2.0)));
+        assert!(!is_eligible(F16::from_f32(f32::NAN)));
+        assert!(!is_eligible(F16::INFINITY));
+        assert!(is_eligible(F16::ZERO));
+        assert!(is_eligible(F16::from_bits(0x8000))); // -0
+        assert!(is_eligible(F16::from_bits(0x0001))); // smallest subnormal
+    }
+
+    #[test]
+    fn roundtrip_simple_values() {
+        for v in [
+            0.0f32, 1.0, -1.0, 0.5, 1.75, -1.75, 0.1, -0.3, 1.0e-3, 6.0e-8, 1.5,
+        ] {
+            let h = F16::from_f32(v);
+            let (u, l) = decompose(h);
+            assert_eq!(reconstruct(u, l).to_bits(), h.to_bits(), "value {v}");
+        }
+    }
+
+    #[test]
+    fn upper_is_e4m3_times_256() {
+        // for eligible values, decode(upper) must equal RNE-E4M3(value*256)
+        let mut rng = Pcg64::seeded(100);
+        for _ in 0..20_000 {
+            let v = (rng.f32() - 0.5) * 3.5; // within ±1.75
+            let h = F16::from_f32(v);
+            if !is_eligible(h) {
+                continue;
+            }
+            let (u, _l) = decompose(h);
+            let direct = e4m3::encode_sat(h.to_f32() * 256.0);
+            assert_eq!(
+                u, direct,
+                "value {v}: upper 0x{u:02x} vs direct E4M3 0x{direct:02x}"
+            );
+        }
+    }
+
+    #[test]
+    fn rounding_carry_into_exponent() {
+        // mantissa 0b1111111111 rounds up: carry into exponent field
+        let h = F16::from_bits((14 << 10) | 0x3FF); // E=14, M=all ones
+        let (u, l) = decompose(h);
+        // upper must be E=15, M'=000
+        assert_eq!(u & 0x7F, (15 << 3) | 0);
+        assert_eq!(reconstruct(u, l).to_bits(), h.to_bits());
+    }
+
+    #[test]
+    fn checksum_detects_rounding() {
+        // value where RNE rounds up and M3 == 1 (borrow case of Fig 6)
+        let h = F16::from_bits((10 << 10) | 0b01_1100_0001); // M3=1, rem7=65>64
+        let (u, l) = decompose(h);
+        let m3 = (l >> 7) & 1;
+        let m3p = u & 1;
+        assert_eq!(m3, 1);
+        assert_ne!(m3, m3p, "rounding must flip the checksum bit");
+        assert_eq!(reconstruct(u, l).to_bits(), h.to_bits());
+    }
+
+    #[test]
+    fn tensor_roundtrip_and_exception() {
+        let vals: Vec<u16> = [0.5f32, -1.2, 0.01, 1.75]
+            .iter()
+            .map(|&v| F16::from_f32(v).to_bits())
+            .collect();
+        match decompose_tensor(2, 2, &vals) {
+            DecomposeResult::Nested(t) => {
+                assert_eq!(t.reconstruct_f16(), vals);
+                assert_eq!(t.bytes(), 8);
+            }
+            _ => panic!("expected nested"),
+        }
+        let bad: Vec<u16> = [0.5f32, 3.0].iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+        match decompose_tensor(1, 2, &bad) {
+            DecomposeResult::Exception {
+                ineligible_count,
+                max_abs,
+            } => {
+                assert_eq!(ineligible_count, 1);
+                assert_eq!(max_abs, 3.0);
+            }
+            _ => panic!("expected exception"),
+        }
+    }
+
+    #[test]
+    fn fp8_weights_close_to_original() {
+        let mut rng = Pcg64::seeded(7);
+        let vals: Vec<u16> = (0..1000)
+            .map(|_| F16::from_f32(rng.normal() as f32 * 0.2).to_bits())
+            .collect();
+        if let DecomposeResult::Nested(t) = decompose_tensor(10, 100, &vals) {
+            let w8 = t.fp8_weights_f32();
+            let w16 = t.reconstruct_f32();
+            for (a, b) in w8.iter().zip(&w16) {
+                if b.abs() > 1e-3 {
+                    assert!(
+                        ((a - b) / b).abs() <= 1.0 / 16.0 + 1e-6,
+                        "fp8 {a} vs fp16 {b}"
+                    );
+                }
+            }
+        } else {
+            panic!("expected nested");
+        }
+    }
+}

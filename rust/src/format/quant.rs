@@ -1,0 +1,169 @@
+//! The FP8 quantization *baseline* the paper compares against (Tables 1–2):
+//! per-channel absmax E4M3 weight quantization plus per-tensor (or
+//! per-token) absmax activation quantization.
+//!
+//! NestedFP8 instead uses a single global scale of 2⁸ baked into the bit
+//! layout; this module lets `eval` reproduce the FP8(B)-vs-FP8(N)
+//! comparison.
+
+use super::e4m3;
+use super::tensor::Tensor2;
+
+/// A weight matrix quantized per output channel (row) to E4M3.
+#[derive(Clone, Debug)]
+pub struct QuantizedWeight {
+    pub rows: usize,
+    pub cols: usize,
+    /// E4M3 payloads, row-major.
+    pub codes: Vec<u8>,
+    /// Per-row scale: real_value = decode(code) / scale.
+    pub scales: Vec<f32>,
+}
+
+/// Per-channel (per output row) absmax quantization: scale_r = 448 / max|row|.
+pub fn quantize_weight_per_channel(w: &Tensor2) -> QuantizedWeight {
+    let maxes = w.row_abs_max();
+    let scales: Vec<f32> = maxes
+        .iter()
+        .map(|&m| if m > 0.0 { e4m3::E4M3_MAX / m } else { 1.0 })
+        .collect();
+    let mut codes = Vec::with_capacity(w.data.len());
+    for r in 0..w.rows {
+        let s = scales[r];
+        for &v in w.row(r) {
+            codes.push(e4m3::encode_sat(v * s));
+        }
+    }
+    QuantizedWeight {
+        rows: w.rows,
+        cols: w.cols,
+        codes,
+        scales,
+    }
+}
+
+impl QuantizedWeight {
+    /// Dequantize back to f32 (what the GEMM "sees").
+    pub fn dequantize(&self) -> Tensor2 {
+        let mut data = Vec::with_capacity(self.codes.len());
+        for r in 0..self.rows {
+            let s = self.scales[r];
+            for c in 0..self.cols {
+                data.push(e4m3::decode(self.codes[r * self.cols + c]) / s);
+            }
+        }
+        Tensor2::from_vec(self.rows, self.cols, data)
+    }
+}
+
+/// Per-tensor absmax activation quantization: returns the fake-quantized
+/// activations (quantize→dequantize), modelling FP8 GEMM numerics.
+pub fn fake_quantize_activation_per_tensor(x: &Tensor2) -> Tensor2 {
+    let m = x.abs_max();
+    let scale = if m > 0.0 { e4m3::E4M3_MAX / m } else { 1.0 };
+    let data = x
+        .data
+        .iter()
+        .map(|&v| e4m3::decode(e4m3::encode_sat(v * scale)) / scale)
+        .collect();
+    Tensor2::from_vec(x.rows, x.cols, data)
+}
+
+/// Per-token (per row of the activation matrix) absmax variant.
+pub fn fake_quantize_activation_per_token(x: &Tensor2) -> Tensor2 {
+    let mut data = Vec::with_capacity(x.data.len());
+    for r in 0..x.rows {
+        let m = x.row(r).iter().fold(0.0f32, |acc, &v| acc.max(v.abs()));
+        let scale = if m > 0.0 { e4m3::E4M3_MAX / m } else { 1.0 };
+        for &v in x.row(r) {
+            data.push(e4m3::decode(e4m3::encode_sat(v * scale)) / scale);
+        }
+    }
+    Tensor2::from_vec(x.rows, x.cols, data)
+}
+
+/// Weight fake-quant round trip for error studies.
+pub fn fake_quantize_weight_per_channel(w: &Tensor2) -> Tensor2 {
+    quantize_weight_per_channel(w).dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_tensor(rows: usize, cols: usize, scale: f32, seed: u64) -> Tensor2 {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.normal() as f32 * scale)
+            .collect();
+        Tensor2::from_vec(rows, cols, data)
+    }
+
+    #[test]
+    fn per_channel_scales_use_row_max() {
+        let w = Tensor2::from_vec(2, 2, vec![1.0, -2.0, 0.5, 0.25]);
+        let q = quantize_weight_per_channel(&w);
+        assert_eq!(q.scales[0], 448.0 / 2.0);
+        assert_eq!(q.scales[1], 448.0 / 0.5);
+    }
+
+    #[test]
+    fn dequant_error_bounded() {
+        let w = random_tensor(16, 64, 0.05, 3);
+        let dq = fake_quantize_weight_per_channel(&w);
+        // E4M3 with absmax scaling: relative error per element <= 2^-4 of the
+        // row max (subnormal region aside); check a loose global bound
+        let err = dq.rel_err(&w);
+        assert!(err < 0.05, "rel err {err}");
+        // row max is exactly representable after scaling (448 hits the grid)
+        for r in 0..w.rows {
+            let m = w.row(r).iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let mq = dq.row(r).iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            assert!(((m - mq) / m).abs() < 1e-6, "row {r}: {m} vs {mq}");
+        }
+    }
+
+    #[test]
+    fn activation_quant_preserves_zero_and_sign() {
+        let x = Tensor2::from_vec(1, 4, vec![0.0, -1.0, 2.0, -3.0]);
+        let q = fake_quantize_activation_per_tensor(&x);
+        assert_eq!(q.data[0], 0.0);
+        assert!(q.data[1] < 0.0 && q.data[3] < 0.0 && q.data[2] > 0.0);
+    }
+
+    #[test]
+    fn per_token_tighter_than_per_tensor_on_extreme_rows() {
+        // E4M3 is itself floating point, so absmax scaling only matters at
+        // the range edges: make the small row so small that the per-tensor
+        // scale pushes it into the subnormal region (ratio >> 2^12), where
+        // per-token scaling keeps full relative precision.
+        let mut data = vec![0.0f32; 2 * 64];
+        let mut rng = Pcg64::seeded(5);
+        for j in 0..64 {
+            data[j] = rng.normal() as f32 * 1000.0;
+            data[64 + j] = rng.normal() as f32 * 1e-4;
+        }
+        let x = Tensor2::from_vec(2, 64, data);
+        let pt = fake_quantize_activation_per_tensor(&x);
+        let tok = fake_quantize_activation_per_token(&x);
+        let rel = |q: &Tensor2| -> f64 {
+            (0..64)
+                .map(|j| {
+                    let v = x.get(1, j) as f64;
+                    if v == 0.0 {
+                        0.0
+                    } else {
+                        ((q.get(1, j) as f64 - v) / v).abs()
+                    }
+                })
+                .sum::<f64>()
+                / 64.0
+        };
+        let (err_pt, err_tok) = (rel(&pt), rel(&tok));
+        assert!(
+            err_tok < err_pt * 0.5,
+            "per-token {err_tok} not clearly better than per-tensor {err_pt}"
+        );
+    }
+}

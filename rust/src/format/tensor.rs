@@ -1,0 +1,133 @@
+//! Minimal dense tensor containers (row-major) used across the crate.
+//!
+//! These are deliberately simple — the heavy math runs inside the AOT
+//! executables; Rust-side tensors exist for weight storage, verification,
+//! and the cost model.
+
+/// Row-major 2-D f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor2 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor2 {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Tensor2 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Naive matmul: self [m,k] × other [k,n] -> [m,n]. Used only for
+    /// verification against executable outputs.
+    pub fn matmul(&self, other: &Tensor2) -> Tensor2 {
+        assert_eq!(self.cols, other.rows, "inner dims");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor2::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.get(i, p);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(p);
+                let dst = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    dst[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Per-row max |x| (per output channel for [N,K] weights).
+    pub fn row_abs_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect()
+    }
+
+    /// Frobenius norm of the difference.
+    pub fn rel_err(&self, other: &Tensor2) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        if den == 0.0 {
+            num.sqrt()
+        } else {
+            (num / den).sqrt()
+        }
+    }
+}
+
+/// Row-major 2-D u8 tensor (NestedFP component planes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorU8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u8>,
+}
+
+impl TensorU8 {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<u8>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        TensorU8 { rows, cols, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor2::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn absmax_and_rows() {
+        let t = Tensor2::from_vec(2, 3, vec![1.0, -5.0, 2.0, 0.5, 0.25, -0.75]);
+        assert_eq!(t.abs_max(), 5.0);
+        assert_eq!(t.row_abs_max(), vec![5.0, 0.75]);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let t = Tensor2::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.rel_err(&t), 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Kernel configuration space (paper §5.2 / Appendix D).
+
+/// Tile scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheduler {
+    /// One thread block owns a full output tile (full K sweep).
+    DataParallel,
+    /// Multiple blocks split the K dimension of one output tile and merge
+    /// partials (Stream-K) — kills wave quantization, adds fix-up cost.
+    StreamK,
+}
+
+/// NestedFP16 kernel optimization levels (Figure 7b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// Three-stage pipeline, naive byte-wise SIMT reconstruction.
+    Level1,
+    /// + four 8-bit ops fused into one 32-bit op.
+    Level2,
+    /// + scheduling: bulk smem→reg copies (non-coop) / NVVM fence (coop).
+    Level3,
+}
+
+/// One CUTLASS-style kernel configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct KernelConfig {
+    /// Output tile M dimension.
+    pub tm: usize,
+    /// Output tile N dimension.
+    pub tn: usize,
+    /// Mainloop K step.
+    pub tk: usize,
+    /// Two consumer warp groups (cooperative) vs one.
+    pub cooperative: bool,
+    /// Thread-block scheduling.
+    pub scheduler: Scheduler,
+}
+
+impl KernelConfig {
+    /// Shared-memory working set for one pipeline stage set (operand
+    /// staging; 3 stages assumed). `w_bytes` is bytes per weight element
+    /// (2 for fp16, 2 for nested16 upper+lower, 1 for fp8).
+    pub fn smem_bytes(&self, w_bytes_per_elem: f64) -> f64 {
+        let stages = 3.0;
+        let act = (self.tm * self.tk) as f64 * 2.0;
+        let wt = (self.tn * self.tk) as f64 * w_bytes_per_elem;
+        stages * (act + wt)
+    }
+
+    /// MMA efficiency of the tile shape: warp-group MMA wants M>=64 and
+    /// large N; small tiles leave tensor-core lanes idle.
+    pub fn mma_efficiency(&self) -> f64 {
+        let m_eff = (self.tm as f64 / 64.0).min(1.0);
+        let n_eff = (self.tn as f64 / 128.0).min(1.0);
+        // diminishing penalty: sqrt keeps small tiles usable (matches the
+        // gentle degradation CUTLASS shows down to 64-wide tiles)
+        (m_eff * n_eff).sqrt().max(0.25)
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "{}x{}x{}_{}{}",
+            self.tm,
+            self.tn,
+            self.tk,
+            if self.cooperative { "coop" } else { "nc" },
+            match self.scheduler {
+                Scheduler::DataParallel => "_dp",
+                Scheduler::StreamK => "_sk",
+            }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smem_grows_with_tiles() {
+        let small = KernelConfig {
+            tm: 64,
+            tn: 64,
+            tk: 64,
+            cooperative: false,
+            scheduler: Scheduler::DataParallel,
+        };
+        let big = KernelConfig { tm: 128, tn: 256, ..small };
+        assert!(big.smem_bytes(2.0) > small.smem_bytes(2.0));
+    }
+
+    #[test]
+    fn mma_efficiency_bounds() {
+        let cfg = KernelConfig {
+            tm: 128,
+            tn: 256,
+            tk: 64,
+            cooperative: true,
+            scheduler: Scheduler::DataParallel,
+        };
+        assert!((cfg.mma_efficiency() - 1.0).abs() < 1e-9);
+        let tiny = KernelConfig { tm: 16, tn: 64, ..cfg };
+        assert!(tiny.mma_efficiency() < 0.6);
+        assert!(tiny.mma_efficiency() >= 0.25);
+    }
+}

@@ -1,0 +1,43 @@
+//! # NestedFP
+//!
+//! A reproduction of *"NestedFP: High-Performance, Memory-Efficient
+//! Dual-Precision Floating Point Support for LLMs"* (Lee et al., 2025) as a
+//! three-layer Rust + JAX + Pallas serving stack.
+//!
+//! The crate provides:
+//!
+//! * [`format`] — the NestedFP numeric format itself: bit-exact FP16
+//!   decomposition into two 8-bit tensors (the upper being a valid E4M3
+//!   value at a fixed 2^8 scale), lossless reconstruction, and the
+//!   per-channel absmax FP8 quantizer used as the paper's baseline.
+//! * [`model`] — model configurations (the in-repo tiny transformer plus
+//!   the paper's 14-model zoo with their real GEMM shapes) and the
+//!   layer-applicability analyzer (Table 3).
+//! * [`runtime`] — the PJRT execution layer: loads AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them on the
+//!   CPU PJRT client. Python never runs at serving time.
+//! * [`coordinator`] — the vLLM-style serving engine: continuous batching
+//!   with chunked prefill, KV-cache slot/block management, request router,
+//!   latency metrics, and the paper's headline feature — an
+//!   iteration-level **dual-precision controller** switching FP16/FP8.
+//! * [`gpusim`] — a tile-level analytical H100 GEMM cost model (the
+//!   hardware substitute; see DESIGN.md §2) with the paper's kernel config
+//!   search space, used to regenerate the performance figures.
+//! * [`trace`] — Azure-trace-like synthetic workload generation.
+//! * [`eval`] — accuracy harness comparing FP16 / baseline FP8 / NestedFP8.
+//! * [`bench`] — the reproduction harness behind `repro reproduce <exp>`.
+//! * [`util`] — std-only support code (RNG, stats, JSON, CLI, property
+//!   testing) since the offline environment has no tokio/serde/clap/etc.
+
+pub mod util;
+pub mod format;
+pub mod model;
+pub mod gpusim;
+pub mod trace;
+pub mod eval;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+
+/// Crate-wide result type (thin alias over `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

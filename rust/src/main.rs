@@ -1,0 +1,231 @@
+//! `repro` — the NestedFP command-line entry point.
+//!
+//! ```text
+//! repro reproduce <exp>      regenerate a paper table/figure
+//!                            exp: table1|table2|table3|fig1a|fig1b|fig3|
+//!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|all
+//!        [--artifacts DIR]   artifact directory (default: artifacts)
+//!        [--eval-n N]        eval examples per task for table1 (default 24)
+//! repro serve                TCP serving front-end on the real backend
+//!        [--addr HOST:PORT]  default 127.0.0.1:7171
+//!        [--mode dual|fp16|fp8]
+//! repro analyze              weight-store + applicability summary
+//! repro gemm --m M --n N --k K [--format fp16|nested16|nested8|fp8]
+//!                            one autotuned gpusim query (debugging)
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use nestedfp::bench::{fig1, fig3, fig7, fig8, report::Report, table1, table3};
+use nestedfp::coordinator::backend::{ModeMap, RealBackend};
+use nestedfp::coordinator::engine::{Engine, EngineConfig};
+use nestedfp::coordinator::precision::PrecisionPolicy;
+use nestedfp::coordinator::server;
+use nestedfp::gpusim::{self, GemmQuery, OptLevel, WeightFormat};
+use nestedfp::runtime::ModelRuntime;
+use nestedfp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "reproduce" => cmd_reproduce(&args),
+        "serve" => cmd_serve(&args),
+        "analyze" => cmd_analyze(&args),
+        "gemm" => cmd_gemm(&args),
+        _ => {
+            eprintln!(
+                "nestedfp repro — usage:\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|all>\n  \
+                 repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8]\n  \
+                 repro analyze\n  \
+                 repro gemm --m M --n N --k K [--format ...]"
+            );
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn print_reports(reports: Vec<Report>) {
+    for r in reports {
+        println!("{}", r.render());
+    }
+}
+
+fn run_one(exp: &str, dir: &Path, eval_n: usize) -> anyhow::Result<()> {
+    match exp {
+        "table1" | "table2" => {
+            print_reports(vec![table1::table12(dir, eval_n)?]);
+            print_reports(vec![table1::table2_weights(dir)?]);
+        }
+        "table3" => print_reports(vec![table3::table3()]),
+        "fig1a" => print_reports(vec![fig1::fig1a()]),
+        "fig1b" => print_reports(vec![fig1::fig1b()?]),
+        "fig3" => print_reports(vec![fig3::fig3a(dir)?, fig3::fig3b(dir)?]),
+        "fig7a" => print_reports(fig7::fig7a()),
+        "fig7b" => print_reports(vec![fig7::fig7b()]),
+        "fig8" => print_reports(fig8::fig8()?),
+        "fig9" => print_reports(vec![fig7::fig9()]),
+        "fig10" => print_reports(fig8::fig10()?),
+        "fig13" => print_reports(vec![fig7::fig13()]),
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> i32 {
+    let exp = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let dir = artifacts_dir(args);
+    let eval_n = args.get_usize("eval-n", 24);
+    let result = if exp == "all" {
+        let mut r = Ok(());
+        for e in [
+            "fig1a", "fig1b", "fig3", "fig7a", "fig7b", "fig9", "fig13", "fig8", "fig10",
+            "table3", "table1",
+        ] {
+            eprintln!("[reproduce] running {e} ...");
+            r = run_one(e, &dir, eval_n);
+            if r.is_err() {
+                break;
+            }
+        }
+        r
+    } else {
+        run_one(exp, &dir, eval_n)
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("reproduce {exp}: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
+    let policy = match args.get_or("mode", "dual") {
+        "fp16" => PrecisionPolicy::Fp16Only,
+        "fp8" => PrecisionPolicy::Fp8Only,
+        _ => PrecisionPolicy::Dual,
+    };
+    let run = || -> anyhow::Result<()> {
+        // PJRT handles are not Send: the whole runtime lives on the
+        // engine worker thread; clients talk to it through the channel.
+        let (tx, rx) = std::sync::mpsc::channel();
+        let dir2 = dir.clone();
+        std::thread::spawn(move || {
+            let work = || -> anyhow::Result<()> {
+                eprintln!("loading artifacts from {dir2:?} ...");
+                let rt =
+                    ModelRuntime::load(&dir2, &["nested16", "nested8"], &["decode", "prefill"])?;
+                let max_seq = rt.manifest.model.max_seq;
+                let n_slots =
+                    rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
+                let backend = RealBackend::new(
+                    rt,
+                    ModeMap::default(),
+                    n_slots,
+                    n_slots * (max_seq / 16 + 1) + 32,
+                );
+                let engine = Engine::new(
+                    backend,
+                    EngineConfig {
+                        policy,
+                        physical_kv: true,
+                        ..Default::default()
+                    },
+                );
+                eprintln!("engine ready");
+                server::engine_worker(engine, rx)
+            };
+            if let Err(e) = work() {
+                eprintln!("engine worker died: {e:#}");
+            }
+        });
+        let listener = std::net::TcpListener::bind(&addr)?;
+        eprintln!("listening on {addr} — protocol: GEN <max_new> <prompt>");
+        server::serve(listener, tx, Some(b';' as i32))?;
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_analyze(args: &Args) -> i32 {
+    let dir = artifacts_dir(args);
+    let run = || -> anyhow::Result<()> {
+        let ws = nestedfp::runtime::WeightStore::load(&dir.join("weights.bin"))?;
+        println!(
+            "weight store: {} tensors, {:.2} MiB total",
+            ws.tensors.len(),
+            ws.total_bytes() as f64 / (1 << 20) as f64
+        );
+        println!(
+            "  nested planes (deployable store): {:.2} MiB == one fp16 copy",
+            ws.nested_plane_bytes() as f64 / (1 << 20) as f64
+        );
+        println!(
+            "  separate-storage co-deployment would need {:.2} MiB (+50%)",
+            ws.f16_linear_bytes() as f64 * 1.5 / (1 << 20) as f64
+        );
+        print_reports(vec![fig3::fig3b(&dir)?, table3::table3()]);
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("analyze: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_gemm(args: &Args) -> i32 {
+    let q = GemmQuery {
+        m: args.get_usize("m", 128),
+        n: args.get_usize("n", 4096),
+        k: args.get_usize("k", 4096),
+        format: match args.get_or("format", "fp16") {
+            "nested16" => WeightFormat::Nested16,
+            "nested8" => WeightFormat::Nested8,
+            "fp8" => WeightFormat::Fp8,
+            _ => WeightFormat::Fp16,
+        },
+        opt: OptLevel::Level3,
+    };
+    match gpusim::best_config(&q) {
+        Some((cfg, t)) => {
+            println!(
+                "({}x{}x{}) {:?}: best config {} -> {:.3} ms ({:.1} TFLOP/s)",
+                q.m,
+                q.n,
+                q.k,
+                q.format,
+                cfg.name(),
+                t * 1e3,
+                2.0 * (q.m * q.n * q.k) as f64 / t / 1e12
+            );
+            0
+        }
+        None => {
+            eprintln!("no feasible kernel config");
+            1
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Model configurations and weight-distribution analysis.
+//!
+//! * [`zoo`] — the 14 LLMs of the paper (Tables 1–3, Figures 7–10) with
+//!   their real linear-layer GEMM shapes, plus calibrated weight-magnitude
+//!   profiles for the applicability analysis.
+//! * [`applicability`] — the NestedFP eligibility analyzer (Table 3 /
+//!   Figure 3b): per-layer |w|max vs the 1.75 threshold.
+
+pub mod zoo;
+pub mod applicability;
+
+pub use zoo::{GemmKind, ModelSpec, ZOO};

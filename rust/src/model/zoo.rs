@@ -1,0 +1,421 @@
+//! The paper's model zoo: architectures, GEMM shapes, and published
+//! applicability counts (Table 3) used to calibrate the synthetic weight
+//! sampler.
+//!
+//! GEMM taxonomy (Table 3): GEMM1 = Q/K/V projections (separate layers in
+//! Llama/Mistral/Qwen-style models, one fused layer in Phi models),
+//! GEMM2 = output projection, GEMM3 = MLP gate/up, GEMM4 = MLP down.
+
+/// Linear-layer kind (the paper's GEMM1..GEMM4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GemmKind {
+    Qkv,
+    OutProj,
+    GateUp,
+    Down,
+}
+
+impl GemmKind {
+    pub const ALL: [GemmKind; 4] = [
+        GemmKind::Qkv,
+        GemmKind::OutProj,
+        GemmKind::GateUp,
+        GemmKind::Down,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            GemmKind::Qkv => "GEMM1",
+            GemmKind::OutProj => "GEMM2",
+            GemmKind::GateUp => "GEMM3",
+            GemmKind::Down => "GEMM4",
+        }
+    }
+}
+
+/// Published Table-3 applicability: (applicable, total) per GEMM kind.
+#[derive(Clone, Copy, Debug)]
+pub struct Applicability {
+    pub per_kind: [(usize, usize); 4],
+}
+
+impl Applicability {
+    pub fn total(&self) -> (usize, usize) {
+        self.per_kind
+            .iter()
+            .fold((0, 0), |(a, t), &(x, y)| (a + x, t + y))
+    }
+}
+
+/// One model of the zoo.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub params_b: f64,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// Phi-style fused QKV projection (one layer per block).
+    pub fused_qkv: bool,
+    /// Published Table-3 counts; None for models not in Table 3 (the four
+    /// main-eval models are fully applicable per §5.1 except Phi-4).
+    pub table3: Option<Applicability>,
+    /// Largest per-layer |w| in the checkpoint (paper Fig 3b / §E) —
+    /// drives the calibrated sampler for ineligible layers.
+    pub max_weight: f32,
+}
+
+impl ModelSpec {
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim
+    }
+
+    /// (N, K) *kernel* shapes with per-layer multiplicity for each GEMM
+    /// kind. QKV runs as one fused GEMM (vLLM's qkv_proj) in every model
+    /// — this is what makes the paper's count of "14 unique (N,K) shapes
+    /// across the four models" come out (Table 3's GEMM1 instead counts
+    /// q/k/v as separate checkpoint layers where the model stores them
+    /// separately; see `fused_qkv`).
+    pub fn gemm_shapes(&self, kind: GemmKind) -> Vec<(usize, usize, usize)> {
+        let d = self.d_model;
+        let attn_dim = self.n_heads * self.head_dim;
+        match kind {
+            GemmKind::Qkv => vec![(attn_dim + 2 * self.kv_dim(), d, 1)],
+            GemmKind::OutProj => vec![(d, attn_dim, 1)],
+            GemmKind::GateUp => vec![(self.d_ff, d, 2)],
+            GemmKind::Down => vec![(d, self.d_ff, 1)],
+        }
+    }
+
+    /// The distinct (N,K) shapes of this model's linear layers — the
+    /// paper's "four distinct (N,K) shapes" per model (Fig 7a/9).
+    pub fn unique_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes = Vec::new();
+        for kind in GemmKind::ALL {
+            for (n, k, _) in self.gemm_shapes(kind) {
+                if !shapes.contains(&(n, k)) {
+                    shapes.push((n, k));
+                }
+            }
+        }
+        shapes
+    }
+
+    /// The largest (N,K) shape (Fig 7a plots these).
+    pub fn largest_shape(&self) -> (usize, usize) {
+        self.unique_shapes()
+            .into_iter()
+            .max_by_key(|&(n, k)| n * k)
+            .unwrap()
+    }
+
+    /// Total weight FLOPs per token for the linear layers (2*N*K each).
+    pub fn linear_flops_per_token(&self) -> f64 {
+        let mut per_layer = 0.0;
+        for kind in GemmKind::ALL {
+            for (n, k, mult) in self.gemm_shapes(kind) {
+                per_layer += 2.0 * (n * k * mult) as f64;
+            }
+        }
+        per_layer * self.n_layers as f64
+    }
+}
+
+const fn app(
+    g1: (usize, usize),
+    g2: (usize, usize),
+    g3: (usize, usize),
+    g4: (usize, usize),
+) -> Option<Applicability> {
+    Some(Applicability {
+        per_kind: [g1, g2, g3, g4],
+    })
+}
+
+/// The four main-evaluation models come first (Tables 1–2, Figs 7–10).
+pub static ZOO: &[ModelSpec] = &[
+    ModelSpec {
+        name: "llama31-8b",
+        params_b: 8.0,
+        d_model: 4096,
+        n_layers: 32,
+        n_heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        d_ff: 14336,
+        vocab: 128_256,
+        fused_qkv: false,
+        table3: Some(Applicability {
+            per_kind: [(96, 96), (32, 32), (64, 64), (32, 32)],
+        }),
+        max_weight: 1.4,
+    },
+    ModelSpec {
+        name: "mistral-nemo-12b",
+        params_b: 12.0,
+        d_model: 5120,
+        n_layers: 40,
+        n_heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        d_ff: 14336,
+        vocab: 131_072,
+        fused_qkv: false,
+        table3: Some(Applicability {
+            per_kind: [(120, 120), (40, 40), (80, 80), (40, 40)],
+        }),
+        max_weight: 1.2,
+    },
+    ModelSpec {
+        name: "phi-4-14b",
+        params_b: 14.0,
+        d_model: 5120,
+        n_layers: 40,
+        n_heads: 40,
+        kv_heads: 10,
+        head_dim: 128,
+        d_ff: 17920,
+        vocab: 100_352,
+        fused_qkv: true,
+        table3: Some(Applicability {
+            per_kind: [(40, 40), (38, 40), (40, 40), (28, 40)],
+        }),
+        max_weight: 2.9,
+    },
+    ModelSpec {
+        name: "mistral-small-24b",
+        params_b: 24.0,
+        d_model: 5120,
+        n_layers: 40,
+        n_heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        d_ff: 32768,
+        vocab: 131_072,
+        fused_qkv: false,
+        table3: Some(Applicability {
+            per_kind: [(120, 120), (40, 40), (80, 80), (40, 40)],
+        }),
+        max_weight: 1.1,
+    },
+    // ---- extended zoo (Table 3 / Appendix E) -----------------------------
+    ModelSpec {
+        name: "codellama-7b",
+        params_b: 7.0,
+        d_model: 4096,
+        n_layers: 32,
+        n_heads: 32,
+        kv_heads: 32,
+        head_dim: 128,
+        d_ff: 11008,
+        vocab: 32_016,
+        fused_qkv: false,
+        table3: app((96, 96), (32, 32), (64, 64), (31, 32)),
+        max_weight: 2.6,
+    },
+    ModelSpec {
+        name: "codellama-13b",
+        params_b: 13.0,
+        d_model: 5120,
+        n_layers: 40,
+        n_heads: 40,
+        kv_heads: 40,
+        head_dim: 128,
+        d_ff: 13824,
+        vocab: 32_016,
+        fused_qkv: false,
+        table3: app((120, 120), (40, 40), (80, 80), (37, 40)),
+        max_weight: 2.8,
+    },
+    ModelSpec {
+        name: "gemma3-4b",
+        params_b: 4.0,
+        d_model: 2560,
+        n_layers: 34,
+        n_heads: 8,
+        kv_heads: 4,
+        head_dim: 256,
+        d_ff: 10240,
+        vocab: 262_144,
+        fused_qkv: false,
+        table3: app((207, 264), (64, 88), (123, 176), (34, 34)),
+        max_weight: 26.25,
+    },
+    ModelSpec {
+        name: "gemma3-12b",
+        params_b: 12.0,
+        d_model: 3840,
+        n_layers: 48,
+        n_heads: 16,
+        kv_heads: 8,
+        head_dim: 256,
+        d_ff: 15360,
+        vocab: 262_144,
+        fused_qkv: false,
+        table3: app((249, 306), (78, 102), (151, 204), (48, 48)),
+        max_weight: 26.25,
+    },
+    ModelSpec {
+        name: "gemma3-27b",
+        params_b: 27.0,
+        d_model: 5376,
+        n_layers: 62,
+        n_heads: 32,
+        kv_heads: 16,
+        head_dim: 128,
+        d_ff: 21504,
+        vocab: 262_144,
+        fused_qkv: false,
+        table3: app((291, 348), (92, 116), (179, 232), (62, 62)),
+        max_weight: 26.25,
+    },
+    ModelSpec {
+        name: "llama31-70b",
+        params_b: 70.0,
+        d_model: 8192,
+        n_layers: 80,
+        n_heads: 64,
+        kv_heads: 8,
+        head_dim: 128,
+        d_ff: 28672,
+        vocab: 128_256,
+        fused_qkv: false,
+        table3: app((224, 240), (80, 80), (141, 160), (78, 80)),
+        max_weight: 93.0,
+    },
+    ModelSpec {
+        name: "phi-3.5-mini",
+        params_b: 3.8,
+        d_model: 3072,
+        n_layers: 32,
+        n_heads: 32,
+        kv_heads: 32,
+        head_dim: 96,
+        d_ff: 8192,
+        vocab: 32_064,
+        fused_qkv: true,
+        table3: app((26, 32), (31, 32), (31, 32), (24, 32)),
+        max_weight: 3.2,
+    },
+    ModelSpec {
+        name: "qwen3-8b",
+        params_b: 8.0,
+        d_model: 4096,
+        n_layers: 36,
+        n_heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        d_ff: 12288,
+        vocab: 151_936,
+        fused_qkv: false,
+        table3: app((108, 108), (35, 36), (72, 72), (34, 36)),
+        max_weight: 2.4,
+    },
+    ModelSpec {
+        name: "qwen3-14b",
+        params_b: 14.0,
+        d_model: 5120,
+        n_layers: 40,
+        n_heads: 40,
+        kv_heads: 8,
+        head_dim: 128,
+        d_ff: 17408,
+        vocab: 151_936,
+        fused_qkv: false,
+        table3: app((120, 120), (40, 40), (80, 80), (38, 40)),
+        max_weight: 2.2,
+    },
+    ModelSpec {
+        name: "qwen3-32b",
+        params_b: 32.0,
+        d_model: 5120,
+        n_layers: 64,
+        n_heads: 64,
+        kv_heads: 8,
+        head_dim: 128,
+        d_ff: 25600,
+        vocab: 151_936,
+        fused_qkv: false,
+        table3: app((192, 192), (63, 64), (127, 128), (56, 64)),
+        max_weight: 2.8,
+    },
+];
+
+/// Look a model up by name.
+pub fn find(name: &str) -> Option<&'static ModelSpec> {
+    ZOO.iter().find(|m| m.name == name)
+}
+
+/// The four main-evaluation models.
+pub fn main_four() -> Vec<&'static ModelSpec> {
+    ZOO[..4].iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fourteen_unique_shapes_across_main_four() {
+        // the paper's "14 unique (N,K) shapes" (§5.2, Fig 9)
+        let mut all = Vec::new();
+        for m in main_four() {
+            for s in m.unique_shapes() {
+                if !all.contains(&s) {
+                    all.push(s);
+                }
+            }
+        }
+        assert_eq!(all.len(), 14, "shapes: {all:?}");
+    }
+
+    #[test]
+    fn four_unique_shapes_per_model() {
+        for m in main_four() {
+            assert_eq!(m.unique_shapes().len(), 4, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn largest_shapes_match_paper() {
+        let ll = find("llama31-8b").unwrap().largest_shape();
+        assert!(ll == (14336, 4096) || ll == (4096, 14336), "{ll:?}");
+        let big = find("mistral-small-24b").unwrap().largest_shape();
+        assert!(big == (32768, 5120) || big == (5120, 32768), "{big:?}");
+        // Fig 7b's M x 5120 x 32768 is mistral-small's down projection
+        let down = find("mistral-small-24b").unwrap().gemm_shapes(GemmKind::Down);
+        assert_eq!(down, vec![(5120, 32768, 1)]);
+    }
+
+    #[test]
+    fn table3_counts_consistent() {
+        // GEMM totals must equal layers x multiplicity for non-multimodal
+        // text models
+        let m = find("llama31-8b").unwrap();
+        let t3 = m.table3.unwrap();
+        assert_eq!(t3.per_kind[0].1, 3 * m.n_layers); // separate q,k,v
+        assert_eq!(t3.per_kind[1].1, m.n_layers);
+        assert_eq!(t3.per_kind[2].1, 2 * m.n_layers);
+        assert_eq!(t3.per_kind[3].1, m.n_layers);
+        let phi = find("phi-4-14b").unwrap();
+        assert_eq!(phi.table3.unwrap().per_kind[0].1, phi.n_layers); // fused
+        // published totals
+        assert_eq!(find("llama31-8b").unwrap().table3.unwrap().total(), (224, 224));
+        assert_eq!(find("qwen3-32b").unwrap().table3.unwrap().total(), (438, 448));
+        // note: the paper's own Table 3 total for Gemma 3 4B (429/563) is
+        // internally inconsistent with its per-GEMM cells, which sum to
+        // 428/562; we keep the per-cell values.
+        assert_eq!(find("gemma3-4b").unwrap().table3.unwrap().total(), (428, 562));
+    }
+
+    #[test]
+    fn flops_scale_with_size(){
+        let small = find("llama31-8b").unwrap().linear_flops_per_token();
+        let big = find("mistral-small-24b").unwrap().linear_flops_per_token();
+        assert!(big > 2.0 * small);
+    }
+}

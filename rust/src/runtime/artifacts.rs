@@ -1,0 +1,282 @@
+//! `manifest.json` — the executable index emitted by the AOT pipeline.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::Dtype;
+
+/// Model hyper-parameters (mirrors python ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+/// One weight input slot of an executable.
+#[derive(Clone, Debug)]
+pub struct WeightInput {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One dynamic input slot.
+#[derive(Clone, Debug)]
+pub struct DynInput {
+    pub dims: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// Executable descriptor from the manifest.
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    /// "decode" | "prefill" | "gemm".
+    pub kind: String,
+    /// "fp16" | "nested16" | "nested8".
+    pub mode: String,
+    /// Batch bucket (decode) or chunk length (prefill); 0 for gemm.
+    pub size: usize,
+    pub path: PathBuf,
+    pub weight_inputs: Vec<WeightInput>,
+    pub dynamic_inputs: Vec<DynInput>,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub model: ModelMeta,
+    pub decode_buckets: Vec<usize>,
+    pub prefill_chunks: Vec<usize>,
+    pub modes: Vec<String>,
+    pub act_scales: BTreeMap<String, f64>,
+    pub executables: Vec<ExecSpec>,
+    pub dir: PathBuf,
+    pub final_train_loss: Option<f64>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let m = j.req("model").map_err(|e| anyhow!(e))?;
+        let geti = |k: &str| -> Result<usize> {
+            m.req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("model.{k} not a number"))
+        };
+        let model = ModelMeta {
+            vocab: geti("vocab")?,
+            d_model: geti("d_model")?,
+            n_layers: geti("n_layers")?,
+            n_heads: geti("n_heads")?,
+            d_ff: geti("d_ff")?,
+            max_seq: geti("max_seq")?,
+            head_dim: geti("head_dim")?,
+        };
+
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            Ok(j
+                .req(key)
+                .map_err(|e| anyhow!(e))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect())
+        };
+
+        let mut act_scales = BTreeMap::new();
+        if let Some(obj) = j.get("act_scales").and_then(|v| v.as_obj()) {
+            for (k, v) in obj {
+                if let Some(f) = v.as_f64() {
+                    act_scales.insert(k.clone(), f);
+                }
+            }
+        }
+
+        let mut executables = Vec::new();
+        for e in j
+            .req("executables")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("executables not an array"))?
+        {
+            let kind = e
+                .req("kind")
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .unwrap_or_default()
+                .to_string();
+            let mode = e
+                .req("mode")
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .unwrap_or_default()
+                .to_string();
+            let size = e.get("size").and_then(|v| v.as_usize()).unwrap_or(0);
+            let rel = e
+                .req("path")
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .ok_or_else(|| anyhow!("path not a string"))?
+                .to_string();
+            let mut weight_inputs = Vec::new();
+            if let Some(arr) = e.get("weight_inputs").and_then(|v| v.as_arr()) {
+                for w in arr {
+                    weight_inputs.push(WeightInput {
+                        name: w
+                            .req("name")
+                            .map_err(|e| anyhow!(e))?
+                            .as_str()
+                            .unwrap_or_default()
+                            .to_string(),
+                        dims: w
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                            .unwrap_or_default(),
+                        dtype: Dtype::parse(
+                            w.get("dtype").and_then(|v| v.as_str()).unwrap_or("float32"),
+                        )?,
+                    });
+                }
+            }
+            let mut dynamic_inputs = Vec::new();
+            if let Some(arr) = e.get("dynamic_inputs").and_then(|v| v.as_arr()) {
+                for d in arr {
+                    dynamic_inputs.push(DynInput {
+                        dims: d
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                            .unwrap_or_default(),
+                        dtype: Dtype::parse(
+                            d.get("dtype").and_then(|v| v.as_str()).unwrap_or("float32"),
+                        )?,
+                    });
+                }
+            }
+            executables.push(ExecSpec {
+                kind,
+                mode,
+                size,
+                path: dir.join(rel),
+                weight_inputs,
+                dynamic_inputs,
+            });
+        }
+
+        if executables.is_empty() {
+            bail!("manifest has no executables");
+        }
+
+        Ok(Manifest {
+            model,
+            decode_buckets: usize_arr("decode_buckets")?,
+            prefill_chunks: usize_arr("prefill_chunks")?,
+            modes: j
+                .req("modes")
+                .map_err(|e| anyhow!(e))?
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|v| v.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            act_scales,
+            executables,
+            dir: dir.to_path_buf(),
+            final_train_loss: j.get("final_train_loss").and_then(|v| v.as_f64()),
+        })
+    }
+
+    /// Find the step executable for (kind, mode, size).
+    pub fn find(&self, kind: &str, mode: &str, size: usize) -> Result<&ExecSpec> {
+        self.executables
+            .iter()
+            .find(|e| e.kind == kind && e.mode == mode && e.size == size)
+            .ok_or_else(|| anyhow!("no executable for ({kind}, {mode}, size {size})"))
+    }
+
+    /// Smallest decode bucket >= n (falls back to the largest).
+    pub fn decode_bucket_for(&self, n: usize) -> usize {
+        self.decode_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.decode_buckets.last().unwrap())
+    }
+
+    /// Largest prefill chunk <= n (falls back to the smallest).
+    pub fn prefill_chunk_for(&self, n: usize) -> usize {
+        self.prefill_chunks
+            .iter()
+            .rev()
+            .copied()
+            .find(|&c| c <= n)
+            .unwrap_or_else(|| *self.prefill_chunks.first().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"vocab": 256, "d_model": 256, "n_layers": 4, "n_heads": 8,
+                "d_ff": 704, "max_seq": 256, "head_dim": 32},
+      "decode_buckets": [1, 2, 4, 8],
+      "prefill_chunks": [32, 64],
+      "modes": ["fp16", "nested16", "nested8"],
+      "act_scales": {"layers.0.wq": 30.5},
+      "final_train_loss": 1.98,
+      "executables": [
+        {"kind": "decode", "mode": "fp16", "size": 2, "path": "decode_fp16_b2.hlo.txt",
+         "weight_inputs": [{"name": "embed", "shape": [256, 256], "dtype": "uint16"}],
+         "dynamic_inputs": [{"shape": [2], "dtype": "int32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let dir = std::env::temp_dir().join("nestedfp_mtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.d_model, 256);
+        assert_eq!(m.decode_buckets, vec![1, 2, 4, 8]);
+        let e = m.find("decode", "fp16", 2).unwrap();
+        assert_eq!(e.weight_inputs[0].dtype, Dtype::U16);
+        assert_eq!(e.dynamic_inputs[0].dims, vec![2]);
+        assert!(m.find("decode", "fp16", 9).is_err());
+        assert!((m.act_scales["layers.0.wq"] - 30.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("nestedfp_mtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.decode_bucket_for(1), 1);
+        assert_eq!(m.decode_bucket_for(3), 4);
+        assert_eq!(m.decode_bucket_for(100), 8);
+        assert_eq!(m.prefill_chunk_for(100), 64);
+        assert_eq!(m.prefill_chunk_for(40), 32);
+        assert_eq!(m.prefill_chunk_for(10), 32);
+    }
+}

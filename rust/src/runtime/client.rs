@@ -1,0 +1,333 @@
+//! PJRT client wrapper: compile HLO-text artifacts, keep weights
+//! device-resident, execute step functions from the serving hot path.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifacts::{ExecSpec, Manifest};
+use super::tensor::HostTensor;
+use super::weights::WeightStore;
+
+/// One compiled step function plus its device-resident weight buffers.
+pub struct StepExecutable {
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// Raw outputs of a step execution, already copied back to the host.
+#[derive(Debug)]
+pub struct StepOutput {
+    pub tensors: Vec<HostTensor>,
+    /// Device-side execution time (compile-level; excludes input upload).
+    pub exec_micros: u64,
+}
+
+/// The model runtime: PJRT client + all compiled executables for the
+/// modes requested, sharing one weight store.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+    client: xla::PjRtClient,
+    steps: HashMap<(String, String, usize), StepExecutable>,
+}
+
+impl ModelRuntime {
+    /// Load artifacts and compile the executables for `modes` (e.g.
+    /// `["nested16", "nested8"]`). `kinds` filters decode/prefill/gemm.
+    pub fn load(dir: &Path, modes: &[&str], kinds: &[&str]) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let weights = WeightStore::load(&dir.join("weights.bin"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+
+        let mut steps = HashMap::new();
+        let specs: Vec<ExecSpec> = manifest
+            .executables
+            .iter()
+            .filter(|e| modes.contains(&e.mode.as_str()) && kinds.contains(&e.kind.as_str()))
+            .cloned()
+            .collect();
+        for spec in specs {
+            let t0 = Instant::now();
+            let exe = compile_hlo(&client, &spec.path)?;
+            let weight_bufs = upload_weights(&client, &spec, &weights)?;
+            log::debug(&format!(
+                "compiled {} ({:.2}s, {} weight buffers)",
+                spec.path.display(),
+                t0.elapsed().as_secs_f64(),
+                weight_bufs.len()
+            ));
+            steps.insert(
+                (spec.kind.clone(), spec.mode.clone(), spec.size),
+                StepExecutable {
+                    spec,
+                    exe,
+                    weight_bufs,
+                },
+            );
+        }
+        if steps.is_empty() {
+            bail!("no executables matched modes {modes:?} kinds {kinds:?}");
+        }
+        Ok(ModelRuntime {
+            manifest,
+            weights,
+            client,
+            steps,
+        })
+    }
+
+    pub fn step(&self, kind: &str, mode: &str, size: usize) -> Result<&StepExecutable> {
+        self.steps
+            .get(&(kind.to_string(), mode.to_string(), size))
+            .ok_or_else(|| anyhow!("executable ({kind}, {mode}, {size}) not loaded"))
+    }
+
+    pub fn loaded_keys(&self) -> Vec<(String, String, usize)> {
+        let mut v: Vec<_> = self.steps.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Execute a step with the given dynamic inputs (must match the
+    /// spec's dynamic signature). Weight buffers are reused from device
+    /// memory; only dynamic inputs cross the host boundary.
+    pub fn run(&self, step: &StepExecutable, dynamic: &[HostTensor]) -> Result<StepOutput> {
+        if dynamic.len() != step.spec.dynamic_inputs.len() {
+            bail!(
+                "{}: expected {} dynamic inputs, got {}",
+                step.spec.path.display(),
+                step.spec.dynamic_inputs.len(),
+                dynamic.len()
+            );
+        }
+        for (i, (t, d)) in dynamic.iter().zip(&step.spec.dynamic_inputs).enumerate() {
+            if t.dims != d.dims || t.dtype != d.dtype {
+                bail!(
+                    "dynamic input {i}: got {:?}{:?}, want {:?}{:?}",
+                    t.dtype,
+                    t.dims,
+                    d.dtype,
+                    d.dims
+                );
+            }
+        }
+
+        let mut args: Vec<&xla::PjRtBuffer> = step.weight_bufs.iter().collect();
+        let dyn_bufs: Vec<xla::PjRtBuffer> = dynamic
+            .iter()
+            .map(|t| upload_tensor(&self.client, t))
+            .collect::<Result<_>>()?;
+        args.extend(dyn_bufs.iter());
+
+        let t0 = Instant::now();
+        let result = step
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {}: {e:?}", step.spec.path.display()))?;
+        let exec_micros = t0.elapsed().as_micros() as u64;
+
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple output: {e:?}"))?;
+        let tensors = parts
+            .into_iter()
+            .map(literal_to_host)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepOutput {
+            tensors,
+            exec_micros,
+        })
+    }
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow!("parsing HLO {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+}
+
+/// Upload a host tensor with the *typed* PJRT entry point.
+///
+/// NOTE: the crate's `buffer_from_host_raw_bytes` is buggy — it passes the
+/// `ElementType` discriminant (U16=6) where the C API expects the XLA
+/// `PrimitiveType` numbering (U16=7), silently creating a buffer of the
+/// wrong element type. The typed `buffer_from_host_buffer::<T>` goes
+/// through `T::TY.primitive_type()` and is correct.
+pub fn upload_tensor(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    use super::tensor::Dtype;
+    let res = match t.dtype {
+        Dtype::U8 => client.buffer_from_host_buffer(&t.bytes, &t.dims, None),
+        Dtype::U16 => {
+            let v: Vec<u16> = t
+                .bytes
+                .chunks_exact(2)
+                .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                .collect();
+            client.buffer_from_host_buffer(&v, &t.dims, None)
+        }
+        Dtype::F32 => {
+            let v: Vec<f32> = t
+                .bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            client.buffer_from_host_buffer(&v, &t.dims, None)
+        }
+        Dtype::I32 => {
+            let v: Vec<i32> = t
+                .bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            client.buffer_from_host_buffer(&v, &t.dims, None)
+        }
+    };
+    res.map_err(|e| anyhow!("uploading {:?}{:?}: {e:?}", t.dtype, t.dims))
+}
+
+fn upload_weights(
+    client: &xla::PjRtClient,
+    spec: &ExecSpec,
+    store: &WeightStore,
+) -> Result<Vec<xla::PjRtBuffer>> {
+    spec.weight_inputs
+        .iter()
+        .map(|w| {
+            let t = store.get(&w.name)?;
+            if t.dims != w.dims {
+                bail!(
+                    "weight {}: store dims {:?} != spec dims {:?}",
+                    w.name,
+                    t.dims,
+                    w.dims
+                );
+            }
+            if t.dtype != w.dtype {
+                bail!(
+                    "weight {}: store dtype {:?} != spec dtype {:?}",
+                    w.name,
+                    t.dtype,
+                    w.dtype
+                );
+            }
+            upload_tensor(client, t)
+        })
+        .collect()
+}
+
+fn literal_to_host(lit: xla::Literal) -> Result<HostTensor> {
+    use super::tensor::Dtype;
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("output shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let prim = lit
+        .ty()
+        .map_err(|e| anyhow!("output type: {e:?}"))?;
+    if prim == xla::ElementType::F16 {
+        // f16 outputs are value-converted to f32 on the way out (the
+        // crate's typed copy rejects reading F16 as u16 bits)
+        let conv = lit
+            .convert(xla::PrimitiveType::F32)
+            .map_err(|e| anyhow!("f16->f32 convert: {e:?}"))?;
+        return literal_to_host(conv);
+    }
+    let dtype = match prim {
+        xla::ElementType::F32 => Dtype::F32,
+        xla::ElementType::S32 => Dtype::I32,
+        xla::ElementType::U8 => Dtype::U8,
+        xla::ElementType::U16 => Dtype::U16,
+        other => bail!("unsupported output element type {other:?}"),
+    };
+    let n: usize = dims.iter().product();
+    let mut bytes = vec![0u8; n * dtype.size()];
+    // copy_raw_to is typed; use the matching width
+    match dtype {
+        Dtype::F32 => {
+            let mut v = vec![0f32; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy out: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        Dtype::I32 => {
+            let mut v = vec![0i32; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy out: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        Dtype::U16 => {
+            let mut v = vec![0u16; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy out: {e:?}"))?;
+            for (i, x) in v.iter().enumerate() {
+                bytes[i * 2..i * 2 + 2].copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        Dtype::U8 => {
+            let mut v = vec![0u8; n];
+            lit.copy_raw_to(&mut v).map_err(|e| anyhow!("copy out: {e:?}"))?;
+            bytes.copy_from_slice(&v);
+        }
+    }
+    HostTensor::new(dtype, dims, bytes)
+}
+
+/// Tiny leveled logger (std-only).
+pub mod log {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static VERBOSE: AtomicBool = AtomicBool::new(false);
+
+    pub fn set_verbose(v: bool) {
+        VERBOSE.store(v, Ordering::Relaxed);
+    }
+
+    pub fn debug(msg: &str) {
+        if VERBOSE.load(Ordering::Relaxed) {
+            eprintln!("[debug] {msg}");
+        }
+    }
+
+    pub fn info(msg: &str) {
+        eprintln!("[info] {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::{Dtype, HostTensor};
+
+    #[test]
+    fn typed_upload_preserves_element_type() {
+        // regression for the crate's raw-bytes entry point, which maps
+        // ElementType::U16 (=6) to PrimitiveType U8 (=6) — see
+        // upload_tensor's doc comment.
+        let client = xla::PjRtClient::cpu().unwrap();
+        let t = HostTensor::from_u16(vec![4, 2], &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let buf = upload_tensor(&client, &t).unwrap();
+        let shape = buf.on_device_shape().unwrap();
+        match shape {
+            xla::Shape::Array(a) => {
+                assert_eq!(a.ty(), xla::ElementType::U16);
+                assert_eq!(a.dims(), &[4, 2]);
+            }
+            other => panic!("unexpected shape {other:?}"),
+        }
+        assert_eq!(t.dims, vec![4, 2]);
+        assert_eq!(t.dtype, Dtype::U16);
+    }
+}

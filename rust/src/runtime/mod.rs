@@ -1,0 +1,20 @@
+//! The PJRT execution layer (Layer 3 → Layer 2 bridge).
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`:
+//! `weights.bin` (the single NestedFP weight store), `manifest.json`
+//! (executable index) and `*.hlo.txt` (HLO text per step function), then
+//! compiles and executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! Key property: **weights are uploaded to the device once per mode** and
+//! shared by every bucket executable of that mode; per-step calls upload
+//! only the small dynamic inputs (tokens, positions, gathered KV).
+
+pub mod tensor;
+pub mod weights;
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ExecSpec, Manifest, ModelMeta};
+pub use client::{ModelRuntime, StepExecutable, StepOutput};
+pub use tensor::{Dtype, HostTensor};
+pub use weights::WeightStore;

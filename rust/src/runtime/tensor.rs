@@ -1,0 +1,159 @@
+//! Host-side raw tensors crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+/// Element dtype of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    U8,
+    U16,
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::U16 => 2,
+            Dtype::F32 | Dtype::I32 => 4,
+        }
+    }
+
+    /// Parse numpy dtype names from the manifest.
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "uint8" => Dtype::U8,
+            "uint16" | "float16" => Dtype::U16,
+            "float32" => Dtype::F32,
+            "int32" => Dtype::I32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn to_xla(self) -> xla::ElementType {
+        match self {
+            Dtype::U8 => xla::ElementType::U8,
+            Dtype::U16 => xla::ElementType::U16,
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// A dense host tensor as raw little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn new(dtype: Dtype, dims: Vec<usize>, bytes: Vec<u8>) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        if n * dtype.size() != bytes.len() {
+            bail!(
+                "tensor bytes/shape mismatch: dims {dims:?} x {} != {} bytes",
+                dtype.size(),
+                bytes.len()
+            );
+        }
+        Ok(HostTensor { dtype, dims, bytes })
+    }
+
+    pub fn from_f32(dims: Vec<usize>, data: &[f32]) -> Self {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor {
+            dtype: Dtype::F32,
+            dims,
+            bytes,
+        }
+    }
+
+    pub fn from_i32(dims: Vec<usize>, data: &[i32]) -> Self {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor {
+            dtype: Dtype::I32,
+            dims,
+            bytes,
+        }
+    }
+
+    pub fn from_u16(dims: Vec<usize>, data: &[u16]) -> Self {
+        let mut bytes = Vec::with_capacity(data.len() * 2);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor {
+            dtype: Dtype::U16,
+            dims,
+            bytes,
+        }
+    }
+
+    pub fn from_u8(dims: Vec<usize>, data: Vec<u8>) -> Self {
+        HostTensor {
+            dtype: Dtype::U8,
+            dims,
+            bytes: data,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {:?}, not F32", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u16(&self) -> Result<Vec<u16>> {
+        if self.dtype != Dtype::U16 {
+            bail!("tensor is {:?}, not U16", self.dtype);
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::from_f32(vec![2, 2], &[1.0, -2.0, 0.5, 3.25]);
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.0, 0.5, 3.25]);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(HostTensor::new(Dtype::F32, vec![3], vec![0u8; 12]).is_ok());
+        assert!(HostTensor::new(Dtype::F32, vec![3], vec![0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("float16").unwrap(), Dtype::U16);
+        assert_eq!(Dtype::parse("uint8").unwrap(), Dtype::U8);
+        assert!(Dtype::parse("complex64").is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! `weights.bin` reader — the single NestedFP weight store.
+//!
+//! Format (written by `python/compile/aot.py::write_weights_bin`):
+//!
+//! ```text
+//! magic "NFPW" | u32 version | u32 count
+//! per tensor:
+//!   u16 name_len | name | u8 dtype (0=u8,1=u16,2=f32,3=i32) | u8 ndim
+//!   u32 dims[ndim] | u64 byte_len | raw little-endian payload
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::{Dtype, HostTensor};
+
+/// All serving weights, keyed by tensor name (e.g. `layers.0.wq.upper`).
+#[derive(Debug)]
+pub struct WeightStore {
+    pub tensors: BTreeMap<String, HostTensor>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening weight store {path:?}"))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"NFPW" {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let version = read_u32(&mut f)?;
+        if version != 1 {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u16(&mut f)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes).context("tensor name utf8")?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            let dtype = match hdr[0] {
+                0 => Dtype::U8,
+                1 => Dtype::U16,
+                2 => Dtype::F32,
+                3 => Dtype::I32,
+                other => bail!("{name}: bad dtype code {other}"),
+            };
+            let ndim = hdr[1] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut f)? as usize);
+            }
+            let byte_len = read_u64(&mut f)? as usize;
+            let mut bytes = vec![0u8; byte_len];
+            f.read_exact(&mut bytes)?;
+            let t = HostTensor::new(dtype, dims, bytes)
+                .with_context(|| format!("tensor {name}"))?;
+            tensors.insert(name, t);
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("weight '{name}' missing from store"))
+    }
+
+    /// Total bytes — the paper's memory-footprint headline: the nested
+    /// planes plus fp16 masters. `nested_only_bytes` counts just the
+    /// deployable store (upper+lower), which equals one fp16 copy.
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.bytes.len()).sum()
+    }
+
+    /// Bytes of the dual-precision store alone (upper + lower planes).
+    pub fn nested_plane_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|(k, _)| k.ends_with(".upper") || k.ends_with(".lower"))
+            .map(|(_, t)| t.bytes.len())
+            .sum()
+    }
+
+    /// Bytes of the fp16 linear-layer masters (what separate-storage
+    /// co-deployment would duplicate).
+    pub fn f16_linear_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|(k, _)| k.ends_with(".f16"))
+            .map(|(_, t)| t.bytes.len())
+            .sum()
+    }
+}
+
+fn read_u16(f: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    f.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_store(path: &Path) {
+        // one u8 tensor [2,3], one f32 tensor [2]
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"NFPW").unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // "a.upper"
+        let name = b"a.upper";
+        f.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+        f.write_all(name).unwrap();
+        f.write_all(&[0u8, 2u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&6u64.to_le_bytes()).unwrap();
+        f.write_all(&[1, 2, 3, 4, 5, 6]).unwrap();
+        // "b"
+        let name = b"b";
+        f.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+        f.write_all(name).unwrap();
+        f.write_all(&[2u8, 1u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&8u64.to_le_bytes()).unwrap();
+        f.write_all(&1.5f32.to_le_bytes()).unwrap();
+        f.write_all(&(-2.0f32).to_le_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = std::env::temp_dir().join("nestedfp_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("weights.bin");
+        write_test_store(&path);
+        let ws = WeightStore::load(&path).unwrap();
+        let a = ws.get("a.upper").unwrap();
+        assert_eq!(a.dims, vec![2, 3]);
+        assert_eq!(a.bytes, vec![1, 2, 3, 4, 5, 6]);
+        let b = ws.get("b").unwrap();
+        assert_eq!(b.as_f32().unwrap(), vec![1.5, -2.0]);
+        assert_eq!(ws.nested_plane_bytes(), 6);
+        assert!(ws.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("nestedfp_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"XXXX0000").unwrap();
+        assert!(WeightStore::load(&path).is_err());
+    }
+}

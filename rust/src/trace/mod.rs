@@ -1,0 +1,8 @@
+//! Workload generation: Azure-LLM-inference-like traces and request-size
+//! distributions (the data substitute for [2] in the paper; DESIGN.md §2).
+
+pub mod azure;
+pub mod workload;
+
+pub use azure::{AzureTraceConfig, TraceStats, generate_rate_series};
+pub use workload::{WorkloadConfig, build_requests, poisson_arrivals};

@@ -1,0 +1,141 @@
+//! Request workload construction: Poisson arrivals over a rate series,
+//! with request shapes either fixed (the paper's fixed 256-in/512-out
+//! throughput runs) or sampled (the trace replays).
+//!
+//! For the real backend, prompts come from the shared task grammar
+//! (mirroring python/compile/corpus.py) and are padded with filler task
+//! lines to chunk-aligned lengths.
+
+use crate::coordinator::request::Request;
+use crate::util::rng::Pcg64;
+
+/// Workload parameters.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub seed: u64,
+    /// Fixed prompt length (tokens); 0 = sample log-normal.
+    pub input_len: usize,
+    /// Fixed output budget; 0 = sample log-normal.
+    pub output_len: usize,
+    /// Align prompt lengths to this multiple (smallest prefill chunk).
+    pub chunk_align: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            seed: 7,
+            input_len: 256,
+            output_len: 512,
+            chunk_align: 8,
+        }
+    }
+}
+
+/// Poisson arrival times over a per-second rate series.
+pub fn poisson_arrivals(rates: &[f64], seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed, 991);
+    let mut out = Vec::new();
+    for (s, &rate) in rates.iter().enumerate() {
+        if rate <= 0.0 {
+            continue;
+        }
+        let n = rng.poisson(rate);
+        for _ in 0..n {
+            out.push(s as f64 + rng.f64());
+        }
+    }
+    out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    out
+}
+
+fn sample_len(rng: &mut Pcg64, mean: f64, align: usize, max: usize) -> usize {
+    // log-normal with sigma 0.6, clamped
+    let mu = mean.ln() - 0.18;
+    let v = rng.lognormal(mu, 0.6).round() as usize;
+    let v = v.clamp(align, max);
+    v.div_ceil(align) * align
+}
+
+/// Build the request list for a set of arrival times.
+///
+/// Prompt token values are synthetic (byte 65 'A' filler) — fine for the
+/// sim backend and for throughput runs on the real backend where content
+/// does not matter. For accuracy runs use `eval::tasks` prompts instead.
+pub fn build_requests(
+    arrivals: &[f64],
+    cfg: &WorkloadConfig,
+    max_context: usize,
+) -> Vec<Request> {
+    let mut rng = Pcg64::new(cfg.seed, 1203);
+    let mut out = Vec::with_capacity(arrivals.len());
+    for (i, &t) in arrivals.iter().enumerate() {
+        let in_len = if cfg.input_len > 0 {
+            cfg.input_len.div_ceil(cfg.chunk_align) * cfg.chunk_align
+        } else {
+            sample_len(&mut rng, 200.0, cfg.chunk_align, max_context / 2)
+        };
+        let out_len = if cfg.output_len > 0 {
+            cfg.output_len
+        } else {
+            sample_len(&mut rng, 150.0, 1, max_context / 2)
+        };
+        let out_len = out_len.min(max_context.saturating_sub(in_len + 2)).max(1);
+        let prompt = vec![65i32; in_len];
+        out.push(Request::new(i as u64, prompt, out_len, t));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_count_tracks_rates() {
+        let rates = vec![10.0; 100];
+        let arr = poisson_arrivals(&rates, 3);
+        let n = arr.len() as f64;
+        assert!((n - 1000.0).abs() < 150.0, "got {n} arrivals for E=1000");
+        // sorted and within range
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        assert!(*arr.last().unwrap() < 100.0);
+    }
+
+    #[test]
+    fn fixed_shape_requests() {
+        let arr = vec![0.0, 1.0, 2.0];
+        let cfg = WorkloadConfig {
+            input_len: 250,
+            output_len: 512,
+            chunk_align: 8,
+            ..Default::default()
+        };
+        let reqs = build_requests(&arr, &cfg, 4096);
+        assert_eq!(reqs.len(), 3);
+        // 250 -> aligned up to 256
+        assert_eq!(reqs[0].prompt.len(), 256);
+        assert_eq!(reqs[0].max_new_tokens, 512);
+    }
+
+    #[test]
+    fn sampled_lengths_aligned_and_bounded() {
+        let arr: Vec<f64> = (0..200).map(|i| i as f64).collect();
+        let cfg = WorkloadConfig {
+            input_len: 0,
+            output_len: 0,
+            chunk_align: 8,
+            seed: 11,
+        };
+        let reqs = build_requests(&arr, &cfg, 1024);
+        for r in &reqs {
+            assert_eq!(r.prompt.len() % 8, 0);
+            assert!(r.prompt.len() + r.max_new_tokens + 2 <= 1024 + 8);
+            assert!(r.max_new_tokens >= 1);
+        }
+        // lengths vary
+        let lens: std::collections::HashSet<usize> =
+            reqs.iter().map(|r| r.prompt.len()).collect();
+        assert!(lens.len() > 5);
+    }
+}

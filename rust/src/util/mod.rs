@@ -1,0 +1,15 @@
+//! Std-only utility layer.
+//!
+//! The build environment is offline with a minimal crate cache, so the
+//! usual ecosystem crates (rand, serde, clap, criterion, proptest) are not
+//! available. This module supplies the small, well-tested subset we need.
+
+pub mod rng;
+pub mod stats;
+pub mod json;
+pub mod cli;
+pub mod prop;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use stats::{Digest, Summary};

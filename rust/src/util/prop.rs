@@ -1,0 +1,75 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated inputs
+//! from a seeded RNG; on failure it reports the failing case index and a
+//! debug rendering of the input, and re-runs with the same seed so
+//! failures are exactly reproducible.
+
+use super::rng::Pcg64;
+
+/// Run a property over `cases` generated values. Panics (with context) on
+/// the first falsified case.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_0001u64);
+    let mut rng = Pcg64::seeded(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' falsified at case {i}/{cases} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` so failures can carry
+/// a message.
+pub fn check_res<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_0002u64);
+    let mut rng = Pcg64::seeded(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' falsified at case {i}/{cases} (seed {seed}):\n  input = {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("add-commutes", 50, |r| (r.next_u32(), r.next_u32()), |&(a, b)| {
+            count += 1;
+            a.wrapping_add(b) == b.wrapping_add(a)
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "falsified")]
+    fn failing_property_panics() {
+        check("always-false", 10, |r| r.next_u32(), |_| false);
+    }
+}

@@ -1,0 +1,202 @@
+//! Latency statistics: exact percentile digest + summary helpers.
+//!
+//! The serving metrics (TTFT / TPOT p50/p90/p99, Figures 1b, 8, 10) all
+//! flow through [`Digest`]. Sample counts in our experiments are modest
+//! (≤ ~10^6), so we keep exact samples and sort on query; `Summary`
+//! caches the sorted view.
+
+/// Accumulates samples; computes exact order statistics on demand.
+#[derive(Clone, Debug, Default)]
+pub struct Digest {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Digest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn extend_from(&mut self, other: &Digest) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation; `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        self.ensure_sorted();
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let pos = q / 100.0 * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.samples.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Fraction of samples strictly greater than `threshold`.
+    pub fn frac_above(&self, threshold: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().filter(|&&v| v > threshold).count() as f64
+            / self.samples.len() as f64
+    }
+
+    pub fn summary(&mut self) -> Summary {
+        Summary {
+            count: self.len(),
+            mean: self.mean(),
+            min: self.min(),
+            p50: self.percentile(50.0),
+            p90: self.percentile(90.0),
+            p99: self.percentile(99.0),
+            max: self.max(),
+        }
+    }
+}
+
+/// A frozen view of a digest's headline numbers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3} p50={:.3} p90={:.3} p99={:.3} max={:.3}",
+            self.count, self.mean, self.p50, self.p90, self.p99, self.max
+        )
+    }
+}
+
+/// Mean of a slice (NaN if empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Geometric mean of positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_exact() {
+        let mut d = Digest::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            d.add(v);
+        }
+        assert_eq!(d.percentile(0.0), 1.0);
+        assert_eq!(d.percentile(50.0), 3.0);
+        assert_eq!(d.percentile(100.0), 5.0);
+        assert!((d.percentile(25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut d = Digest::new();
+        d.add(0.0);
+        d.add(10.0);
+        assert!((d.percentile(90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let mut d = Digest::new();
+        for i in 1..=100 {
+            d.add(i as f64);
+        }
+        let s = d.summary();
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p90 - 90.1).abs() < 0.2);
+    }
+
+    #[test]
+    fn frac_above_counts() {
+        let mut d = Digest::new();
+        for i in 0..10 {
+            d.add(i as f64);
+        }
+        assert!((d.frac_above(6.5) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn helpers() {
+        assert!((mean(&[2.0, 4.0]) - 3.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!(stddev(&[1.0, 1.0, 1.0]) < 1e-12);
+    }
+}

@@ -1,0 +1,97 @@
+//! Wall-clock timing helpers for the custom bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure once.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+/// Benchmark result: per-iteration timing statistics in nanoseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {} min {} p50 {} p90 {} ({} iters)",
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: first a warmup, then timed iterations until either
+/// `max_iters` or `max_time` is reached (whichever first, but at least 5
+/// iterations). Returns per-iteration stats.
+pub fn bench(warmup: usize, max_iters: usize, max_time: Duration, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(max_iters.min(4096));
+    let t_start = Instant::now();
+    for i in 0..max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if i >= 4 && t_start.elapsed() > max_time {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    BenchStats {
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        min_ns: samples[0],
+        p50_ns: samples[n / 2],
+        p90_ns: samples[((n as f64 * 0.9) as usize).min(n - 1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench(2, 50, Duration::from_millis(200), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.iters >= 5);
+        assert!(s.min_ns > 0.0);
+        assert!(s.mean_ns >= s.min_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+    }
+}

@@ -1,0 +1,289 @@
+//! Property tests on coordinator invariants (routing, batching, KV
+//! accounting, precision control) using the in-crate property driver.
+
+use nestedfp::coordinator::backend::{Backend, StepRun};
+use nestedfp::coordinator::engine::{Engine, EngineConfig};
+use nestedfp::coordinator::kv::{KvCacheManager, KvGeometry};
+use nestedfp::coordinator::precision::{Precision, PrecisionController, PrecisionPolicy, SloConfig};
+use nestedfp::coordinator::request::Request;
+use nestedfp::util::prop;
+use nestedfp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// KV manager invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kv_blocks_conserved_under_random_ops() {
+    prop::check_res(
+        "kv-conservation",
+        200,
+        |rng: &mut Pcg64| {
+            // a random op sequence: (alloc len | grow | release)
+            let ops: Vec<(u8, usize)> = (0..40)
+                .map(|_| (rng.range_u64(0, 3) as u8, rng.range_u64(1, 64) as usize))
+                .collect();
+            ops
+        },
+        |ops| {
+            let geo = KvGeometry {
+                n_layers: 1,
+                n_heads: 1,
+                max_seq: 64,
+                head_dim: 1,
+                block_size: 8,
+                total_blocks: 64,
+                n_slots: 6,
+            };
+            let mut kv = KvCacheManager::accounting_only(geo);
+            let mut live: Vec<usize> = Vec::new();
+            for &(op, val) in ops {
+                match op {
+                    0 => {
+                        if kv.can_admit(val) {
+                            let slot = kv.allocate(val).map_err(|e| e.to_string())?;
+                            live.push(slot);
+                        }
+                    }
+                    1 => {
+                        if let Some(&slot) = live.last() {
+                            let _ = kv.grow(slot, val.min(64));
+                        }
+                    }
+                    _ => {
+                        if let Some(slot) = live.pop() {
+                            kv.release(slot);
+                        }
+                    }
+                }
+                if kv.free_blocks() > geo.total_blocks {
+                    return Err(format!(
+                        "free blocks {} exceed total {}",
+                        kv.free_blocks(),
+                        geo.total_blocks
+                    ));
+                }
+            }
+            // releasing everything must restore the full budget
+            for slot in live.drain(..) {
+                kv.release(slot);
+            }
+            if kv.free_blocks() != geo.total_blocks {
+                return Err(format!(
+                    "leak: {} free of {}",
+                    kv.free_blocks(),
+                    geo.total_blocks
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Engine invariants with a scripted backend
+// ---------------------------------------------------------------------------
+
+struct ScriptBackend {
+    geo: KvGeometry,
+    latency: f64,
+    vocab: usize,
+}
+
+impl Backend for ScriptBackend {
+    fn geometry(&self) -> KvGeometry {
+        self.geo
+    }
+    fn prefill_chunks(&self) -> Vec<usize> {
+        vec![8, 16]
+    }
+    fn max_decode_batch(&self) -> usize {
+        4
+    }
+    fn prefill(
+        &mut self,
+        _kv: &mut KvCacheManager,
+        _slot: usize,
+        _start: usize,
+        _tokens: &[i32],
+        _p: Precision,
+    ) -> anyhow::Result<StepRun> {
+        Ok(StepRun {
+            logits: Some(vec![0.0; self.vocab]),
+            latency: self.latency,
+        })
+    }
+    fn decode(
+        &mut self,
+        _kv: &mut KvCacheManager,
+        slots: &[usize],
+        _tokens: &[i32],
+        _pos: &[i32],
+        _p: Precision,
+    ) -> anyhow::Result<StepRun> {
+        Ok(StepRun {
+            logits: Some(vec![0.0; self.vocab * slots.len()]),
+            latency: self.latency,
+        })
+    }
+}
+
+fn script_engine() -> Engine<ScriptBackend> {
+    Engine::new(
+        ScriptBackend {
+            geo: KvGeometry {
+                n_layers: 1,
+                n_heads: 1,
+                max_seq: 64,
+                head_dim: 1,
+                block_size: 8,
+                total_blocks: 256,
+                n_slots: 6,
+            },
+            latency: 0.002,
+            vocab: 32,
+        },
+        EngineConfig {
+            policy: PrecisionPolicy::Dual,
+            physical_kv: false,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn prop_every_request_completes_with_exact_token_count() {
+    prop::check_res(
+        "engine-completion",
+        30,
+        |rng: &mut Pcg64| {
+            let n = rng.range_u64(1, 12) as usize;
+            (0..n)
+                .map(|i| {
+                    (
+                        i as u64,
+                        rng.range_u64(1, 5) as usize * 8, // prompt len (chunk aligned)
+                        rng.range_u64(1, 20) as usize,    // max_new
+                        rng.f64() * 0.5,                  // arrival
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |specs| {
+            let mut engine = script_engine();
+            let requests: Vec<Request> = specs
+                .iter()
+                .map(|&(id, plen, max_new, arr)| Request::new(id, vec![1; plen], max_new, arr))
+                .collect();
+            let report = engine.run(requests).map_err(|e| e.to_string())?;
+            if report.metrics.completed != specs.len() {
+                return Err(format!(
+                    "completed {} of {}",
+                    report.metrics.completed,
+                    specs.len()
+                ));
+            }
+            // scripted logits never emit a stop token -> every request
+            // produces exactly max_new tokens
+            for c in &report.completions {
+                let (_, _, max_new, _) = specs[c.id as usize];
+                if c.tokens.len() != max_new {
+                    return Err(format!(
+                        "request {} produced {} tokens, wanted {max_new}",
+                        c.id,
+                        c.tokens.len()
+                    ));
+                }
+            }
+            // all KV released at the end
+            if engine.kv.free_blocks() != engine.kv.geo.total_blocks {
+                return Err("kv blocks leaked".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ttft_nondecreasing_in_arrival_for_fifo_bursts() {
+    // within a single burst (same arrival), earlier-id requests are
+    // admitted first (FCFS): their TTFT must be no larger than later ones
+    prop::check_res(
+        "engine-fcfs",
+        20,
+        |rng: &mut Pcg64| (rng.range_u64(2, 6) as usize, rng.range_u64(1, 3) as usize * 8),
+        |&(n, plen)| {
+            let mut engine = script_engine();
+            let requests: Vec<Request> = (0..n)
+                .map(|i| Request::new(i as u64, vec![1; plen], 4, 0.0))
+                .collect();
+            let report = engine.run(requests).map_err(|e| e.to_string())?;
+            let mut ttfts: Vec<(u64, f64)> = report
+                .completions
+                .iter()
+                .map(|c| (c.id, c.ttft_s))
+                .collect();
+            ttfts.sort_by_key(|&(id, _)| id);
+            for w in ttfts.windows(2) {
+                if w[0].1 > w[1].1 + 1e-9 {
+                    return Err(format!(
+                        "FCFS violated: id {} ttft {} > id {} ttft {}",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Precision controller invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_controller_fixed_policies_invariant_under_any_signal() {
+    prop::check(
+        "fixed-policy",
+        100,
+        |rng: &mut Pcg64| {
+            (
+                rng.f64() * 0.2,               // tpot
+                rng.range_u64(0, 50) as usize, // queue
+                rng.f64(),                     // kv util
+            )
+        },
+        |&(tpot, queue, util)| {
+            let mut c16 = PrecisionController::new(PrecisionPolicy::Fp16Only, SloConfig::default());
+            let mut c8 = PrecisionController::new(PrecisionPolicy::Fp8Only, SloConfig::default());
+            c16.observe_tpot(tpot);
+            c8.observe_tpot(tpot);
+            c16.decide(queue, util) == Precision::Fp16
+                && c8.decide(queue, util) == Precision::Fp8
+        },
+    );
+}
+
+#[test]
+fn prop_controller_switch_rate_bounded_by_dwell() {
+    // adversarial signal cannot make the dual controller switch more than
+    // once per dwell window
+    prop::check(
+        "dwell-bound",
+        50,
+        |rng: &mut Pcg64| {
+            (0..200)
+                .map(|_| (rng.f64() * 0.08, rng.range_u64(0, 8) as usize))
+                .collect::<Vec<_>>()
+        },
+        |signals| {
+            let mut c = PrecisionController::new(PrecisionPolicy::Dual, SloConfig::default());
+            for &(tpot, q) in signals {
+                c.observe_tpot(tpot);
+                c.decide(q, 0.3);
+            }
+            // dwell = 8 iterations -> at most ceil(200/8)+1 switches
+            c.switches <= 200 / 8 + 1
+        },
+    );
+}

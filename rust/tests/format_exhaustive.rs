@@ -1,0 +1,132 @@
+//! Exhaustive verification of the NestedFP format over the *entire* FP16
+//! space — all 65,536 bit patterns. This is stronger than any sampled
+//! property test and pins the Rust implementation as the ground truth the
+//! Pallas kernel is compared against (python/tests does the same sweep).
+
+use nestedfp::format::{e4m3, fp16::F16, nested};
+
+/// Every eligible FP16 value must decompose and reconstruct to the exact
+/// same bit pattern (the paper's losslessness claim).
+#[test]
+fn exhaustive_lossless_roundtrip() {
+    let mut eligible = 0u32;
+    for bits in 0..=u16::MAX {
+        let h = F16::from_bits(bits);
+        if !nested::is_eligible(h) {
+            continue;
+        }
+        eligible += 1;
+        let (u, l) = nested::decompose(h);
+        let back = nested::reconstruct(u, l);
+        assert_eq!(
+            back.to_bits(),
+            bits,
+            "0x{bits:04x} ({}) -> upper=0x{u:02x} lower=0x{l:02x} -> 0x{:04x}",
+            h.to_f32(),
+            back.to_bits()
+        );
+    }
+    // eligibility covers E<15 fully plus part of E=15, both signs:
+    // 2 * (15*1024 + 769) = 32258
+    assert_eq!(eligible, 32_258);
+}
+
+/// The upper byte must be *exactly* the RNE E4M3 encoding of value*2^8 for
+/// every eligible value (the paper's claim that the upper tensor is a
+/// high-quality E4M3 representation with a global scale of 2^8).
+#[test]
+fn exhaustive_upper_matches_direct_e4m3() {
+    for bits in 0..=u16::MAX {
+        let h = F16::from_bits(bits);
+        if !nested::is_eligible(h) {
+            continue;
+        }
+        let (u, _) = nested::decompose(h);
+        let direct = e4m3::encode_sat(h.to_f32() * 256.0);
+        assert_eq!(
+            u, direct,
+            "0x{bits:04x} ({}): upper=0x{u:02x} direct=0x{direct:02x}",
+            h.to_f32()
+        );
+    }
+}
+
+/// The upper byte must never be the E4M3 NaN pattern (S.1111.111) — this
+/// is exactly what the 1.75 eligibility threshold guarantees.
+#[test]
+fn exhaustive_upper_never_nan() {
+    for bits in 0..=u16::MAX {
+        let h = F16::from_bits(bits);
+        if !nested::is_eligible(h) {
+            continue;
+        }
+        let (u, _) = nested::decompose(h);
+        assert_ne!(u & 0x7F, 0x7F, "0x{bits:04x} produced NaN upper");
+    }
+}
+
+/// FP8-path semantics: decoding the upper byte with the 2^-8 scale must
+/// land within half an E4M3 ulp of the original value.
+#[test]
+fn exhaustive_fp8_weight_error_bound() {
+    for bits in 0..=u16::MAX {
+        let h = F16::from_bits(bits);
+        if !nested::is_eligible(h) {
+            continue;
+        }
+        let (u, _) = nested::decompose(h);
+        let w8 = nested::upper_as_weight(u);
+        let w16 = h.to_f32();
+        if w16 == 0.0 {
+            assert_eq!(w8, 0.0, "0x{bits:04x}");
+            continue;
+        }
+        // E4M3 has a 3-bit mantissa: relative error <= 2^-4 for values in
+        // the normal range of the scaled representation; subnormal tail is
+        // bounded by the absolute quantum 2^-9 * 2^-8 = 2^-17.
+        let rel = ((w8 - w16) / w16).abs();
+        let abs = (w8 - w16).abs();
+        assert!(
+            rel <= 1.0 / 16.0 + 1e-6 || abs <= f32::powi(2.0, -17),
+            "0x{bits:04x}: w16={w16} w8={w8} rel={rel} abs={abs}"
+        );
+    }
+}
+
+/// Ineligible values must be exactly the complement: |v| > 1.75, NaN, Inf.
+#[test]
+fn exhaustive_eligibility_rule() {
+    for bits in 0..=u16::MAX {
+        let h = F16::from_bits(bits);
+        let v = h.to_f32();
+        let expected = v.is_finite() && v.abs() <= 1.75;
+        assert_eq!(
+            nested::is_eligible(h),
+            expected,
+            "0x{bits:04x} ({v}): eligibility mismatch"
+        );
+    }
+}
+
+/// Checksum semantics: upper LSB == lower MSB exactly when rounding did
+/// not add one (Fig 6's detection rule).
+#[test]
+fn exhaustive_checksum_rule() {
+    for bits in 0..=u16::MAX {
+        let h = F16::from_bits(bits);
+        if !nested::is_eligible(h) {
+            continue;
+        }
+        let (u, l) = nested::decompose(h);
+        let m3 = (l >> 7) & 1;
+        let m3p = u & 1;
+        let rem = (bits & 0x7F) as u8;
+        let base = ((bits >> 7) & 0x7F) as u8;
+        let rounded_up = rem > 64 || (rem == 64 && base & 1 == 1);
+        assert_eq!(
+            m3 != m3p,
+            rounded_up,
+            "0x{bits:04x}: checksum vs rounding disagree"
+        );
+    }
+}

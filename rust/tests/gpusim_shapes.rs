@@ -1,0 +1,175 @@
+//! Property sweeps over the H100 cost model: orderings and bounds that
+//! must hold for every shape, format, and config.
+
+use nestedfp::gpusim::gemm::{gemm_latency, GemmQuery, WeightFormat};
+use nestedfp::gpusim::kernel::OptLevel;
+use nestedfp::gpusim::{best_config, best_latency, config_space};
+use nestedfp::model::zoo;
+use nestedfp::util::prop;
+use nestedfp::util::rng::Pcg64;
+
+fn rand_query(rng: &mut Pcg64) -> GemmQuery {
+    let fmts = [
+        WeightFormat::Fp16,
+        WeightFormat::Nested16,
+        WeightFormat::Nested8,
+        WeightFormat::Fp8,
+    ];
+    GemmQuery {
+        m: rng.range_u64(1, 65) as usize * 32,
+        n: rng.range_u64(8, 257) as usize * 16,
+        k: rng.range_u64(8, 257) as usize * 16,
+        format: fmts[rng.index(4)],
+        opt: OptLevel::Level3,
+    }
+}
+
+#[test]
+fn prop_latency_positive_and_roofline_bounded() {
+    prop::check_res(
+        "roofline-bound",
+        300,
+        rand_query,
+        |q| {
+            let t = best_latency(q);
+            if !(t > 0.0) {
+                return Err(format!("nonpositive latency {t}"));
+            }
+            // no configuration may beat the ideal roofline
+            let flops = 2.0 * (q.m * q.n * q.k) as f64;
+            let t_ideal_compute = flops / q.format.flops();
+            let bytes =
+                (q.n * q.k) as f64 * q.format.weight_bytes() + (q.m * q.k) as f64 * 2.0;
+            let t_ideal_mem = bytes / 3.35e12;
+            let floor = t_ideal_compute.max(t_ideal_mem);
+            if t < floor {
+                return Err(format!("latency {t} beats roofline {floor} for {q:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_format_ordering_holds_everywhere() {
+    prop::check_res(
+        "format-ordering",
+        150,
+        |rng: &mut Pcg64| {
+            (
+                rng.range_u64(1, 65) as usize * 32,
+                rng.range_u64(16, 129) as usize * 32,
+                rng.range_u64(16, 129) as usize * 32,
+            )
+        },
+        |&(m, n, k)| {
+            let t = |format| {
+                best_latency(&GemmQuery {
+                    m,
+                    n,
+                    k,
+                    format,
+                    opt: OptLevel::Level3,
+                })
+            };
+            let fp16 = t(WeightFormat::Fp16);
+            let n16 = t(WeightFormat::Nested16);
+            let n8 = t(WeightFormat::Nested8);
+            let fp8 = t(WeightFormat::Fp8);
+            if n16 < fp16 - 1e-12 {
+                return Err(format!("nested16 {n16} beats fp16 {fp16} at ({m},{n},{k})"));
+            }
+            if n8 < fp8 - 1e-12 {
+                return Err(format!("nested8 {n8} beats fp8 {fp8}"));
+            }
+            if fp8 > fp16 + 1e-12 {
+                return Err(format!("fp8 {fp8} slower than fp16 {fp16}"));
+            }
+            // nested16 overhead must stay within a sane band after tuning
+            if n16 / fp16 > 1.25 {
+                return Err(format!(
+                    "tuned nested16 overhead {:.1}% at ({m},{n},{k})",
+                    (n16 / fp16 - 1.0) * 100.0
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_opt_levels_monotone_everywhere() {
+    prop::check_res(
+        "opt-monotone",
+        150,
+        |rng: &mut Pcg64| {
+            (
+                rng.range_u64(1, 65) as usize * 32,
+                rng.range_u64(16, 129) as usize * 32,
+                rng.range_u64(16, 129) as usize * 32,
+            )
+        },
+        |&(m, n, k)| {
+            let t = |opt| {
+                best_latency(&GemmQuery {
+                    m,
+                    n,
+                    k,
+                    format: WeightFormat::Nested16,
+                    opt,
+                })
+            };
+            let l1 = t(OptLevel::Level1);
+            let l2 = t(OptLevel::Level2);
+            let l3 = t(OptLevel::Level3);
+            if !(l1 >= l2 && l2 >= l3) {
+                return Err(format!("levels not monotone: {l1} {l2} {l3} at ({m},{n},{k})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_best_config_is_argmin_of_space() {
+    prop::check_res(
+        "search-argmin",
+        40,
+        rand_query,
+        |q| {
+            let (best, t_best) = best_config(q).ok_or("no feasible config")?;
+            for cfg in config_space() {
+                if let Some(t) = gemm_latency(q, &cfg) {
+                    if t < t_best - 1e-15 {
+                        return Err(format!(
+                            "search missed {}: {t} < {t_best} (picked {})",
+                            cfg.name(),
+                            best.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zoo_step_latency_scales_with_model_size() {
+    use nestedfp::gpusim::{step_latency, StepKind, StepQuery};
+    let q = StepQuery {
+        kind: StepKind::Decode,
+        m: 64,
+        ctx: 512,
+        seqs: 64,
+        format: WeightFormat::Fp16,
+        opt: OptLevel::Level3,
+    };
+    let mut prev = 0.0;
+    for name in ["llama31-8b", "mistral-nemo-12b", "mistral-small-24b"] {
+        let spec = zoo::find(name).unwrap();
+        let t = step_latency(spec, &q);
+        assert!(t > prev, "{name}: {t} !> {prev}");
+        prev = t;
+    }
+}

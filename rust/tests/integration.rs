@@ -1,0 +1,185 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These need `make artifacts` to have run; they skip (with a notice)
+//! when artifacts/ is absent so `cargo test` stays green pre-build.
+
+use std::path::{Path, PathBuf};
+
+use nestedfp::coordinator::backend::{ModeMap, RealBackend};
+use nestedfp::coordinator::engine::{Engine, EngineConfig};
+use nestedfp::coordinator::precision::PrecisionPolicy;
+use nestedfp::coordinator::request::Request;
+use nestedfp::eval::tasks;
+use nestedfp::format::nested;
+use nestedfp::runtime::{HostTensor, ModelRuntime, WeightStore};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("weights.bin").exists() {
+        Some(dir.to_path_buf())
+    } else {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn weight_store_planes_reconstruct_masters() {
+    let Some(dir) = artifacts() else { return };
+    let ws = WeightStore::load(&dir.join("weights.bin")).unwrap();
+    let mut checked = 0;
+    for (name, t) in &ws.tensors {
+        let Some(base) = name.strip_suffix(".upper") else {
+            continue;
+        };
+        let lower = &ws.tensors[&format!("{base}.lower")];
+        let master = ws.tensors[&format!("{base}.f16")].as_u16().unwrap();
+        for ((&u, &l), &m) in t.bytes.iter().zip(&lower.bytes).zip(&master) {
+            assert_eq!(
+                nested::reconstruct(u, l).to_bits(),
+                m,
+                "{base}: plane reconstruction mismatch"
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked >= 28, "only {checked} nested tensors checked");
+}
+
+#[test]
+fn memory_footprint_matches_paper_claim() {
+    let Some(dir) = artifacts() else { return };
+    let ws = WeightStore::load(&dir.join("weights.bin")).unwrap();
+    // the nested planes must cost exactly the same bytes as the fp16
+    // masters of the same layers (the zero-overhead claim)
+    let nested_bytes = ws.nested_plane_bytes();
+    let f16_bytes = ws.f16_linear_bytes();
+    assert_eq!(nested_bytes, f16_bytes);
+}
+
+#[test]
+fn decode_modes_agree_like_the_paper_says() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir, &["fp16", "nested16", "nested8", "fp8base"], &["decode"])
+        .unwrap();
+    let m = &rt.manifest.model;
+    let b = 1usize;
+    let dims = vec![b, m.n_layers, m.n_heads, m.max_seq, m.head_dim];
+    let kv = vec![0f32; dims.iter().product()];
+    let inputs = [
+        HostTensor::from_i32(vec![b], &[b'A' as i32]),
+        HostTensor::from_i32(vec![b], &[0]),
+        HostTensor::from_f32(dims.clone(), &kv),
+        HostTensor::from_f32(dims, &kv),
+    ];
+    let logits_of = |mode: &str| -> Vec<f32> {
+        let step = rt.step("decode", mode, b).unwrap();
+        rt.run(step, &inputs).unwrap().tensors[0].as_f32().unwrap()
+    };
+    let fp16 = logits_of("fp16");
+    let n16 = logits_of("nested16");
+    let n8 = logits_of("nested8");
+    let b8 = logits_of("fp8base");
+
+    let rel = |a: &[f32], b: &[f32]| -> f64 {
+        let num: f64 = a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        let den: f64 = b.iter().map(|y| (*y as f64).powi(2)).sum();
+        (num / den).sqrt()
+    };
+    // losslessness: nested16 == fp16 up to f32 reassociation noise
+    assert!(rel(&n16, &fp16) < 1e-5, "nested16 vs fp16: {}", rel(&n16, &fp16));
+    // fp8 variants: close to fp16, close to each other (Tables 1-2)
+    assert!(rel(&n8, &fp16) < 0.05, "nested8 vs fp16: {}", rel(&n8, &fp16));
+    assert!(rel(&b8, &fp16) < 0.05, "fp8base vs fp16: {}", rel(&b8, &fp16));
+    assert!(rel(&n8, &b8) < 0.05, "nested8 vs fp8base: {}", rel(&n8, &b8));
+}
+
+#[test]
+fn engine_end_to_end_generates_correct_answers() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir, &["nested16", "nested8"], &["decode", "prefill"]).unwrap();
+    let align = rt.manifest.prefill_chunks.iter().copied().min().unwrap();
+    let max_seq = rt.manifest.model.max_seq;
+    let n_slots = rt.manifest.decode_buckets.iter().copied().max().unwrap();
+    let backend = RealBackend::new(rt, ModeMap::default(), n_slots, n_slots * (max_seq / 16 + 1) + 32);
+    let mut engine = Engine::new(
+        backend,
+        EngineConfig {
+            policy: PrecisionPolicy::Fp16Only,
+            physical_kv: true,
+            ..Default::default()
+        },
+    );
+
+    // four concurrent copy-task requests: the trained model should ace
+    // copy; correctness here proves prefill->decode KV handoff + batching
+    let mut requests = Vec::new();
+    let mut answers = Vec::new();
+    let mut rng = nestedfp::util::rng::Pcg64::seeded(777);
+    for i in 0..4u64 {
+        let (p, a) = tasks::gen_example(&mut rng, tasks::Task::Copy);
+        let toks = tasks::chunk_aligned_prompt(&p, align, 50 + i);
+        requests.push(Request::new(i, toks, a.len() + 2, 0.0).with_stop(b';' as i32));
+        answers.push(a);
+    }
+    let report = engine.run(requests).unwrap();
+    assert_eq!(report.metrics.completed, 4);
+    let mut correct = 0;
+    for c in &report.completions {
+        let text: String = c.tokens.iter().map(|&t| (t as u8) as char).collect();
+        // every token must be a plausible byte and the request must have
+        // produced output; exact-match accuracy depends on how long the
+        // checkpoint trained and is *reported*, not asserted
+        assert!(!c.tokens.is_empty(), "request {} produced nothing", c.id);
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+        if text == answers[c.id as usize] {
+            correct += 1;
+        }
+    }
+    eprintln!("[info] copy-task exact-match: {correct}/4 (checkpoint-dependent)");
+}
+
+#[test]
+fn gemm_artifacts_match_reference() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir, &["nested16"], &["gemm"]).unwrap();
+    let (m, n, k) = (32usize, 256usize, 256usize);
+    let x16: Vec<u16> = (0..m * k)
+        .map(|i| nestedfp::format::fp16::F16::from_f32(((i % 17) as f32 - 8.0) * 0.1).to_bits())
+        .collect();
+    let upper = rt.weights.get("layers.0.wq.upper").unwrap().bytes.clone();
+    let lower = rt.weights.get("layers.0.wq.lower").unwrap().bytes.clone();
+    let step = rt.step("gemm", "nested16", n).unwrap();
+    let out = rt
+        .run(
+            step,
+            &[
+                HostTensor::from_u16(vec![m, k], &x16),
+                HostTensor::from_u8(vec![n, k], upper.clone()),
+                HostTensor::from_u8(vec![n, k], lower.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out.tensors[0].as_f32().unwrap();
+
+    // rust reference: reconstruct weights, naive matmul
+    use nestedfp::format::fp16::F16;
+    let w: Vec<f32> = upper
+        .iter()
+        .zip(&lower)
+        .map(|(&u, &l)| nested::reconstruct(u, l).to_f32())
+        .collect();
+    for i in (0..m).step_by(7) {
+        for j in (0..n).step_by(31) {
+            let mut acc = 0f32;
+            for p in 0..k {
+                acc += F16::from_bits(x16[i * k + p]).to_f32() * w[j * k + p];
+            }
+            let g = got[i * n + j];
+            assert!(
+                (acc - g).abs() <= 1e-3 * acc.abs().max(1.0),
+                "({i},{j}): ref {acc} vs artifact {g}"
+            );
+        }
+    }
+}
