@@ -1,0 +1,23 @@
+#!/usr/bin/env sh
+# Tier-1 CI gate: build, test, and doc-lint the crate.
+#
+# Usage: ./ci.sh
+# Runs offline (all dependencies are vendored in rust/vendor/).
+
+set -eu
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found in PATH — install a Rust toolchain first" >&2
+    exit 1
+fi
+
+echo "== cargo build --release =="
+cargo build --release --offline
+
+echo "== cargo test -q =="
+cargo test -q --offline
+
+echo "== cargo doc --no-deps (warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --offline
+
+echo "== ci.sh: all green =="

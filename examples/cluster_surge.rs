@@ -1,0 +1,94 @@
+//! Cluster surge absorption — the multi-replica SLO study.
+//!
+//! Replays one synthetic traffic surge (flat base rate with a 5x plateau)
+//! against 1, 2, and 4 simulated-H100 engine replicas behind the
+//! SLO-headroom router, and prints, per cluster size:
+//!
+//! * aggregate TTFT / TPOT percentiles, SLO violations, and goodput,
+//! * the staged-escalation timeline (how many replicas were demoted to
+//!   FP8, and when), and
+//! * each replica's own precision timeline — so you can watch the surge
+//!   being absorbed by *selective* FP8 demotion: the tail replicas go
+//!   FP8 first and come back first, replica 0 keeps FP16 the longest.
+//!
+//! Run: `cargo run --release --offline --example cluster_surge
+//!       [-- --seconds 60 --base 3.0 --policy slo|rr|kv|rand]`
+
+use nestedfp::bench::cluster::{run_cluster, surge_workload};
+use nestedfp::coordinator::precision::SloConfig;
+use nestedfp::coordinator::router::RoutingPolicy;
+use nestedfp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let seconds = args.get_usize("seconds", 60);
+    let base = args.get_f64("base", 3.0);
+    let policy = match args.get_or("policy", "slo") {
+        "rr" => RoutingPolicy::RoundRobin,
+        "kv" => RoutingPolicy::LeastLoadedKv,
+        "rand" => RoutingPolicy::Random { seed: 17 },
+        _ => RoutingPolicy::SloHeadroom,
+    };
+    let slo = SloConfig::default();
+
+    let n_requests = surge_workload(seconds, base).len();
+    println!(
+        "== cluster_surge: {seconds}s at {base} req/s with a 5x surge ({n_requests} requests, {policy:?} routing) =="
+    );
+
+    for n in [1usize, 2, 4] {
+        let mut report = run_cluster(n, policy, seconds, base)?;
+        let ttft = report.aggregate.ttft_summary();
+        let tpot = report.aggregate.tpot_summary();
+        println!("\n-- {n} replica(s) --");
+        println!(
+            "aggregate  TTFT p50 {:6.1} ms  p90 {:6.1} ms | TPOT p50 {:5.1} ms  p90 {:5.1} ms | viol {:>3}s | goodput {:5.2} req/s | fp16-time {:>3.0}%",
+            ttft.p50 * 1e3,
+            ttft.p90 * 1e3,
+            tpot.p50 * 1e3,
+            tpot.p90 * 1e3,
+            report.aggregate.slo_violation_seconds(&slo),
+            report.aggregate.goodput_req_s(&slo),
+            report.fp16_fraction() * 100.0,
+        );
+        if report.demotion_timeline.is_empty() {
+            println!("escalation: never engaged (surge absorbed at FP16)");
+        } else {
+            let line: Vec<String> = report
+                .demotion_timeline
+                .iter()
+                .take(12)
+                .map(|&(t, k)| format!("{t:.1}s->{k}fp8"))
+                .collect();
+            println!("escalation: {}", line.join("  "));
+        }
+        for (i, r) in report.replicas.iter().enumerate() {
+            let modes: Vec<String> = r
+                .mode_timeline
+                .iter()
+                .take(10)
+                .map(|&(t, fp8)| format!("{:.1}s->{}", t, if fp8 { "fp8" } else { "fp16" }))
+                .collect();
+            println!(
+                "replica {i}: {:>3} reqs  {:>5} iters  fp16-time {:>3.0}%  modes: {}",
+                r.routed,
+                r.iterations,
+                r.controller.fp16_fraction() * 100.0,
+                if modes.is_empty() {
+                    "(idle)".to_string()
+                } else {
+                    modes.join("  ")
+                },
+            );
+        }
+    }
+    println!(
+        "\nReading the output: with 1 replica the whole fleet is the surge's victim — \
+         escalation (and the Dual controller itself) push it to FP8 for much of the \
+         surge window. With 4 replicas the router spreads the load and only the \
+         tail replicas (3, then 2) are demoted, briefly; replica 0 serves FP16 \
+         throughout. Aggregate violations shrink as replicas are added while \
+         goodput holds — the surge is absorbed by selective FP8 demotion."
+    );
+    Ok(())
+}

@@ -9,5 +9,6 @@ pub mod fig1;
 pub mod fig3;
 pub mod fig7;
 pub mod fig8;
+pub mod cluster;
 
 pub use report::Report;

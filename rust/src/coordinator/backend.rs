@@ -11,8 +11,8 @@ use super::precision::Precision;
 
 /// Result of one backend step.
 pub struct StepRun {
-    /// Flattened logits ([V] for prefill, [B, V] for decode); None for
-    /// the simulation backend.
+    /// Flattened logits (`[V]` for prefill, `[B, V]` for decode); None
+    /// for the simulation backend.
     pub logits: Option<Vec<f32>>,
     /// Latency this step contributed, seconds (wall for real, modelled
     /// for sim).

@@ -1,6 +1,13 @@
 //! The serving engine: event loop over (admission → precision decision →
 //! scheduling → execution → postprocessing), generic over the backend and
 //! the clock.
+//!
+//! Two driving modes:
+//! * [`Engine::run`] owns the whole workload (arrival simulation included)
+//!   and loops to completion — the single-replica experiments.
+//! * [`Engine::submit`] + [`Engine::step`] expose one iteration at a time
+//!   so an external driver (the [`cluster`](super::cluster) router) can
+//!   interleave many replicas on a shared virtual clock.
 
 use anyhow::{anyhow, Result};
 
@@ -40,6 +47,21 @@ pub struct CompletedRequest {
     pub tokens: Vec<i32>,
     pub ttft_s: f64,
     pub mean_tpot_s: f64,
+}
+
+/// Outcome of one externally driven iteration (see [`Engine::step`]).
+pub struct EngineStep {
+    /// Whether any work executed. `false` means nothing was runnable:
+    /// queued requests exist but cannot be admitted and no decode is in
+    /// flight — the driver must advance time (next arrival) or give up.
+    pub ran: bool,
+    /// Precision decided for the iteration (recorded even when idle, so
+    /// external drivers can keep mode timelines identical to `run`'s).
+    pub fp8: bool,
+    /// Clock advance this iteration, seconds (0 when idle).
+    pub latency: f64,
+    /// Requests that finished during the iteration.
+    pub completions: Vec<CompletedRequest>,
 }
 
 /// Outcome of a full run.
@@ -89,6 +111,132 @@ impl<B: Backend> Engine<B> {
         self.now
     }
 
+    /// Hand a request to the engine. The engine does not simulate the
+    /// arrival time of submitted requests — external drivers must call
+    /// this only once their clock has reached `r.arrival` (after
+    /// [`Engine::set_clock`] when the replica was idle).
+    pub fn submit(&mut self, r: Request) {
+        self.requests.push(r);
+    }
+
+    /// Unfinished requests currently owned by the engine.
+    pub fn active_requests(&self) -> usize {
+        self.requests.iter().filter(|r| !r.is_finished()).count()
+    }
+
+    /// Requests waiting for admission or mid-prefill — the controller's
+    /// queue-pressure signal, and the router's load signal.
+    pub fn queued_requests(&self) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| {
+                r.state == RequestState::Queued
+                    || (r.state == RequestState::Prefilling && r.remaining_prompt() > 0)
+            })
+            .count()
+    }
+
+    /// Fast-forward the engine clock (never moves backwards).
+    pub fn set_clock(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// The engine's construction parameters.
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Execute one iteration: precision decision → plan → execute →
+    /// harvest. `imminent_arrivals` is the driver's count of requests due
+    /// within the next ~20 ms (part of the controller's load signal;
+    /// [`Engine::run`] derives it from its own pending queue).
+    ///
+    /// Returns `ran == false` when nothing was runnable; the engine clock
+    /// does not advance in that case and the driver must move time
+    /// forward itself (typically to the next arrival).
+    pub fn step(&mut self, imminent_arrivals: usize, metrics: &mut Metrics) -> Result<EngineStep> {
+        // ---- precision decision -----------------------------------
+        // load signal: queued + still-prefilling requests (each one
+        // means imminent prefill iterations that stretch running
+        // sequences' inter-token gaps), plus imminent arrivals
+        let mut queue_depth = self.queued_requests() + imminent_arrivals;
+        // prefill-token backlog is the leading indicator of decode
+        // gap growth: every 192 backlog tokens counts as extra load
+        let backlog_tokens: usize = self
+            .requests
+            .iter()
+            .filter(|r| !r.is_finished())
+            .map(|r| r.remaining_prompt())
+            .sum();
+        let decoding_now = self
+            .requests
+            .iter()
+            .any(|r| r.state == RequestState::Decoding);
+        if decoding_now {
+            queue_depth += backlog_tokens / 192;
+        }
+        let precision = self
+            .controller
+            .decide(queue_depth, self.kv.block_utilization());
+        let is_fp8 = precision == Precision::Fp8;
+        let t0 = self.now;
+
+        // ---- plan & execute ---------------------------------------
+        let plan = self.scheduler.plan(&self.requests, &self.kv);
+        match plan {
+            IterationPlan::Idle => {
+                // blocked on KV space with decodes all finished — the
+                // driver must advance time (next arrival) to make progress
+                return Ok(EngineStep {
+                    ran: false,
+                    fp8: is_fp8,
+                    latency: 0.0,
+                    completions: Vec::new(),
+                });
+            }
+            IterationPlan::Prefill { id, chunk } => {
+                self.run_prefill(id, chunk, precision, metrics)?;
+            }
+            IterationPlan::Decode { ids } => {
+                self.run_decode(&ids, precision, metrics)?;
+            }
+        }
+
+        // ---- harvest finished requests ----------------------------
+        let mut completions: Vec<CompletedRequest> = Vec::new();
+        for r in &mut self.requests {
+            if r.state == RequestState::Finished && r.slot.is_some() {
+                let slot = r.slot.take().unwrap();
+                self.kv.release(slot);
+                metrics.record_request(r);
+                let ttft = r.first_token_at.map(|t| t - r.arrival).unwrap_or(0.0);
+                let mean_tpot = match (r.first_token_at, r.finished_at) {
+                    (Some(f), Some(d)) if r.generated.len() > 1 => {
+                        (d - f) / (r.generated.len() - 1) as f64
+                    }
+                    _ => 0.0,
+                };
+                completions.push(CompletedRequest {
+                    id: r.id,
+                    tokens: r.generated.clone(),
+                    ttft_s: ttft,
+                    mean_tpot_s: mean_tpot,
+                });
+            }
+        }
+        // drop finished request bodies to keep the table small
+        self.requests.retain(|r| !r.is_finished());
+
+        Ok(EngineStep {
+            ran: true,
+            fp8: is_fp8,
+            latency: self.now - t0,
+            completions,
+        })
+    }
+
     /// Run a whole workload (requests with arrival timestamps) to
     /// completion, simulating arrival times on the engine clock.
     ///
@@ -115,11 +263,7 @@ impl<B: Backend> Engine<B> {
                 self.requests.push(r);
             }
 
-            let active = self
-                .requests
-                .iter()
-                .filter(|r| !r.is_finished())
-                .count();
+            let active = self.active_requests();
             if active == 0 {
                 match pending.front() {
                     Some(next) => {
@@ -131,97 +275,34 @@ impl<B: Backend> Engine<B> {
                 }
             }
 
-            // ---- precision decision -----------------------------------
-            // load signal: queued + still-prefilling requests (each one
-            // means imminent prefill iterations that stretch running
-            // sequences' inter-token gaps), plus imminent arrivals
-            let mut queue_depth = self
-                .requests
+            let imminent = pending
                 .iter()
-                .filter(|r| {
-                    r.state == RequestState::Queued
-                        || (r.state == RequestState::Prefilling && r.remaining_prompt() > 0)
-                })
-                .count()
-                + pending
-                    .iter()
-                    .take_while(|r| r.arrival <= self.now + 0.02)
-                    .count();
-            // prefill-token backlog is the leading indicator of decode
-            // gap growth: every 192 backlog tokens counts as extra load
-            let backlog_tokens: usize = self
-                .requests
-                .iter()
-                .filter(|r| !r.is_finished())
-                .map(|r| r.remaining_prompt())
-                .sum();
-            let decoding_now = self
-                .requests
-                .iter()
-                .any(|r| r.state == RequestState::Decoding);
-            if decoding_now {
-                queue_depth += backlog_tokens / 192;
-            }
-            let precision = self
-                .controller
-                .decide(queue_depth, self.kv.block_utilization());
-            let is_fp8 = precision == Precision::Fp8;
+                .take_while(|r| r.arrival <= self.now + 0.02)
+                .count();
+            let t0 = self.now;
+            let step = self.step(imminent, &mut metrics)?;
             if mode_timeline
                 .last()
-                .map(|&(_, last)| last != is_fp8)
+                .map(|&(_, last)| last != step.fp8)
                 .unwrap_or(true)
             {
-                mode_timeline.push((self.now, is_fp8));
+                mode_timeline.push((t0, step.fp8));
             }
-
-            // ---- plan & execute ---------------------------------------
-            let plan = self.scheduler.plan(&self.requests, &self.kv);
-            match plan {
-                IterationPlan::Idle => {
-                    // blocked on KV space with decodes all finished —
-                    // wait for arrivals (time must advance to avoid spin)
-                    match pending.front() {
-                        Some(next) => self.now = next.arrival.max(self.now + 1e-4),
-                        None => {
-                            return Err(anyhow!(
-                                "deadlock: {} active requests but nothing runnable",
-                                active
-                            ))
-                        }
+            if !step.ran {
+                // blocked on KV space with decodes all finished —
+                // wait for arrivals (time must advance to avoid spin)
+                match pending.front() {
+                    Some(next) => self.now = next.arrival.max(self.now + 1e-4),
+                    None => {
+                        return Err(anyhow!(
+                            "deadlock: {} active requests but nothing runnable",
+                            active
+                        ))
                     }
-                    continue;
                 }
-                IterationPlan::Prefill { id, chunk } => {
-                    self.run_prefill(id, chunk, precision, &mut metrics)?;
-                }
-                IterationPlan::Decode { ids } => {
-                    self.run_decode(&ids, precision, &mut metrics)?;
-                }
+                continue;
             }
-
-            // ---- harvest finished requests ----------------------------
-            for r in &mut self.requests {
-                if r.state == RequestState::Finished && r.slot.is_some() {
-                    let slot = r.slot.take().unwrap();
-                    self.kv.release(slot);
-                    metrics.record_request(r);
-                    let ttft = r.first_token_at.map(|t| t - r.arrival).unwrap_or(0.0);
-                    let mean_tpot = match (r.first_token_at, r.finished_at) {
-                        (Some(f), Some(d)) if r.generated.len() > 1 => {
-                            (d - f) / (r.generated.len() - 1) as f64
-                        }
-                        _ => 0.0,
-                    };
-                    completions.push(CompletedRequest {
-                        id: r.id,
-                        tokens: r.generated.clone(),
-                        ttft_s: ttft,
-                        mean_tpot_s: mean_tpot,
-                    });
-                }
-            }
-            // drop finished request bodies to keep the table small
-            self.requests.retain(|r| !r.is_finished());
+            completions.extend(step.completions);
 
             iterations += 1;
             if self.cfg.max_iterations > 0 && iterations >= self.cfg.max_iterations {
@@ -574,6 +655,35 @@ mod tests {
         let report = e.run(reqs).unwrap();
         assert!(report.controller.switches >= 1, "never switched to fp8");
         assert!(report.controller.iters_fp8 > 0);
+    }
+
+    #[test]
+    fn external_stepping_matches_run() {
+        // driving via submit/step must reproduce run()'s outcome
+        let mut reference = engine(0.001, PrecisionPolicy::Fp16Only);
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request::new(i, vec![1; 16], 6, 0.0))
+            .collect();
+        let ref_report = reference.run(reqs.clone()).unwrap();
+
+        let mut e = engine(0.001, PrecisionPolicy::Fp16Only);
+        let mut metrics = Metrics::new();
+        let mut completions = Vec::new();
+        for r in reqs {
+            e.submit(r);
+        }
+        while e.active_requests() > 0 {
+            let step = e.step(0, &mut metrics).unwrap();
+            assert!(step.ran, "nothing runnable with all requests submitted");
+            completions.extend(step.completions);
+        }
+        assert_eq!(metrics.completed, ref_report.metrics.completed);
+        assert_eq!(
+            metrics.total_output_tokens,
+            ref_report.metrics.total_output_tokens
+        );
+        assert_eq!(completions.len(), ref_report.completions.len());
+        assert_eq!(e.backend.decodes, reference.backend.decodes);
     }
 
     #[test]

@@ -1,5 +1,8 @@
-//! Serving metrics: TTFT / TPOT digests, SLO-violation accounting, and
-//! the per-second violation timeline used by Figure 1b.
+//! Serving metrics: TTFT / TPOT digests, SLO-violation accounting, the
+//! per-second violation timeline used by Figure 1b, and cluster-level
+//! aggregation ([`Metrics::merge`], goodput) for multi-replica runs.
+
+use std::collections::BTreeMap;
 
 use crate::util::stats::{Digest, Summary};
 
@@ -19,6 +22,10 @@ pub struct Metrics {
     pub completed: usize,
     pub total_prompt_tokens: usize,
     pub total_output_tokens: usize,
+    /// Per-request `(ttft, mean_tpot)` pairs — the goodput accounting
+    /// needs both latencies of the *same* request (the digests lose that
+    /// pairing). `mean_tpot` is 0 for single-token generations.
+    pub request_latencies: Vec<(f64, f64)>,
     /// Engine-clock span of the run (first arrival .. last completion).
     pub t_start: f64,
     pub t_end: f64,
@@ -44,12 +51,14 @@ impl Metrics {
         }
         if let Some(ft) = r.first_token_at {
             self.ttft.add(ft - r.arrival);
+            let mut mean_tpot = 0.0;
             if r.generated.len() > 1 {
                 if let Some(done) = r.finished_at {
-                    let mean_tpot = (done - ft) / (r.generated.len() - 1) as f64;
+                    mean_tpot = (done - ft) / (r.generated.len() - 1) as f64;
                     self.tpot_per_request.add(mean_tpot);
                 }
             }
+            self.request_latencies.push((ft - r.arrival, mean_tpot));
         }
     }
 
@@ -95,6 +104,50 @@ impl Metrics {
     pub fn tpot_summary(&mut self) -> Summary {
         self.tpot.summary()
     }
+
+    /// Completed requests that met both SLO targets (TTFT and mean TPOT).
+    pub fn slo_attained(&self, slo: &SloConfig) -> usize {
+        self.request_latencies
+            .iter()
+            .filter(|(ttft, tpot)| *ttft <= slo.ttft_target && *tpot <= slo.tpot_target)
+            .count()
+    }
+
+    /// Goodput: SLO-attaining completed requests per second over the run
+    /// span — the cluster-level success metric (throughput alone rewards
+    /// finishing requests late).
+    pub fn goodput_req_s(&self, slo: &SloConfig) -> f64 {
+        let span = self.t_end - self.t_start;
+        if span <= 0.0 || !span.is_finite() {
+            return 0.0;
+        }
+        self.slo_attained(slo) as f64 / span
+    }
+
+    /// Fold another replica's metrics into this one (cluster aggregation).
+    /// Digests concatenate; the per-second worst-TPOT timelines merge by
+    /// second taking the max, so `slo_violation_seconds` counts a second
+    /// as violated when *any* replica violated during it.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.ttft.extend_from(&other.ttft);
+        self.tpot.extend_from(&other.tpot);
+        self.tpot_per_request.extend_from(&other.tpot_per_request);
+        self.completed += other.completed;
+        self.total_prompt_tokens += other.total_prompt_tokens;
+        self.total_output_tokens += other.total_output_tokens;
+        self.request_latencies
+            .extend_from_slice(&other.request_latencies);
+        self.t_start = self.t_start.min(other.t_start);
+        self.t_end = self.t_end.max(other.t_end);
+        let mut by_sec: BTreeMap<u64, f64> = self.tpot_by_second.iter().cloned().collect();
+        for &(sec, worst) in &other.tpot_by_second {
+            let w = by_sec.entry(sec).or_insert(0.0);
+            if worst > *w {
+                *w = worst;
+            }
+        }
+        self.tpot_by_second = by_sec.into_iter().collect();
+    }
 }
 
 #[cfg(test)]
@@ -124,6 +177,32 @@ mod tests {
         let tp = m.tpot_per_request.percentile(50.0);
         assert!((tp - 0.1).abs() < 1e-9, "{tp}");
         assert!((m.throughput_tok_s() - 11.0 / 1.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_aggregates_replicas() {
+        let slo = SloConfig::default();
+        let mut a = Metrics::new();
+        a.record_request(&finished_request(0.0, 0.1, 1.1, 11)); // meets both SLOs? ttft 0.1<=0.2, tpot 0.1>0.0333 -> no
+        a.record_decode_iteration(0.5, &[0.010]);
+        let mut b = Metrics::new();
+        b.record_request(&finished_request(2.0, 2.1, 2.4, 11)); // ttft 0.1, tpot 0.03 -> yes
+        b.record_decode_iteration(0.7, &[0.050]); // violates second 0 too
+        b.record_decode_iteration(3.0, &[0.020]);
+
+        let mut m = Metrics::new();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.ttft.len(), 2);
+        assert_eq!(m.total_output_tokens, 22);
+        assert_eq!(m.t_start, 0.0);
+        assert_eq!(m.t_end, 2.4);
+        // second 0 appears once, with the max (violating) value
+        assert_eq!(m.tpot_by_second.len(), 2);
+        assert_eq!(m.slo_violation_seconds(&slo), 1);
+        assert_eq!(m.slo_attained(&slo), 1);
+        assert!((m.goodput_req_s(&slo) - 1.0 / 2.4).abs() < 1e-12);
     }
 
     #[test]

@@ -11,6 +11,14 @@
 //!   CPU client (real logits, greedy decoding; the e2e example).
 //! * [`backend::SimBackend`] — costs each iteration with the `gpusim`
 //!   H100 model and advances a virtual clock (the performance figures).
+//!
+//! Above the single engine sits the **cluster layer**: [`cluster`] drives
+//! N replica engines on one shared virtual clock, [`router`] picks a
+//! replica per arriving request (round-robin / least-loaded-KV /
+//! SLO-headroom / seeded-random), and staged escalation demotes replicas
+//! to FP8 one at a time during surges — the paper's SLO-management story
+//! at multi-GPU scale. [`server`] exposes both a single engine and a
+//! replica fleet over TCP.
 
 pub mod request;
 pub mod kv;
@@ -19,8 +27,12 @@ pub mod precision;
 pub mod metrics;
 pub mod backend;
 pub mod engine;
+pub mod router;
+pub mod cluster;
 pub mod server;
 
-pub use engine::{Engine, EngineConfig};
+pub use cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
+pub use engine::{Engine, EngineConfig, EngineStep};
 pub use precision::{PrecisionPolicy, SloConfig};
 pub use request::{Request, RequestId, RequestState};
+pub use router::{ReplicaSnapshot, Router, RoutingPolicy};

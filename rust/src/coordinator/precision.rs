@@ -50,6 +50,9 @@ pub struct PrecisionController {
     pub policy: PrecisionPolicy,
     pub slo: SloConfig,
     current: Precision,
+    /// Externally imposed precision (cluster-level staged escalation):
+    /// when set, it overrides the local policy until cleared.
+    forced: Option<Precision>,
     /// EWMA of observed TPOT, seconds.
     ewma_tpot: f64,
     /// Most recent worst-gap observation (fast burst signal).
@@ -86,6 +89,7 @@ impl PrecisionController {
                 PrecisionPolicy::Fp8Only => Precision::Fp8,
                 _ => Precision::Fp16,
             },
+            forced: None,
             ewma_tpot: 0.0,
             last_tpot: 0.0,
             ewma_alpha: 0.25,
@@ -113,8 +117,35 @@ impl PrecisionController {
         self.ewma_tpot
     }
 
+    /// Impose (or clear) an external precision override. A cluster router
+    /// uses this to demote one replica to FP8 during a surge while other
+    /// replicas keep serving FP16 — the staged-escalation story of the
+    /// paper's SLO management, lifted to the cluster level. While forced,
+    /// [`PrecisionController::decide`] ignores the local policy; clearing
+    /// returns control to it (after the usual dwell, to avoid flapping).
+    pub fn set_forced(&mut self, p: Option<Precision>) {
+        self.forced = p;
+    }
+
+    /// The current external override, if any.
+    pub fn forced(&self) -> Option<Precision> {
+        self.forced
+    }
+
     /// Decide the precision for the next iteration.
     pub fn decide(&mut self, queue_depth: usize, kv_utilization: f64) -> Precision {
+        if let Some(f) = self.forced {
+            if f != self.current {
+                self.switches += 1;
+                self.dwell = self.min_dwell_iters;
+                self.current = f;
+            }
+            match f {
+                Precision::Fp16 => self.iters_fp16 += 1,
+                Precision::Fp8 => self.iters_fp8 += 1,
+            }
+            return f;
+        }
         let decided = match self.policy {
             PrecisionPolicy::Fp16Only => Precision::Fp16,
             PrecisionPolicy::Fp8Only => Precision::Fp8,
@@ -247,6 +278,41 @@ mod tests {
         let mut c = ctl();
         c.observe_tpot(0.001);
         assert_eq!(c.decide(0, 0.95), Precision::Fp8);
+    }
+
+    #[test]
+    fn forced_demotion_overrides_policy() {
+        // an FP16-only replica demoted by the cluster router serves FP8
+        let mut c = PrecisionController::new(PrecisionPolicy::Fp16Only, SloConfig::default());
+        assert_eq!(c.decide(0, 0.0), Precision::Fp16);
+        c.set_forced(Some(Precision::Fp8));
+        for _ in 0..5 {
+            assert_eq!(c.decide(0, 0.0), Precision::Fp8);
+        }
+        assert_eq!(c.switches, 1, "one demotion, no flapping while forced");
+        c.set_forced(None);
+        assert_eq!(c.decide(0, 0.0), Precision::Fp16);
+        assert!(c.iters_fp8 == 5 && c.iters_fp16 >= 2);
+    }
+
+    #[test]
+    fn forced_release_respects_dwell_under_dual() {
+        let mut c = ctl();
+        c.observe_tpot(0.001); // no local pressure at all
+        c.set_forced(Some(Precision::Fp8));
+        assert_eq!(c.decide(0, 0.0), Precision::Fp8);
+        c.set_forced(None);
+        // dwell keeps the forced mode briefly, then the (calm) signals
+        // bring the replica back to FP16 — no instant flap
+        let mut saw_fp16 = false;
+        for _ in 0..16 {
+            c.observe_tpot(0.001);
+            if c.decide(0, 0.0) == Precision::Fp16 {
+                saw_fp16 = true;
+            }
+        }
+        assert!(saw_fp16, "never recovered to fp16 after release");
+        assert!(c.switches <= 2);
     }
 
     #[test]

@@ -1,0 +1,196 @@
+//! Request routing across engine replicas.
+//!
+//! The cluster front door sees only cheap per-replica load signals (a
+//! [`ReplicaSnapshot`]) and must pick a replica for each arriving request
+//! before its prompt touches any engine. Policies are deliberately
+//! stateless apart from a cursor/RNG, so dispatch is deterministic and
+//! replayable — the same property the engines get from the virtual clock.
+
+use crate::util::rng::Pcg64;
+
+/// How the cluster picks a replica for each arriving request.
+///
+/// # Examples
+///
+/// ```
+/// use nestedfp::coordinator::router::{ReplicaSnapshot, Router, RoutingPolicy};
+///
+/// let mut router = Router::new(RoutingPolicy::RoundRobin);
+/// let replicas = vec![ReplicaSnapshot::default(); 3];
+/// assert_eq!(router.pick(&replicas), 0);
+/// assert_eq!(router.pick(&replicas), 1);
+/// assert_eq!(router.pick(&replicas), 2);
+/// assert_eq!(router.pick(&replicas), 0);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through replicas in index order.
+    RoundRobin,
+    /// Uniform-random replica from a fixed seed (a deterministic
+    /// baseline: same seed, same dispatch sequence).
+    Random { seed: u64 },
+    /// The replica with the most free KV blocks — memory headroom is
+    /// what actually bounds batch growth in a vLLM-style engine.
+    LeastLoadedKv,
+    /// The replica with the most SLO headroom: TPOT EWMA vs target,
+    /// discounted by queue depth, KV pressure, and FP8 demotion. This is
+    /// the policy that lets the cluster steer new work *away* from
+    /// replicas the surge controller has already demoted.
+    SloHeadroom,
+}
+
+/// What the router sees of one replica at dispatch time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaSnapshot {
+    pub free_kv_blocks: usize,
+    pub total_kv_blocks: usize,
+    /// Unfinished requests owned by the replica.
+    pub active_requests: usize,
+    /// Requests waiting for admission or mid-prefill.
+    pub queued_requests: usize,
+    /// EWMA of observed TPOT, seconds (0 until the first observation).
+    pub ewma_tpot: f64,
+    /// TPOT SLO target, seconds.
+    pub tpot_target: f64,
+    /// Replica currently demoted to FP8 by the cluster controller.
+    pub forced_fp8: bool,
+}
+
+/// SLO-headroom score: higher is a better dispatch target. Ties are
+/// broken by the caller in favour of the lowest index.
+fn slo_score(s: &ReplicaSnapshot) -> f64 {
+    let target = if s.tpot_target > 0.0 { s.tpot_target } else { 1.0 };
+    let headroom = ((target - s.ewma_tpot) / target).clamp(-1.0, 1.0);
+    let kv_frac = if s.total_kv_blocks > 0 {
+        s.free_kv_blocks as f64 / s.total_kv_blocks as f64
+    } else {
+        0.0
+    };
+    let queue = (s.active_requests + s.queued_requests) as f64;
+    headroom + 0.5 * kv_frac - 0.25 * queue - if s.forced_fp8 { 0.25 } else { 0.0 }
+}
+
+/// A routing-policy instance (cursor / RNG state included).
+pub struct Router {
+    pub policy: RoutingPolicy,
+    rr: usize,
+    rng: Pcg64,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Router {
+        let seed = match policy {
+            RoutingPolicy::Random { seed } => seed,
+            _ => 0,
+        };
+        Router {
+            policy,
+            rr: 0,
+            rng: Pcg64::new(seed, 0x7071),
+        }
+    }
+
+    /// Pick a replica index for the next request.
+    ///
+    /// Deterministic for every policy (the `Random` policy draws from a
+    /// fixed-seed PCG64, so replays are bit-identical). Panics if
+    /// `replicas` is empty.
+    pub fn pick(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
+        assert!(!replicas.is_empty(), "router has no replicas");
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = self.rr % replicas.len();
+                self.rr += 1;
+                i
+            }
+            RoutingPolicy::Random { .. } => self.rng.index(replicas.len()),
+            RoutingPolicy::LeastLoadedKv => {
+                let mut best = 0;
+                for (i, s) in replicas.iter().enumerate().skip(1) {
+                    if s.free_kv_blocks > replicas[best].free_kv_blocks {
+                        best = i;
+                    }
+                }
+                best
+            }
+            RoutingPolicy::SloHeadroom => {
+                let mut best = 0;
+                let mut best_score = slo_score(&replicas[0]);
+                for (i, s) in replicas.iter().enumerate().skip(1) {
+                    let score = slo_score(s);
+                    if score > best_score {
+                        best = i;
+                        best_score = score;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(free: usize, total: usize, active: usize, ewma: f64) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            free_kv_blocks: free,
+            total_kv_blocks: total,
+            active_requests: active,
+            queued_requests: 0,
+            ewma_tpot: ewma,
+            tpot_target: 0.0333,
+            forced_fp8: false,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_deterministically() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        let snaps = vec![ReplicaSnapshot::default(); 3];
+        let picks: Vec<usize> = (0..7).map(|_| r.pick(&snaps)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn random_policy_is_deterministic_per_seed() {
+        let snaps = vec![ReplicaSnapshot::default(); 4];
+        let seq = |seed: u64| -> Vec<usize> {
+            let mut r = Router::new(RoutingPolicy::Random { seed });
+            (0..64).map(|_| r.pick(&snaps)).collect()
+        };
+        assert_eq!(seq(9), seq(9), "same seed must replay identically");
+        assert_ne!(seq(9), seq(10), "different seeds should diverge");
+        // all replicas get traffic
+        let hit: std::collections::HashSet<usize> = seq(9).into_iter().collect();
+        assert_eq!(hit.len(), 4);
+    }
+
+    #[test]
+    fn least_loaded_picks_most_free_kv_blocks() {
+        let mut r = Router::new(RoutingPolicy::LeastLoadedKv);
+        let snaps = vec![snap(10, 64, 3, 0.0), snap(40, 64, 1, 0.0), snap(25, 64, 2, 0.0)];
+        assert_eq!(r.pick(&snaps), 1);
+        // ties break toward the lowest index
+        let tied = vec![snap(30, 64, 0, 0.0), snap(30, 64, 0, 0.0)];
+        assert_eq!(r.pick(&tied), 0);
+    }
+
+    #[test]
+    fn slo_headroom_avoids_pressured_and_demoted_replicas() {
+        let mut r = Router::new(RoutingPolicy::SloHeadroom);
+        // replica 0 is near its TPOT target, replica 1 is comfortable
+        let snaps = vec![snap(32, 64, 2, 0.032), snap(32, 64, 2, 0.010)];
+        assert_eq!(r.pick(&snaps), 1);
+        // all else equal, a demoted (forced-FP8) replica loses the tie
+        let mut a = snap(32, 64, 2, 0.010);
+        a.forced_fp8 = true;
+        let b = snap(32, 64, 2, 0.010);
+        assert_eq!(r.pick(&[a, b]), 1);
+        // but a big queue on the healthy replica outweighs the demotion
+        let mut busy = b;
+        busy.queued_requests = 6;
+        assert_eq!(r.pick(&[a, busy]), 0);
+    }
+}

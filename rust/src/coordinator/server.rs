@@ -9,14 +9,18 @@
 //! <- ERR <message>
 //! ```
 //!
-//! The server owns a single engine worker thread; client threads submit
-//! requests through a channel and wait on a per-request response channel.
-//! This mirrors a serving deployment's (router → engine) split at a small
-//! scale; the batching still happens inside the engine across concurrent
-//! client connections.
+//! The server owns one engine worker thread per replica; client threads
+//! submit requests through a channel and wait on a per-request response
+//! channel. This mirrors a serving deployment's (router → engine) split at
+//! a small scale; batching still happens inside each engine across
+//! concurrent client connections, and with `--replicas N` a
+//! [`ClusterFrontend`] load-balances connections across N engine workers
+//! by jobs-in-flight (the live-serving analogue of the virtual-clock
+//! [`cluster`](super::cluster) driver).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -114,24 +118,145 @@ pub fn run_collecting<B: Backend>(
         .collect())
 }
 
-/// Accept loop: spawns one thread per connection.
+/// One replica's submission handle inside a [`ClusterFrontend`].
+struct ReplicaHandle {
+    jobs: mpsc::Sender<Job>,
+    outstanding: Arc<AtomicUsize>,
+    /// Set once a send fails (worker thread exited); the replica is then
+    /// skipped forever — without this, a dead replica's outstanding count
+    /// drains to 0 and least-in-flight would keep feeding it.
+    dead: std::sync::atomic::AtomicBool,
+}
+
+/// Live-serving load balancer over N engine workers.
+///
+/// Dispatches each job to the replica with the fewest jobs in flight
+/// (ties go to the lowest index). In-flight counts are maintained by a
+/// per-job relay thread that forwards the engine's response to the client
+/// and decrements the counter — the engine workers stay completely
+/// unaware of the cluster around them.
+pub struct ClusterFrontend {
+    replicas: Vec<ReplicaHandle>,
+}
+
+impl ClusterFrontend {
+    /// Wrap one job channel per engine worker.
+    pub fn new(senders: Vec<mpsc::Sender<Job>>) -> ClusterFrontend {
+        assert!(!senders.is_empty(), "frontend needs at least one replica");
+        ClusterFrontend {
+            replicas: senders
+                .into_iter()
+                .map(|jobs| ReplicaHandle {
+                    jobs,
+                    outstanding: Arc::new(AtomicUsize::new(0)),
+                    dead: std::sync::atomic::AtomicBool::new(false),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Jobs currently in flight per replica.
+    pub fn outstanding(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .map(|r| r.outstanding.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Dispatch a job to the live replica with the fewest jobs in flight;
+    /// fails over to the next-best replica when a worker is gone. Returns
+    /// `false` only when every replica is dead.
+    pub fn submit(&self, mut job: Job) -> bool {
+        loop {
+            let mut best: Option<usize> = None;
+            for (i, r) in self.replicas.iter().enumerate() {
+                if r.dead.load(Ordering::SeqCst) {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        r.outstanding.load(Ordering::SeqCst)
+                            < self.replicas[b].outstanding.load(Ordering::SeqCst)
+                    }
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+            let Some(best) = best else {
+                return false; // every replica is dead
+            };
+            let handle = &self.replicas[best];
+            handle.outstanding.fetch_add(1, Ordering::SeqCst);
+            let (tx, rx) = mpsc::channel();
+            let downstream = std::mem::replace(&mut job.respond, tx);
+            match handle.jobs.send(job) {
+                Ok(()) => {
+                    // only a delivered job gets a relay thread; it forwards
+                    // the engine's answer and releases the in-flight slot
+                    let counter = Arc::clone(&handle.outstanding);
+                    std::thread::spawn(move || {
+                        let res = rx.recv();
+                        counter.fetch_sub(1, Ordering::SeqCst);
+                        if let Ok(r) = res {
+                            let _ = downstream.send(r);
+                        }
+                    });
+                    return true;
+                }
+                Err(mpsc::SendError(mut returned)) => {
+                    // worker exited: undo the accounting, write the
+                    // replica off, restore the real client sender, retry
+                    handle.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    handle.dead.store(true, Ordering::SeqCst);
+                    returned.respond = downstream;
+                    job = returned;
+                }
+            }
+        }
+    }
+}
+
+/// How client handlers hand jobs to the engine side.
+type Submit = Arc<dyn Fn(Job) -> bool + Send + Sync>;
+
+/// Accept loop over a single engine worker: spawns one thread per
+/// connection, all feeding the one job channel.
 pub fn serve(listener: TcpListener, jobs: mpsc::Sender<Job>, stop_token: Option<i32>) -> Result<()> {
-    let jobs = Arc::new(Mutex::new(jobs));
+    let jobs = Mutex::new(jobs);
+    let submit: Submit = Arc::new(move |job| jobs.lock().unwrap().send(job).is_ok());
+    serve_with(listener, submit, stop_token)
+}
+
+/// Accept loop over a replica fleet: connections are load-balanced by the
+/// [`ClusterFrontend`].
+pub fn serve_cluster(
+    listener: TcpListener,
+    frontend: ClusterFrontend,
+    stop_token: Option<i32>,
+) -> Result<()> {
+    let frontend = Arc::new(frontend);
+    let submit: Submit = Arc::new(move |job| frontend.submit(job));
+    serve_with(listener, submit, stop_token)
+}
+
+fn serve_with(listener: TcpListener, submit: Submit, stop_token: Option<i32>) -> Result<()> {
     for stream in listener.incoming() {
         let stream = stream?;
-        let jobs = Arc::clone(&jobs);
+        let submit = Arc::clone(&submit);
         std::thread::spawn(move || {
-            let _ = handle_client(stream, jobs, stop_token);
+            let _ = handle_client(stream, submit, stop_token);
         });
     }
     Ok(())
 }
 
-fn handle_client(
-    stream: TcpStream,
-    jobs: Arc<Mutex<mpsc::Sender<Job>>>,
-    stop_token: Option<i32>,
-) -> Result<()> {
+fn handle_client(stream: TcpStream, submit: Submit, stop_token: Option<i32>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -150,7 +275,7 @@ fn handle_client(
                     stop_token,
                     respond: tx,
                 };
-                jobs.lock().unwrap().send(job).ok();
+                submit(job);
                 match rx.recv() {
                     Ok(res) => {
                         let text: String = res
@@ -188,6 +313,92 @@ pub fn parse_gen(line: &str) -> Option<(usize, Vec<i32>)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn job() -> (Job, mpsc::Receiver<JobResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Job {
+                prompt: vec![65],
+                max_new_tokens: 4,
+                stop_token: None,
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn frontend_balances_by_jobs_in_flight() {
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let f = ClusterFrontend::new(vec![tx0, tx1]);
+        let (j0, r0) = job();
+        let (j1, r1) = job();
+        assert!(f.submit(j0));
+        assert!(f.submit(j1));
+        // least-outstanding with tie -> lowest index: one job each
+        assert_eq!(f.outstanding(), vec![1, 1]);
+        let queued0 = rx0.try_recv().expect("replica 0 got the first job");
+        let queued1 = rx1.try_recv().expect("replica 1 got the second job");
+
+        // replica 0 answers: the relay forwards to the client and has
+        // already released the in-flight slot by the time we see it
+        queued0
+            .respond
+            .send(JobResult {
+                tokens: vec![42],
+                ttft_s: 0.001,
+                mean_tpot_s: 0.002,
+            })
+            .unwrap();
+        let res = r0
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("relayed response");
+        assert_eq!(res.tokens, vec![42]);
+        assert_eq!(f.outstanding()[0], 0);
+
+        // replica 1 dies without answering: the client sees a closed
+        // channel and the slot is eventually released
+        drop(queued1);
+        assert!(r1.recv_timeout(std::time::Duration::from_secs(5)).is_err());
+        for _ in 0..500 {
+            if f.outstanding() == vec![0, 0] {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(f.outstanding(), vec![0, 0]);
+    }
+
+    #[test]
+    fn frontend_fails_over_past_dead_replicas() {
+        let (tx0, rx0) = mpsc::channel::<Job>();
+        let (tx1, rx1) = mpsc::channel::<Job>();
+        let f = ClusterFrontend::new(vec![tx0, tx1]);
+        drop(rx0); // replica 0's worker is gone before the first job
+        let (j, r) = job();
+        assert!(f.submit(j), "healthy replica 1 must absorb the job");
+        let queued = rx1.try_recv().expect("job failed over to replica 1");
+        assert_eq!(f.outstanding(), vec![0, 1]);
+        // the recovered respond channel still reaches the client
+        queued
+            .respond
+            .send(JobResult {
+                tokens: vec![7],
+                ttft_s: 0.0,
+                mean_tpot_s: 0.0,
+            })
+            .unwrap();
+        let res = r
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("failover must preserve the client channel");
+        assert_eq!(res.tokens, vec![7]);
+        // with every replica dead, submit reports failure: the send to
+        // replica 1 fails, it gets written off, and no candidates remain
+        drop(rx1);
+        let (j2, _r2) = job();
+        assert!(!f.submit(j2));
+    }
 
     #[test]
     fn parse_gen_lines() {

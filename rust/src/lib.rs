@@ -20,6 +20,11 @@
 //!   with chunked prefill, KV-cache slot/block management, request router,
 //!   latency metrics, and the paper's headline feature — an
 //!   iteration-level **dual-precision controller** switching FP16/FP8.
+//!   On top of it, [`coordinator::cluster`] scales serving out: N replica
+//!   engines behind pluggable routing policies
+//!   ([`coordinator::router`]) on one shared virtual clock, with
+//!   **staged FP8 escalation** demoting individual replicas during
+//!   surges while the rest keep serving FP16.
 //! * [`gpusim`] — a tile-level analytical H100 GEMM cost model (the
 //!   hardware substitute; see DESIGN.md §2) with the paper's kernel config
 //!   search space, used to regenerate the performance figures.

@@ -3,12 +3,14 @@
 //! ```text
 //! repro reproduce <exp>      regenerate a paper table/figure
 //!                            exp: table1|table2|table3|fig1a|fig1b|fig3|
-//!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|all
+//!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|
+//!                                 cluster|all
 //!        [--artifacts DIR]   artifact directory (default: artifacts)
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
 //! repro serve                TCP serving front-end on the real backend
 //!        [--addr HOST:PORT]  default 127.0.0.1:7171
 //!        [--mode dual|fp16|fp8]
+//!        [--replicas N]      engine replicas behind the front door (default 1)
 //! repro analyze              weight-store + applicability summary
 //! repro gemm --m M --n N --k K [--format fp16|nested16|nested8|fp8]
 //!                            one autotuned gpusim query (debugging)
@@ -16,7 +18,7 @@
 
 use std::path::{Path, PathBuf};
 
-use nestedfp::bench::{fig1, fig3, fig7, fig8, report::Report, table1, table3};
+use nestedfp::bench::{cluster, fig1, fig3, fig7, fig8, report::Report, table1, table3};
 use nestedfp::coordinator::backend::{ModeMap, RealBackend};
 use nestedfp::coordinator::engine::{Engine, EngineConfig};
 use nestedfp::coordinator::precision::PrecisionPolicy;
@@ -36,8 +38,8 @@ fn main() {
         _ => {
             eprintln!(
                 "nestedfp repro — usage:\n  \
-                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|all>\n  \
-                 repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8]\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|cluster|all>\n  \
+                 repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N]\n  \
                  repro analyze\n  \
                  repro gemm --m M --n N --k K [--format ...]"
             );
@@ -73,6 +75,7 @@ fn run_one(exp: &str, dir: &Path, eval_n: usize) -> anyhow::Result<()> {
         "fig9" => print_reports(vec![fig7::fig9()]),
         "fig10" => print_reports(fig8::fig10()?),
         "fig13" => print_reports(vec![fig7::fig13()]),
+        "cluster" => print_reports(vec![cluster::cluster_scaling()?]),
         other => anyhow::bail!("unknown experiment '{other}'"),
     }
     Ok(())
@@ -90,7 +93,7 @@ fn cmd_reproduce(args: &Args) -> i32 {
         let mut r = Ok(());
         for e in [
             "fig1a", "fig1b", "fig3", "fig7a", "fig7b", "fig9", "fig13", "fig8", "fig10",
-            "table3", "table1",
+            "cluster", "table3", "table1",
         ] {
             eprintln!("[reproduce] running {e} ...");
             r = run_one(e, &dir, eval_n);
@@ -119,43 +122,61 @@ fn cmd_serve(args: &Args) -> i32 {
         "fp8" => PrecisionPolicy::Fp8Only,
         _ => PrecisionPolicy::Dual,
     };
+    let replicas = args.get_usize("replicas", 1).max(1);
     let run = || -> anyhow::Result<()> {
-        // PJRT handles are not Send: the whole runtime lives on the
-        // engine worker thread; clients talk to it through the channel.
-        let (tx, rx) = std::sync::mpsc::channel();
-        let dir2 = dir.clone();
-        std::thread::spawn(move || {
-            let work = || -> anyhow::Result<()> {
-                eprintln!("loading artifacts from {dir2:?} ...");
-                let rt =
-                    ModelRuntime::load(&dir2, &["nested16", "nested8"], &["decode", "prefill"])?;
-                let max_seq = rt.manifest.model.max_seq;
-                let n_slots =
-                    rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
-                let backend = RealBackend::new(
-                    rt,
-                    ModeMap::default(),
-                    n_slots,
-                    n_slots * (max_seq / 16 + 1) + 32,
-                );
-                let engine = Engine::new(
-                    backend,
-                    EngineConfig {
-                        policy,
-                        physical_kv: true,
-                        ..Default::default()
-                    },
-                );
-                eprintln!("engine ready");
-                server::engine_worker(engine, rx)
-            };
-            if let Err(e) = work() {
-                eprintln!("engine worker died: {e:#}");
-            }
-        });
+        // PJRT handles are not Send: each replica's runtime lives on its
+        // own engine worker thread; clients talk through channels.
+        let mut senders = Vec::with_capacity(replicas);
+        for replica in 0..replicas {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let dir2 = dir.clone();
+            std::thread::spawn(move || {
+                let work = || -> anyhow::Result<()> {
+                    eprintln!("[replica {replica}] loading artifacts from {dir2:?} ...");
+                    let rt = ModelRuntime::load(
+                        &dir2,
+                        &["nested16", "nested8"],
+                        &["decode", "prefill"],
+                    )?;
+                    let max_seq = rt.manifest.model.max_seq;
+                    let n_slots =
+                        rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
+                    let backend = RealBackend::new(
+                        rt,
+                        ModeMap::default(),
+                        n_slots,
+                        n_slots * (max_seq / 16 + 1) + 32,
+                    );
+                    let engine = Engine::new(
+                        backend,
+                        EngineConfig {
+                            policy,
+                            physical_kv: true,
+                            ..Default::default()
+                        },
+                    );
+                    eprintln!("[replica {replica}] engine ready");
+                    server::engine_worker(engine, rx)
+                };
+                if let Err(e) = work() {
+                    eprintln!("[replica {replica}] engine worker died: {e:#}");
+                }
+            });
+            senders.push(tx);
+        }
         let listener = std::net::TcpListener::bind(&addr)?;
-        eprintln!("listening on {addr} — protocol: GEN <max_new> <prompt>");
-        server::serve(listener, tx, Some(b';' as i32))?;
+        eprintln!(
+            "listening on {addr} ({replicas} replica(s)) — protocol: GEN <max_new> <prompt>"
+        );
+        if replicas == 1 {
+            server::serve(listener, senders.pop().unwrap(), Some(b';' as i32))?;
+        } else {
+            server::serve_cluster(
+                listener,
+                server::ClusterFrontend::new(senders),
+                Some(b';' as i32),
+            )?;
+        }
         Ok(())
     };
     match run() {

@@ -1,0 +1,95 @@
+//! Stub runtime used when the `pjrt` feature is disabled.
+//!
+//! Mirrors the public surface of the real `client` module (`ModelRuntime`,
+//! `StepExecutable`, `StepOutput`, `log`) so the rest of the crate compiles
+//! unchanged, but refuses to execute anything: the real module compiles HLO
+//! through the `xla` PJRT bindings, which link the XLA C++ runtime and are
+//! unavailable in offline builds. Every entry point that would touch the
+//! device returns a descriptive error instead; callers that probe for
+//! artifacts (the integration tests, `repro serve`, the e2e examples)
+//! already handle that error path gracefully.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifacts::{ExecSpec, Manifest};
+use super::tensor::HostTensor;
+use super::weights::WeightStore;
+
+/// One step function descriptor (never executable in this build).
+pub struct StepExecutable {
+    pub spec: ExecSpec,
+}
+
+/// Raw outputs of a step execution (never produced in this build).
+#[derive(Debug)]
+pub struct StepOutput {
+    pub tensors: Vec<HostTensor>,
+    /// Device-side execution time (compile-level; excludes input upload).
+    pub exec_micros: u64,
+}
+
+/// The model runtime stub: can parse artifacts, cannot execute them.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+}
+
+impl ModelRuntime {
+    /// Parse the artifact manifest and weight store, then fail with a
+    /// clear message: executing the step functions needs the `pjrt`
+    /// feature (and the `xla` bindings it implies).
+    pub fn load(dir: &Path, modes: &[&str], kinds: &[&str]) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let _weights = WeightStore::load(&dir.join("weights.bin"))?;
+        let matched = manifest
+            .executables
+            .iter()
+            .filter(|e| modes.contains(&e.mode.as_str()) && kinds.contains(&e.kind.as_str()))
+            .count();
+        bail!(
+            "{matched} executables matched modes {modes:?} kinds {kinds:?}, but this \
+             binary was built without the `pjrt` feature and cannot run them; \
+             rebuild with `cargo build --features pjrt` (requires the `xla` PJRT \
+             bindings) or use the simulation backend"
+        );
+    }
+
+    pub fn step(&self, kind: &str, mode: &str, size: usize) -> Result<&StepExecutable> {
+        bail!("executable ({kind}, {mode}, {size}): built without the `pjrt` feature")
+    }
+
+    pub fn loaded_keys(&self) -> Vec<(String, String, usize)> {
+        Vec::new()
+    }
+
+    /// Execute a step (always fails in this build).
+    pub fn run(&self, step: &StepExecutable, _dynamic: &[HostTensor]) -> Result<StepOutput> {
+        bail!(
+            "{}: built without the `pjrt` feature",
+            step.spec.path.display()
+        )
+    }
+}
+
+/// Tiny leveled logger (std-only), same surface as the pjrt build's.
+pub mod log {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static VERBOSE: AtomicBool = AtomicBool::new(false);
+
+    pub fn set_verbose(v: bool) {
+        VERBOSE.store(v, Ordering::Relaxed);
+    }
+
+    pub fn debug(msg: &str) {
+        if VERBOSE.load(Ordering::Relaxed) {
+            eprintln!("[debug] {msg}");
+        }
+    }
+
+    pub fn info(msg: &str) {
+        eprintln!("[info] {msg}");
+    }
+}

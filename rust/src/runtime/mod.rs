@@ -12,6 +12,15 @@
 pub mod tensor;
 pub mod weights;
 pub mod artifacts;
+
+// The real PJRT client needs the `xla` bindings (XLA C++ runtime), which
+// cannot be built offline. Without the `pjrt` feature a stub with the same
+// surface loads manifests/weights but refuses to execute — the simulation
+// backend covers every figure, bench, and example in that configuration.
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 pub mod client;
 
 pub use artifacts::{ExecSpec, Manifest, ModelMeta};

@@ -31,6 +31,7 @@ impl Dtype {
         })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_xla(self) -> xla::ElementType {
         match self {
             Dtype::U8 => xla::ElementType::U8,

@@ -49,6 +49,40 @@ pub fn poisson_arrivals(rates: &[f64], seed: u64) -> Vec<f64> {
     out
 }
 
+/// Flat `base` req/s rate series with one surge plateau at
+/// `base * surge_mult` req/s over `[surge_start, surge_start + surge_len)`
+/// seconds, cosine-ramped over 3 s on each edge — the cluster
+/// surge-absorption scenario (`repro reproduce cluster`,
+/// `examples/cluster_surge.rs`).
+pub fn surge_rates(
+    base: f64,
+    surge_mult: f64,
+    seconds: usize,
+    surge_start: usize,
+    surge_len: usize,
+) -> Vec<f64> {
+    let ramp = 3.0f64;
+    let a = surge_start as f64;
+    let b = (surge_start + surge_len) as f64;
+    (0..seconds)
+        .map(|s| {
+            let t = s as f64;
+            let w = if t >= a && t < b {
+                1.0
+            } else if t >= a - ramp && t < a {
+                let x = (t - (a - ramp)) / ramp;
+                0.5 - 0.5 * (std::f64::consts::PI * x).cos()
+            } else if t >= b && t < b + ramp {
+                let x = (t - b) / ramp;
+                0.5 + 0.5 * (std::f64::consts::PI * x).cos()
+            } else {
+                0.0
+            };
+            base * (1.0 + (surge_mult - 1.0) * w)
+        })
+        .collect()
+}
+
 fn sample_len(rng: &mut Pcg64, mean: f64, align: usize, max: usize) -> usize {
     // log-normal with sigma 0.6, clamped
     let mu = mean.ln() - 0.18;
@@ -100,6 +134,18 @@ mod tests {
         // sorted and within range
         assert!(arr.windows(2).all(|w| w[0] <= w[1]));
         assert!(*arr.last().unwrap() < 100.0);
+    }
+
+    #[test]
+    fn surge_rates_shape() {
+        let rates = surge_rates(2.0, 4.0, 60, 20, 10);
+        assert_eq!(rates.len(), 60);
+        assert!((rates[5] - 2.0).abs() < 1e-9, "flat before the surge");
+        assert!((rates[25] - 8.0).abs() < 1e-9, "plateau at base*mult");
+        assert!((rates[55] - 2.0).abs() < 1e-9, "flat after the surge");
+        // ramps are monotone and bounded
+        assert!(rates[18] > 2.0 && rates[18] < 8.0);
+        assert!(rates.iter().all(|&r| (2.0..=8.0 + 1e-9).contains(&r)));
     }
 
     #[test]

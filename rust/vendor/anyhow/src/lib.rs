@@ -1,0 +1,195 @@
+//! Offline-vendored minimal stand-in for the [`anyhow`] crate.
+//!
+//! The build environment has no crates.io access, so this path dependency
+//! provides exactly the API subset the nestedfp codebase uses:
+//!
+//! * [`Error`] — a message-chain error type (context outermost-first),
+//! * [`Result<T>`] — `Result<T, Error>` alias with a default type param,
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — format-style constructors,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Like the real crate, `Error` intentionally does **not** implement
+//! `std::error::Error`: that is what allows the blanket
+//! `impl<E: std::error::Error> From<E> for Error` to coexist with the
+//! standard reflexive `From<Error> for Error` impl (so `?` works on both
+//! std errors and `Error` itself).
+//!
+//! [`anyhow`]: https://docs.rs/anyhow
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, like the real anyhow
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with this crate's [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error variant of a `Result` (or a `None`).
+pub trait Context<T> {
+    /// Wrap the error with an eagerly evaluated context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate() {
+        let e = anyhow!("inner {}", 7).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        assert_eq!(e.root_cause(), "inner 7");
+    }
+
+    #[test]
+    fn question_mark_on_std_and_own_errors() {
+        fn f() -> Result<u32> {
+            let n = "not-a-number".parse::<u32>()?; // std error via `?`
+            Ok(n)
+        }
+        fn g() -> Result<u32> {
+            let n = f().with_context(|| "calling f")?; // own error via `?`
+            Ok(n)
+        }
+        let e = g().unwrap_err();
+        let rendered = format!("{e:#}");
+        assert!(
+            rendered.starts_with("calling f: "),
+            "context lost: {rendered}"
+        );
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(format!("{}", f(0).unwrap_err()), "zero");
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+}
