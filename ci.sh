@@ -1,8 +1,11 @@
 #!/usr/bin/env sh
-# Tier-1 CI gate: build, test, and doc-lint the crate.
+# Tier-1 CI gate: format, lint, build (lib + bin + examples), test, and
+# doc-lint the crate.
 #
 # Usage: ./ci.sh
 # Runs offline (all dependencies are vendored in rust/vendor/).
+# rustfmt/clippy steps are skipped with a loud warning when the toolchain
+# components are not installed, so a bare cargo still gets a full gate.
 
 set -eu
 
@@ -11,8 +14,25 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+else
+    echo "ci.sh: WARNING: rustfmt not installed — skipping cargo fmt --check" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy (warnings denied) =="
+    cargo clippy --offline --all-targets -- -D warnings
+else
+    echo "ci.sh: WARNING: clippy not installed — skipping cargo clippy" >&2
+fi
+
 echo "== cargo build --release =="
 cargo build --release --offline
+
+echo "== cargo build --release --examples =="
+cargo build --release --offline --examples
 
 echo "== cargo test -q =="
 cargo test -q --offline

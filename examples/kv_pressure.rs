@@ -1,0 +1,112 @@
+//! KV pressure under surge — the paged dual-precision cache at work.
+//!
+//! Part 1 walks the block-level state machine on a tiny cache you can
+//! read by hand: allocate → demote (LRU, FP8, half the units) → offload
+//! (host tier, latency billed) → fetch → release.
+//!
+//! Part 2 replays one traffic surge against a single simulated H100 with
+//! a deliberately tight device block budget, three times under the same
+//! budget:
+//!
+//! * `dense-f32`   — the seed behavior: full-context reservation, stall
+//!                   when blocks run out.
+//! * `fp8-demote`  — LRU-cold blocks re-encode to FP8 as utilization
+//!                   rises and the precision controller escalates.
+//! * `paged+offload` — true paged admission + host tier: preempt-by-
+//!                   offload instead of stalling the queue.
+//!
+//! Watch `admitted_peak`: the same budget holds measurably more
+//! concurrent requests once cold KV stores at half the bytes.
+//!
+//! Run: `cargo run --release --offline --example kv_pressure
+//!       [-- --seconds 48 --base 2.0 --blocks 384]`
+
+use nestedfp::bench::kvcache::{run_pressure, variants};
+use nestedfp::coordinator::precision::SloConfig;
+use nestedfp::kvcache::{KvGeometry, KvPressureConfig, PagedKvCache};
+use nestedfp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    // ---- part 1: the state machine, by hand --------------------------
+    println!("== part 1: block lifecycle on a 16-block cache ==");
+    let geo = KvGeometry {
+        n_layers: 2,
+        n_heads: 2,
+        max_seq: 128,
+        head_dim: 4,
+        block_size: 8,
+        total_blocks: 16,
+    };
+    let mut kv = PagedKvCache::accounting_only(geo, KvPressureConfig::default());
+    let a = kv.allocate(32)?; // 4 prompt blocks + 1 headroom
+    kv.grow(a, 32)?;
+    let b = kv.allocate(32)?;
+    kv.grow(b, 32)?;
+    println!(
+        "allocated 2 seqs x 5 blocks : free {:>2} blocks, util {:.0}%",
+        kv.free_blocks(),
+        kv.block_utilization() * 100.0
+    );
+    kv.set_precision_pressure(true); // the controller escalated to FP8
+    let demoted = kv.maintain();
+    println!(
+        "fp8 pressure -> maintain()  : demoted {demoted} LRU blocks, free {:>2} blocks, util {:.0}%",
+        kv.free_blocks(),
+        kv.block_utilization() * 100.0
+    );
+    let dt = kv.offload_sequence(a)?;
+    println!(
+        "offload seq A to host tier  : {:.0} us billed to the clock, free {:>2} blocks, host {} blocks",
+        dt * 1e6,
+        kv.free_blocks(),
+        kv.host_blocks()
+    );
+    let dt = kv.fetch_sequence(a)?;
+    println!(
+        "fetch seq A back            : {:.0} us billed, free {:>2} blocks",
+        dt * 1e6,
+        kv.free_blocks()
+    );
+    kv.release(a);
+    kv.release(b);
+    println!("release both                : free {:>2} blocks\n", kv.free_blocks());
+
+    // ---- part 2: the surge, three policies ---------------------------
+    let args = Args::parse(std::env::args().skip(1));
+    let seconds = args.get_usize("seconds", 48);
+    let base = args.get_f64("base", 2.0);
+    let blocks = args.get_usize("blocks", 384);
+    let slo = SloConfig::default();
+    println!(
+        "== part 2: {seconds}s surge at {base} req/s (6x plateau), {blocks}-block budget, llama31-8b sim =="
+    );
+
+    for (name, cfg) in variants() {
+        let (mut report, st) = run_pressure(cfg, seconds, base, blocks)?;
+        let ttft = report.metrics.ttft_summary();
+        let tpot = report.metrics.tpot_summary();
+        println!(
+            "{name:>13}: peak {:>3} resident | {:>3} done | TTFT p90 {:>7.1} ms | TPOT p90 {:>5.1} ms | viol {:>3}s | demoted {:>4} | offloads {:>3} | transfer {:>6.2} ms",
+            st.peak_live_seqs,
+            report.metrics.completed,
+            ttft.p90 * 1e3,
+            tpot.p90 * 1e3,
+            report.metrics.slo_violation_seconds(&slo),
+            st.demoted_blocks,
+            st.offload_events,
+            st.transfer_seconds * 1e3,
+        );
+    }
+
+    println!(
+        "\nReading the output: all three rows replay the identical workload on the \
+         identical block budget. dense-f32 hits the budget wall and queues — its \
+         TTFT tail is the stall. fp8-demote stores cold blocks at half the bytes, \
+         so the same device admits more concurrent requests (higher peak) and the \
+         queue drains sooner. paged+offload additionally swaps whole victims to \
+         the host tier instead of stalling admission — capacity beyond the device, \
+         paid for in the transfer column, on the virtual clock, not in queueing \
+         delay."
+    );
+    Ok(())
+}

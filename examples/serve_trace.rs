@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     );
     let align = rt.manifest.prefill_chunks.iter().copied().min().unwrap_or(32);
     let max_seq = rt.manifest.model.max_seq;
-    let n_slots = rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
+    let max_batch = rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
 
     // build a bursty workload of real task prompts
     let mut rng = Pcg64::seeded(4242);
@@ -63,8 +63,7 @@ fn main() -> anyhow::Result<()> {
     let backend = RealBackend::new(
         rt,
         ModeMap::default(),
-        n_slots,
-        n_slots * (max_seq / 16 + 1) + 32,
+        max_batch * (max_seq / 16 + 1) + 32,
     );
     let mut engine = Engine::new(
         backend,

@@ -4,6 +4,7 @@
 //! Benches the serving hot paths:
 //!   format      — decompose / reconstruct / E4M3 throughput (bit ops)
 //!   kv          — KV gather/scatter (the per-iteration memcpy cost)
+//!   kvcache     — FP8 block codec encode/decode throughput
 //!   scheduler   — iteration planning over a large request table
 //!   gpusim      — one autotuned GEMM query (config search cost)
 //!   json        — manifest parsing
@@ -16,8 +17,9 @@ use std::time::Duration;
 
 use nestedfp::coordinator::backend::SimBackend;
 use nestedfp::coordinator::engine::{Engine, EngineConfig};
-use nestedfp::coordinator::kv::{KvCacheManager, KvGeometry};
+use nestedfp::coordinator::kv::{KvCacheManager, KvGeometry, KvPressureConfig};
 use nestedfp::coordinator::precision::PrecisionPolicy;
+use nestedfp::kvcache::codec as kv_codec;
 use nestedfp::coordinator::request::{Request, RequestState};
 use nestedfp::coordinator::scheduler::Scheduler;
 use nestedfp::format::{e4m3, fp16::F16, nested};
@@ -93,16 +95,16 @@ fn bench_kv() {
         head_dim: 32,
         block_size: 16,
         total_blocks: 4096,
-        n_slots: 8,
     };
-    let mut kv = KvCacheManager::new(geo);
-    let slots: Vec<usize> = (0..8).map(|_| kv.allocate(64).unwrap()).collect();
+    let mut kv = KvCacheManager::new(geo, KvPressureConfig::dense_baseline());
+    // reserve enough blocks that position 100 is table-resident
+    let seqs: Vec<usize> = (0..8).map(|_| kv.allocate(112).unwrap()).collect();
     let per = geo.n_layers * geo.n_heads * geo.head_dim;
     let newk = vec![0.5f32; per];
     let newv = vec![0.25f32; per];
     let s = bench(3, 2000, Duration::from_secs(2), || {
-        for &sl in &slots {
-            kv.scatter_decode(sl, 100, &newk, &newv);
+        for &sq in &seqs {
+            kv.scatter_decode(sq, 100, &newk, &newv);
         }
     });
     report("kv/scatter-decode x8", Some((8.0 * per as f64, "f32")), s);
@@ -110,7 +112,7 @@ fn bench_kv() {
     let mut bk = Vec::new();
     let mut bv = Vec::new();
     let s = bench(3, 500, Duration::from_secs(3), || {
-        kv.gather_batch(&slots, &mut bk, &mut bv);
+        kv.gather_batch(&seqs, &mut bk, &mut bv);
         std::hint::black_box(bk.len());
     });
     report(
@@ -118,6 +120,27 @@ fn bench_kv() {
         Some((2.0 * 8.0 * geo.slot_elems() as f64, "f32")),
         s,
     );
+}
+
+fn bench_kvcache_codec() {
+    // one 16-token block plane of llama-ish KV (4 layers x 8 heads x 32)
+    let mut rng = Pcg64::seeded(5);
+    let plane: Vec<f32> = (0..16 * 4 * 8 * 32)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let n = plane.len() as f64;
+    let s = bench(3, 2000, Duration::from_secs(2), || {
+        std::hint::black_box(kv_codec::encode_block(&plane));
+    });
+    report("kvcache/fp8-encode block", Some((n, "elem")), s);
+
+    let (bytes, scale) = kv_codec::encode_block(&plane);
+    let mut out = vec![0.0f32; plane.len()];
+    let s = bench(3, 2000, Duration::from_secs(2), || {
+        kv_codec::decode_block(&bytes, scale, &mut out);
+        std::hint::black_box(out[0]);
+    });
+    report("kvcache/fp8-decode block", Some((n, "elem")), s);
 }
 
 fn bench_scheduler() {
@@ -128,9 +151,8 @@ fn bench_scheduler() {
         head_dim: 1,
         block_size: 16,
         total_blocks: 1 << 16,
-        n_slots: 512,
     };
-    let kv = KvCacheManager::accounting_only(geo);
+    let kv = KvCacheManager::accounting_only(geo, KvPressureConfig::default());
     let mut sched = Scheduler::new(vec![64, 128, 256], 256);
     let mut requests: Vec<Request> = (0..512)
         .map(|i| {
@@ -266,6 +288,9 @@ fn main() {
     }
     if should_run("kv") {
         bench_kv();
+    }
+    if should_run("kvcache") {
+        bench_kvcache_codec();
     }
     if should_run("scheduler") {
         bench_scheduler();

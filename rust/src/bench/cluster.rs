@@ -17,6 +17,7 @@ use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::precision::{PrecisionPolicy, SloConfig};
 use crate::coordinator::router::RoutingPolicy;
 use crate::gpusim::WeightFormat;
+use crate::kvcache::KvPressureConfig;
 use crate::model::zoo;
 use crate::trace::workload::{build_requests, poisson_arrivals, surge_rates, WorkloadConfig};
 
@@ -67,6 +68,7 @@ pub fn run_cluster(
             slo: SloConfig::default(),
             physical_kv: false,
             max_iterations: 0,
+            kv: KvPressureConfig::default(),
         },
         surge: SurgeConfig::default(),
     };

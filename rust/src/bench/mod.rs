@@ -10,5 +10,6 @@ pub mod fig3;
 pub mod fig7;
 pub mod fig8;
 pub mod cluster;
+pub mod kvcache;
 
 pub use report::Report;

@@ -6,6 +6,7 @@ use std::fmt::Write as _;
 use crate::util::json::Json;
 
 /// A tabular experiment report.
+#[derive(Clone)]
 pub struct Report {
     pub title: String,
     pub notes: Vec<String>,

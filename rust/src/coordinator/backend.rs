@@ -77,10 +77,15 @@ pub struct RealBackend {
     pub rt: ModelRuntime,
     pub modes: ModeMap,
     geo: KvGeometry,
+    /// Reused dense-gather scratch (the AOT inputs are fixed-shape, so
+    /// these stay at their high-water size instead of reallocating per
+    /// step).
+    gather_k: Vec<f32>,
+    gather_v: Vec<f32>,
 }
 
 impl RealBackend {
-    pub fn new(rt: ModelRuntime, modes: ModeMap, n_slots: usize, total_blocks: usize) -> RealBackend {
+    pub fn new(rt: ModelRuntime, modes: ModeMap, total_blocks: usize) -> RealBackend {
         let m = &rt.manifest.model;
         let geo = KvGeometry {
             n_layers: m.n_layers,
@@ -89,9 +94,14 @@ impl RealBackend {
             head_dim: m.head_dim,
             block_size: 16,
             total_blocks,
-            n_slots,
         };
-        RealBackend { rt, modes, geo }
+        RealBackend {
+            rt,
+            modes,
+            geo,
+            gather_k: Vec::new(),
+            gather_v: Vec::new(),
+        }
     }
 
     fn mode_str(&self, p: Precision) -> &'static str {
@@ -127,10 +137,12 @@ impl Backend for RealBackend {
         let chunk = tokens.len();
         let step = self.rt.step("prefill", mode, chunk)?;
         let g = self.geo;
-        let s = kv.slot(slot);
+        // dense-gather the sequence through its block table (FP8 blocks
+        // dequantize on the fly) into the fixed AOT shape
+        kv.gather_seq(slot, &mut self.gather_k, &mut self.gather_v);
         let dims = vec![g.n_layers, g.n_heads, g.max_seq, g.head_dim];
-        let ck = HostTensor::from_f32(dims.clone(), &s.k);
-        let cv = HostTensor::from_f32(dims, &s.v);
+        let ck = HostTensor::from_f32(dims.clone(), &self.gather_k);
+        let cv = HostTensor::from_f32(dims, &self.gather_v);
         let t0 = std::time::Instant::now();
         let out = self.rt.run(
             step,
@@ -178,9 +190,7 @@ impl Backend for RealBackend {
         }
 
         let g = self.geo;
-        let mut bk = Vec::new();
-        let mut bv = Vec::new();
-        kv.gather_batch(&pad_slots, &mut bk, &mut bv);
+        kv.gather_batch(&pad_slots, &mut self.gather_k, &mut self.gather_v);
         let dims = vec![bucket, g.n_layers, g.n_heads, g.max_seq, g.head_dim];
         let step = self.rt.step("decode", mode, bucket)?;
         let t0 = std::time::Instant::now();
@@ -189,8 +199,8 @@ impl Backend for RealBackend {
             &[
                 HostTensor::from_i32(vec![bucket], &pad_tokens),
                 HostTensor::from_i32(vec![bucket], &pad_pos),
-                HostTensor::from_f32(dims.clone(), &bk),
-                HostTensor::from_f32(dims, &bv),
+                HostTensor::from_f32(dims.clone(), &self.gather_k),
+                HostTensor::from_f32(dims, &self.gather_v),
             ],
         )?;
         let latency = t0.elapsed().as_secs_f64();
@@ -246,7 +256,6 @@ impl SimBackend {
             head_dim: spec.head_dim,
             block_size: 16,
             total_blocks,
-            n_slots: max_batch * 4,
         };
         SimBackend {
             spec,
@@ -287,7 +296,7 @@ impl Backend for SimBackend {
         tokens: &[i32],
         precision: Precision,
     ) -> Result<StepRun> {
-        let _ = kv.slot(slot); // accounting only
+        let _ = (kv.free_blocks(), slot); // accounting only
         let q = StepQuery {
             kind: StepKind::Prefill,
             m: tokens.len(),

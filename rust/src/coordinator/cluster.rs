@@ -205,6 +205,8 @@ impl<B: Backend> ClusterRouter<B> {
             ewma_tpot: e.controller.ewma_tpot(),
             tpot_target: e.config().slo.tpot_target,
             forced_fp8: e.controller.forced() == Some(Precision::Fp8),
+            fp8_kv_blocks: e.kv.fp8_blocks(),
+            host_kv_blocks: e.kv.host_blocks(),
         }
     }
 
@@ -400,7 +402,6 @@ mod tests {
                     head_dim: 1,
                     block_size: 8,
                     total_blocks: 256,
-                    n_slots: 8,
                 },
                 latency,
             }
@@ -456,6 +457,7 @@ mod tests {
             slo: SloConfig::default(),
             physical_kv: false,
             max_iterations: 0,
+            kv: crate::kvcache::KvPressureConfig::default(),
         }
     }
 

@@ -11,11 +11,13 @@
 
 use anyhow::{anyhow, Result};
 
+use crate::kvcache::KvPressureConfig;
+
 use super::backend::{Backend, StepRun};
 use super::kv::KvCacheManager;
 use super::metrics::Metrics;
 use super::precision::{Precision, PrecisionController, PrecisionPolicy, SloConfig};
-use super::request::{FinishReason, Request, RequestState};
+use super::request::{FinishReason, Request, RequestId, RequestState};
 use super::scheduler::{IterationPlan, Scheduler};
 
 /// Engine construction parameters.
@@ -27,6 +29,8 @@ pub struct EngineConfig {
     pub physical_kv: bool,
     /// Stop after this many iterations (safety valve; 0 = unlimited).
     pub max_iterations: usize,
+    /// Paged-KV policy: admission mode, FP8 demotion, host-offload tier.
+    pub kv: KvPressureConfig,
 }
 
 impl Default for EngineConfig {
@@ -36,6 +40,7 @@ impl Default for EngineConfig {
             slo: SloConfig::default(),
             physical_kv: true,
             max_iterations: 0,
+            kv: KvPressureConfig::default(),
         }
     }
 }
@@ -90,9 +95,9 @@ impl<B: Backend> Engine<B> {
     pub fn new(backend: B, cfg: EngineConfig) -> Engine<B> {
         let geo = backend.geometry();
         let kv = if cfg.physical_kv {
-            KvCacheManager::new(geo)
+            KvCacheManager::new(geo, cfg.kv)
         } else {
-            KvCacheManager::accounting_only(geo)
+            KvCacheManager::accounting_only(geo, cfg.kv)
         };
         let scheduler = Scheduler::new(backend.prefill_chunks(), backend.max_decode_batch());
         let controller = PrecisionController::new(cfg.policy, cfg.slo);
@@ -124,13 +129,15 @@ impl<B: Backend> Engine<B> {
         self.requests.iter().filter(|r| !r.is_finished()).count()
     }
 
-    /// Requests waiting for admission or mid-prefill — the controller's
+    /// Requests waiting for KV capacity: queued for admission,
+    /// mid-prefill, or preempted to the host tier — the controller's
     /// queue-pressure signal, and the router's load signal.
     pub fn queued_requests(&self) -> usize {
         self.requests
             .iter()
             .filter(|r| {
                 r.state == RequestState::Queued
+                    || r.state == RequestState::Offloaded
                     || (r.state == RequestState::Prefilling && r.remaining_prompt() > 0)
             })
             .count()
@@ -157,6 +164,15 @@ impl<B: Backend> Engine<B> {
     /// does not advance in that case and the driver must move time
     /// forward itself (typically to the next arrival).
     pub fn step(&mut self, imminent_arrivals: usize, metrics: &mut Metrics) -> Result<EngineStep> {
+        let t0 = self.now;
+
+        // ---- host tier: resume offloaded sequences that now fit ----
+        self.try_resume()?;
+        // ---- paged admission assist: demote cold blocks (and at the
+        // limit preempt a sequence to the host tier) so the oldest
+        // queued request can be admitted instead of stalling ---------
+        self.admission_assist()?;
+
         // ---- precision decision -----------------------------------
         // load signal: queued + still-prefilling requests (each one
         // means imminent prefill iterations that stretch running
@@ -181,7 +197,11 @@ impl<B: Backend> Engine<B> {
             .controller
             .decide(queue_depth, self.kv.block_utilization());
         let is_fp8 = precision == Precision::Fp8;
-        let t0 = self.now;
+        // precision pressure couples the controller to the KV cache: FP8
+        // iterations tighten the demotion watermark, compressing cold
+        // blocks ahead of demand
+        self.kv.set_precision_pressure(is_fp8);
+        self.kv.maintain();
 
         // ---- plan & execute ---------------------------------------
         let plan = self.scheduler.plan(&self.requests, &self.kv);
@@ -192,7 +212,7 @@ impl<B: Backend> Engine<B> {
                 return Ok(EngineStep {
                     ran: false,
                     fp8: is_fp8,
-                    latency: 0.0,
+                    latency: self.now - t0,
                     completions: Vec::new(),
                 });
             }
@@ -228,6 +248,7 @@ impl<B: Backend> Engine<B> {
         }
         // drop finished request bodies to keep the table small
         self.requests.retain(|r| !r.is_finished());
+        metrics.observe_kv(&self.kv.stats());
 
         Ok(EngineStep {
             ran: true,
@@ -235,6 +256,158 @@ impl<B: Backend> Engine<B> {
             latency: self.now - t0,
             completions,
         })
+    }
+
+    /// Fetch offloaded sequences back from the host tier (oldest arrival
+    /// first — FCFS, younger sequences never jump the fetch queue),
+    /// charging transfer latency to the engine clock.
+    fn try_resume(&mut self) -> Result<()> {
+        loop {
+            let next = self
+                .requests
+                .iter()
+                .filter(|r| r.state == RequestState::Offloaded)
+                .min_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap())
+                .map(|r| {
+                    (
+                        r.id,
+                        r.slot.expect("offloaded request without kv seq"),
+                        r.context_len(),
+                    )
+                });
+            let Some((id, seq, ctx)) = next else {
+                return Ok(());
+            };
+            if !self.kv.can_fetch(seq) {
+                return Ok(());
+            }
+            let dt = self.kv.fetch_sequence(seq)?;
+            self.now += dt;
+            // cover the next scatter position (the preemption may have
+            // skipped this sequence's growth turn)
+            self.kv.grow(seq, ctx.min(self.kv.geo.max_seq))?;
+            self.request_mut(id).state = RequestState::Decoding;
+        }
+    }
+
+    /// If the oldest queued request does not fit, demote cold blocks; at
+    /// the limit, preempt one decoding sequence to the host tier
+    /// (SLO-offload style: admit past device capacity, pay in transfer
+    /// latency rather than queueing delay).
+    fn admission_assist(&mut self) -> Result<()> {
+        let oldest = self
+            .requests
+            .iter()
+            .filter(|r| r.state == RequestState::Queued)
+            .min_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap())
+            .map(|r| (r.prompt.len(), r.max_new_tokens));
+        let Some((plen, max_new)) = oldest else {
+            return Ok(());
+        };
+        let len = self.kv.admit_len(plen, max_new);
+        if self.kv.relieve_for_admit(len) {
+            return Ok(());
+        }
+        if !self.kv.policy().offload_enabled {
+            return Ok(());
+        }
+        // bound preemption churn: one admission preemption wave in flight
+        // at a time, and never down to a single running sequence
+        if self
+            .requests
+            .iter()
+            .any(|r| r.state == RequestState::Offloaded)
+        {
+            return Ok(());
+        }
+        // preempt only when the freed blocks can actually complete the
+        // admission this very step (keeping the smallest holder running);
+        // otherwise stall like the seed did — offloading without admitting
+        // would bill transfer latency for nothing and then ping-pong with
+        // the resume path
+        let mut holders: Vec<usize> = self
+            .requests
+            .iter()
+            .filter(|r| r.state == RequestState::Decoding && r.slot.is_some())
+            .map(|r| self.kv.seq_device_units(r.slot.unwrap()))
+            .collect();
+        if holders.len() < 2 {
+            return Ok(());
+        }
+        holders.sort_unstable();
+        let freeable: usize = holders[1..].iter().sum();
+        if self.kv.free_units() + freeable < self.kv.admit_units(len) {
+            return Ok(());
+        }
+        loop {
+            let decoding = self
+                .requests
+                .iter()
+                .filter(|r| r.state == RequestState::Decoding)
+                .count();
+            if decoding < 2 {
+                break;
+            }
+            let Some(victim) = self.pick_victim(None) else {
+                break;
+            };
+            self.offload_request(victim)?;
+            if self.kv.relieve_for_admit(len) {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// The preemption victim: the decoding sequence holding the most KV
+    /// blocks (frees the most device memory per transfer), ties broken
+    /// toward the latest arrival (preempt the youngest work).
+    fn pick_victim(&self, exclude: Option<RequestId>) -> Option<RequestId> {
+        let kv = &self.kv;
+        self.requests
+            .iter()
+            .filter(|r| {
+                r.state == RequestState::Decoding && Some(r.id) != exclude && r.slot.is_some()
+            })
+            .max_by(|a, b| {
+                let ka = (kv.seq_blocks(a.slot.unwrap()), a.arrival);
+                let kb = (kv.seq_blocks(b.slot.unwrap()), b.arrival);
+                ka.partial_cmp(&kb).unwrap()
+            })
+            .map(|r| r.id)
+    }
+
+    fn offload_request(&mut self, id: RequestId) -> Result<()> {
+        let seq = self
+            .requests
+            .iter()
+            .find(|r| r.id == id)
+            .and_then(|r| r.slot)
+            .expect("offload victim without kv seq");
+        let dt = self.kv.offload_sequence(seq)?;
+        self.now += dt;
+        self.request_mut(id).state = RequestState::Offloaded;
+        Ok(())
+    }
+
+    /// Grow a decoding sequence's KV to `new_len`; on a full device,
+    /// preempt other sequences to the host tier until it fits
+    /// (preempt-by-offload instead of failing the step).
+    fn grow_or_preempt(&mut self, id: RequestId, seq: usize, new_len: usize) -> Result<()> {
+        loop {
+            match self.kv.grow(seq, new_len) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if !self.kv.policy().offload_enabled {
+                        return Err(e);
+                    }
+                    let Some(victim) = self.pick_victim(Some(id)) else {
+                        return Err(e);
+                    };
+                    self.offload_request(victim)?;
+                }
+            }
+        }
     }
 
     /// Run a whole workload (requests with arrival timestamps) to
@@ -337,8 +510,9 @@ impl<B: Backend> Engine<B> {
         let (slot, start_pos, tokens) = {
             let reserve_len = {
                 let r = self.requests.iter().find(|r| r.id == id).unwrap();
-                // full expected context, capped by the cache geometry
-                (r.prompt.len() + r.max_new_tokens).min(self.kv.geo.max_seq)
+                // per the admission mode: full expected context (Reserve)
+                // or just the prompt + headroom (Paged)
+                self.kv.admit_len(r.prompt.len(), r.max_new_tokens)
             };
             let need_alloc = {
                 let r = self.requests.iter().find(|r| r.id == id).unwrap();
@@ -368,7 +542,6 @@ impl<B: Backend> Engine<B> {
                 .prefill(&mut self.kv, slot, start_pos, &tokens, precision)?;
         self.now += latency;
 
-        let geo = self.kv.geo;
         let r_done;
         {
             let r = self.request_mut(id);
@@ -379,7 +552,6 @@ impl<B: Backend> Engine<B> {
             let r = self.requests.iter().find(|r| r.id == id).unwrap();
             r.prefilled
         };
-        let _ = geo;
         self.kv.grow(slot, new_len)?;
 
         if r_done {
@@ -443,12 +615,6 @@ impl<B: Backend> Engine<B> {
             .unwrap_or(0);
         let now = self.now;
         for (i, &id) in ids.iter().enumerate() {
-            // grow KV to cover the token written at `positions[i]` + the
-            // next one
-            let slot = slots[i];
-            let new_len = positions[i] as usize + 2;
-            self.kv.grow(slot, new_len.min(self.kv.geo.max_seq))?;
-
             let tok = match &logits {
                 Some(lg) => argmax(&lg[i * vocab..(i + 1) * vocab]),
                 None => 0,
@@ -469,6 +635,20 @@ impl<B: Backend> Engine<B> {
                 });
                 r.finished_at = Some(now);
             }
+        }
+        // grow each still-decoding sequence's KV to cover its next token;
+        // preemption mid-loop may flip later entries to Offloaded (their
+        // growth then happens at resume time), so re-read states
+        for &id in ids {
+            let (state, slot, ctx) = {
+                let r = self.requests.iter().find(|r| r.id == id).unwrap();
+                (r.state, r.slot, r.context_len())
+            };
+            if state != RequestState::Decoding {
+                continue;
+            }
+            let new_len = ctx.min(self.kv.geo.max_seq);
+            self.grow_or_preempt(id, slot.expect("decoding request without slot"), new_len)?;
         }
         Ok(())
     }
@@ -504,6 +684,10 @@ mod tests {
 
     impl FakeBackend {
         fn new(latency: f64) -> FakeBackend {
+            Self::with_blocks(latency, 64)
+        }
+
+        fn with_blocks(latency: f64, total_blocks: usize) -> FakeBackend {
             FakeBackend {
                 geo: KvGeometry {
                     n_layers: 1,
@@ -511,8 +695,7 @@ mod tests {
                     max_seq: 64,
                     head_dim: 1,
                     block_size: 8,
-                    total_blocks: 64,
-                    n_slots: 4,
+                    total_blocks,
                 },
                 latency,
                 vocab: 64,
@@ -693,5 +876,101 @@ mod tests {
         let report = e.run(reqs).unwrap();
         assert!(!report.metrics.tpot_by_second.is_empty());
         assert!(report.iterations >= 20);
+    }
+
+    #[test]
+    fn preempts_by_offload_instead_of_stalling() {
+        // 4-block budget, two requests whose contexts outgrow it even
+        // after full FP8 demotion: the engine must offload one sequence
+        // to the host tier, keep decoding, resume it, and finish both.
+        let mut e = Engine::new(
+            FakeBackend::with_blocks(0.001, 4),
+            EngineConfig {
+                policy: PrecisionPolicy::Fp16Only,
+                physical_kv: false,
+                ..Default::default()
+            },
+        );
+        let reqs: Vec<Request> = (0..2)
+            .map(|i| Request::new(i, vec![1; 8], 20, 0.0))
+            .collect();
+        let report = e.run(reqs).unwrap();
+        assert_eq!(report.metrics.completed, 2);
+        assert_eq!(report.metrics.total_output_tokens, 40);
+        let st = e.kv.stats();
+        assert!(st.demoted_blocks >= 1, "demotion never engaged");
+        assert!(st.offload_events >= 1, "never preempted by offload");
+        assert!(st.fetch_events >= 1, "offloaded sequence never resumed");
+        assert!(st.transfer_seconds > 0.0, "transfers must charge the clock");
+        assert_eq!(e.kv.free_blocks(), 4, "all blocks released");
+        assert_eq!(e.kv.host_blocks(), 0, "host tier drained");
+    }
+
+    #[test]
+    fn paged_admission_beats_reserve_under_same_budget() {
+        // same 12-block budget: conservative full-context reservation can
+        // hold one request at a time; FP8 demotion fits a second
+        // concurrently (the acceptance property, engine level)
+        let run = |kv_cfg: crate::kvcache::KvPressureConfig| {
+            let mut e = Engine::new(
+                FakeBackend::with_blocks(0.001, 12),
+                EngineConfig {
+                    policy: PrecisionPolicy::Fp16Only,
+                    physical_kv: false,
+                    kv: kv_cfg,
+                    ..Default::default()
+                },
+            );
+            let reqs: Vec<Request> = (0..2)
+                .map(|i| Request::new(i, vec![1; 8], 40, 0.0))
+                .collect();
+            let report = e.run(reqs).unwrap();
+            assert_eq!(report.metrics.completed, 2);
+            e.kv.stats().peak_live_seqs
+        };
+        let base = run(crate::kvcache::KvPressureConfig::dense_baseline());
+        let demote = run(crate::kvcache::KvPressureConfig::demote_only());
+        assert_eq!(base, 1, "reserve mode serializes on this budget");
+        assert!(
+            demote > base,
+            "fp8 demotion must admit more concurrently: {demote} !> {base}"
+        );
+    }
+
+    #[test]
+    fn offload_latency_lands_on_the_virtual_clock() {
+        // drive via step() so we can see per-iteration latency: any
+        // iteration containing a transfer reports latency above the
+        // backend's fixed cost
+        let mut e = Engine::new(
+            FakeBackend::with_blocks(0.001, 4),
+            EngineConfig {
+                policy: PrecisionPolicy::Fp16Only,
+                physical_kv: false,
+                ..Default::default()
+            },
+        );
+        for i in 0..2 {
+            e.submit(Request::new(i, vec![1; 8], 20, 0.0));
+        }
+        let mut metrics = Metrics::new();
+        let mut clocked = 0.0f64;
+        while e.active_requests() > 0 {
+            let step = e.step(0, &mut metrics).unwrap();
+            assert!(step.ran);
+            clocked += step.latency;
+        }
+        let st = e.kv.stats();
+        assert!(st.transfer_seconds > 0.0);
+        assert!(
+            (clocked - e.now()).abs() < 1e-9,
+            "step latencies must sum to the clock: {clocked} vs {}",
+            e.now()
+        );
+        assert!(
+            clocked > st.transfer_seconds,
+            "clock must include the transfer charges"
+        );
+        assert_eq!(metrics.kv_offload_events, st.offload_events);
     }
 }

@@ -1,338 +1,14 @@
-//! KV-cache management: slots + block accounting.
+//! KV-cache management — since PR 2 a thin compatibility surface over the
+//! top-level [`kvcache`](crate::kvcache) subsystem.
 //!
-//! The AOT executables use fixed-shape dense per-slot caches
-//! (`[L, H, S_max, Dh]` f32), so physical storage here is slot-granular;
-//! on top of it we keep PagedAttention-style **block accounting** (the
-//! admission control signal): a request only holds as many blocks as its
-//! current context needs, and the scheduler admits new work only when
-//! blocks are available — exactly the mechanism that determines batch
-//! size (and thus the paper's precision-pressure signal) in vLLM.
+//! The seed's dense `[L, H, S_max, Dh]` slot store (hard `n_slots` cap,
+//! per-slot max_seq-sized buffers) is gone. The engine now talks to
+//! [`PagedKvCache`]: a block allocator with per-request block tables, FP8
+//! demotion of LRU-cold blocks under precision pressure, and a host
+//! offload tier. This module re-exports the types under their historical
+//! names so `coordinator::kv::{KvCacheManager, KvGeometry}` keeps working.
 
-use anyhow::{bail, Result};
+pub use crate::kvcache::{KvCacheStats, KvGeometry, KvPressureConfig, PagedKvCache};
 
-/// Geometry of the cache.
-#[derive(Clone, Copy, Debug)]
-pub struct KvGeometry {
-    pub n_layers: usize,
-    pub n_heads: usize,
-    pub max_seq: usize,
-    pub head_dim: usize,
-    /// Tokens per accounting block.
-    pub block_size: usize,
-    /// Total blocks in the (simulated) device memory budget.
-    pub total_blocks: usize,
-    /// Physical slots (concurrent sequences).
-    pub n_slots: usize,
-}
-
-impl KvGeometry {
-    /// Floats per slot for one of K/V.
-    pub fn slot_elems(&self) -> usize {
-        self.n_layers * self.n_heads * self.max_seq * self.head_dim
-    }
-
-    pub fn blocks_for(&self, tokens: usize) -> usize {
-        tokens.div_ceil(self.block_size)
-    }
-}
-
-/// One physical slot's storage (host-side, fed to the executables).
-pub struct Slot {
-    /// K cache, layout [L, H, S, Dh] row-major.
-    pub k: Vec<f32>,
-    /// V cache, same layout.
-    pub v: Vec<f32>,
-    /// Valid context length.
-    pub len: usize,
-    pub in_use: bool,
-}
-
-/// The manager: slots + block budget.
-pub struct KvCacheManager {
-    pub geo: KvGeometry,
-    slots: Vec<Slot>,
-    free_blocks: usize,
-    /// Blocks held per slot.
-    held: Vec<usize>,
-}
-
-impl KvCacheManager {
-    pub fn new(geo: KvGeometry) -> KvCacheManager {
-        let slots = (0..geo.n_slots)
-            .map(|_| Slot {
-                k: vec![0.0; geo.slot_elems()],
-                v: vec![0.0; geo.slot_elems()],
-                len: 0,
-                in_use: false,
-            })
-            .collect();
-        KvCacheManager {
-            free_blocks: geo.total_blocks,
-            held: vec![0; geo.n_slots],
-            slots,
-            geo,
-        }
-    }
-
-    /// Lightweight variant for the simulation backend: block accounting
-    /// only, no physical storage.
-    pub fn accounting_only(geo: KvGeometry) -> KvCacheManager {
-        let slots = (0..geo.n_slots)
-            .map(|_| Slot {
-                k: Vec::new(),
-                v: Vec::new(),
-                len: 0,
-                in_use: false,
-            })
-            .collect();
-        KvCacheManager {
-            free_blocks: geo.total_blocks,
-            held: vec![0; geo.n_slots],
-            slots,
-            geo,
-        }
-    }
-
-    pub fn free_blocks(&self) -> usize {
-        self.free_blocks
-    }
-
-    pub fn free_slots(&self) -> usize {
-        self.slots.iter().filter(|s| !s.in_use).count()
-    }
-
-    /// Can a request of `prompt_len` (+ headroom for one block of output)
-    /// be admitted now?
-    pub fn can_admit(&self, prompt_len: usize) -> bool {
-        self.free_slots() > 0
-            && self.free_blocks >= self.geo.blocks_for(prompt_len) + 1
-    }
-
-    /// Allocate a slot for a request; reserves blocks for the prompt.
-    pub fn allocate(&mut self, prompt_len: usize) -> Result<usize> {
-        if !self.can_admit(prompt_len) {
-            bail!(
-                "kv exhausted: {} free slots, {} free blocks",
-                self.free_slots(),
-                self.free_blocks
-            );
-        }
-        let idx = self
-            .slots
-            .iter()
-            .position(|s| !s.in_use)
-            .expect("checked above");
-        let blocks = self.geo.blocks_for(prompt_len) + 1;
-        self.free_blocks -= blocks;
-        self.held[idx] = blocks;
-        let slot = &mut self.slots[idx];
-        slot.in_use = true;
-        slot.len = 0;
-        Ok(idx)
-    }
-
-    /// Grow a slot's held blocks to cover `new_len` tokens; fails if the
-    /// budget is exhausted (the engine must then preempt or stall).
-    pub fn grow(&mut self, slot: usize, new_len: usize) -> Result<()> {
-        if new_len > self.geo.max_seq {
-            bail!("sequence length {new_len} exceeds max_seq {}", self.geo.max_seq);
-        }
-        let need = self.geo.blocks_for(new_len);
-        if need > self.held[slot] {
-            let extra = need - self.held[slot];
-            if extra > self.free_blocks {
-                bail!("kv block budget exhausted growing slot {slot}");
-            }
-            self.free_blocks -= extra;
-            self.held[slot] = need;
-        }
-        self.slots[slot].len = new_len;
-        Ok(())
-    }
-
-    /// Release a slot and all its blocks.
-    pub fn release(&mut self, slot: usize) {
-        assert!(self.slots[slot].in_use, "releasing free slot {slot}");
-        self.free_blocks += self.held[slot];
-        self.held[slot] = 0;
-        let s = &mut self.slots[slot];
-        s.in_use = false;
-        s.len = 0;
-        // storage intentionally not zeroed: the length mask guards reads,
-        // and new prefills overwrite (mirrors real paged caches)
-    }
-
-    pub fn slot(&self, idx: usize) -> &Slot {
-        &self.slots[idx]
-    }
-
-    pub fn slot_mut(&mut self, idx: usize) -> &mut Slot {
-        &mut self.slots[idx]
-    }
-
-    /// Scatter new K/V rows for `count` tokens starting at `start_pos`.
-    /// `new_k`/`new_v` layout: [L, T, H, Dh] (prefill) flattened.
-    pub fn scatter_prefill(
-        &mut self,
-        slot: usize,
-        start_pos: usize,
-        count: usize,
-        new_k: &[f32],
-        new_v: &[f32],
-    ) {
-        let g = self.geo;
-        let (l, h, s, dh) = (g.n_layers, g.n_heads, g.max_seq, g.head_dim);
-        debug_assert_eq!(new_k.len(), l * count * h * dh);
-        let dst = &mut self.slots[slot];
-        for li in 0..l {
-            for t in 0..count {
-                for hi in 0..h {
-                    let src = ((li * count + t) * h + hi) * dh;
-                    let pos = start_pos + t;
-                    let d = ((li * h + hi) * s + pos) * dh;
-                    dst.k[d..d + dh].copy_from_slice(&new_k[src..src + dh]);
-                    dst.v[d..d + dh].copy_from_slice(&new_v[src..src + dh]);
-                }
-            }
-        }
-    }
-
-    /// Scatter one decode token's K/V. `new_k` layout: [L, H, Dh] for this
-    /// sequence (already sliced out of the batch output).
-    pub fn scatter_decode(&mut self, slot: usize, pos: usize, new_k: &[f32], new_v: &[f32]) {
-        let g = self.geo;
-        let (l, h, s, dh) = (g.n_layers, g.n_heads, g.max_seq, g.head_dim);
-        debug_assert_eq!(new_k.len(), l * h * dh);
-        let dst = &mut self.slots[slot];
-        for li in 0..l {
-            for hi in 0..h {
-                let src = (li * h + hi) * dh;
-                let d = ((li * h + hi) * s + pos) * dh;
-                dst.k[d..d + dh].copy_from_slice(&new_k[src..src + dh]);
-                dst.v[d..d + dh].copy_from_slice(&new_v[src..src + dh]);
-            }
-        }
-    }
-
-    /// Gather the full padded batch cache for a decode call:
-    /// output layout [B, L, H, S, Dh] with B = `slots.len()`.
-    pub fn gather_batch(&self, slots: &[usize], out_k: &mut Vec<f32>, out_v: &mut Vec<f32>) {
-        let per = self.geo.slot_elems();
-        out_k.clear();
-        out_v.clear();
-        out_k.reserve(per * slots.len());
-        out_v.reserve(per * slots.len());
-        for &idx in slots {
-            out_k.extend_from_slice(&self.slots[idx].k);
-            out_v.extend_from_slice(&self.slots[idx].v);
-        }
-    }
-
-    /// Memory utilization in [0,1] — a precision-pressure signal.
-    pub fn block_utilization(&self) -> f64 {
-        1.0 - self.free_blocks as f64 / self.geo.total_blocks as f64
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn geo() -> KvGeometry {
-        KvGeometry {
-            n_layers: 2,
-            n_heads: 2,
-            max_seq: 32,
-            head_dim: 4,
-            block_size: 8,
-            total_blocks: 16,
-            n_slots: 3,
-        }
-    }
-
-    #[test]
-    fn allocate_grow_release_accounting() {
-        let mut kv = KvCacheManager::accounting_only(geo());
-        assert_eq!(kv.free_blocks(), 16);
-        let s0 = kv.allocate(10).unwrap(); // 2 blocks prompt + 1 headroom
-        assert_eq!(kv.free_blocks(), 13);
-        kv.grow(s0, 10).unwrap(); // within held
-        assert_eq!(kv.free_blocks(), 13);
-        kv.grow(s0, 25).unwrap(); // 4 blocks needed, held 3 -> +1
-        assert_eq!(kv.free_blocks(), 12);
-        kv.release(s0);
-        assert_eq!(kv.free_blocks(), 16);
-        assert_eq!(kv.free_slots(), 3);
-    }
-
-    #[test]
-    fn admission_limits() {
-        let mut kv = KvCacheManager::accounting_only(geo());
-        let _a = kv.allocate(32).unwrap(); // 4+1 = 5 blocks
-        let _b = kv.allocate(32).unwrap(); // 5 blocks (10 total)
-        let _c = kv.allocate(32).unwrap(); // 5 blocks (15) — slots full now
-        assert_eq!(kv.free_slots(), 0);
-        assert!(!kv.can_admit(1));
-        assert!(kv.allocate(1).is_err());
-    }
-
-    #[test]
-    fn grow_respects_max_seq_and_budget() {
-        let mut kv = KvCacheManager::accounting_only(geo());
-        let s = kv.allocate(8).unwrap();
-        assert!(kv.grow(s, 33).is_err()); // > max_seq
-        // exhaust budget with another request
-        let _other = kv.allocate(32).unwrap();
-        let _other2 = kv.allocate(32).unwrap();
-        // 16 - 2 - 5 - 5 = 4 free; growing s to 32 needs 4 blocks held vs 2
-        // held -> +2, fine; then release checks
-        kv.grow(s, 32).unwrap();
-        assert_eq!(kv.free_blocks(), 2);
-    }
-
-    #[test]
-    fn scatter_gather_roundtrip() {
-        let mut kv = KvCacheManager::new(geo());
-        let s = kv.allocate(4).unwrap();
-        let g = geo();
-        let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
-        // prefill 3 tokens with recognizable values
-        let count = 3;
-        let mut nk = vec![0.0f32; l * count * h * dh];
-        for (i, v) in nk.iter_mut().enumerate() {
-            *v = i as f32;
-        }
-        let nv: Vec<f32> = nk.iter().map(|x| -x).collect();
-        kv.scatter_prefill(s, 0, count, &nk, &nv);
-        kv.grow(s, count).unwrap();
-        // token at layer 1, t=2, head 1 should be at k[(1*2+1)*32+2]*4
-        let slot = kv.slot(s);
-        let src = ((1 * count + 2) * h + 1) * dh;
-        let dst = ((1 * h + 1) * g.max_seq + 2) * dh;
-        assert_eq!(slot.k[dst..dst + dh], nk[src..src + dh]);
-        assert_eq!(slot.v[dst], -nk[src]);
-
-        // decode token at pos 3
-        let dk: Vec<f32> = (0..l * h * dh).map(|i| 100.0 + i as f32).collect();
-        let dv: Vec<f32> = dk.iter().map(|x| x + 0.5).collect();
-        kv.scatter_decode(s, 3, &dk, &dv);
-        let slot = kv.slot(s);
-        let d = ((0 * h + 0) * g.max_seq + 3) * dh;
-        assert_eq!(slot.k[d], 100.0);
-
-        // gather one-slot batch
-        let mut bk = Vec::new();
-        let mut bv = Vec::new();
-        kv.gather_batch(&[s], &mut bk, &mut bv);
-        assert_eq!(bk.len(), kv.geo.slot_elems());
-        assert_eq!(bk[dst], nk[src]);
-    }
-
-    #[test]
-    fn utilization_signal() {
-        let mut kv = KvCacheManager::accounting_only(geo());
-        assert_eq!(kv.block_utilization(), 0.0);
-        let _s = kv.allocate(32).unwrap();
-        assert!((kv.block_utilization() - 5.0 / 16.0).abs() < 1e-12);
-    }
-}
+/// The engine's KV manager — an alias for [`PagedKvCache`].
+pub type KvCacheManager = PagedKvCache;

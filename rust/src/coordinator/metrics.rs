@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::kvcache::KvCacheStats;
 use crate::util::stats::{Digest, Summary};
 
 use super::precision::SloConfig;
@@ -29,6 +30,20 @@ pub struct Metrics {
     /// Engine-clock span of the run (first arrival .. last completion).
     pub t_start: f64,
     pub t_end: f64,
+    // ---- paged-KV counters (mirrored from the engine's cache) ----
+    /// Blocks demoted to FP8 over the run.
+    pub kv_demoted_blocks: usize,
+    /// Sequence preemptions to the host tier.
+    pub kv_offload_events: usize,
+    /// Host → device resume fetches.
+    pub kv_fetch_events: usize,
+    /// Virtual-clock seconds spent on host transfers.
+    pub kv_transfer_seconds: f64,
+    /// Peak device block utilization in [0, 1] (max over merge).
+    pub peak_kv_utilization: f64,
+    /// Peak concurrently admitted sequences (summed over merge: cluster
+    /// aggregate = total concurrent capacity actually reached).
+    pub peak_live_seqs: usize,
 }
 
 impl Metrics {
@@ -77,6 +92,17 @@ impl Metrics {
             Some((s, w)) if *s == sec => *w = w.max(worst),
             _ => self.tpot_by_second.push((sec, worst)),
         }
+    }
+
+    /// Mirror the engine cache's cumulative counters (called once per
+    /// iteration; the stats are monotone, so overwriting is exact).
+    pub fn observe_kv(&mut self, s: &KvCacheStats) {
+        self.kv_demoted_blocks = s.demoted_blocks;
+        self.kv_offload_events = s.offload_events;
+        self.kv_fetch_events = s.fetch_events;
+        self.kv_transfer_seconds = s.transfer_seconds;
+        self.peak_kv_utilization = self.peak_kv_utilization.max(s.peak_utilization);
+        self.peak_live_seqs = self.peak_live_seqs.max(s.peak_live_seqs);
     }
 
     /// Seconds of the run whose worst TPOT violated the SLO (Fig 1b's
@@ -139,6 +165,12 @@ impl Metrics {
             .extend_from_slice(&other.request_latencies);
         self.t_start = self.t_start.min(other.t_start);
         self.t_end = self.t_end.max(other.t_end);
+        self.kv_demoted_blocks += other.kv_demoted_blocks;
+        self.kv_offload_events += other.kv_offload_events;
+        self.kv_fetch_events += other.kv_fetch_events;
+        self.kv_transfer_seconds += other.kv_transfer_seconds;
+        self.peak_kv_utilization = self.peak_kv_utilization.max(other.peak_kv_utilization);
+        self.peak_live_seqs += other.peak_live_seqs;
         let mut by_sec: BTreeMap<u64, f64> = self.tpot_by_second.iter().cloned().collect();
         for &(sec, worst) in &other.tpot_by_second {
             let w = by_sec.entry(sec).or_insert(0.0);
@@ -190,9 +222,31 @@ mod tests {
         b.record_decode_iteration(0.7, &[0.050]); // violates second 0 too
         b.record_decode_iteration(3.0, &[0.020]);
 
+        a.observe_kv(&crate::kvcache::KvCacheStats {
+            demoted_blocks: 3,
+            offload_events: 1,
+            peak_live_seqs: 2,
+            peak_utilization: 0.9,
+            ..Default::default()
+        });
+        b.observe_kv(&crate::kvcache::KvCacheStats {
+            demoted_blocks: 1,
+            fetch_events: 1,
+            transfer_seconds: 0.002,
+            peak_live_seqs: 3,
+            peak_utilization: 0.5,
+            ..Default::default()
+        });
+
         let mut m = Metrics::new();
         m.merge(&a);
         m.merge(&b);
+        assert_eq!(m.kv_demoted_blocks, 4);
+        assert_eq!(m.kv_offload_events, 1);
+        assert_eq!(m.kv_fetch_events, 1);
+        assert!((m.kv_transfer_seconds - 0.002).abs() < 1e-15);
+        assert_eq!(m.peak_live_seqs, 5, "cluster peak = sum of replica peaks");
+        assert!((m.peak_kv_utilization - 0.9).abs() < 1e-15);
         assert_eq!(m.completed, 2);
         assert_eq!(m.ttft.len(), 2);
         assert_eq!(m.total_output_tokens, 22);

@@ -1,10 +1,12 @@
 //! Layer 3: the vLLM-style serving coordinator.
 //!
 //! The engine implements continuous batching (ORCA-style iteration-level
-//! scheduling) with chunked prefill (Sarathi-style), a slot/block KV-cache
-//! manager, latency metrics, and the paper's contribution: an
-//! **iteration-level dual-precision controller** that picks FP16 or FP8
-//! execution per scheduling step from the same NestedFP weight store.
+//! scheduling) with chunked prefill (Sarathi-style), the paged
+//! dual-precision KV cache ([`crate::kvcache`]: block tables, FP8
+//! demotion under pressure, host-offload preemption), latency metrics,
+//! and the paper's contribution: an **iteration-level dual-precision
+//! controller** that picks FP16 or FP8 execution per scheduling step from
+//! the same NestedFP weight store.
 //!
 //! The engine is generic over a [`backend::Backend`]:
 //! * [`backend::RealBackend`] — executes the AOT artifacts on the PJRT
@@ -33,6 +35,7 @@ pub mod server;
 
 pub use cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
 pub use engine::{Engine, EngineConfig, EngineStep};
+pub use kv::{KvCacheManager, KvGeometry, KvPressureConfig};
 pub use precision::{PrecisionPolicy, SloConfig};
 pub use request::{Request, RequestId, RequestState};
 pub use router::{ReplicaSnapshot, Router, RoutingPolicy};

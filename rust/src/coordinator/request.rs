@@ -12,6 +12,9 @@ pub enum RequestState {
     Prefilling,
     /// Generating tokens.
     Decoding,
+    /// Admitted, but its KV blocks were preempted to the host tier; the
+    /// engine fetches it back (FCFS) before it decodes again.
+    Offloaded,
     /// Done (completed, or evicted on error).
     Finished,
 }

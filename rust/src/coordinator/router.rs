@@ -42,11 +42,13 @@ pub enum RoutingPolicy {
 /// What the router sees of one replica at dispatch time.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ReplicaSnapshot {
+    /// Free device budget in f32-equivalent blocks (FP8 demotion shows up
+    /// here: a replica storing cold KV at half the bytes has more free).
     pub free_kv_blocks: usize,
     pub total_kv_blocks: usize,
     /// Unfinished requests owned by the replica.
     pub active_requests: usize,
-    /// Requests waiting for admission or mid-prefill.
+    /// Requests waiting for admission, mid-prefill, or host-preempted.
     pub queued_requests: usize,
     /// EWMA of observed TPOT, seconds (0 until the first observation).
     pub ewma_tpot: f64,
@@ -54,6 +56,11 @@ pub struct ReplicaSnapshot {
     pub tpot_target: f64,
     /// Replica currently demoted to FP8 by the cluster controller.
     pub forced_fp8: bool,
+    /// Device blocks currently stored demoted to FP8 (quality debt).
+    pub fp8_kv_blocks: usize,
+    /// Blocks preempted to the replica's host tier (latency debt: each
+    /// one implies a pending fetch before its sequence decodes again).
+    pub host_kv_blocks: usize,
 }
 
 /// SLO-headroom score: higher is a better dispatch target. Ties are
@@ -61,13 +68,21 @@ pub struct ReplicaSnapshot {
 fn slo_score(s: &ReplicaSnapshot) -> f64 {
     let target = if s.tpot_target > 0.0 { s.tpot_target } else { 1.0 };
     let headroom = ((target - s.ewma_tpot) / target).clamp(-1.0, 1.0);
+    let blocks = s.total_kv_blocks.max(1) as f64;
     let kv_frac = if s.total_kv_blocks > 0 {
-        s.free_kv_blocks as f64 / s.total_kv_blocks as f64
+        s.free_kv_blocks as f64 / blocks
     } else {
         0.0
     };
     let queue = (s.active_requests + s.queued_requests) as f64;
-    headroom + 0.5 * kv_frac - 0.25 * queue - if s.forced_fp8 { 0.25 } else { 0.0 }
+    // paged-cache debts: host-resident blocks owe a fetch (hard latency),
+    // FP8-demoted blocks owe quality — steer new work away from both
+    let host_debt = s.host_kv_blocks as f64 / blocks;
+    let fp8_debt = s.fp8_kv_blocks as f64 / blocks;
+    headroom + 0.5 * kv_frac - 0.25 * queue
+        - if s.forced_fp8 { 0.25 } else { 0.0 }
+        - 0.3 * host_debt
+        - 0.1 * fp8_debt
 }
 
 /// A routing-policy instance (cursor / RNG state included).
@@ -142,6 +157,8 @@ mod tests {
             ewma_tpot: ewma,
             tpot_target: 0.0333,
             forced_fp8: false,
+            fp8_kv_blocks: 0,
+            host_kv_blocks: 0,
         }
     }
 
@@ -192,5 +209,23 @@ mod tests {
         let mut busy = b;
         busy.queued_requests = 6;
         assert_eq!(r.pick(&[a, busy]), 0);
+    }
+
+    #[test]
+    fn slo_headroom_penalizes_paged_debts() {
+        let mut r = Router::new(RoutingPolicy::SloHeadroom);
+        // all else equal, pending host fetches lose the tie
+        let clean = snap(32, 64, 2, 0.010);
+        let mut hosty = clean;
+        hosty.host_kv_blocks = 16;
+        assert_eq!(r.pick(&[hosty, clean]), 1);
+        // FP8-demoted KV is a milder debt but still breaks ties
+        let mut demoted = clean;
+        demoted.fp8_kv_blocks = 32;
+        assert_eq!(r.pick(&[demoted, clean]), 1);
+        // host debt weighs more than the same fraction of fp8 debt
+        let mut fp8_only = clean;
+        fp8_only.fp8_kv_blocks = 16;
+        assert_eq!(r.pick(&[hosty, fp8_only]), 1);
     }
 }

@@ -70,16 +70,18 @@ impl Scheduler {
             };
         }
 
-        // 2. admit a queued request if KV space allows
+        // 2. admit a queued request if the block budget allows. The
+        // reservation length comes from the cache's admission mode:
+        // conservative full-context (Reserve) or prompt-only paging
+        // (Paged, where decode growth is backed by demotion and
+        // preempt-by-offload). Admission is gated by real free-block
+        // counts alone — there is no slot cap.
         if let Some(r) = requests
             .iter()
             .filter(|r| r.state == RequestState::Queued)
             .min_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap())
         {
-            // conservative admission: reserve the full expected context
-            // (prompt + output budget) so decode growth can never strand
-            // a running request without blocks
-            if kv.can_admit((r.prompt.len() + r.max_new_tokens).min(kv.geo.max_seq)) {
+            if kv.can_admit(kv.admit_len(r.prompt.len(), r.max_new_tokens)) {
                 return IterationPlan::Prefill {
                     id: r.id,
                     chunk: self.chunk_for(r.prompt.len()),
@@ -112,18 +114,20 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::kv::{KvCacheManager, KvGeometry};
+    use crate::coordinator::kv::{KvCacheManager, KvGeometry, KvPressureConfig};
 
-    fn kv(slots: usize, blocks: usize) -> KvCacheManager {
-        KvCacheManager::accounting_only(KvGeometry {
-            n_layers: 1,
-            n_heads: 1,
-            max_seq: 128,
-            head_dim: 1,
-            block_size: 16,
-            total_blocks: blocks,
-            n_slots: slots,
-        })
+    fn kv(blocks: usize) -> KvCacheManager {
+        KvCacheManager::accounting_only(
+            KvGeometry {
+                n_layers: 1,
+                n_heads: 1,
+                max_seq: 128,
+                head_dim: 1,
+                block_size: 16,
+                total_blocks: blocks,
+            },
+            KvPressureConfig::default(),
+        )
     }
 
     fn req(id: u64, state: RequestState, prompt_len: usize, arrival: f64) -> Request {
@@ -135,7 +139,7 @@ mod tests {
     #[test]
     fn prefill_priority_over_decode() {
         let mut s = Scheduler::new(vec![8, 16, 32], 8);
-        let kv = kv(4, 64);
+        let kv = kv(64);
         let requests = vec![
             req(1, RequestState::Decoding, 16, 0.0),
             req(2, RequestState::Queued, 16, 0.1),
@@ -149,7 +153,7 @@ mod tests {
     #[test]
     fn inflight_prefill_continues_first() {
         let mut s = Scheduler::new(vec![8, 16, 32], 8);
-        let kv = kv(4, 64);
+        let kv = kv(64);
         let mut r1 = req(1, RequestState::Prefilling, 48, 0.0);
         r1.prefilled = 32;
         let requests = vec![r1, req(2, RequestState::Queued, 16, 0.1)];
@@ -162,7 +166,7 @@ mod tests {
     #[test]
     fn fcfs_admission() {
         let mut s = Scheduler::new(vec![8], 8);
-        let kv = kv(4, 64);
+        let kv = kv(64);
         let requests = vec![
             req(2, RequestState::Queued, 8, 0.2),
             req(1, RequestState::Queued, 8, 0.1),
@@ -176,8 +180,8 @@ mod tests {
     #[test]
     fn decode_when_kv_full() {
         let mut s = Scheduler::new(vec![8], 8);
-        let mut k = kv(1, 8);
-        let _slot = k.allocate(32).unwrap(); // occupies the only slot
+        let mut k = kv(3);
+        let _seq = k.allocate(32).unwrap(); // 2+1 blocks: exhausts the budget
         let requests = vec![
             req(1, RequestState::Decoding, 8, 0.0),
             req(2, RequestState::Queued, 8, 0.1),
@@ -189,9 +193,24 @@ mod tests {
     }
 
     #[test]
+    fn offloaded_requests_are_not_decoded() {
+        let mut s = Scheduler::new(vec![8], 8);
+        let k = kv(64);
+        let requests = vec![
+            req(1, RequestState::Decoding, 8, 0.0),
+            req(2, RequestState::Offloaded, 8, 0.1),
+        ];
+        assert_eq!(
+            s.plan(&requests, &k),
+            IterationPlan::Decode { ids: vec![1] },
+            "host-resident sequences must wait for their fetch"
+        );
+    }
+
+    #[test]
     fn decode_round_robin_over_cap() {
         let mut s = Scheduler::new(vec![8], 2);
-        let kv = kv(8, 640);
+        let kv = kv(640);
         let requests: Vec<Request> = (0..5)
             .map(|i| req(i, RequestState::Decoding, 8, i as f64))
             .collect();
@@ -211,7 +230,7 @@ mod tests {
     #[test]
     fn idle_when_nothing_runnable() {
         let mut s = Scheduler::new(vec![8], 2);
-        let kv = kv(4, 64);
+        let kv = kv(64);
         assert_eq!(s.plan(&[], &kv), IterationPlan::Idle);
         let requests = vec![req(1, RequestState::Finished, 8, 0.0)];
         assert_eq!(s.plan(&requests, &kv), IterationPlan::Idle);

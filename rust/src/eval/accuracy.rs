@@ -45,7 +45,7 @@ pub fn evaluate_mode(
         .copied()
         .min()
         .unwrap_or(32);
-    let n_slots = rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
+    let max_batch = rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
     let max_seq = rt.manifest.model.max_seq;
     let backend = RealBackend::new(
         rt,
@@ -53,9 +53,8 @@ pub fn evaluate_mode(
             fp16_mode: mode,
             fp8_mode: mode,
         },
-        n_slots,
         // generous block budget: eval contexts are short
-        n_slots * max_seq / 16 + 64,
+        max_batch * max_seq / 16 + 64,
     );
     let mut engine = Engine::new(
         backend,

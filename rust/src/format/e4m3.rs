@@ -235,6 +235,103 @@ mod tests {
 }
 
 #[cfg(test)]
+mod edge_tests {
+    use super::*;
+
+    #[test]
+    fn nan_and_inf_handling() {
+        // every NaN input maps to the canonical NaN pattern (sign dropped
+        // by the fast path's inf/nan branch — only bit 0x7F matters)
+        assert_eq!(encode_sat(f32::NAN) & 0x7F, NAN_PATTERN);
+        assert_eq!(encode_sat(-f32::NAN) & 0x7F, NAN_PATTERN);
+        let weird_nan = f32::from_bits(0x7F80_0001); // signalling payload
+        assert_eq!(encode_sat(weird_nan) & 0x7F, NAN_PATTERN);
+        assert!(decode(NAN_PATTERN).is_nan());
+        assert!(decode(0xFF).is_nan(), "negative NaN pattern decodes NaN");
+        // infinities saturate with their sign (hardware saturation mode)
+        assert_eq!(encode_sat(f32::INFINITY), 0x7E);
+        assert_eq!(encode_sat(f32::NEG_INFINITY), 0xFE);
+        assert_eq!(decode(0x7E), E4M3_MAX);
+        assert_eq!(decode(0xFE), -E4M3_MAX);
+    }
+
+    #[test]
+    fn subnormal_edges() {
+        let q = f32::powi(2.0, -9); // smallest E4M3 subnormal quantum
+        // f32 subnormal inputs are far below q/2: flush to signed zero
+        let f32_min_sub = f32::from_bits(1);
+        assert_eq!(encode_sat(f32_min_sub), 0x00);
+        assert_eq!(encode_sat(-f32_min_sub), 0x80);
+        // every subnormal code roundtrips exactly
+        for k in 1u8..=7 {
+            assert_eq!(encode_sat(k as f32 * q), k);
+            assert_eq!(decode(k), k as f32 * q);
+        }
+        // half-quantum ties go to even: 0.5q -> 0, 1.5q -> 2q
+        assert_eq!(encode_sat(0.5 * q), 0x00);
+        assert_eq!(encode_sat(1.5 * q), 0x02);
+        // just below half the quantum flushes, just above rounds up
+        assert_eq!(encode_sat(0.49 * q), 0x00);
+        assert_eq!(encode_sat(0.51 * q), 0x01);
+        // the subnormal/normal boundary: 7.5q ties up to the smallest
+        // normal 8q = 2^-6 (even), and 8q encodes as normal 0x08
+        assert_eq!(encode_sat(7.5 * q), 0x08);
+        assert_eq!(encode_sat(8.0 * q), 0x08);
+    }
+
+    #[test]
+    fn saturation_at_448() {
+        assert_eq!(encode_sat(448.0), 0x7E);
+        assert_eq!(encode_sat(-448.0), 0xFE);
+        // (448, 464): nearer 448 than the would-be next step -> still 448
+        assert_eq!(encode_sat(448.0001), 0x7E);
+        assert_eq!(encode_sat(463.999), 0x7E);
+        // the tie and beyond saturate (there is no larger finite value)
+        assert_eq!(encode_sat(464.0), 0x7E);
+        assert_eq!(encode_sat(-464.0), 0xFE);
+        assert_eq!(encode_sat(f32::MAX), 0x7E);
+        assert_eq!(encode_sat(-f32::MAX), 0xFE);
+        // rounding must never land on the NaN pattern
+        for x in [447.0f32, 447.9, 448.0, 455.9, 456.0, 460.0] {
+            assert_ne!(encode_sat(x) & 0x7F, NAN_PATTERN, "x={x}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_monotone() {
+        // quantization must preserve ordering over the full finite range,
+        // including the subnormal region and both signs
+        let mut xs: Vec<f32> = Vec::new();
+        let mut x = -500.0f32;
+        while x <= 500.0 {
+            xs.push(x);
+            x += 0.371;
+        }
+        for i in -4000i32..=4000 {
+            xs.push(i as f32 * 1e-3); // dense sweep around zero
+            xs.push(i as f32 * f32::powi(2.0, -12)); // sub-quantum sweep
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f32::NEG_INFINITY;
+        for &xi in &xs {
+            let qv = quantize(xi);
+            assert!(
+                qv >= prev,
+                "monotonicity broken at x={xi}: {qv} < {prev}"
+            );
+            prev = qv;
+        }
+        // decode over sorted positive codes is strictly increasing
+        let mut last = -1.0f32;
+        for b in 0x00..=0x7E {
+            let v = decode(b);
+            assert!(v > last, "code 0x{b:02x} not increasing: {v} <= {last}");
+            last = v;
+        }
+    }
+}
+
+#[cfg(test)]
 mod fastpath_tests {
     use super::*;
     use crate::format::fp16::F16;

@@ -1,0 +1,286 @@
+//! The physical block pool: storage, half-block-unit accounting, id reuse.
+//!
+//! The device budget is `total_blocks` f32-resident blocks, accounted in
+//! **units** of half a block so FP8 demotion has first-class capacity
+//! meaning: an f32 block costs [`UNITS_F32`] = 2, a demoted FP8 block
+//! [`UNITS_FP8`] = 1, and a host-offloaded block 0 (its bytes left the
+//! device). Released block ids go to a free list and are reused.
+
+use super::codec;
+
+/// Index into the pool's block table.
+pub type BlockId = u32;
+
+/// Storage precision of a block's payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockPrecision {
+    F32,
+    Fp8,
+}
+
+/// Device-budget units for an f32-resident block.
+pub const UNITS_F32: usize = 2;
+/// Device-budget units for an FP8-demoted block.
+pub const UNITS_FP8: usize = 1;
+
+/// Block payload. `Acct` both for accounting-only pools (the simulation
+/// backend) and for released blocks awaiting reuse.
+pub(crate) enum BlockPayload {
+    Acct,
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Fp8 {
+        k: Vec<u8>,
+        v: Vec<u8>,
+        scale_k: f32,
+        scale_v: f32,
+    },
+}
+
+pub(crate) struct Block {
+    pub payload: BlockPayload,
+    pub precision: BlockPrecision,
+    /// Offloaded to the host tier (bytes no longer on device).
+    pub on_host: bool,
+}
+
+impl Block {
+    /// Device units this block currently consumes.
+    pub fn units(&self) -> usize {
+        if self.on_host {
+            0
+        } else {
+            match self.precision {
+                BlockPrecision::F32 => UNITS_F32,
+                BlockPrecision::Fp8 => UNITS_FP8,
+            }
+        }
+    }
+}
+
+pub(crate) struct BlockPool {
+    physical: bool,
+    /// Floats per plane (K or V) of one block.
+    block_elems: usize,
+    pub blocks: Vec<Block>,
+    free: Vec<BlockId>,
+    total_units: usize,
+    used_units: usize,
+    /// Live FP8 blocks on device (router load signal).
+    n_fp8_device: usize,
+    /// Live blocks on the host tier.
+    n_host: usize,
+}
+
+impl BlockPool {
+    pub fn new(total_blocks: usize, block_elems: usize, physical: bool) -> BlockPool {
+        BlockPool {
+            physical,
+            block_elems,
+            blocks: Vec::new(),
+            free: Vec::new(),
+            total_units: total_blocks * UNITS_F32,
+            used_units: 0,
+            n_fp8_device: 0,
+            n_host: 0,
+        }
+    }
+
+    pub fn fp8_device_blocks(&self) -> usize {
+        self.n_fp8_device
+    }
+
+    pub fn host_blocks(&self) -> usize {
+        self.n_host
+    }
+
+    pub fn total_units(&self) -> usize {
+        self.total_units
+    }
+
+    pub fn used_units(&self) -> usize {
+        self.used_units
+    }
+
+    pub fn free_units(&self) -> usize {
+        self.total_units - self.used_units
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total_units == 0 {
+            return 1.0;
+        }
+        self.used_units as f64 / self.total_units as f64
+    }
+
+    /// Allocate one f32 block (zero-filled in physical pools); `None` when
+    /// fewer than [`UNITS_F32`] units remain.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        if self.free_units() < UNITS_F32 {
+            return None;
+        }
+        self.used_units += UNITS_F32;
+        let payload = if self.physical {
+            BlockPayload::F32 {
+                k: vec![0.0; self.block_elems],
+                v: vec![0.0; self.block_elems],
+            }
+        } else {
+            BlockPayload::Acct
+        };
+        match self.free.pop() {
+            Some(id) => {
+                let b = &mut self.blocks[id as usize];
+                b.payload = payload;
+                b.precision = BlockPrecision::F32;
+                b.on_host = false;
+                Some(id)
+            }
+            None => {
+                self.blocks.push(Block {
+                    payload,
+                    precision: BlockPrecision::F32,
+                    on_host: false,
+                });
+                Some((self.blocks.len() - 1) as BlockId)
+            }
+        }
+    }
+
+    /// Return a block to the free list, refunding its current units.
+    pub fn release(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id as usize];
+        self.used_units -= b.units();
+        if b.on_host {
+            self.n_host -= 1;
+        } else if b.precision == BlockPrecision::Fp8 {
+            self.n_fp8_device -= 1;
+        }
+        b.payload = BlockPayload::Acct;
+        b.precision = BlockPrecision::F32;
+        b.on_host = false;
+        self.free.push(id);
+    }
+
+    /// Demote an on-device f32 block to FP8, freeing one unit. Physical
+    /// payloads re-encode through the block codec.
+    pub fn demote(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id as usize];
+        debug_assert!(!b.on_host, "demoting a host block");
+        debug_assert_eq!(b.precision, BlockPrecision::F32, "double demotion");
+        if let BlockPayload::F32 { k, v } = std::mem::replace(&mut b.payload, BlockPayload::Acct) {
+            let (k8, scale_k) = codec::encode_block(&k);
+            let (v8, scale_v) = codec::encode_block(&v);
+            b.payload = BlockPayload::Fp8 {
+                k: k8,
+                v: v8,
+                scale_k,
+                scale_v,
+            };
+        }
+        b.precision = BlockPrecision::Fp8;
+        self.used_units -= UNITS_F32 - UNITS_FP8;
+        self.n_fp8_device += 1;
+    }
+
+    /// Move a block to/from the host tier, adjusting unit accounting. The
+    /// caller checks budget before fetching (`on_host = false`).
+    pub fn set_host(&mut self, id: BlockId, on_host: bool) {
+        let b = &mut self.blocks[id as usize];
+        if b.on_host == on_host {
+            return;
+        }
+        if on_host {
+            self.used_units -= b.units();
+            b.on_host = true;
+            self.n_host += 1;
+            if b.precision == BlockPrecision::Fp8 {
+                self.n_fp8_device -= 1;
+            }
+        } else {
+            b.on_host = false;
+            self.used_units += b.units();
+            self.n_host -= 1;
+            if b.precision == BlockPrecision::Fp8 {
+                self.n_fp8_device += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_accounting_across_lifecycle() {
+        let mut p = BlockPool::new(4, 8, false);
+        assert_eq!(p.total_units(), 8);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(p.used_units(), 4);
+        p.demote(a);
+        assert_eq!(p.used_units(), 3);
+        p.set_host(b, true);
+        assert_eq!(p.used_units(), 1);
+        p.set_host(b, false);
+        assert_eq!(p.used_units(), 3);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.used_units(), 0);
+        assert_eq!(p.free_units(), 8);
+    }
+
+    #[test]
+    fn budget_exhaustion_and_fp8_headroom() {
+        let mut p = BlockPool::new(2, 8, false);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        assert!(p.alloc().is_none(), "budget is 2 f32 blocks");
+        // demoting one frees half a block — still not enough for f32
+        p.demote(a);
+        assert_eq!(p.free_units(), 1);
+        assert!(p.alloc().is_none());
+    }
+
+    #[test]
+    fn released_ids_are_reused() {
+        let mut p = BlockPool::new(8, 8, false);
+        let ids: Vec<BlockId> = (0..3).map(|_| p.alloc().unwrap()).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        for &id in &ids {
+            p.release(id);
+        }
+        let again: Vec<BlockId> = (0..3).map(|_| p.alloc().unwrap()).collect();
+        let mut sorted = again.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, ids, "no fresh ids while the free list has some");
+        assert_eq!(p.blocks.len(), 3, "pool did not grow");
+    }
+
+    #[test]
+    fn physical_demote_reencodes_payload() {
+        let mut p = BlockPool::new(2, 4, true);
+        let id = p.alloc().unwrap();
+        if let BlockPayload::F32 { k, v } = &mut p.blocks[id as usize].payload {
+            k.copy_from_slice(&[1.0, -2.0, 0.5, 4.0]);
+            v.copy_from_slice(&[0.0, 8.0, -8.0, 1.0]);
+        } else {
+            panic!("fresh physical block must be f32");
+        }
+        p.demote(id);
+        match &p.blocks[id as usize].payload {
+            BlockPayload::Fp8 { k, v, scale_k, scale_v } => {
+                assert_eq!(k.len(), 4);
+                assert_eq!(v.len(), 4);
+                assert!(*scale_k > 0.0 && *scale_v > 0.0);
+                let mut out = [0.0f32; 4];
+                super::codec::decode_block(k, *scale_k, &mut out);
+                assert!((out[3] - 4.0).abs() / 4.0 < 1e-6, "absmax elem exact-ish");
+            }
+            _ => panic!("demotion must leave an fp8 payload"),
+        }
+    }
+}

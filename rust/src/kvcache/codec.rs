@@ -1,0 +1,111 @@
+//! FP8 block codec: one E4M3 byte per element with a per-block absmax
+//! scale, per plane (K and V are scaled independently).
+//!
+//! A demoted block stores at half the f32-block bytes. Dequantized reads
+//! carry the documented error bound below; the bench
+//! (`repro reproduce kvcache`) and the tests here pin it.
+//!
+//! # Error bound
+//!
+//! With `s = absmax / 448` and `y = x / s`, every finite `y` lands in
+//! E4M3's representable range, so per element:
+//!
+//! * normal targets (`|y| >= 2^-6`): relative error `<= 2^-4` (half ulp of
+//!   the 3-bit mantissa — the same bound `format::e4m3` tests), and
+//! * subnormal targets: absolute error `<= s * 2^-10` (half the subnormal
+//!   quantum `2^-9`, times the scale).
+//!
+//! Combined: `|decode(encode(x)) - x| <= max(|x| / 16, absmax * 2^-10 / 448)`.
+
+use crate::format::e4m3;
+
+/// Encode a block plane to E4M3 bytes; returns `(bytes, scale)` with
+/// `scale = absmax / 448` (1.0 for an all-zero block so decode is exact).
+pub fn encode_block(x: &[f32]) -> (Vec<u8>, f32) {
+    let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if absmax > 0.0 && absmax.is_finite() {
+        absmax / e4m3::E4M3_MAX
+    } else {
+        1.0
+    };
+    let inv = 1.0 / scale;
+    (x.iter().map(|&v| e4m3::encode_sat(v * inv)).collect(), scale)
+}
+
+/// Decode E4M3 bytes back to f32 into `out` (lengths must match).
+pub fn decode_block(bytes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len(), "codec plane length");
+    for (o, &b) in out.iter_mut().zip(bytes) {
+        *o = e4m3::decode(b) * scale;
+    }
+}
+
+/// The documented per-element roundtrip error bound (see module docs).
+pub fn error_bound(x: f32, absmax: f32) -> f32 {
+    let rel = x.abs() / 16.0;
+    let abs_floor = absmax / e4m3::E4M3_MAX * f32::powi(2.0, -10);
+    rel.max(abs_floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn roundtrip(x: &[f32]) -> Vec<f32> {
+        let (bytes, scale) = encode_block(x);
+        assert_eq!(bytes.len(), x.len(), "one byte per element");
+        let mut out = vec![0.0f32; x.len()];
+        decode_block(&bytes, scale, &mut out);
+        out
+    }
+
+    #[test]
+    fn zero_block_roundtrips_exactly() {
+        let x = vec![0.0f32; 64];
+        assert_eq!(roundtrip(&x), x);
+    }
+
+    #[test]
+    fn absmax_element_survives_nearly_exactly() {
+        // the absmax element maps to exactly ±448, so it decodes back to
+        // absmax up to one f32 multiply rounding
+        for absmax in [1e-3f32, 0.7, 3.0, 1e4] {
+            let x = vec![0.1 * absmax, -absmax, 0.5 * absmax];
+            let out = roundtrip(&x);
+            let rel = ((out[1] + absmax) / absmax).abs();
+            assert!(rel < 1e-6, "absmax {absmax}: got {} rel {rel}", out[1]);
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_within_documented_bound() {
+        let mut rng = Pcg64::seeded(4242);
+        for scale in [1e-3f64, 1.0, 300.0] {
+            for _ in 0..50 {
+                let x: Vec<f32> =
+                    (0..256).map(|_| (rng.normal() * scale) as f32).collect();
+                let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let out = roundtrip(&x);
+                for (&xi, &oi) in x.iter().zip(&out) {
+                    let err = (oi - xi).abs();
+                    // small slop for the scale multiply's own rounding
+                    let bound = error_bound(xi, absmax) * (1.0 + 1e-5) + 1e-30;
+                    assert!(
+                        err <= bound,
+                        "x={xi} decoded {oi}: err {err} > bound {bound} (absmax {absmax})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_sign_block_keeps_signs() {
+        let x = vec![-2.0f32, 2.0, -0.5, 0.5];
+        let out = roundtrip(&x);
+        for (&xi, &oi) in x.iter().zip(&out) {
+            assert_eq!(xi.signum(), oi.signum(), "{xi} -> {oi}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! The paged dual-precision KV cache — NestedFP's capacity story.
+//!
+//! Weights were the paper's memory target; at serving time the KV cache is
+//! the *actual* capacity bottleneck that drives the precision-pressure
+//! signal. This subsystem applies the same one-footprint idea to KV state:
+//!
+//! * [`block`] — a physical block pool with PagedAttention-style block
+//!   tables: no per-sequence dense `[L, H, S_max, Dh]` buffers and no hard
+//!   slot cap; a sequence holds exactly the blocks its context needs.
+//!   Device budget is accounted in **half-block units** so an FP8 block
+//!   costs half of an f32 block.
+//! * [`codec`] — the FP8 block codec: cold blocks re-encode through
+//!   [`format::e4m3`](crate::format::e4m3) with one absmax scale per block
+//!   per plane (K and V), storing at half the bytes. Attention then reads
+//!   the dequantized approximation — the runtime analogue of MorphServe's
+//!   KV quantization.
+//! * [`policy`] — when to demote: an LRU watermark policy whose threshold
+//!   tightens when the engine's `PrecisionController` escalates to FP8
+//!   (precision pressure couples weights and KV), plus the admission mode
+//!   (conservative full-context reservation vs. true paging).
+//! * [`offload`] — the host tier: whole sequences can be preempted to host
+//!   memory instead of stalling the queue, with the PCIe-style transfer
+//!   latency charged on the engine's virtual clock.
+//! * [`paged`] — [`PagedKvCache`] ties it together and exposes the
+//!   engine-facing API (admit/allocate/grow/release, scatter/gather through
+//!   block tables, demotion maintenance, offload/fetch, stats).
+//!
+//! Lifecycle of a block:
+//!
+//! ```text
+//!   alloc ──► Device·F32 ──demote (LRU, watermark)──► Device·FP8
+//!                │                                        │
+//!                └──────── offload (whole sequence) ──────┴──► Host
+//!                                                              │
+//!   release ◄── Device·{F32,FP8} ◄──────── fetch (resume) ─────┘
+//! ```
+
+pub mod block;
+pub mod codec;
+pub mod offload;
+pub mod paged;
+pub mod policy;
+
+pub use block::{BlockId, BlockPrecision};
+pub use codec::{decode_block, encode_block};
+pub use offload::HostTier;
+pub use paged::{KvCacheStats, PagedKvCache};
+pub use policy::{AdmissionMode, KvPressureConfig};
+
+/// Geometry of the cache (formerly `coordinator::kv::KvGeometry`; the
+/// dense-store `n_slots` cap is gone — concurrency is bounded only by the
+/// block budget).
+#[derive(Clone, Copy, Debug)]
+pub struct KvGeometry {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// Per-sequence context bound (the AOT executables are fixed-shape, so
+    /// dense gathers still materialize `[L, H, max_seq, Dh]`).
+    pub max_seq: usize,
+    pub head_dim: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+    /// Device budget, expressed in f32-resident blocks. An FP8 block
+    /// consumes half a budget block; a host-offloaded block consumes none.
+    pub total_blocks: usize,
+}
+
+impl KvGeometry {
+    /// Floats per token for one of K/V across all layers and heads.
+    pub fn token_elems(&self) -> usize {
+        self.n_layers * self.n_heads * self.head_dim
+    }
+
+    /// Floats per block for one of K/V (layout `[L, H, block_size, Dh]`).
+    pub fn block_elems(&self) -> usize {
+        self.block_size * self.token_elems()
+    }
+
+    /// Floats per dense-gathered sequence for one of K/V — the fixed
+    /// `[L, H, max_seq, Dh]` shape the AOT executables consume.
+    pub fn slot_elems(&self) -> usize {
+        self.n_layers * self.n_heads * self.max_seq * self.head_dim
+    }
+
+    /// Blocks needed to cover `tokens` context positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_math() {
+        let g = KvGeometry {
+            n_layers: 2,
+            n_heads: 4,
+            max_seq: 64,
+            head_dim: 8,
+            block_size: 16,
+            total_blocks: 32,
+        };
+        assert_eq!(g.token_elems(), 64);
+        assert_eq!(g.block_elems(), 1024);
+        assert_eq!(g.slot_elems(), 4096);
+        assert_eq!(g.blocks_for(0), 0);
+        assert_eq!(g.blocks_for(1), 1);
+        assert_eq!(g.blocks_for(16), 1);
+        assert_eq!(g.blocks_for(17), 2);
+    }
+}

@@ -1,0 +1,954 @@
+//! [`PagedKvCache`] — the engine-facing paged dual-precision KV manager.
+//!
+//! Replaces the seed's dense slot store (`coordinator::kv`): sequences own
+//! block tables over a shared [`BlockPool`](super::block), admission is
+//! gated only by the device block budget (no slot cap), cold blocks demote
+//! to FP8 under precision pressure, and whole sequences can be preempted
+//! to the host tier with transfer latency charged on the virtual clock.
+//!
+//! Write-path invariant: the scheduler only scatters into the tail of a
+//! live sequence, and demotion never touches the last
+//! `hot_tail_blocks` blocks of a sequence's written frontier — so scatters
+//! always land in f32-resident blocks. Gathers dequantize FP8 blocks on
+//! the fly (the approximation cost of demotion); offloaded sequences are
+//! never scheduled, so gathers never see host blocks.
+
+use anyhow::{bail, Result};
+
+use super::block::{BlockId, BlockPool, BlockPrecision, UNITS_F32};
+use super::codec;
+use super::offload::HostTier;
+use super::policy::{AdmissionMode, KvPressureConfig};
+use super::KvGeometry;
+
+/// Cumulative cache statistics (engine metrics mirror these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvCacheStats {
+    /// Blocks demoted to FP8 over the run.
+    pub demoted_blocks: usize,
+    /// Sequence offload events (device → host).
+    pub offload_events: usize,
+    /// Blocks moved to the host tier over the run.
+    pub offloaded_blocks: usize,
+    /// Sequence fetch events (host → device).
+    pub fetch_events: usize,
+    /// Virtual-clock seconds charged for host transfers.
+    pub transfer_seconds: f64,
+    /// Peak concurrently live sequences — the admission-capacity signal
+    /// the `kvcache` bench compares across policies.
+    pub peak_live_seqs: usize,
+    /// Peak device-unit utilization in [0, 1].
+    pub peak_utilization: f64,
+}
+
+struct Seq {
+    table: Vec<BlockId>,
+    /// Valid context length, tokens.
+    len: usize,
+    /// LRU stamp (monotone logical clock; bumped on scatter/gather/grow).
+    last_touch: u64,
+    /// All blocks on the host tier (sequence preempted).
+    offloaded: bool,
+}
+
+/// The paged KV cache.
+pub struct PagedKvCache {
+    pub geo: KvGeometry,
+    policy: KvPressureConfig,
+    physical: bool,
+    pool: BlockPool,
+    seqs: Vec<Option<Seq>>,
+    host: HostTier,
+    clock: u64,
+    fp8_pressure: bool,
+    stats: KvCacheStats,
+    live: usize,
+}
+
+impl PagedKvCache {
+    /// Physical cache: blocks carry real K/V payloads (the PJRT backend).
+    pub fn new(geo: KvGeometry, policy: KvPressureConfig) -> PagedKvCache {
+        Self::build(geo, policy, true)
+    }
+
+    /// Accounting-only cache for the simulation backend: block tables and
+    /// budget math without payloads (demotion/offload still account).
+    pub fn accounting_only(geo: KvGeometry, policy: KvPressureConfig) -> PagedKvCache {
+        Self::build(geo, policy, false)
+    }
+
+    fn build(geo: KvGeometry, policy: KvPressureConfig, physical: bool) -> PagedKvCache {
+        PagedKvCache {
+            pool: BlockPool::new(geo.total_blocks, geo.block_elems(), physical),
+            host: HostTier::new(policy.host_bw_gbps, policy.transfer_base_s),
+            geo,
+            policy,
+            physical,
+            seqs: Vec::new(),
+            clock: 0,
+            fp8_pressure: false,
+            stats: KvCacheStats::default(),
+            live: 0,
+        }
+    }
+
+    // ---- introspection ----------------------------------------------
+
+    pub fn policy(&self) -> &KvPressureConfig {
+        &self.policy
+    }
+
+    pub fn stats(&self) -> KvCacheStats {
+        self.stats
+    }
+
+    /// Free budget expressed in f32-equivalent blocks (router signal).
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_units() / UNITS_F32
+    }
+
+    /// Free budget in raw half-block units (admission math).
+    pub fn free_units(&self) -> usize {
+        self.pool.free_units()
+    }
+
+    /// Units an admission reserving `len` tokens must find free.
+    pub fn admit_units(&self, len: usize) -> usize {
+        (self.geo.blocks_for(len) + 1) * UNITS_F32
+    }
+
+    /// Device units one (non-offloaded) sequence currently occupies —
+    /// what preempting it to the host tier would free.
+    pub fn seq_device_units(&self, seq: usize) -> usize {
+        self.seq(seq)
+            .table
+            .iter()
+            .map(|&id| self.pool.blocks[id as usize].units())
+            .sum()
+    }
+
+    /// Device-unit utilization in [0,1] — the precision-pressure signal.
+    pub fn block_utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    /// Currently live (allocated, device- or host-resident) sequences.
+    pub fn live_seqs(&self) -> usize {
+        self.live
+    }
+
+    /// Device blocks currently stored demoted to FP8.
+    pub fn fp8_blocks(&self) -> usize {
+        self.pool.fp8_device_blocks()
+    }
+
+    /// Blocks currently on the host tier.
+    pub fn host_blocks(&self) -> usize {
+        self.pool.host_blocks()
+    }
+
+    /// Blocks held by one sequence.
+    pub fn seq_blocks(&self, seq: usize) -> usize {
+        self.seq(seq).table.len()
+    }
+
+    /// Valid context length of one sequence.
+    pub fn seq_len(&self, seq: usize) -> usize {
+        self.seq(seq).len
+    }
+
+    /// FP8-demoted device blocks held by one sequence.
+    pub fn seq_fp8_blocks(&self, seq: usize) -> usize {
+        self.seq(seq)
+            .table
+            .iter()
+            .filter(|&&id| {
+                let b = &self.pool.blocks[id as usize];
+                !b.on_host && b.precision == BlockPrecision::Fp8
+            })
+            .count()
+    }
+
+    pub fn is_offloaded(&self, seq: usize) -> bool {
+        self.seq(seq).offloaded
+    }
+
+    fn seq(&self, i: usize) -> &Seq {
+        self.seqs[i].as_ref().expect("dead kv sequence handle")
+    }
+
+    fn seq_mut(&mut self, i: usize) -> &mut Seq {
+        self.seqs[i].as_mut().expect("dead kv sequence handle")
+    }
+
+    fn touch(&mut self, seq: usize) {
+        self.clock += 1;
+        let t = self.clock;
+        self.seq_mut(seq).last_touch = t;
+    }
+
+    fn note_utilization(&mut self) {
+        let u = self.pool.utilization();
+        if u > self.stats.peak_utilization {
+            self.stats.peak_utilization = u;
+        }
+    }
+
+    /// Bytes one block occupies at `precision` (K + V planes).
+    fn block_bytes(&self, precision: BlockPrecision) -> usize {
+        match precision {
+            BlockPrecision::F32 => self.geo.block_elems() * 4 * 2,
+            // two u8 planes + two f32 scales
+            BlockPrecision::Fp8 => self.geo.block_elems() * 2 + 8,
+        }
+    }
+
+    // ---- admission / lifecycle --------------------------------------
+
+    /// The reservation length admission uses for a request, per the
+    /// configured [`AdmissionMode`].
+    pub fn admit_len(&self, prompt_len: usize, max_new_tokens: usize) -> usize {
+        match self.policy.admission {
+            AdmissionMode::Reserve => (prompt_len + max_new_tokens).min(self.geo.max_seq),
+            AdmissionMode::Paged => prompt_len.min(self.geo.max_seq),
+        }
+    }
+
+    /// Can a sequence reserving `len` tokens (+1 headroom block) be
+    /// admitted right now, from real free-block counts alone?
+    pub fn can_admit(&self, len: usize) -> bool {
+        self.pool.free_units() >= self.admit_units(len)
+    }
+
+    /// Allocate a sequence reserving `reserve_len` tokens of f32 blocks
+    /// plus one headroom block; returns the sequence handle.
+    pub fn allocate(&mut self, reserve_len: usize) -> Result<usize> {
+        if !self.can_admit(reserve_len) {
+            bail!(
+                "kv exhausted: {} free blocks, {} needed",
+                self.free_blocks(),
+                self.geo.blocks_for(reserve_len) + 1
+            );
+        }
+        let n = self.geo.blocks_for(reserve_len) + 1;
+        let mut table = Vec::with_capacity(n);
+        for _ in 0..n {
+            table.push(self.pool.alloc().expect("can_admit checked the budget"));
+        }
+        self.clock += 1;
+        let entry = Seq {
+            table,
+            len: 0,
+            last_touch: self.clock,
+            offloaded: false,
+        };
+        let idx = match self.seqs.iter().position(|s| s.is_none()) {
+            Some(i) => {
+                self.seqs[i] = Some(entry);
+                i
+            }
+            None => {
+                self.seqs.push(Some(entry));
+                self.seqs.len() - 1
+            }
+        };
+        self.live += 1;
+        if self.live > self.stats.peak_live_seqs {
+            self.stats.peak_live_seqs = self.live;
+        }
+        self.note_utilization();
+        Ok(idx)
+    }
+
+    /// Grow a sequence's block table to cover `new_len` tokens. Under
+    /// pressure this demotes cold blocks first; it fails only when even
+    /// demotion cannot free enough budget (the engine then preempts a
+    /// sequence to the host tier).
+    pub fn grow(&mut self, seq: usize, new_len: usize) -> Result<()> {
+        if new_len > self.geo.max_seq {
+            bail!(
+                "sequence length {new_len} exceeds max_seq {}",
+                self.geo.max_seq
+            );
+        }
+        if self.seq(seq).offloaded {
+            bail!("grow on offloaded seq {seq}");
+        }
+        let need = self.geo.blocks_for(new_len);
+        let have = self.seq(seq).table.len();
+        if need > have {
+            let extra = need - have;
+            if self.pool.free_units() < extra * UNITS_F32 {
+                self.demote_until_units(extra * UNITS_F32);
+            }
+            if self.pool.free_units() < extra * UNITS_F32 {
+                bail!("kv block budget exhausted growing seq {seq}");
+            }
+            for _ in 0..extra {
+                let id = self.pool.alloc().expect("checked above");
+                self.seq_mut(seq).table.push(id);
+            }
+        }
+        self.seq_mut(seq).len = new_len;
+        self.touch(seq);
+        self.note_utilization();
+        Ok(())
+    }
+
+    /// Release a sequence and all its blocks (device and host).
+    pub fn release(&mut self, seq: usize) {
+        let s = self.seqs[seq].take().expect("releasing free seq");
+        self.live -= 1;
+        let mut host_blocks = 0usize;
+        let mut host_bytes = 0usize;
+        for id in s.table {
+            let (on_host, prec) = {
+                let b = &self.pool.blocks[id as usize];
+                (b.on_host, b.precision)
+            };
+            if on_host {
+                host_blocks += 1;
+                host_bytes += self.block_bytes(prec);
+            }
+            self.pool.release(id);
+        }
+        if host_blocks > 0 {
+            self.host.discard(host_blocks, host_bytes);
+        }
+    }
+
+    // ---- demotion (precision pressure) ------------------------------
+
+    /// Couple the cache to the engine's precision controller: FP8
+    /// iterations tighten the demotion watermark.
+    pub fn set_precision_pressure(&mut self, fp8: bool) {
+        self.fp8_pressure = fp8;
+    }
+
+    /// Eligible demotion targets, coldest first: LRU by sequence touch,
+    /// then lowest block index (oldest context first). The write frontier
+    /// (`hot_tail_blocks`, minimum 1) is never eligible, so scatters stay
+    /// f32-safe; reserved-but-unwritten blocks sit beyond the frontier
+    /// and are likewise excluded.
+    fn demote_candidates(&self) -> Vec<(u64, usize, usize)> {
+        let hot_tail = self.policy.hot_tail_blocks.max(1);
+        let mut out = Vec::new();
+        for (si, s) in self.seqs.iter().enumerate() {
+            let Some(s) = s else { continue };
+            if s.offloaded {
+                continue;
+            }
+            let frontier = self.geo.blocks_for(s.len);
+            for (bi, &id) in s.table.iter().enumerate() {
+                if bi + hot_tail >= frontier {
+                    break;
+                }
+                let b = &self.pool.blocks[id as usize];
+                if b.on_host || b.precision != BlockPrecision::F32 {
+                    continue;
+                }
+                out.push((s.last_touch, si, bi));
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    fn demote_until_units(&mut self, want_free: usize) {
+        if !self.policy.demote_enabled || self.pool.free_units() >= want_free {
+            return;
+        }
+        for (_, si, bi) in self.demote_candidates() {
+            if self.pool.free_units() >= want_free {
+                break;
+            }
+            let id = self.seq(si).table[bi];
+            self.pool.demote(id);
+            self.stats.demoted_blocks += 1;
+        }
+    }
+
+    /// Watermark maintenance, called once per engine iteration: demote
+    /// LRU-cold blocks until utilization falls to the active watermark.
+    /// Returns the number of blocks demoted.
+    pub fn maintain(&mut self) -> usize {
+        if !self.policy.demote_enabled {
+            return 0;
+        }
+        let w = self.policy.watermark(self.fp8_pressure);
+        if self.pool.utilization() <= w {
+            return 0;
+        }
+        let target_used = (w * self.pool.total_units() as f64).floor() as usize;
+        let before = self.stats.demoted_blocks;
+        for (_, si, bi) in self.demote_candidates() {
+            if self.pool.used_units() <= target_used {
+                break;
+            }
+            let id = self.seq(si).table[bi];
+            self.pool.demote(id);
+            self.stats.demoted_blocks += 1;
+        }
+        self.stats.demoted_blocks - before
+    }
+
+    /// Admission relief: demote cold blocks (watermark-independent) until
+    /// a reservation of `len` tokens fits. Returns whether it now fits.
+    pub fn relieve_for_admit(&mut self, len: usize) -> bool {
+        if self.can_admit(len) {
+            return true;
+        }
+        let needed = self.admit_units(len);
+        self.demote_until_units(needed);
+        self.can_admit(len)
+    }
+
+    // ---- host tier --------------------------------------------------
+
+    /// Would a fetch of this offloaded sequence fit right now? Includes
+    /// one f32 block of headroom so the first post-resume grow cannot
+    /// immediately strand it (waived when the sequence alone fills the
+    /// budget).
+    pub fn can_fetch(&self, seq: usize) -> bool {
+        let s = self.seq(seq);
+        if !s.offloaded {
+            return true;
+        }
+        let units = self.stored_units(seq);
+        let headroom = if units + UNITS_F32 <= self.pool.total_units() {
+            UNITS_F32
+        } else {
+            0
+        };
+        self.pool.free_units() >= units + headroom
+    }
+
+    /// Device units this sequence's blocks occupy at their stored
+    /// precision (what a fetch must charge).
+    fn stored_units(&self, seq: usize) -> usize {
+        self.seq(seq)
+            .table
+            .iter()
+            .map(|&id| match self.pool.blocks[id as usize].precision {
+                BlockPrecision::F32 => UNITS_F32,
+                BlockPrecision::Fp8 => 1,
+            })
+            .sum()
+    }
+
+    /// Preempt a whole sequence to the host tier. Frees its device units
+    /// and returns the transfer seconds to charge on the virtual clock.
+    pub fn offload_sequence(&mut self, seq: usize) -> Result<f64> {
+        if !self.policy.offload_enabled {
+            bail!("host offload tier disabled");
+        }
+        if self.seq(seq).offloaded {
+            bail!("seq {seq} already offloaded");
+        }
+        self.seq_mut(seq).offloaded = true;
+        let table = self.seq(seq).table.clone();
+        let mut bytes = 0usize;
+        for &id in &table {
+            bytes += self.block_bytes(self.pool.blocks[id as usize].precision);
+            self.pool.set_host(id, true);
+        }
+        let dt = self.host.deposit(table.len(), bytes);
+        self.stats.offload_events += 1;
+        self.stats.offloaded_blocks += table.len();
+        self.stats.transfer_seconds += dt;
+        Ok(dt)
+    }
+
+    /// Bring an offloaded sequence back to the device (demoting cold
+    /// blocks if that is what it takes). Returns the transfer seconds.
+    pub fn fetch_sequence(&mut self, seq: usize) -> Result<f64> {
+        if !self.seq(seq).offloaded {
+            bail!("seq {seq} is not offloaded");
+        }
+        let needed = self.stored_units(seq);
+        if self.pool.free_units() < needed {
+            self.demote_until_units(needed);
+        }
+        if self.pool.free_units() < needed {
+            bail!("no device room to fetch seq {seq} back from the host tier");
+        }
+        let table = self.seq(seq).table.clone();
+        let mut bytes = 0usize;
+        for &id in &table {
+            bytes += self.block_bytes(self.pool.blocks[id as usize].precision);
+            self.pool.set_host(id, false);
+        }
+        self.seq_mut(seq).offloaded = false;
+        self.touch(seq);
+        let dt = self.host.withdraw(table.len(), bytes);
+        self.stats.fetch_events += 1;
+        self.stats.transfer_seconds += dt;
+        self.note_utilization();
+        Ok(dt)
+    }
+
+    // ---- write path -------------------------------------------------
+
+    fn locate(&self, seq: usize, pos: usize) -> (BlockId, usize) {
+        let s = self.seq(seq);
+        let bi = pos / self.geo.block_size;
+        assert!(
+            bi < s.table.len(),
+            "position {pos} beyond held blocks of seq {seq}"
+        );
+        (s.table[bi], pos % self.geo.block_size)
+    }
+
+    /// Scatter new K/V rows for `count` tokens starting at `start_pos`.
+    /// `new_k`/`new_v` layout: `[L, T, H, Dh]` (prefill) flattened.
+    pub fn scatter_prefill(
+        &mut self,
+        seq: usize,
+        start_pos: usize,
+        count: usize,
+        new_k: &[f32],
+        new_v: &[f32],
+    ) {
+        let g = self.geo;
+        let (l, h, dh, bs) = (g.n_layers, g.n_heads, g.head_dim, g.block_size);
+        debug_assert_eq!(new_k.len(), l * count * h * dh, "new_k length");
+        debug_assert_eq!(new_v.len(), l * count * h * dh, "new_v length");
+        self.touch(seq);
+        if !self.physical {
+            return;
+        }
+        for t in 0..count {
+            let pos = start_pos + t;
+            let (id, off) = self.locate(seq, pos);
+            let block = &mut self.pool.blocks[id as usize];
+            let super::block::BlockPayload::F32 { k, v } = &mut block.payload else {
+                panic!("scatter into demoted/offloaded block (seq {seq}, pos {pos})");
+            };
+            for li in 0..l {
+                for hi in 0..h {
+                    let src = ((li * count + t) * h + hi) * dh;
+                    let dst = ((li * h + hi) * bs + off) * dh;
+                    k[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
+                    v[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
+                }
+            }
+        }
+    }
+
+    /// Scatter one decode token's K/V. `new_k`/`new_v` layout: `[L, H, Dh]`
+    /// for this sequence (already sliced out of the batch output).
+    pub fn scatter_decode(&mut self, seq: usize, pos: usize, new_k: &[f32], new_v: &[f32]) {
+        let g = self.geo;
+        let (l, h, dh, bs) = (g.n_layers, g.n_heads, g.head_dim, g.block_size);
+        debug_assert_eq!(new_k.len(), l * h * dh, "new_k length");
+        debug_assert_eq!(new_v.len(), l * h * dh, "new_v length");
+        self.touch(seq);
+        if !self.physical {
+            return;
+        }
+        let (id, off) = self.locate(seq, pos);
+        let block = &mut self.pool.blocks[id as usize];
+        let super::block::BlockPayload::F32 { k, v } = &mut block.payload else {
+            panic!("scatter into demoted/offloaded block (seq {seq}, pos {pos})");
+        };
+        for li in 0..l {
+            for hi in 0..h {
+                let src = (li * h + hi) * dh;
+                let dst = ((li * h + hi) * bs + off) * dh;
+                k[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
+                v[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
+            }
+        }
+    }
+
+    // ---- read path --------------------------------------------------
+
+    /// Gather one sequence into the dense `[L, H, max_seq, Dh]` shape the
+    /// fixed-shape executables consume; FP8 blocks dequantize on the fly.
+    pub fn gather_seq(&mut self, seq: usize, out_k: &mut Vec<f32>, out_v: &mut Vec<f32>) {
+        let per = self.geo.slot_elems();
+        out_k.clear();
+        out_k.resize(per, 0.0);
+        out_v.clear();
+        out_v.resize(per, 0.0);
+        self.touch(seq);
+        if self.physical {
+            self.gather_into(seq, out_k, out_v);
+        }
+    }
+
+    /// Gather the full padded batch cache for a decode call:
+    /// output layout `[B, L, H, max_seq, Dh]` with `B = seqs.len()`.
+    pub fn gather_batch(&mut self, seqs: &[usize], out_k: &mut Vec<f32>, out_v: &mut Vec<f32>) {
+        let per = self.geo.slot_elems();
+        out_k.clear();
+        out_k.resize(per * seqs.len(), 0.0);
+        out_v.clear();
+        out_v.resize(per * seqs.len(), 0.0);
+        for (i, &sq) in seqs.iter().enumerate() {
+            self.touch(sq);
+            if self.physical {
+                let (ks, vs) = (
+                    &mut out_k[i * per..(i + 1) * per],
+                    &mut out_v[i * per..(i + 1) * per],
+                );
+                self.gather_into(sq, ks, vs);
+            }
+        }
+    }
+
+    fn gather_into(&self, seq: usize, out_k: &mut [f32], out_v: &mut [f32]) {
+        let g = self.geo;
+        let (l, h, s_max, dh, bs) = (g.n_layers, g.n_heads, g.max_seq, g.head_dim, g.block_size);
+        let sq = self.seq(seq);
+        assert!(!sq.offloaded, "gather of offloaded seq {seq}");
+        // dequant scratch, allocated only if the sequence holds FP8 blocks
+        let mut scratch: Vec<f32> = Vec::new();
+        for (bi, &id) in sq.table.iter().enumerate() {
+            let start = bi * bs;
+            if start >= s_max {
+                break; // the headroom block can sit past max_seq
+            }
+            let n_tok = bs.min(s_max - start);
+            match &self.pool.blocks[id as usize].payload {
+                super::block::BlockPayload::Acct => {}
+                super::block::BlockPayload::F32 { k, v } => {
+                    copy_block_rows(k, out_k, l, h, bs, dh, s_max, start, n_tok);
+                    copy_block_rows(v, out_v, l, h, bs, dh, s_max, start, n_tok);
+                }
+                super::block::BlockPayload::Fp8 {
+                    k,
+                    v,
+                    scale_k,
+                    scale_v,
+                } => {
+                    if scratch.is_empty() {
+                        scratch = vec![0.0; g.block_elems()];
+                    }
+                    codec::decode_block(k, *scale_k, &mut scratch);
+                    copy_block_rows(&scratch, out_k, l, h, bs, dh, s_max, start, n_tok);
+                    codec::decode_block(v, *scale_v, &mut scratch);
+                    copy_block_rows(&scratch, out_v, l, h, bs, dh, s_max, start, n_tok);
+                }
+            }
+        }
+    }
+}
+
+/// Copy one block plane (`[L, H, bs, Dh]`) into a dense plane
+/// (`[L, H, s_max, Dh]`) at token offset `start`, `n_tok` tokens.
+#[allow(clippy::too_many_arguments)]
+fn copy_block_rows(
+    src: &[f32],
+    dst: &mut [f32],
+    l: usize,
+    h: usize,
+    bs: usize,
+    dh: usize,
+    s_max: usize,
+    start: usize,
+    n_tok: usize,
+) {
+    for li in 0..l {
+        for hi in 0..h {
+            let so = ((li * h + hi) * bs) * dh;
+            let d = ((li * h + hi) * s_max + start) * dh;
+            dst[d..d + n_tok * dh].copy_from_slice(&src[so..so + n_tok * dh]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> KvGeometry {
+        KvGeometry {
+            n_layers: 2,
+            n_heads: 2,
+            max_seq: 32,
+            head_dim: 4,
+            block_size: 8,
+            total_blocks: 16,
+        }
+    }
+
+    fn acct(policy: KvPressureConfig) -> PagedKvCache {
+        PagedKvCache::accounting_only(geo(), policy)
+    }
+
+    #[test]
+    fn allocate_grow_release_accounting() {
+        let mut kv = acct(KvPressureConfig::dense_baseline());
+        assert_eq!(kv.free_blocks(), 16);
+        let s0 = kv.allocate(10).unwrap(); // 2 blocks prompt + 1 headroom
+        assert_eq!(kv.free_blocks(), 13);
+        kv.grow(s0, 10).unwrap(); // within held
+        assert_eq!(kv.free_blocks(), 13);
+        kv.grow(s0, 25).unwrap(); // 4 blocks needed, held 3 -> +1
+        assert_eq!(kv.free_blocks(), 12);
+        kv.release(s0);
+        assert_eq!(kv.free_blocks(), 16);
+        assert_eq!(kv.live_seqs(), 0);
+    }
+
+    #[test]
+    fn admission_limits_come_from_blocks_alone() {
+        let mut kv = acct(KvPressureConfig::dense_baseline());
+        let _a = kv.allocate(32).unwrap(); // 4+1 = 5 blocks
+        let _b = kv.allocate(32).unwrap(); // 5 blocks (10 total)
+        let _c = kv.allocate(32).unwrap(); // 5 blocks (15 total)
+        assert_eq!(kv.live_seqs(), 3);
+        assert!(!kv.can_admit(32), "only 1 block free");
+        assert!(!kv.can_admit(1), "needs 2 blocks (1 + headroom)");
+        assert!(kv.allocate(1).is_err());
+    }
+
+    #[test]
+    fn grow_respects_max_seq_and_budget() {
+        let mut kv = acct(KvPressureConfig::dense_baseline());
+        let s = kv.allocate(8).unwrap();
+        assert!(kv.grow(s, 33).is_err()); // > max_seq
+        let _other = kv.allocate(32).unwrap();
+        let _other2 = kv.allocate(32).unwrap();
+        // 16 - 2 - 5 - 5 = 4 free; growing s to 32 needs 4 held vs 2 -> +2
+        kv.grow(s, 32).unwrap();
+        assert_eq!(kv.free_blocks(), 2);
+    }
+
+    #[test]
+    fn allocator_reuses_released_blocks_and_seq_ids() {
+        let mut kv = acct(KvPressureConfig::dense_baseline());
+        let a = kv.allocate(16).unwrap();
+        assert_eq!(a, 0);
+        let held = kv.seq_blocks(a);
+        kv.release(a);
+        let b = kv.allocate(16).unwrap();
+        assert_eq!(b, 0, "sequence handle reused");
+        assert_eq!(kv.seq_blocks(b), held);
+        assert_eq!(kv.free_blocks(), 16 - held, "no budget leaked by reuse");
+    }
+
+    #[test]
+    fn utilization_signal() {
+        let mut kv = acct(KvPressureConfig::dense_baseline());
+        assert_eq!(kv.block_utilization(), 0.0);
+        let _s = kv.allocate(32).unwrap();
+        assert!((kv.block_utilization() - 5.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn demotion_follows_lru_order() {
+        // two sequences with demotable prefixes; a tight target demotes
+        // exactly one block — it must come from the LRU (older-touched) seq
+        let mut kv = acct(KvPressureConfig {
+            demote_watermark_fp8: 0.48, // floor(0.48 * 32) = 15 of 16 used
+            ..KvPressureConfig::demote_only()
+        });
+        let a = kv.allocate(24).unwrap(); // 4 blocks
+        kv.grow(a, 24).unwrap(); // frontier 3 -> blocks 0,1 eligible
+        let b = kv.allocate(24).unwrap();
+        kv.grow(b, 24).unwrap(); // touched after a
+        assert_eq!(kv.block_utilization(), 0.5);
+        assert_eq!(kv.maintain(), 0, "below the fp16 watermark");
+        kv.set_precision_pressure(true);
+        assert_eq!(kv.maintain(), 1, "one demotion reaches the target");
+        assert_eq!(kv.seq_fp8_blocks(a), 1, "LRU sequence demoted first");
+        assert_eq!(kv.seq_fp8_blocks(b), 0);
+        // touching a (a gather) makes b the LRU victim for the next one
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        kv.gather_seq(a, &mut k, &mut v);
+        let mut tight = kv;
+        tight.policy.demote_watermark_fp8 = 0.40; // floor -> 12; used 15
+        assert!(tight.maintain() >= 1);
+        assert!(tight.seq_fp8_blocks(b) >= 1, "b demoted after a was touched");
+    }
+
+    #[test]
+    fn demotion_expands_admission_capacity() {
+        // the acceptance property at cache level: same block budget, FP8
+        // demotion admits more concurrent sequences than all-f32
+        let run = |policy: KvPressureConfig| -> usize {
+            let mut kv = acct(policy);
+            let mut admitted = 0;
+            for _ in 0..8 {
+                if !kv.relieve_for_admit(16) {
+                    break;
+                }
+                let s = kv.allocate(16).unwrap();
+                kv.grow(s, 16).unwrap(); // write the blocks so they can cool
+                admitted += 1;
+            }
+            admitted
+        };
+        let base = run(KvPressureConfig::dense_baseline());
+        let demote = run(KvPressureConfig::demote_only());
+        assert!(
+            demote > base,
+            "fp8 demotion must admit more: {demote} !> {base}"
+        );
+    }
+
+    #[test]
+    fn offload_charges_the_documented_transfer_latency() {
+        let policy = KvPressureConfig::default();
+        let mut kv = acct(policy);
+        let s = kv.allocate(32).unwrap(); // 5 blocks
+        kv.grow(s, 32).unwrap();
+        let free_before = kv.free_blocks();
+        let dt = kv.offload_sequence(s).unwrap();
+        let bytes = 5 * (geo().block_elems() * 4 * 2);
+        let expect = policy.transfer_base_s + bytes as f64 / (policy.host_bw_gbps * 1e9);
+        assert!((dt - expect).abs() < 1e-15, "charged {dt}, expected {expect}");
+        assert!(kv.is_offloaded(s));
+        assert_eq!(kv.free_blocks(), 16, "host blocks stop counting");
+        assert_eq!(kv.host_blocks(), 5);
+        assert!(kv.grow(s, 32).is_err(), "offloaded seqs cannot grow");
+
+        assert!(kv.can_fetch(s));
+        let dt2 = kv.fetch_sequence(s).unwrap();
+        assert!((dt2 - expect).abs() < 1e-15, "fetch charges the same bill");
+        assert_eq!(kv.free_blocks(), free_before);
+        assert_eq!(kv.host_blocks(), 0);
+        let st = kv.stats();
+        assert_eq!(st.offload_events, 1);
+        assert_eq!(st.fetch_events, 1);
+        assert_eq!(st.offloaded_blocks, 5);
+        assert!((st.transfer_seconds - dt - dt2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn release_while_offloaded_clears_the_host_tier() {
+        let mut kv = acct(KvPressureConfig::default());
+        let s = kv.allocate(16).unwrap();
+        kv.grow(s, 16).unwrap();
+        kv.offload_sequence(s).unwrap();
+        kv.release(s);
+        assert_eq!(kv.host_blocks(), 0);
+        assert_eq!(kv.free_blocks(), 16);
+        assert_eq!(kv.live_seqs(), 0);
+    }
+
+    #[test]
+    fn can_fetch_requires_device_room() {
+        let mut kv = acct(KvPressureConfig {
+            demote_enabled: false,
+            ..KvPressureConfig::default()
+        });
+        let a = kv.allocate(32).unwrap(); // 5 blocks
+        kv.grow(a, 32).unwrap();
+        kv.offload_sequence(a).unwrap();
+        // fill the device: 3 x 5 blocks = 15 of 16
+        let mut held = Vec::new();
+        for _ in 0..3 {
+            held.push(kv.allocate(32).unwrap());
+        }
+        assert!(!kv.can_fetch(a), "1 free block cannot host 5");
+        kv.release(held.pop().unwrap());
+        assert!(kv.can_fetch(a), "6 free blocks fit 5 + headroom");
+        kv.fetch_sequence(a).unwrap();
+    }
+
+    // ---- physical-store tests ---------------------------------------
+
+    fn physical() -> PagedKvCache {
+        PagedKvCache::new(geo(), KvPressureConfig::dense_baseline())
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let mut kv = physical();
+        let s = kv.allocate(4).unwrap();
+        let g = geo();
+        let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
+        let count = 3;
+        let mut nk = vec![0.0f32; l * count * h * dh];
+        for (i, v) in nk.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let nv: Vec<f32> = nk.iter().map(|x| -x).collect();
+        kv.scatter_prefill(s, 0, count, &nk, &nv);
+        kv.grow(s, count).unwrap();
+
+        // token at layer 1, t=2, head 1 in the dense gather
+        let (mut dk, mut dv) = (Vec::new(), Vec::new());
+        kv.gather_seq(s, &mut dk, &mut dv);
+        let src = ((1 * count + 2) * h + 1) * dh;
+        let dst = ((1 * h + 1) * g.max_seq + 2) * dh;
+        assert_eq!(dk[dst..dst + dh], nk[src..src + dh]);
+        assert_eq!(dv[dst], -nk[src]);
+
+        // decode token at pos 3
+        let tk: Vec<f32> = (0..l * h * dh).map(|i| 100.0 + i as f32).collect();
+        let tv: Vec<f32> = tk.iter().map(|x| x + 0.5).collect();
+        kv.scatter_decode(s, 3, &tk, &tv);
+        kv.grow(s, 4).unwrap();
+        let (mut bk, mut bv) = (Vec::new(), Vec::new());
+        kv.gather_batch(&[s], &mut bk, &mut bv);
+        assert_eq!(bk.len(), kv.geo.slot_elems());
+        let d = ((0 * h + 0) * g.max_seq + 3) * dh;
+        assert_eq!(bk[d], 100.0);
+        assert_eq!(bk[dst], nk[src], "prefill data still intact");
+    }
+
+    #[test]
+    fn demoted_blocks_gather_within_codec_bounds() {
+        let mut kv = PagedKvCache::new(geo(), KvPressureConfig::demote_only());
+        let s = kv.allocate(24).unwrap(); // 4 blocks
+        let g = geo();
+        let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
+        let count = 24;
+        let nk: Vec<f32> = (0..l * count * h * dh)
+            .map(|i| ((i % 17) as f32 - 8.0) * 0.25)
+            .collect();
+        let nv: Vec<f32> = nk.iter().map(|x| x * -0.5).collect();
+        kv.scatter_prefill(s, 0, count, &nk, &nv);
+        kv.grow(s, count).unwrap();
+
+        let (mut exact_k, mut exact_v) = (Vec::new(), Vec::new());
+        kv.gather_seq(s, &mut exact_k, &mut exact_v);
+
+        // force-demote everything eligible (frontier 3, hot tail 1 -> 2)
+        kv.set_precision_pressure(true);
+        kv.policy.demote_watermark_fp8 = 0.0;
+        let demoted = kv.maintain();
+        assert_eq!(demoted, 2);
+        assert_eq!(kv.seq_fp8_blocks(s), 2);
+
+        let (mut qk, mut qv) = (Vec::new(), Vec::new());
+        kv.gather_seq(s, &mut qk, &mut qv);
+        let absmax = nk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for (i, (&e, &q)) in exact_k.iter().zip(&qk).enumerate() {
+            let bound = super::codec::error_bound(e, absmax) * (1.0 + 1e-5) + 1e-30;
+            assert!(
+                (e - q).abs() <= bound,
+                "elem {i}: exact {e} quantized {q}"
+            );
+        }
+        // the hot tail stayed f32: tokens 16.. of the dense K are exact
+        let tail = ((0 * h + 0) * g.max_seq + 17) * dh;
+        assert_eq!(qk[tail..tail + dh], exact_k[tail..tail + dh]);
+    }
+
+    #[test]
+    #[should_panic(expected = "new_v length")]
+    fn scatter_prefill_validates_new_v() {
+        let mut kv = physical();
+        let s = kv.allocate(8).unwrap();
+        let g = geo();
+        let n = g.n_layers * 2 * g.n_heads * g.head_dim;
+        let nk = vec![0.0f32; n];
+        let nv = vec![0.0f32; n - 1]; // wrong
+        kv.scatter_prefill(s, 0, 2, &nk, &nv);
+    }
+
+    #[test]
+    #[should_panic(expected = "new_v length")]
+    fn scatter_decode_validates_new_v() {
+        let mut kv = physical();
+        let s = kv.allocate(8).unwrap();
+        let g = geo();
+        let n = g.n_layers * g.n_heads * g.head_dim;
+        kv.scatter_decode(s, 0, &vec![0.0f32; n], &vec![0.0f32; n + 1]);
+    }
+}

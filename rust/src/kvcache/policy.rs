@@ -1,0 +1,126 @@
+//! Precision-pressure and admission policy for the paged KV cache.
+//!
+//! Demotion is the KV half of the paper's dual-precision story: as block
+//! utilization rises past a watermark, the cache re-encodes LRU-cold
+//! blocks to FP8 (half the units). When the engine's `PrecisionController`
+//! escalates to FP8 the watermark tightens — the same pressure signal that
+//! switches weight kernels also compresses cold KV state.
+
+/// How admission reserves capacity for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Reserve the full expected context (prompt + output budget) at
+    /// admission — the seed engine's conservative rule. Decode growth can
+    /// never strand a running request, so this mode is safe without the
+    /// host tier.
+    Reserve,
+    /// Reserve only the prompt (plus one headroom block) and grow on
+    /// demand — true paging. Decode growth can hit a full device; the
+    /// engine then preempts a sequence to the host tier instead of
+    /// failing, so this mode expects `offload_enabled`.
+    Paged,
+}
+
+/// Paged-cache policy knobs (engine-level: one per replica).
+#[derive(Clone, Copy, Debug)]
+pub struct KvPressureConfig {
+    pub admission: AdmissionMode,
+    /// Enable FP8 demotion of cold blocks.
+    pub demote_enabled: bool,
+    /// Demote above this utilization while the engine serves FP16.
+    pub demote_watermark: f64,
+    /// Tighter watermark while the engine serves FP8 (controller
+    /// escalation demotes KV harder).
+    pub demote_watermark_fp8: f64,
+    /// Per-sequence write frontier that is never demoted, in blocks
+    /// (minimum 1: the frontier block still receives scatters).
+    pub hot_tail_blocks: usize,
+    /// Enable the host-offload tier (sequence preemption).
+    pub offload_enabled: bool,
+    /// Simulated host link bandwidth, GB/s (PCIe-gen4-ish effective rate).
+    pub host_bw_gbps: f64,
+    /// Fixed per-transfer setup latency, seconds.
+    pub transfer_base_s: f64,
+}
+
+impl Default for KvPressureConfig {
+    fn default() -> Self {
+        KvPressureConfig {
+            admission: AdmissionMode::Paged,
+            demote_enabled: true,
+            demote_watermark: 0.85,
+            demote_watermark_fp8: 0.60,
+            hot_tail_blocks: 1,
+            offload_enabled: true,
+            host_bw_gbps: 24.0,
+            transfer_base_s: 50e-6,
+        }
+    }
+}
+
+impl KvPressureConfig {
+    /// The seed repo's behavior: dense-style conservative reservation,
+    /// all-f32 blocks, no host tier. The bench baseline.
+    pub fn dense_baseline() -> Self {
+        KvPressureConfig {
+            admission: AdmissionMode::Reserve,
+            demote_enabled: false,
+            offload_enabled: false,
+            ..Default::default()
+        }
+    }
+
+    /// FP8 demotion only: conservative reservation (no stranding without
+    /// a host tier) plus LRU block demotion under pressure.
+    pub fn demote_only() -> Self {
+        KvPressureConfig {
+            admission: AdmissionMode::Reserve,
+            demote_enabled: true,
+            offload_enabled: false,
+            ..Default::default()
+        }
+    }
+
+    /// Active demotion watermark given the engine's current precision.
+    pub fn watermark(&self, fp8_pressure: bool) -> f64 {
+        if fp8_pressure {
+            self.demote_watermark_fp8.min(self.demote_watermark)
+        } else {
+            self.demote_watermark
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        let base = KvPressureConfig::dense_baseline();
+        assert_eq!(base.admission, AdmissionMode::Reserve);
+        assert!(!base.demote_enabled && !base.offload_enabled);
+
+        let demote = KvPressureConfig::demote_only();
+        assert_eq!(demote.admission, AdmissionMode::Reserve);
+        assert!(demote.demote_enabled && !demote.offload_enabled);
+
+        let full = KvPressureConfig::default();
+        assert_eq!(full.admission, AdmissionMode::Paged);
+        assert!(full.demote_enabled && full.offload_enabled);
+        assert!(full.hot_tail_blocks >= 1);
+    }
+
+    #[test]
+    fn fp8_pressure_tightens_the_watermark() {
+        let p = KvPressureConfig::default();
+        assert!(p.watermark(true) < p.watermark(false));
+        // a config with an inverted pair still never loosens under pressure
+        let odd = KvPressureConfig {
+            demote_watermark: 0.5,
+            demote_watermark_fp8: 0.9,
+            ..Default::default()
+        };
+        assert!(odd.watermark(true) <= odd.watermark(false));
+    }
+}

@@ -16,8 +16,13 @@
 //! * [`runtime`] — the PJRT execution layer: loads AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them on the
 //!   CPU PJRT client. Python never runs at serving time.
+//! * [`kvcache`] — the paged dual-precision KV cache: a block allocator
+//!   with per-request block tables (no slot cap), an FP8 block codec that
+//!   demotes LRU-cold blocks to half the bytes under precision pressure,
+//!   and a host-offload tier whose transfer latency is charged on the
+//!   engine's virtual clock.
 //! * [`coordinator`] — the vLLM-style serving engine: continuous batching
-//!   with chunked prefill, KV-cache slot/block management, request router,
+//!   with chunked prefill, paged KV management, request router,
 //!   latency metrics, and the paper's headline feature — an
 //!   iteration-level **dual-precision controller** switching FP16/FP8.
 //!   On top of it, [`coordinator::cluster`] scales serving out: N replica
@@ -36,6 +41,7 @@
 
 pub mod util;
 pub mod format;
+pub mod kvcache;
 pub mod model;
 pub mod gpusim;
 pub mod trace;

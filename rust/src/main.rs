@@ -4,9 +4,11 @@
 //! repro reproduce <exp>      regenerate a paper table/figure
 //!                            exp: table1|table2|table3|fig1a|fig1b|fig3|
 //!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|
-//!                                 cluster|all
+//!                                 cluster|kvcache|all
 //!        [--artifacts DIR]   artifact directory (default: artifacts)
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
+//!        [--json FILE]       also write the reports as machine-readable
+//!                            JSON (perf-trajectory tracking across PRs)
 //! repro serve                TCP serving front-end on the real backend
 //!        [--addr HOST:PORT]  default 127.0.0.1:7171
 //!        [--mode dual|fp16|fp8]
@@ -16,9 +18,10 @@
 //!                            one autotuned gpusim query (debugging)
 //! ```
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use nestedfp::bench::{cluster, fig1, fig3, fig7, fig8, report::Report, table1, table3};
+use nestedfp::bench::{cluster, fig1, fig3, fig7, fig8, kvcache, report::Report, table1, table3};
 use nestedfp::coordinator::backend::{ModeMap, RealBackend};
 use nestedfp::coordinator::engine::{Engine, EngineConfig};
 use nestedfp::coordinator::precision::PrecisionPolicy;
@@ -38,7 +41,7 @@ fn main() {
         _ => {
             eprintln!(
                 "nestedfp repro — usage:\n  \
-                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|cluster|all>\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|cluster|kvcache|all> [--json FILE]\n  \
                  repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N]\n  \
                  repro analyze\n  \
                  repro gemm --m M --n N --k K [--format ...]"
@@ -59,25 +62,51 @@ fn print_reports(reports: Vec<Report>) {
     }
 }
 
-fn run_one(exp: &str, dir: &Path, eval_n: usize) -> anyhow::Result<()> {
-    match exp {
-        "table1" | "table2" => {
-            print_reports(vec![table1::table12(dir, eval_n)?]);
-            print_reports(vec![table1::table2_weights(dir)?]);
-        }
-        "table3" => print_reports(vec![table3::table3()]),
-        "fig1a" => print_reports(vec![fig1::fig1a()]),
-        "fig1b" => print_reports(vec![fig1::fig1b()?]),
-        "fig3" => print_reports(vec![fig3::fig3a(dir)?, fig3::fig3b(dir)?]),
-        "fig7a" => print_reports(fig7::fig7a()),
-        "fig7b" => print_reports(vec![fig7::fig7b()]),
-        "fig8" => print_reports(fig8::fig8()?),
-        "fig9" => print_reports(vec![fig7::fig9()]),
-        "fig10" => print_reports(fig8::fig10()?),
-        "fig13" => print_reports(vec![fig7::fig13()]),
-        "cluster" => print_reports(vec![cluster::cluster_scaling()?]),
+/// Run one experiment and return its reports (printed by the caller, and
+/// optionally serialized with `--json`).
+fn run_one(exp: &str, dir: &Path, eval_n: usize) -> anyhow::Result<Vec<Report>> {
+    Ok(match exp {
+        "table1" | "table2" => vec![table1::table12(dir, eval_n)?, table1::table2_weights(dir)?],
+        "table3" => vec![table3::table3()],
+        "fig1a" => vec![fig1::fig1a()],
+        "fig1b" => vec![fig1::fig1b()?],
+        "fig3" => vec![fig3::fig3a(dir)?, fig3::fig3b(dir)?],
+        "fig7a" => fig7::fig7a(),
+        "fig7b" => vec![fig7::fig7b()],
+        "fig8" => fig8::fig8()?,
+        "fig9" => vec![fig7::fig9()],
+        "fig10" => fig8::fig10()?,
+        "fig13" => vec![fig7::fig13()],
+        "cluster" => vec![cluster::cluster_scaling()?],
+        "kvcache" => vec![kvcache::kvcache_pressure()?, kvcache::codec_error()],
         other => anyhow::bail!("unknown experiment '{other}'"),
-    }
+    })
+}
+
+/// Serialize collected experiment reports as JSON for perf-trajectory
+/// tooling (stable schema; rows are strings exactly as printed).
+fn write_json(path: &str, experiments: &[(String, Vec<Report>)]) -> anyhow::Result<()> {
+    use nestedfp::util::json::Json;
+    let exps: Vec<Json> = experiments
+        .iter()
+        .map(|(name, reports)| {
+            let mut obj = BTreeMap::new();
+            obj.insert("name".to_string(), Json::Str(name.clone()));
+            obj.insert(
+                "reports".to_string(),
+                Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+            );
+            Json::Obj(obj)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert(
+        "schema".to_string(),
+        Json::Str("nestedfp/bench-reports@1".to_string()),
+    );
+    root.insert("experiments".to_string(), Json::Arr(exps));
+    std::fs::write(path, Json::Obj(root).to_string() + "\n")?;
+    eprintln!("[reproduce] wrote JSON reports to {path}");
     Ok(())
 }
 
@@ -89,22 +118,37 @@ fn cmd_reproduce(args: &Args) -> i32 {
         .unwrap_or("all");
     let dir = artifacts_dir(args);
     let eval_n = args.get_usize("eval-n", 24);
+    let mut collected: Vec<(String, Vec<Report>)> = Vec::new();
+    let mut run_and_print = |e: &str| -> anyhow::Result<()> {
+        let reports = run_one(e, &dir, eval_n)?;
+        collected.push((e.to_string(), reports.clone()));
+        print_reports(reports);
+        Ok(())
+    };
     let result = if exp == "all" {
         let mut r = Ok(());
         for e in [
             "fig1a", "fig1b", "fig3", "fig7a", "fig7b", "fig9", "fig13", "fig8", "fig10",
-            "cluster", "table3", "table1",
+            "cluster", "kvcache", "table3", "table1",
         ] {
             eprintln!("[reproduce] running {e} ...");
-            r = run_one(e, &dir, eval_n);
+            r = run_and_print(e);
             if r.is_err() {
                 break;
             }
         }
         r
     } else {
-        run_one(exp, &dir, eval_n)
+        run_and_print(exp)
     };
+    if let Some(path) = args.get("json") {
+        if !collected.is_empty() {
+            if let Err(e) = write_json(path, &collected) {
+                eprintln!("reproduce --json {path}: {e:#}");
+                return 1;
+            }
+        }
+    }
     match result {
         Ok(()) => 0,
         Err(e) => {
@@ -139,13 +183,12 @@ fn cmd_serve(args: &Args) -> i32 {
                         &["decode", "prefill"],
                     )?;
                     let max_seq = rt.manifest.model.max_seq;
-                    let n_slots =
+                    let max_batch =
                         rt.manifest.decode_buckets.iter().copied().max().unwrap_or(4);
                     let backend = RealBackend::new(
                         rt,
                         ModeMap::default(),
-                        n_slots,
-                        n_slots * (max_seq / 16 + 1) + 32,
+                        max_batch * (max_seq / 16 + 1) + 32,
                     );
                     let engine = Engine::new(
                         backend,

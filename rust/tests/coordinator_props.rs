@@ -3,7 +3,7 @@
 
 use nestedfp::coordinator::backend::{Backend, StepRun};
 use nestedfp::coordinator::engine::{Engine, EngineConfig};
-use nestedfp::coordinator::kv::{KvCacheManager, KvGeometry};
+use nestedfp::coordinator::kv::{KvCacheManager, KvGeometry, KvPressureConfig};
 use nestedfp::coordinator::precision::{Precision, PrecisionController, PrecisionPolicy, SloConfig};
 use nestedfp::coordinator::request::Request;
 use nestedfp::util::prop;
@@ -33,9 +33,8 @@ fn prop_kv_blocks_conserved_under_random_ops() {
                 head_dim: 1,
                 block_size: 8,
                 total_blocks: 64,
-                n_slots: 6,
             };
-            let mut kv = KvCacheManager::accounting_only(geo);
+            let mut kv = KvCacheManager::accounting_only(geo, KvPressureConfig::default());
             let mut live: Vec<usize> = Vec::new();
             for &(op, val) in ops {
                 match op {
@@ -138,7 +137,6 @@ fn script_engine() -> Engine<ScriptBackend> {
                 head_dim: 1,
                 block_size: 8,
                 total_blocks: 256,
-                n_slots: 6,
             },
             latency: 0.002,
             vocab: 32,

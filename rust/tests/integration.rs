@@ -100,8 +100,8 @@ fn engine_end_to_end_generates_correct_answers() {
     let rt = ModelRuntime::load(&dir, &["nested16", "nested8"], &["decode", "prefill"]).unwrap();
     let align = rt.manifest.prefill_chunks.iter().copied().min().unwrap();
     let max_seq = rt.manifest.model.max_seq;
-    let n_slots = rt.manifest.decode_buckets.iter().copied().max().unwrap();
-    let backend = RealBackend::new(rt, ModeMap::default(), n_slots, n_slots * (max_seq / 16 + 1) + 32);
+    let max_batch = rt.manifest.decode_buckets.iter().copied().max().unwrap();
+    let backend = RealBackend::new(rt, ModeMap::default(), max_batch * (max_seq / 16 + 1) + 32);
     let mut engine = Engine::new(
         backend,
         EngineConfig {
