@@ -37,6 +37,12 @@ cargo build --release --offline --examples
 echo "== cargo test -q =="
 cargo test -q --offline
 
+echo "== smoke: repro reproduce gemm --quick =="
+./target/release/repro reproduce gemm --quick --json /tmp/nestedfp_gemm_ci.json
+
+echo "== smoke: example kernel_tour (real engine vs gpusim) =="
+cargo run --release --offline --example kernel_tour
+
 echo "== cargo doc --no-deps (warnings denied) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --offline
 

@@ -1,7 +1,10 @@
 //! Execution backends: real PJRT artifacts or the gpusim cost model.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::format::nested::NestedTensor;
+use crate::format::tensor::Tensor2;
+use crate::gemm::{GemmEngine, GemmFormat, GemmWeights};
 use crate::gpusim::{self, StepKind, StepQuery, WeightFormat};
 use crate::model::zoo::ModelSpec;
 use crate::runtime::{HostTensor, ModelRuntime};
@@ -76,6 +79,13 @@ impl Default for ModeMap {
 pub struct RealBackend {
     pub rt: ModelRuntime,
     pub modes: ModeMap,
+    /// Host compute engine over the same weight store the artifacts use.
+    /// `prefill`/`decode` run their linear layers inside the compiled
+    /// artifacts; [`RealBackend::native_gemm`] is the host twin of the
+    /// "gemm"-kind artifacts, and is what the examples and integration
+    /// tests pin the artifacts against (replacing the old reconstruct +
+    /// `Tensor2::matmul` reference path).
+    pub gemm: GemmEngine,
     geo: KvGeometry,
     /// Reused dense-gather scratch (the AOT inputs are fixed-shape, so
     /// these stay at their high-water size instead of reallocating per
@@ -98,6 +108,7 @@ impl RealBackend {
         RealBackend {
             rt,
             modes,
+            gemm: GemmEngine::default(),
             geo,
             gather_k: Vec::new(),
             gather_v: Vec::new(),
@@ -109,6 +120,90 @@ impl RealBackend {
             Precision::Fp16 => self.modes.fp16_mode,
             Precision::Fp8 => self.modes.fp8_mode,
         }
+    }
+
+    /// Assemble the engine operand for one weight-store layer under an
+    /// artifact mode ("fp16" | "nested16" | "nested8").
+    fn store_weights(&self, mode: &str, layer: &str) -> Result<(GemmWeights, GemmFormat)> {
+        match mode {
+            "fp16" => {
+                let t = self.rt.weights.get(&format!("{layer}.f16"))?;
+                if t.dims.len() != 2 {
+                    bail!("{layer}.f16: expected a [N,K] matrix, got dims {:?}", t.dims);
+                }
+                let (rows, cols) = (t.dims[0], t.dims[1]);
+                Ok((
+                    GemmWeights::F16 {
+                        rows,
+                        cols,
+                        bits: t.as_u16()?,
+                    },
+                    GemmFormat::Fp16,
+                ))
+            }
+            "nested16" | "nested8" => {
+                let upper = self.rt.weights.get(&format!("{layer}.upper"))?;
+                if upper.dims.len() != 2 {
+                    bail!("{layer}.upper: expected a [N,K] matrix, got dims {:?}", upper.dims);
+                }
+                let (rows, cols) = (upper.dims[0], upper.dims[1]);
+                // the FP8 path's memory story holds at this layer too: the
+                // lower plane is only fetched (and copied) in nested16
+                // mode. The nested8 tensor carries an empty lower — valid
+                // only for the Nested8 format it is returned with.
+                let lower = if mode == "nested16" {
+                    let lower = self.rt.weights.get(&format!("{layer}.lower"))?;
+                    if lower.dims != upper.dims {
+                        bail!(
+                            "{layer}: plane dims mismatch {:?} vs {:?}",
+                            upper.dims,
+                            lower.dims
+                        );
+                    }
+                    lower.bytes.clone()
+                } else {
+                    Vec::new()
+                };
+                let t = NestedTensor {
+                    rows,
+                    cols,
+                    upper: upper.bytes.clone(),
+                    lower,
+                    fully_eligible: true,
+                };
+                let fmt = if mode == "nested16" {
+                    GemmFormat::Nested16
+                } else {
+                    GemmFormat::Nested8
+                };
+                Ok((GemmWeights::Nested(t), fmt))
+            }
+            other => bail!("native_gemm: unknown mode '{other}'"),
+        }
+    }
+
+    /// Execute one layer's GEMM (`x` [M,K] × layer weights [N,K]ᵀ)
+    /// natively on the host compute engine, straight from the weight
+    /// store's planes — the CPU twin of the AOT "gemm" artifacts. In
+    /// `nested16` mode the pack stage reconstructs exact FP16 bits from
+    /// both planes; in `nested8` mode it streams only the upper plane.
+    ///
+    /// This is a verification path, not the serving hot loop: each call
+    /// copies the layer's plane(s) out of the store to build the engine
+    /// operand. Cache the result (or the `GemmWeights`) if calling
+    /// per-step.
+    pub fn native_gemm(&self, mode: &str, layer: &str, x: &Tensor2) -> Result<Tensor2> {
+        let (w, fmt) = self.store_weights(mode, layer)?;
+        if x.cols != w.cols() {
+            bail!(
+                "native_gemm {layer}: x is [{},{}] but weights are [{},{}]",
+                x.rows,
+                x.cols,
+                w.rows(),
+                w.cols()
+            );
+        }
+        Ok(self.gemm.matmul(x, &w, fmt))
     }
 }
 

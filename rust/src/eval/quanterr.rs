@@ -8,6 +8,7 @@ use crate::format::nested::{self, DecomposeResult};
 use crate::format::quant;
 use crate::format::tensor::Tensor2;
 use crate::format::fp16::F16;
+use crate::gemm::{GemmEngine, GemmFormat, GemmWeights};
 
 /// Error metrics of a quantized weight tensor vs its fp16 original.
 #[derive(Clone, Copy, Debug)]
@@ -74,6 +75,37 @@ pub fn compare_fp8_variants(w: &Tensor2) -> (QuantError, QuantError) {
     (err_base, err_nested)
 }
 
+/// Output-level (activation-weighted) FP8 error, measured through the
+/// real compute engine rather than weight tables: how far the GEMM
+/// *products* drift once activations multiply in. The reference is the
+/// fused `Nested16` product — bit-identical to FP16, so it is the exact
+/// baseline the paper's losslessness claim provides for free.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmOutputError {
+    /// Per-channel absmax FP8 baseline vs the FP16 product.
+    pub baseline: QuantError,
+    /// NestedFP8 (upper plane, global 2⁻⁸ scale) vs the FP16 product.
+    pub nested8: QuantError,
+}
+
+/// Multiply `x` [M,K] by `w` [N,K] under all three precisions on
+/// [`GemmEngine`] (replacing the old reconstruct + `Tensor2::matmul`
+/// reference path) and compare the FP8 variants' outputs against the
+/// exact FP16 product. Weights must be NestedFP-eligible.
+pub fn gemm_output_error(w: &Tensor2, x: &Tensor2) -> GemmOutputError {
+    let engine = GemmEngine::default();
+    let nested = GemmWeights::prepare(w, GemmFormat::Nested16)
+        .expect("ineligible tensor in comparison");
+    let fp8 = GemmWeights::prepare(w, GemmFormat::Fp8).expect("fp8 prepare");
+    let out16 = engine.matmul(x, &nested, GemmFormat::Nested16);
+    let out8n = engine.matmul(x, &nested, GemmFormat::Nested8);
+    let out8b = engine.matmul(x, &fp8, GemmFormat::Fp8);
+    GemmOutputError {
+        baseline: error_of(&out8b.data, &out16.data),
+        nested8: error_of(&out8n.data, &out16.data),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +142,26 @@ mod tests {
         // 3-bit mantissa -> <= 2^-4 relative, up to subnormal effects
         assert!(base.mean_rel < 0.04, "{base:?}");
         assert!(nested.mean_rel < 0.04, "{nested:?}");
+    }
+
+    #[test]
+    fn output_error_comparable_through_the_engine() {
+        // the Table-2 claim at the *product* level: with real activations
+        // multiplied in, NestedFP8's output error stays the same order as
+        // the per-channel absmax baseline's
+        let w = gauss_tensor(48, 96, 0.05, 21);
+        let mut rng = Pcg64::seeded(22);
+        let x = Tensor2::from_vec(
+            12,
+            96,
+            (0..12 * 96).map(|_| rng.normal() as f32 * 0.5).collect(),
+        );
+        let e = gemm_output_error(&w, &x);
+        assert!(e.baseline.rel_fro > 0.0 && e.nested8.rel_fro > 0.0);
+        assert!(e.baseline.rel_fro < 0.1, "{:?}", e.baseline);
+        assert!(e.nested8.rel_fro < 0.1, "{:?}", e.nested8);
+        let ratio = e.nested8.rel_fro / e.baseline.rel_fro;
+        assert!(ratio < 2.5, "output-level ratio {ratio:.2}");
     }
 
     #[test]

@@ -40,8 +40,12 @@ impl Tensor2 {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Naive matmul: self [m,k] × other [k,n] -> [m,n]. Used only for
-    /// verification against executable outputs.
+    /// Naive matmul: self [m,k] × other [k,n] -> [m,n]. The crate's
+    /// *reference oracle*: `gemm::GemmEngine` is required to match it
+    /// bit-for-bit, so its semantics are part of the contract — a
+    /// cache-friendly `i-k-j` loop where each output element accumulates
+    /// its `k` terms in ascending order through one f32 chain, one plain
+    /// mul + add per term (no skips, no FMA, no reassociation).
     pub fn matmul(&self, other: &Tensor2) -> Tensor2 {
         assert_eq!(self.cols, other.rows, "inner dims");
         let (m, k, n) = (self.rows, self.cols, other.cols);
@@ -49,14 +53,23 @@ impl Tensor2 {
         for i in 0..m {
             for p in 0..k {
                 let a = self.get(i, p);
-                if a == 0.0 {
-                    continue;
-                }
                 let orow = other.row(p);
                 let dst = &mut out.data[i * n..(i + 1) * n];
                 for j in 0..n {
                     dst[j] += a * orow[j];
                 }
+            }
+        }
+        out
+    }
+
+    /// The [cols, rows] transpose (used to feed [N,K] weight matrices to
+    /// [`Self::matmul`], which wants the right operand as [K,N]).
+    pub fn transposed(&self) -> Tensor2 {
+        let mut out = Tensor2::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
             }
         }
         out
@@ -116,6 +129,24 @@ mod tests {
         let b = Tensor2::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_accumulates_zeros_like_any_other_term() {
+        // the oracle contract: no zero-skip — signed-zero and non-finite
+        // propagation behave exactly like the blocked engine's
+        let a = Tensor2::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Tensor2::from_vec(2, 1, vec![f32::INFINITY, 2.0]);
+        assert!(a.matmul(&b).data[0].is_nan(), "0·inf must contribute NaN");
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor2::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let tt = t.transposed();
+        assert_eq!((tt.rows, tt.cols), (3, 2));
+        assert_eq!(tt.get(2, 1), t.get(1, 2));
+        assert_eq!(tt.transposed(), t);
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! The cache-blocked compute core.
+//!
+//! Classic three-level (GotoBLAS-style) blocking over `C[M,N] = X[M,K] ×
+//! W[N,K]ᵀ`: `NC`-wide column panels of C, `KC`-deep slices of the inner
+//! dimension (B packed once per (jc, pc) tile), `MC`-tall row blocks of X
+//! (A packed per block), and an `MR×NR` register microkernel at the
+//! bottom that only ever touches packed, zero-padded panels.
+//!
+//! ## Bit-exactness invariant
+//!
+//! For every output element `c[i][j]`, the additions happen in ascending
+//! `p` order into a single f32 accumulator (carried through C between
+//! `pc` slices), with a plain mul + add per term — exactly the operation
+//! sequence of the reference oracle `Tensor2::matmul`. Blocking changes
+//! *when* each term is added, never *in what order* for a given element,
+//! so the engine's output is bit-identical to the oracle applied to the
+//! same (format-decoded) dense operands, for any tile sizes and any
+//! worker count. Tests assert this; keep it when touching this file
+//! (no `mul_add`, no reassociation, no per-element reordering).
+
+use crate::format::tensor::Tensor2;
+
+use super::pack::{pack_a, pack_b, PackContext};
+use super::weights::{GemmFormat, GemmWeights};
+use super::GemmConfig;
+
+/// Microkernel row count (X rows per strip).
+pub(crate) const MR: usize = 4;
+/// Microkernel column count (weight rows per strip); `NR` f32 = one
+/// 64-byte cache line.
+pub(crate) const NR: usize = 16;
+
+/// `acc[ir][jj] += a_strip ⋅ b_strip` over `kc` packed terms. The `jj`
+/// lanes are independent accumulator chains (vectorizable); each chain
+/// runs in ascending `p` order (not reassociable).
+#[inline]
+fn microkernel(kc: usize, a: &[f32], b: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(a.len() >= kc * MR);
+    debug_assert!(b.len() >= kc * NR);
+    for p in 0..kc {
+        let ap = &a[p * MR..p * MR + MR];
+        let bp = &b[p * NR..p * NR + NR];
+        for ir in 0..MR {
+            let av = ap[ir];
+            let row = &mut acc[ir];
+            for jj in 0..NR {
+                row[jj] += av * bp[jj];
+            }
+        }
+    }
+}
+
+/// Multiply one horizontal band of the output: rows `[row0, row0 + band)`
+/// of C, where `band = c_band.len() / n`. Each band is self-contained
+/// (it packs its own A and B tiles), which is what lets the thread pool
+/// hand disjoint bands to workers with no shared mutable state.
+pub(crate) fn gemm_band(
+    x: &Tensor2,
+    w: &GemmWeights,
+    fmt: GemmFormat,
+    ctx: &PackContext,
+    cfg: &GemmConfig,
+    row0: usize,
+    c_band: &mut [f32],
+) {
+    let n = w.rows();
+    let k = w.cols();
+    let band = c_band.len() / n;
+    debug_assert_eq!(c_band.len(), band * n);
+    let mut apack: Vec<f32> = Vec::new();
+    let mut bpack: Vec<f32> = Vec::new();
+
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = cfg.nc.min(n - jc);
+        let n_strips_j = nc_eff.div_ceil(NR);
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = cfg.kc.min(k - pc);
+            pack_b(w, fmt, ctx, jc, nc_eff, pc, kc_eff, &mut bpack);
+            let mut ic = 0;
+            while ic < band {
+                let mc_eff = cfg.mc.min(band - ic);
+                pack_a(x, row0 + ic, mc_eff, pc, kc_eff, &mut apack);
+                let n_strips_i = mc_eff.div_ceil(MR);
+                for sj in 0..n_strips_j {
+                    let j0 = jc + sj * NR;
+                    let cols = NR.min(jc + nc_eff - j0);
+                    let bstrip = &bpack[sj * kc_eff * NR..(sj + 1) * kc_eff * NR];
+                    for si in 0..n_strips_i {
+                        let i0 = ic + si * MR; // band-relative C row
+                        let rows = MR.min(ic + mc_eff - i0);
+                        let astrip = &apack[si * kc_eff * MR..(si + 1) * kc_eff * MR];
+                        // load live accumulators from C (pad lanes stay 0)
+                        let mut acc = [[0.0f32; NR]; MR];
+                        for (ir, acc_row) in acc.iter_mut().enumerate().take(rows) {
+                            let crow = &c_band[(i0 + ir) * n + j0..(i0 + ir) * n + j0 + cols];
+                            acc_row[..cols].copy_from_slice(crow);
+                        }
+                        microkernel(kc_eff, astrip, bstrip, &mut acc);
+                        for (ir, acc_row) in acc.iter().enumerate().take(rows) {
+                            let crow =
+                                &mut c_band[(i0 + ir) * n + j0..(i0 + ir) * n + j0 + cols];
+                            crow.copy_from_slice(&acc_row[..cols]);
+                        }
+                    }
+                }
+                ic += mc_eff;
+            }
+            pc += kc_eff;
+        }
+        jc += nc_eff;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microkernel_accumulates_known_values() {
+        // kc=2, A strip = identity-ish lanes, B strip = ramps
+        let mut a = vec![0.0f32; 2 * MR];
+        let mut b = vec![0.0f32; 2 * NR];
+        for ir in 0..MR {
+            a[ir] = (ir + 1) as f32; // p=0
+            a[MR + ir] = 10.0; // p=1
+        }
+        for jj in 0..NR {
+            b[jj] = jj as f32; // p=0
+            b[NR + jj] = 1.0; // p=1
+        }
+        let mut acc = [[0.0f32; NR]; MR];
+        acc[0][0] = 100.0; // carried-in partial sum survives
+        microkernel(2, &a, &b, &mut acc);
+        for ir in 0..MR {
+            for jj in 0..NR {
+                let carried = if ir == 0 && jj == 0 { 100.0 } else { 0.0 };
+                let want = carried + (ir + 1) as f32 * jj as f32 + 10.0;
+                assert_eq!(acc[ir][jj], want, "ir={ir} jj={jj}");
+            }
+        }
+    }
+}

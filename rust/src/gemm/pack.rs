@@ -1,0 +1,221 @@
+//! Operand packing — where the NestedFP fusion happens.
+//!
+//! The blocked kernel never reads operands from their stored layout; it
+//! reads *packed panels* shaped for the microkernel:
+//!
+//! * A panel (activations): strips of `MR` consecutive X rows, p-major —
+//!   `apack[si·kc·MR + p·MR + ii] = x[row0 + si·MR + ii][pc + p]`
+//! * B panel (weights): strips of `NR` consecutive weight rows (output
+//!   channels), p-major —
+//!   `bpack[sj·kc·NR + p·NR + jj] = W[jc + sj·NR + jj][pc + p]`
+//!
+//! Ragged edges are zero-padded to full strips so the microkernel never
+//! branches; padded lanes are simply not stored back.
+//!
+//! The B packer is the engine's analogue of the paper's in-kernel SIMT
+//! stage: each stored byte is converted to f32 *once per (pc, jc) tile*,
+//! on its way into the panel, and the multiply loop only ever sees f32:
+//!
+//! * `Fp16` — convert the f16 master bits,
+//! * `Nested16` — the branch-free (upper, lower) → FP16 reconstruction
+//!   of `format::nested` (Figure 6), fused into the pack,
+//! * `Nested8` — a 256-entry LUT of `decode_e4m3(b)·2⁻⁸` over the upper
+//!   plane only (the lower plane is never loaded: half the traffic),
+//! * `Fp8` — E4M3 LUT + the per-channel scale division.
+//!
+//! Every packer is required (and tested) to produce bit-for-bit the
+//! values of [`GemmWeights::dense_f32`] — that is what makes the whole
+//! engine bit-identical to the reference oracle.
+
+use crate::format::fp16::F16;
+use crate::format::nested;
+use crate::format::tensor::Tensor2;
+use crate::format::e4m3;
+
+use super::kernel::{MR, NR};
+use super::weights::{GemmFormat, GemmWeights};
+
+/// Per-matmul lookup tables (256 decodes each; built once per call).
+pub(crate) struct PackContext {
+    /// `upper_lut[b] = decode_e4m3(b) * 2^-8` — the Nested8 weight value.
+    upper_lut: [f32; 256],
+    /// `e4m3_lut[b] = decode_e4m3(b)` — the Fp8 code value (pre-scale).
+    e4m3_lut: [f32; 256],
+}
+
+impl PackContext {
+    pub(crate) fn new() -> PackContext {
+        let mut upper_lut = [0.0f32; 256];
+        let mut e4m3_lut = [0.0f32; 256];
+        for b in 0..=255u8 {
+            upper_lut[b as usize] = nested::upper_as_weight(b);
+            e4m3_lut[b as usize] = e4m3::decode(b);
+        }
+        PackContext {
+            upper_lut,
+            e4m3_lut,
+        }
+    }
+}
+
+/// Pack `m_eff` rows of X (starting at absolute row `row0`) over columns
+/// `[pc, pc + kc_eff)` into MR-row strips.
+pub(crate) fn pack_a(
+    x: &Tensor2,
+    row0: usize,
+    m_eff: usize,
+    pc: usize,
+    kc_eff: usize,
+    buf: &mut Vec<f32>,
+) {
+    let n_strips = m_eff.div_ceil(MR);
+    buf.clear();
+    buf.resize(n_strips * kc_eff * MR, 0.0);
+    for si in 0..n_strips {
+        let base = si * kc_eff * MR;
+        for ii in 0..MR {
+            let r = si * MR + ii;
+            if r >= m_eff {
+                break; // rest of the strip stays zero-padded
+            }
+            let src = &x.data[(row0 + r) * x.cols + pc..(row0 + r) * x.cols + pc + kc_eff];
+            for (p, &v) in src.iter().enumerate() {
+                buf[base + p * MR + ii] = v;
+            }
+        }
+    }
+}
+
+/// Pack `n_eff` weight rows (starting at `jc`) over columns
+/// `[pc, pc + kc_eff)` into NR-row strips, decoding `fmt` on the way in.
+#[allow(clippy::too_many_arguments)] // a tile coordinate per argument
+pub(crate) fn pack_b(
+    w: &GemmWeights,
+    fmt: GemmFormat,
+    ctx: &PackContext,
+    jc: usize,
+    n_eff: usize,
+    pc: usize,
+    kc_eff: usize,
+    buf: &mut Vec<f32>,
+) {
+    let k = w.cols();
+    let n_strips = n_eff.div_ceil(NR);
+    buf.clear();
+    buf.resize(n_strips * kc_eff * NR, 0.0);
+    // one tight loop per (store, format) pair; the closure is the fusion
+    // point and monomorphizes into the fill loop
+    match (w, fmt) {
+        (GemmWeights::F16 { bits, .. }, GemmFormat::Fp16) => {
+            fill(buf, n_eff, kc_eff, |j, p| {
+                F16::from_bits(bits[(jc + j) * k + pc + p]).to_f32()
+            });
+        }
+        (GemmWeights::Nested(t), GemmFormat::Nested16) => {
+            let (upper, lower) = (&t.upper, &t.lower);
+            fill(buf, n_eff, kc_eff, |j, p| {
+                let idx = (jc + j) * k + pc + p;
+                nested::reconstruct(upper[idx], lower[idx]).to_f32()
+            });
+        }
+        (GemmWeights::Nested(t), GemmFormat::Nested8) => {
+            let upper = &t.upper; // lower plane untouched: half the bytes
+            fill(buf, n_eff, kc_eff, |j, p| {
+                ctx.upper_lut[upper[(jc + j) * k + pc + p] as usize]
+            });
+        }
+        (GemmWeights::Fp8(q), GemmFormat::Fp8) => {
+            let (codes, scales) = (&q.codes, &q.scales);
+            fill(buf, n_eff, kc_eff, |j, p| {
+                // decode / scale, exactly like QuantizedWeight::dequantize
+                ctx.e4m3_lut[codes[(jc + j) * k + pc + p] as usize] / scales[jc + j]
+            });
+        }
+        _ => panic!("{fmt:?} not supported by this weight store"),
+    }
+}
+
+#[inline]
+fn fill(buf: &mut [f32], n_eff: usize, kc_eff: usize, value: impl Fn(usize, usize) -> f32) {
+    for sj in 0..n_eff.div_ceil(NR) {
+        let base = sj * kc_eff * NR;
+        for jj in 0..NR {
+            let j = sj * NR + jj;
+            if j >= n_eff {
+                break;
+            }
+            for p in 0..kc_eff {
+                buf[base + p * NR + jj] = value(j, p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::testutil::gauss;
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        let x = gauss(5, 8, 1); // 5 rows -> 2 strips of MR=4, 3 pad lanes
+        let mut buf = Vec::new();
+        pack_a(&x, 0, 5, 2, 6, &mut buf);
+        assert_eq!(buf.len(), 2 * 6 * MR);
+        // strip 0, p=3, row 2  ->  x[2][2+3]
+        assert_eq!(buf[3 * MR + 2], x.get(2, 5));
+        // strip 1 holds row 4 in lane 0; lanes 1..3 are zero padding
+        assert_eq!(buf[6 * MR], x.get(4, 2)); // p=0, lane 0
+        assert_eq!(buf[6 * MR + MR], x.get(4, 3)); // p=1, lane 0
+        for p in 0..6 {
+            for ii in 1..MR {
+                assert_eq!(buf[6 * MR + p * MR + ii], 0.0, "pad lane p={p} ii={ii}");
+            }
+        }
+    }
+
+    #[test]
+    fn packers_match_dense_reference_bitwise() {
+        let w = gauss(NR + 3, 21, 2); // ragged in both directions
+        let ctx = PackContext::new();
+        for fmt in GemmFormat::ALL {
+            let g = GemmWeights::prepare(&w, fmt).unwrap();
+            let dense = g.dense_f32(fmt);
+            let (jc, n_eff, pc, kc_eff) = (1usize, NR + 1, 4usize, 13usize);
+            let mut buf = Vec::new();
+            pack_b(&g, fmt, &ctx, jc, n_eff, pc, kc_eff, &mut buf);
+            for j in 0..n_eff {
+                for p in 0..kc_eff {
+                    let got = buf[(j / NR) * kc_eff * NR + p * NR + (j % NR)];
+                    let want = dense.get(jc + j, pc + p);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "{fmt:?} at weight row {} col {}",
+                        jc + j,
+                        pc + p
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn luts_match_the_codecs() {
+        let ctx = PackContext::new();
+        for b in 0..=255u8 {
+            let lut = ctx.upper_lut[b as usize];
+            let direct = nested::upper_as_weight(b);
+            assert!(
+                lut.to_bits() == direct.to_bits() || (lut.is_nan() && direct.is_nan()),
+                "upper_lut[{b:#04x}]"
+            );
+            let lut = ctx.e4m3_lut[b as usize];
+            let direct = e4m3::decode(b);
+            assert!(
+                lut.to_bits() == direct.to_bits() || (lut.is_nan() && direct.is_nan()),
+                "e4m3_lut[{b:#04x}]"
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! A dependency-free, deterministic fork-join pool for the GEMM engine.
+//!
+//! Work is partitioned *before* any thread starts: the output buffer is
+//! split into contiguous chunks and each worker receives a fixed,
+//! contiguous range of chunks. Nothing is stolen, nothing races, and the
+//! function applied to a chunk may depend only on the chunk index and the
+//! chunk contents — so the result is bit-identical for any worker count,
+//! including 1 (which runs inline without spawning).
+//!
+//! This is all the engine needs: C row panels are disjoint slices of the
+//! output tensor, and every panel's arithmetic is self-contained (each
+//! worker packs its own operand tiles). `std::thread::scope` keeps the
+//! whole thing safe-Rust with zero dependencies.
+
+/// Fixed-size fork-join pool. `workers` is a *maximum*: a run with fewer
+/// chunks than workers spawns fewer threads (or none).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// A pool that will use at most `workers` OS threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> ThreadPool {
+        ThreadPool {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Split `data` into contiguous chunks of `chunk_len` elements (the
+    /// last one may be shorter) and call `f(chunk_index, chunk)` exactly
+    /// once per chunk. Chunk `i` covers `data[i*chunk_len ..]`. Workers
+    /// receive contiguous chunk ranges; with one worker (or one chunk)
+    /// everything runs inline on the calling thread.
+    ///
+    /// Determinism contract: `f` must write only through its `chunk` and
+    /// derive everything else from `chunk_index` — then the output is
+    /// identical for every worker count.
+    pub fn for_each_chunk<T, F>(&self, data: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "chunk_len must be positive");
+        if data.is_empty() {
+            return;
+        }
+        let n_chunks = data.len().div_ceil(chunk_len);
+        if self.workers == 1 || n_chunks == 1 {
+            for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+                f(i, chunk);
+            }
+            return;
+        }
+        // pre-assign contiguous chunk ranges: worker w gets chunks
+        // [w*per, min((w+1)*per, n_chunks))
+        let per = n_chunks.div_ceil(self.workers);
+        let mut groups: Vec<Vec<(usize, &mut [T])>> = Vec::new();
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            if i % per == 0 {
+                groups.push(Vec::with_capacity(per));
+            }
+            groups.last_mut().unwrap().push((i, chunk));
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            for group in groups {
+                s.spawn(move || {
+                    for (i, chunk) in group {
+                        f(i, chunk);
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        ThreadPool::new(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn run_fill(workers: usize, len: usize, chunk: usize) -> Vec<usize> {
+        let mut data = vec![0usize; len];
+        ThreadPool::new(workers).for_each_chunk(&mut data, chunk, |idx, c| {
+            for (off, v) in c.iter_mut().enumerate() {
+                *v = idx * 1000 + off;
+            }
+        });
+        data
+    }
+
+    #[test]
+    fn covers_every_element_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let mut data = vec![0u8; 103];
+        ThreadPool::new(4).for_each_chunk(&mut data, 10, |_, c| {
+            counter.fetch_add(c.len(), Ordering::SeqCst);
+            for v in c.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 103);
+        assert!(data.iter().all(|&v| v == 1), "every element touched once");
+    }
+
+    #[test]
+    fn identical_for_any_worker_count() {
+        let expect = run_fill(1, 97, 8);
+        for workers in [2, 3, 8, 16] {
+            assert_eq!(run_fill(workers, 97, 8), expect, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn chunk_indices_are_global() {
+        // worker partitioning must not renumber chunks
+        let data = run_fill(3, 50, 7); // 8 chunks over 3 workers
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, (i / 7) * 1000 + i % 7);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_chunk_run_inline() {
+        let mut empty: Vec<u32> = Vec::new();
+        ThreadPool::new(8).for_each_chunk(&mut empty, 4, |_, _| panic!("no chunks expected"));
+        let tid = std::thread::current().id();
+        let mut one = vec![0u32; 3];
+        ThreadPool::new(8).for_each_chunk(&mut one, 100, |_, c| {
+            assert_eq!(std::thread::current().id(), tid, "single chunk runs inline");
+            c[0] = 7;
+        });
+        assert_eq!(one, vec![7, 0, 0]);
+    }
+
+    #[test]
+    fn clamps_zero_workers() {
+        assert_eq!(ThreadPool::new(0).workers(), 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! Weight-operand storage for the compute engine.
+//!
+//! A `GemmWeights` is the *stored* form of a `[N, K]` weight matrix (rows
+//! = output features, matching the rest of the repo); a [`GemmFormat`]
+//! selects how the pack stage turns those stored bytes into f32 tile
+//! values. The split mirrors the paper's central trick: one `Nested`
+//! store serves both the lossless FP16 path (`Nested16`, both planes)
+//! and the FP8 path (`Nested8`, upper plane only — half the bytes).
+
+use anyhow::{bail, Result};
+
+use crate::format::fp16::F16;
+use crate::format::nested::{self, DecomposeResult, NestedTensor};
+use crate::format::quant::{self, QuantizedWeight};
+use crate::format::tensor::Tensor2;
+
+/// Execution format of a GEMM — mirrors `gpusim::WeightFormat` so the
+/// analytical model and the real engine speak the same language.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GemmFormat {
+    /// Plain FP16 weights (the cuBLAS-style baseline).
+    Fp16,
+    /// NestedFP two-plane weights, FP16-mode: the pack stage fuses the
+    /// branch-free (upper, lower) → FP16 reconstruction.
+    Nested16,
+    /// NestedFP upper plane only, FP8-mode: E4M3 bytes at the global 2⁻⁸
+    /// scale; the lower plane is never touched.
+    Nested8,
+    /// Native per-channel absmax E4M3 weights (the Torch-FP8 comparator).
+    Fp8,
+}
+
+impl GemmFormat {
+    pub const ALL: [GemmFormat; 4] = [
+        GemmFormat::Fp16,
+        GemmFormat::Nested16,
+        GemmFormat::Nested8,
+        GemmFormat::Fp8,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            GemmFormat::Fp16 => "fp16",
+            GemmFormat::Nested16 => "nested16",
+            GemmFormat::Nested8 => "nested8",
+            GemmFormat::Fp8 => "fp8",
+        }
+    }
+
+    /// The matching analytical-model format (for prediction cross-checks).
+    pub fn to_gpusim(self) -> crate::gpusim::WeightFormat {
+        match self {
+            GemmFormat::Fp16 => crate::gpusim::WeightFormat::Fp16,
+            GemmFormat::Nested16 => crate::gpusim::WeightFormat::Nested16,
+            GemmFormat::Nested8 => crate::gpusim::WeightFormat::Nested8,
+            GemmFormat::Fp8 => crate::gpusim::WeightFormat::Fp8,
+        }
+    }
+}
+
+/// Stored weights for the engine, row-major `[N, K]`.
+#[derive(Clone, Debug)]
+pub enum GemmWeights {
+    /// FP16 master bit patterns.
+    F16 {
+        rows: usize,
+        cols: usize,
+        bits: Vec<u16>,
+    },
+    /// NestedFP (upper, lower) planes; serves `Nested16` and `Nested8`.
+    Nested(NestedTensor),
+    /// Per-output-channel absmax E4M3 (`format::quant`).
+    Fp8(QuantizedWeight),
+}
+
+impl GemmWeights {
+    /// Output features (N).
+    pub fn rows(&self) -> usize {
+        match self {
+            GemmWeights::F16 { rows, .. } => *rows,
+            GemmWeights::Nested(t) => t.rows,
+            GemmWeights::Fp8(q) => q.rows,
+        }
+    }
+
+    /// Input features (K).
+    pub fn cols(&self) -> usize {
+        match self {
+            GemmWeights::F16 { cols, .. } => *cols,
+            GemmWeights::Nested(t) => t.cols,
+            GemmWeights::Fp8(q) => q.cols,
+        }
+    }
+
+    /// Can this store run under `fmt`? (`Nested` serves both nested
+    /// formats; the baselines only themselves.) An upper-plane-only
+    /// nested store — legal, the FP8 path never reads `lower` — serves
+    /// `Nested8` but not the reconstructing `Nested16` path, so misuse
+    /// hits the engine's designed assert instead of a slice panic.
+    pub fn supports(&self, fmt: GemmFormat) -> bool {
+        match (self, fmt) {
+            (GemmWeights::F16 { .. }, GemmFormat::Fp16) => true,
+            (GemmWeights::Nested(t), GemmFormat::Nested16) => t.lower.len() == t.upper.len(),
+            (GemmWeights::Nested(_), GemmFormat::Nested8) => true,
+            (GemmWeights::Fp8(_), GemmFormat::Fp8) => true,
+            _ => false,
+        }
+    }
+
+    /// Quantize/encode an f32 weight matrix into the store `fmt` needs.
+    /// The f32 values are first rounded to FP16 (the master precision);
+    /// `Nested16`/`Nested8` then require every element NestedFP-eligible
+    /// (|w| ≤ 1.75) and fail otherwise, mirroring the paper's exception-
+    /// layer rule.
+    pub fn prepare(w: &Tensor2, fmt: GemmFormat) -> Result<GemmWeights> {
+        let bits: Vec<u16> = w.data.iter().map(|&v| F16::from_f32(v).to_bits()).collect();
+        match fmt {
+            GemmFormat::Fp16 => Ok(GemmWeights::F16 {
+                rows: w.rows,
+                cols: w.cols,
+                bits,
+            }),
+            GemmFormat::Nested16 | GemmFormat::Nested8 => {
+                match nested::decompose_tensor(w.rows, w.cols, &bits) {
+                    DecomposeResult::Nested(t) => Ok(GemmWeights::Nested(t)),
+                    DecomposeResult::Exception {
+                        ineligible_count,
+                        max_abs,
+                    } => bail!(
+                        "{ineligible_count} ineligible element(s) (max |w| = {max_abs}): \
+                         exception layer, stays FP16"
+                    ),
+                }
+            }
+            GemmFormat::Fp8 => {
+                // quantize from the f16-rounded masters, like the paper's
+                // baseline does
+                let w16 = Tensor2::from_vec(
+                    w.rows,
+                    w.cols,
+                    bits.iter().map(|&b| F16::from_bits(b).to_f32()).collect(),
+                );
+                Ok(GemmWeights::Fp8(quant::quantize_weight_per_channel(&w16)))
+            }
+        }
+    }
+
+    /// The dense f32 `[N, K]` weight matrix `fmt` semantically multiplies
+    /// by — the engine's reference oracle operand. Pack stages must
+    /// produce *exactly* these values (bit-for-bit), which is what makes
+    /// the engine's output bit-identical to
+    /// `x.matmul(&dense.transposed())`.
+    pub fn dense_f32(&self, fmt: GemmFormat) -> Tensor2 {
+        assert!(self.supports(fmt), "{:?} cannot run as {fmt:?}", self.kind());
+        let data = match (self, fmt) {
+            (GemmWeights::F16 { bits, .. }, GemmFormat::Fp16) => {
+                bits.iter().map(|&b| F16::from_bits(b).to_f32()).collect()
+            }
+            (GemmWeights::Nested(t), GemmFormat::Nested16) => t.reconstruct_f32(),
+            (GemmWeights::Nested(t), GemmFormat::Nested8) => t.fp8_weights_f32(),
+            (GemmWeights::Fp8(q), GemmFormat::Fp8) => q.dequantize().data,
+            _ => unreachable!("supports() checked above"),
+        };
+        Tensor2::from_vec(self.rows(), self.cols(), data)
+    }
+
+    /// Weight bytes a GEMM under `fmt` streams from the store — the
+    /// memory-traffic half of the paper's story: `Nested8` touches half
+    /// of what `Nested16`/`Fp16` do.
+    pub fn bytes_streamed(&self, fmt: GemmFormat) -> usize {
+        let elems = self.rows() * self.cols();
+        match fmt {
+            GemmFormat::Fp16 | GemmFormat::Nested16 => 2 * elems,
+            GemmFormat::Nested8 => elems,
+            // codes + one f32 scale per output channel
+            GemmFormat::Fp8 => elems + 4 * self.rows(),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            GemmWeights::F16 { .. } => "F16",
+            GemmWeights::Nested(_) => "Nested",
+            GemmWeights::Fp8(_) => "Fp8",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::testutil::gauss;
+
+    #[test]
+    fn prepare_and_support_matrix() {
+        let w = gauss(8, 16, 1);
+        for fmt in GemmFormat::ALL {
+            let g = GemmWeights::prepare(&w, fmt).unwrap();
+            assert!(g.supports(fmt));
+            assert_eq!((g.rows(), g.cols()), (8, 16));
+            assert_eq!(g.dense_f32(fmt).rows, 8);
+        }
+        // one nested store serves both nested formats
+        let g = GemmWeights::prepare(&w, GemmFormat::Nested16).unwrap();
+        assert!(g.supports(GemmFormat::Nested8));
+        assert!(!g.supports(GemmFormat::Fp16));
+    }
+
+    #[test]
+    fn upper_only_store_serves_nested8_only() {
+        // an upper-plane-only tensor (no lower bytes) is how the FP8 path
+        // can ship weights; it must refuse the reconstructing format
+        let w = gauss(3, 5, 9);
+        let GemmWeights::Nested(mut t) =
+            GemmWeights::prepare(&w, GemmFormat::Nested8).unwrap()
+        else {
+            panic!("expected nested store");
+        };
+        t.lower = Vec::new();
+        let g = GemmWeights::Nested(t);
+        assert!(g.supports(GemmFormat::Nested8));
+        assert!(!g.supports(GemmFormat::Nested16));
+        assert_eq!(g.dense_f32(GemmFormat::Nested8).data.len(), 15);
+    }
+
+    #[test]
+    fn ineligible_weights_rejected_for_nested() {
+        let w = Tensor2::from_vec(1, 2, vec![0.5, 3.0]);
+        assert!(GemmWeights::prepare(&w, GemmFormat::Nested16).is_err());
+        assert!(GemmWeights::prepare(&w, GemmFormat::Fp16).is_ok());
+    }
+
+    #[test]
+    fn nested16_dense_is_lossless() {
+        let w = gauss(6, 10, 2);
+        let w16: Vec<f32> = w
+            .data
+            .iter()
+            .map(|&v| F16::from_f32(v).to_f32())
+            .collect();
+        let g = GemmWeights::prepare(&w, GemmFormat::Nested16).unwrap();
+        assert_eq!(g.dense_f32(GemmFormat::Nested16).data, w16);
+    }
+
+    #[test]
+    fn bytes_streamed_halves_in_fp8_mode() {
+        let g = GemmWeights::prepare(&gauss(4, 32, 3), GemmFormat::Nested16).unwrap();
+        assert_eq!(g.bytes_streamed(GemmFormat::Nested16), 2 * 4 * 32);
+        assert_eq!(g.bytes_streamed(GemmFormat::Nested8), 4 * 32);
+    }
+
+    #[test]
+    fn format_labels_roundtrip_gpusim() {
+        for fmt in GemmFormat::ALL {
+            assert!(fmt.to_gpusim().weight_bytes() >= 1.0);
+            assert!(!fmt.label().is_empty());
+        }
+    }
+}

@@ -30,6 +30,12 @@
 //!   ([`coordinator::router`]) on one shared virtual clock, with
 //!   **staged FP8 escalation** demoting individual replicas during
 //!   surges while the rest keep serving FP16.
+//! * [`gemm`] — the executable compute layer: a cache-blocked,
+//!   multi-threaded CPU GEMM engine that consumes NestedFP weights
+//!   directly — the pack stage fuses the (upper, lower) → FP16
+//!   reconstruction in FP16 mode and streams only the upper plane in FP8
+//!   mode — bit-identical to the reference oracle for every format and
+//!   worker count.
 //! * [`gpusim`] — a tile-level analytical H100 GEMM cost model (the
 //!   hardware substitute; see DESIGN.md §2) with the paper's kernel config
 //!   search space, used to regenerate the performance figures.
@@ -43,6 +49,7 @@ pub mod util;
 pub mod format;
 pub mod kvcache;
 pub mod model;
+pub mod gemm;
 pub mod gpusim;
 pub mod trace;
 pub mod eval;

@@ -4,11 +4,15 @@
 //! repro reproduce <exp>      regenerate a paper table/figure
 //!                            exp: table1|table2|table3|fig1a|fig1b|fig3|
 //!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|
-//!                                 cluster|kvcache|all
+//!                                 gemm|cluster|kvcache|all
 //!        [--artifacts DIR]   artifact directory (default: artifacts)
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
 //!        [--json FILE]       also write the reports as machine-readable
 //!                            JSON (perf-trajectory tracking across PRs)
+//!        [--quick]           gemm only: small shape set, CI smoke budget
+//!        [--update-trajectory]
+//!                            gemm only: rewrite GEMM_BENCH.json from this
+//!                            run's measured GFLOP/s
 //! repro serve                TCP serving front-end on the real backend
 //!        [--addr HOST:PORT]  default 127.0.0.1:7171
 //!        [--mode dual|fp16|fp8]
@@ -21,6 +25,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use nestedfp::bench::gemm::{self as gemmbench, BenchOpts};
 use nestedfp::bench::{cluster, fig1, fig3, fig7, fig8, kvcache, report::Report, table1, table3};
 use nestedfp::coordinator::backend::{ModeMap, RealBackend};
 use nestedfp::coordinator::engine::{Engine, EngineConfig};
@@ -41,7 +46,7 @@ fn main() {
         _ => {
             eprintln!(
                 "nestedfp repro — usage:\n  \
-                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|cluster|kvcache|all> [--json FILE]\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|cluster|kvcache|all> [--json FILE] [--quick]\n  \
                  repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N]\n  \
                  repro analyze\n  \
                  repro gemm --m M --n N --k K [--format ...]"
@@ -64,7 +69,12 @@ fn print_reports(reports: Vec<Report>) {
 
 /// Run one experiment and return its reports (printed by the caller, and
 /// optionally serialized with `--json`).
-fn run_one(exp: &str, dir: &Path, eval_n: usize) -> anyhow::Result<Vec<Report>> {
+fn run_one(
+    exp: &str,
+    dir: &Path,
+    eval_n: usize,
+    gemm_opts: BenchOpts,
+) -> anyhow::Result<Vec<Report>> {
     Ok(match exp {
         "table1" | "table2" => vec![table1::table12(dir, eval_n)?, table1::table2_weights(dir)?],
         "table3" => vec![table3::table3()],
@@ -77,6 +87,7 @@ fn run_one(exp: &str, dir: &Path, eval_n: usize) -> anyhow::Result<Vec<Report>> 
         "fig9" => vec![fig7::fig9()],
         "fig10" => fig8::fig10()?,
         "fig13" => vec![fig7::fig13()],
+        "gemm" => gemmbench::gemm_bench(&gemm_opts)?,
         "cluster" => vec![cluster::cluster_scaling()?],
         "kvcache" => vec![kvcache::kvcache_pressure()?, kvcache::codec_error()],
         other => anyhow::bail!("unknown experiment '{other}'"),
@@ -118,9 +129,13 @@ fn cmd_reproduce(args: &Args) -> i32 {
         .unwrap_or("all");
     let dir = artifacts_dir(args);
     let eval_n = args.get_usize("eval-n", 24);
+    let gemm_opts = BenchOpts {
+        quick: args.flag("quick"),
+        update_trajectory: args.flag("update-trajectory"),
+    };
     let mut collected: Vec<(String, Vec<Report>)> = Vec::new();
     let mut run_and_print = |e: &str| -> anyhow::Result<()> {
-        let reports = run_one(e, &dir, eval_n)?;
+        let reports = run_one(e, &dir, eval_n, gemm_opts)?;
         collected.push((e.to_string(), reports.clone()));
         print_reports(reports);
         Ok(())
@@ -129,7 +144,7 @@ fn cmd_reproduce(args: &Args) -> i32 {
         let mut r = Ok(());
         for e in [
             "fig1a", "fig1b", "fig3", "fig7a", "fig7b", "fig9", "fig13", "fig8", "fig10",
-            "cluster", "kvcache", "table3", "table1",
+            "gemm", "cluster", "kvcache", "table3", "table1",
         ] {
             eprintln!("[reproduce] running {e} ...");
             r = run_and_print(e);

@@ -1,0 +1,192 @@
+//! Property tests for the fused-NestedFP GEMM engine: the engine must be
+//! bit-identical to the naive reference oracle for every format (in
+//! particular, fused `Nested16` == reconstruct-then-matmul exactly), the
+//! `Nested8` path must sit within its documented tolerance of the FP16
+//! product, and the thread pool must never change a single bit.
+
+use nestedfp::format::tensor::Tensor2;
+use nestedfp::gemm::{GemmConfig, GemmEngine, GemmFormat, GemmWeights};
+use nestedfp::util::prop;
+use nestedfp::util::rng::Pcg64;
+
+fn gauss(rows: usize, cols: usize, rng: &mut Pcg64) -> Tensor2 {
+    Tensor2::from_vec(
+        rows,
+        cols,
+        (0..rows * cols)
+            .map(|_| (rng.normal() as f32 * 0.3).clamp(-1.7, 1.7))
+            .collect(),
+    )
+}
+
+/// Deliberately awkward tiles + 2 workers, to exercise every edge path.
+fn edge_engine() -> GemmEngine {
+    GemmEngine::new(GemmConfig {
+        mc: 6,
+        kc: 10,
+        nc: 20,
+        threads: 2,
+    })
+}
+
+fn oracle(x: &Tensor2, w: &GemmWeights, fmt: GemmFormat) -> Tensor2 {
+    x.matmul(&w.dense_f32(fmt).transposed())
+}
+
+fn bits_equal(a: &Tensor2, b: &Tensor2) -> Result<(), String> {
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("element {i}: {x} ({:#010x}) vs {y} ({:#010x})", x.to_bits(), y.to_bits()));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn nested16_bit_identical_to_reconstruct_then_matmul() {
+    // the acceptance criterion: fused reconstruction inside the pack
+    // stage == reconstruct the whole tensor, then the reference matmul
+    let engine = edge_engine();
+    prop::check_res(
+        "gemm-nested16-bitexact",
+        40,
+        |rng| {
+            let (m, n, k) = (
+                1 + rng.index(24),
+                1 + rng.index(24),
+                1 + rng.index(32),
+            );
+            let x = gauss(m, k, rng);
+            let w = gauss(n, k, rng);
+            (x, w)
+        },
+        |(x, w)| {
+            let g = GemmWeights::prepare(w, GemmFormat::Nested16).map_err(|e| e.to_string())?;
+            bits_equal(
+                &engine.matmul(x, &g, GemmFormat::Nested16),
+                &oracle(x, &g, GemmFormat::Nested16),
+            )
+        },
+    );
+}
+
+#[test]
+fn every_format_bit_identical_to_its_oracle() {
+    let engine = edge_engine();
+    prop::check_res(
+        "gemm-all-formats-bitexact",
+        24,
+        |rng| {
+            let fmt = GemmFormat::ALL[rng.index(4)];
+            let (m, n, k) = (1 + rng.index(16), 1 + rng.index(20), 1 + rng.index(24));
+            let x = gauss(m, k, rng);
+            let w = gauss(n, k, rng);
+            (fmt, x, w)
+        },
+        |(fmt, x, w)| {
+            let g = GemmWeights::prepare(w, *fmt).map_err(|e| e.to_string())?;
+            bits_equal(&engine.matmul(x, &g, *fmt), &oracle(x, &g, *fmt))
+        },
+    );
+}
+
+#[test]
+fn nested16_bit_identical_on_a_larger_tensor() {
+    // one shape big enough to cross several (mc, kc, nc) tile boundaries
+    // and both worker bands
+    let mut rng = Pcg64::seeded(4242);
+    let x = gauss(33, 65, &mut rng);
+    let w = gauss(47, 65, &mut rng);
+    let g = GemmWeights::prepare(&w, GemmFormat::Nested16).unwrap();
+    bits_equal(
+        &edge_engine().matmul(&x, &g, GemmFormat::Nested16),
+        &oracle(&x, &g, GemmFormat::Nested16),
+    )
+    .unwrap();
+}
+
+#[test]
+fn nested8_within_documented_tolerance_of_fp16() {
+    // documented tolerance: the Nested8 weight differs from the FP16
+    // weight by at most max(|w|/16, 2^-18) per element (3-bit mantissa
+    // RNE, plus the E4M3-subnormal floor at the 2^-8 scale), so the
+    // product drift is bounded by sum_p |x|·|w8-w16|, plus a small
+    // allowance for f32 accumulation-order rounding.
+    let engine = edge_engine();
+    prop::check_res(
+        "gemm-nested8-tolerance",
+        24,
+        |rng| {
+            let (m, n, k) = (1 + rng.index(12), 1 + rng.index(16), 1 + rng.index(48));
+            let x = gauss(m, k, rng);
+            let w = gauss(n, k, rng);
+            (x, w)
+        },
+        |(x, w)| {
+            let g = GemmWeights::prepare(w, GemmFormat::Nested16).map_err(|e| e.to_string())?;
+            let w16 = g.dense_f32(GemmFormat::Nested16);
+            let w8 = g.dense_f32(GemmFormat::Nested8);
+            // per-element weight error obeys the documented bound
+            for (a, b) in w8.data.iter().zip(&w16.data) {
+                let lim = (b.abs() as f64 / 16.0).max(f64::powi(2.0, -18)) * (1.0 + 1e-6);
+                if ((a - b).abs() as f64) > lim {
+                    return Err(format!("weight tolerance broken: {a} vs {b}"));
+                }
+            }
+            let c16 = engine.matmul(x, &g, GemmFormat::Nested16);
+            let c8 = engine.matmul(x, &g, GemmFormat::Nested8);
+            let k = x.cols;
+            for i in 0..x.rows {
+                for j in 0..w16.rows {
+                    let mut werr = 0.0f64;
+                    let mut mag = 0.0f64;
+                    for p in 0..k {
+                        let xa = x.get(i, p).abs() as f64;
+                        werr += xa * (w8.get(j, p) - w16.get(j, p)).abs() as f64;
+                        mag += xa * w16.get(j, p).abs() as f64;
+                    }
+                    let bound = werr + 1e-5 * mag + 1e-9;
+                    let d = (c8.get(i, j) - c16.get(i, j)).abs() as f64;
+                    if d > bound {
+                        return Err(format!("({i},{j}): |Δ|={d:.3e} > bound {bound:.3e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn worker_counts_1_2_8_bit_identical_on_ragged_shapes() {
+    // the deterministic-pool satellite: 1/2/8 workers, shapes that are
+    // not multiples of any tile size, plus empty and single-row cases
+    let shapes = [(37usize, 23usize, 41usize), (5, 7, 3), (1, 13, 9), (0, 8, 8), (8, 1, 8)];
+    let mut rng = Pcg64::seeded(777);
+    for &(m, n, k) in &shapes {
+        let x = gauss(m, k, &mut rng);
+        let w = gauss(n, k, &mut rng);
+        for fmt in [GemmFormat::Nested16, GemmFormat::Nested8] {
+            let g = GemmWeights::prepare(&w, fmt).unwrap();
+            let base = GemmEngine::new(GemmConfig {
+                mc: 4,
+                kc: 8,
+                nc: 8,
+                threads: 1,
+            })
+            .matmul(&x, &g, fmt);
+            for threads in [2, 8] {
+                let c = GemmEngine::new(GemmConfig {
+                    mc: 4,
+                    kc: 8,
+                    nc: 8,
+                    threads,
+                })
+                .matmul(&x, &g, fmt);
+                bits_equal(&c, &base).unwrap_or_else(|e| {
+                    panic!("shape ({m},{n},{k}) {fmt:?} threads={threads}: {e}")
+                });
+            }
+        }
+    }
+}

@@ -140,46 +140,59 @@ fn engine_end_to_end_generates_correct_answers() {
 }
 
 #[test]
-fn gemm_artifacts_match_reference() {
+fn gemm_artifacts_match_native_engine() {
     let Some(dir) = artifacts() else { return };
-    let rt = ModelRuntime::load(&dir, &["nested16"], &["gemm"]).unwrap();
+    use nestedfp::format::fp16::F16;
+    use nestedfp::format::tensor::Tensor2;
+    let rt = ModelRuntime::load(&dir, &["nested16", "nested8"], &["gemm"]).unwrap();
+    let backend = RealBackend::new(rt, ModeMap::default(), 64);
     let (m, n, k) = (32usize, 256usize, 256usize);
     let x16: Vec<u16> = (0..m * k)
-        .map(|i| nestedfp::format::fp16::F16::from_f32(((i % 17) as f32 - 8.0) * 0.1).to_bits())
+        .map(|i| F16::from_f32(((i % 17) as f32 - 8.0) * 0.1).to_bits())
         .collect();
-    let upper = rt.weights.get("layers.0.wq.upper").unwrap().bytes.clone();
-    let lower = rt.weights.get("layers.0.wq.lower").unwrap().bytes.clone();
-    let step = rt.step("gemm", "nested16", n).unwrap();
-    let out = rt
+    let xr = Tensor2::from_vec(
+        m,
+        k,
+        x16.iter().map(|&b| F16::from_bits(b).to_f32()).collect(),
+    );
+    let upper = backend.rt.weights.get("layers.0.wq.upper").unwrap().bytes.clone();
+    let lower = backend.rt.weights.get("layers.0.wq.lower").unwrap().bytes.clone();
+    let step = backend.rt.step("gemm", "nested16", n).unwrap();
+    let out = backend
+        .rt
         .run(
             step,
             &[
                 HostTensor::from_u16(vec![m, k], &x16),
-                HostTensor::from_u8(vec![n, k], upper.clone()),
-                HostTensor::from_u8(vec![n, k], lower.clone()),
+                HostTensor::from_u8(vec![n, k], upper),
+                HostTensor::from_u8(vec![n, k], lower),
             ],
         )
         .unwrap();
     let got = out.tensors[0].as_f32().unwrap();
 
-    // rust reference: reconstruct weights, naive matmul
-    use nestedfp::format::fp16::F16;
-    let w: Vec<f32> = upper
-        .iter()
-        .zip(&lower)
-        .map(|(&u, &l)| nested::reconstruct(u, l).to_f32())
-        .collect();
+    // rust reference: the host compute engine over the same store (the
+    // fused-pack path, bit-identical to reconstruct + naive matmul)
+    let expect = backend.native_gemm("nested16", "layers.0.wq", &xr).unwrap();
     for i in (0..m).step_by(7) {
         for j in (0..n).step_by(31) {
-            let mut acc = 0f32;
-            for p in 0..k {
-                acc += F16::from_bits(x16[i * k + p]).to_f32() * w[j * k + p];
-            }
-            let g = got[i * n + j];
+            let (acc, g) = (expect.get(i, j), got[i * n + j]);
             assert!(
                 (acc - g).abs() <= 1e-3 * acc.abs().max(1.0),
-                "({i},{j}): ref {acc} vs artifact {g}"
+                "({i},{j}): engine {acc} vs artifact {g}"
             );
         }
     }
+
+    // the nested16 host path must equal the fp16 host path bit-for-bit
+    // (losslessness at the product level)
+    let native16 = backend.native_gemm("fp16", "layers.0.wq", &xr).unwrap();
+    assert!(
+        expect
+            .data
+            .iter()
+            .zip(&native16.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "nested16 and fp16 native products must be bit-identical"
+    );
 }
