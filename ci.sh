@@ -34,14 +34,27 @@ cargo build --release --offline
 echo "== cargo build --release --examples =="
 cargo build --release --offline --examples
 
+# The control-layer suites run first, by name, so a behavioral drift
+# (golden trace) or stability regression (autopilot props) fails the
+# gate with clear attribution; the full `cargo test -q` below includes
+# them again at negligible cost (binaries are already built).
+echo "== cargo test (control-layer suites: golden trace + autopilot props) =="
+cargo test -q --offline --test golden_trace --test autopilot_props
+
 echo "== cargo test -q =="
 cargo test -q --offline
 
 echo "== smoke: repro reproduce gemm --quick =="
 ./target/release/repro reproduce gemm --quick --json /tmp/nestedfp_gemm_ci.json
 
+echo "== smoke: repro reproduce autopilot --quick =="
+./target/release/repro reproduce autopilot --quick --json /tmp/nestedfp_autopilot_ci.json
+
 echo "== smoke: example kernel_tour (real engine vs gpusim) =="
 cargo run --release --offline --example kernel_tour
+
+echo "== smoke: example autopilot_surge (closed-loop SLO control) =="
+cargo run --release --offline --example autopilot_surge -- --quick
 
 echo "== cargo doc --no-deps (warnings denied) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --offline

@@ -1,0 +1,109 @@
+//! The closed-loop SLO autopilot under an Azure-shaped surge — the
+//! multi-replica control study.
+//!
+//! Replays the window around the day trace's busiest minute (calm
+//! lead-in, the 31 → 98 req/s spike downscaled to a two-replica budget,
+//! drain) against four arms — static-FP16, static-FP8, local-dual
+//! (per-engine reactive control only), and the cluster autopilot — and
+//! prints, per arm, goodput / SLO violations / tail latencies, plus for
+//! the autopilot arm:
+//!
+//! * the cluster ladder timeline (severity 0..2N and FP8 pins over time),
+//! * each replica's directive timeline (FP16 → Mixed → FP8 and back) and
+//!   per-mode dwell, and
+//! * how many escalations the surge predictor fired ahead of measured
+//!   pressure (the "pre-escalations" that keep the queue from backing up).
+//!
+//! Run: `cargo run --release --offline --example autopilot_surge
+//!       [-- --quick]`
+
+use nestedfp::bench::autopilot::{run_arm, summarize, surge_workload, Arm, SurgeScenario};
+use nestedfp::coordinator::precision::{PrecisionDirective, SloConfig};
+use nestedfp::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let sc = if args.flag("quick") {
+        SurgeScenario::quick()
+    } else {
+        SurgeScenario::full()
+    };
+    let slo = SloConfig::default();
+    let n_requests = surge_workload(&sc).len();
+    println!(
+        "== autopilot_surge: {} requests over {}s ({} replicas, lead {}s, the 18:12 spike, drain) ==",
+        n_requests, sc.len_s, sc.replicas, sc.lead_s
+    );
+
+    for arm in [Arm::StaticFp16, Arm::StaticFp8, Arm::LocalDual, Arm::Autopilot] {
+        let mut report = run_arm(arm, &sc)?;
+        let s = summarize(&mut report, &slo);
+        println!(
+            "\n-- {:<11} goodput {:5.2} req/s | viol {:>3}s | TTFT p99 {:6.1} ms | TPOT p99 {:5.1} ms | fp16-time {:>3.0}%",
+            arm.name(),
+            s.goodput_req_s,
+            s.slo_violation_s,
+            s.ttft_p99_s * 1e3,
+            s.tpot_p99_s * 1e3,
+            s.fp16_time_frac * 100.0,
+        );
+        if arm != Arm::Autopilot {
+            continue;
+        }
+        println!(
+            "   ladder: {}",
+            if report.ladder_timeline.is_empty() {
+                "never engaged".to_string()
+            } else {
+                report
+                    .ladder_timeline
+                    .iter()
+                    .take(16)
+                    .map(|&(t, sev)| format!("{t:.1}s->{sev}"))
+                    .collect::<Vec<_>>()
+                    .join("  ")
+            }
+        );
+        println!(
+            "   {} directive switches, {} predictor pre-escalations",
+            s.mode_switches, s.pre_escalations
+        );
+        for (i, r) in report.replicas.iter().enumerate() {
+            let dirs: Vec<String> = r
+                .directive_timeline
+                .iter()
+                .take(10)
+                .map(|&(t, d)| {
+                    let name = match d {
+                        PrecisionDirective::Fp16 => "fp16",
+                        PrecisionDirective::Mixed => "mix",
+                        PrecisionDirective::Fp8 => "fp8",
+                    };
+                    format!("{t:.1}s->{name}")
+                })
+                .collect();
+            println!(
+                "   replica {i}: {:>3} reqs  dwell fp16/mix/fp8 = {:>4.0}/{:>4.0}/{:>4.0}s  ladder: {}",
+                r.routed,
+                r.mode_stats.dwell_s[0],
+                r.mode_stats.dwell_s[1],
+                r.mode_stats.dwell_s[2],
+                if dirs.is_empty() {
+                    "(pinned fp16 throughout)".to_string()
+                } else {
+                    dirs.join("  ")
+                },
+            );
+        }
+    }
+    println!(
+        "\nReading the output: static-FP16 pays the surge in SLO violations, \
+         static-FP8 pays it in quality all day long. The autopilot pays neither: \
+         the predictor pre-arms the fleet to Mixed as the ramp builds, measured \
+         pressure pins the least-headroom replica(s) to FP8 for the spike itself, \
+         and the hysteresis ladders walk everyone back to the FP16 quality lock \
+         as the surge drains — goodput at least FP16's, violations at FP8's level, \
+         most replica-time still at full quality."
+    );
+    Ok(())
+}

@@ -71,6 +71,7 @@ pub fn run_cluster(
             kv: KvPressureConfig::default(),
         },
         surge: SurgeConfig::default(),
+        autopilot: None,
     };
     let mut cluster = ClusterRouter::new(backends, cfg);
     cluster.run(surge_workload(seconds, base))

@@ -1,0 +1,710 @@
+//! The closed-loop SLO autopilot — dynamic precision as a real control
+//! system, not a per-engine heuristic.
+//!
+//! The paper's headline claim is what NestedFP *enables*: "a flexible
+//! platform for dynamic, SLO-aware precision selection" under bursty
+//! load (§1, §3.2). PR 1 approximated that with a reactive queue-depth
+//! trigger (`ClusterRouter::update_escalation`); this module replaces it
+//! with the controller that MorphServe-style systems show is where
+//! goodput is actually won or lost:
+//!
+//! 1. **Sliding-window SLO tracking** ([`SloTracker`]) — per replica,
+//!    online TTFT/TPOT p50/p99 over the last `window_s` virtual-clock
+//!    seconds, compared against [`SloConfig`] targets.
+//! 2. **Per-replica hysteresis state machines** — each replica walks the
+//!    three-rung ladder FP16 → Mixed → FP8 ([`PrecisionDirective`]) one
+//!    rung at a time, with separate escalate/promote dwell times on the
+//!    virtual clock and a post-promotion cooldown so the fleet cannot
+//!    thrash.
+//! 3. **A cluster escalation ladder** — one damped severity integrator
+//!    (±1 rung per control tick) distributes FP8 rungs to the *fewest*
+//!    replicas needed, ordered by SLO headroom (the router's own
+//!    [`slo_headroom`] score breaks ties), and hands them back in the
+//!    reverse order as the surge drains.
+//! 4. **A surge predictor** ([`SurgePredictor`]) — fast/slow EWMAs over
+//!    the observed arrival-rate series (the `trace::azure` shape);
+//!    a rising short-horizon slope *pre-escalates* the fleet to `Mixed`
+//!    before the queue backs up, and the pinned-FP8 rungs are reserved
+//!    for measured (not predicted) pressure.
+//!
+//! The autopilot only *directs*; the per-engine
+//! [`PrecisionController`](super::precision::PrecisionController) still
+//! owns the iteration-level decision whenever its rung is `Mixed`.
+
+use std::collections::VecDeque;
+
+use super::engine::EngineStep;
+use super::precision::{PrecisionDirective, SloConfig};
+use super::router::{slo_headroom, ReplicaSnapshot};
+
+/// Autopilot tuning. Defaults mirror the per-engine controller's
+/// high/low water marks (0.85 / 0.60) so the two control layers agree on
+/// what "pressured" means.
+#[derive(Clone, Copy, Debug)]
+pub struct AutopilotConfig {
+    /// SLO targets the tracker scores against.
+    pub slo: SloConfig,
+    /// Sliding SLO window, virtual-clock seconds.
+    pub window_s: f64,
+    /// Minimum spacing between control decisions.
+    pub control_interval_s: f64,
+    /// Escalate one severity rung when cluster pressure exceeds this.
+    pub up_pressure: f64,
+    /// Release one severity rung when cluster pressure falls below this.
+    pub down_pressure: f64,
+    /// Queue depth that alone saturates a replica's pressure score to 1.
+    pub queue_ref: f64,
+    /// Minimum time in a rung before escalating (toward FP8).
+    pub escalate_dwell_s: f64,
+    /// Minimum time in a rung before promoting (toward FP16).
+    pub promote_dwell_s: f64,
+    /// After a promotion, no re-escalation of that replica for this long.
+    pub cooldown_s: f64,
+    /// Pressure bonus that keeps an already-demoted replica demoted in
+    /// the ladder ordering (assignment stickiness against churn).
+    pub sticky_bonus: f64,
+    /// Predictor boost at full relative slope (0 disables pre-escalation).
+    pub predictor_gain: f64,
+    /// Rate floor for the predictor's relative-slope normalization, req/s
+    /// (prevents divide-by-tiny on idle fleets).
+    pub predictor_floor_rate: f64,
+}
+
+impl Default for AutopilotConfig {
+    fn default() -> Self {
+        AutopilotConfig {
+            slo: SloConfig::default(),
+            window_s: 8.0,
+            control_interval_s: 0.25,
+            up_pressure: 0.85,
+            down_pressure: 0.60,
+            queue_ref: 6.0,
+            escalate_dwell_s: 0.5,
+            promote_dwell_s: 2.0,
+            cooldown_s: 1.5,
+            sticky_bonus: 0.15,
+            predictor_gain: 0.6,
+            predictor_floor_rate: 1.0,
+        }
+    }
+}
+
+/// Per-replica sliding-window latency tracker: online TTFT/TPOT
+/// percentiles over the last `window_s` seconds of the virtual clock.
+#[derive(Clone, Debug, Default)]
+pub struct SloTracker {
+    /// (observation time, TTFT seconds) of completions in the window.
+    ttft: VecDeque<(f64, f64)>,
+    /// (observation time, worst decode gap seconds) per decode iteration.
+    tpot: VecDeque<(f64, f64)>,
+}
+
+/// Exact percentile over an unsorted sample list (`None` when empty) —
+/// delegates to the crate's single percentile definition,
+/// [`crate::util::stats::percentile_sorted`], so the control loop and
+/// the reported metrics can never disagree about what a p99 is.
+fn percentile_of(mut xs: Vec<f64>, q: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency sample"));
+    Some(crate::util::stats::percentile_sorted(&xs, q))
+}
+
+impl SloTracker {
+    pub fn observe_ttft(&mut self, t: f64, ttft_s: f64) {
+        self.ttft.push_back((t, ttft_s));
+    }
+
+    pub fn observe_tpot(&mut self, t: f64, gap_s: f64) {
+        self.tpot.push_back((t, gap_s));
+    }
+
+    /// Drop samples older than `window_s` before `now`.
+    pub fn evict(&mut self, now: f64, window_s: f64) {
+        let cutoff = now - window_s;
+        while self.ttft.front().is_some_and(|&(t, _)| t < cutoff) {
+            self.ttft.pop_front();
+        }
+        while self.tpot.front().is_some_and(|&(t, _)| t < cutoff) {
+            self.tpot.pop_front();
+        }
+    }
+
+    /// Windowed TTFT percentile, `q` in [0, 100]; `None` when no
+    /// completion landed inside the window.
+    pub fn ttft_percentile(&self, q: f64) -> Option<f64> {
+        percentile_of(self.ttft.iter().map(|&(_, v)| v).collect(), q)
+    }
+
+    /// Windowed TPOT percentile over per-iteration worst gaps.
+    pub fn tpot_percentile(&self, q: f64) -> Option<f64> {
+        percentile_of(self.tpot.iter().map(|&(_, v)| v).collect(), q)
+    }
+
+    pub fn samples(&self) -> (usize, usize) {
+        (self.ttft.len(), self.tpot.len())
+    }
+}
+
+/// Short-horizon arrival-rate trend over fast/slow EWMAs of the observed
+/// per-second arrival counts (the `trace::azure` rate-series shape,
+/// reconstructed online from routed arrivals — no lookahead).
+#[derive(Clone, Debug)]
+pub struct SurgePredictor {
+    bucket_s: f64,
+    tau_fast: f64,
+    tau_slow: f64,
+    bucket_start: f64,
+    count: f64,
+    fast: f64,
+    slow: f64,
+    primed: bool,
+}
+
+impl Default for SurgePredictor {
+    fn default() -> Self {
+        SurgePredictor {
+            bucket_s: 1.0,
+            tau_fast: 2.0,
+            tau_slow: 8.0,
+            bucket_start: 0.0,
+            count: 0.0,
+            fast: 0.0,
+            slow: 0.0,
+            primed: false,
+        }
+    }
+}
+
+impl SurgePredictor {
+    /// Close every whole bucket up to `t`, feeding its rate into the
+    /// EWMAs (empty buckets feed zeros — decay is part of the signal).
+    fn roll_to(&mut self, t: f64) {
+        while t >= self.bucket_start + self.bucket_s {
+            let rate = self.count / self.bucket_s;
+            if self.primed {
+                let af = 1.0 - (-self.bucket_s / self.tau_fast).exp();
+                let sl = 1.0 - (-self.bucket_s / self.tau_slow).exp();
+                self.fast += af * (rate - self.fast);
+                self.slow += sl * (rate - self.slow);
+            } else {
+                self.fast = rate;
+                self.slow = rate;
+                self.primed = true;
+            }
+            self.count = 0.0;
+            self.bucket_start += self.bucket_s;
+        }
+    }
+
+    /// Record one arrival at time `t` (non-decreasing across calls).
+    pub fn observe_arrival(&mut self, t: f64) {
+        self.roll_to(t);
+        if t >= self.bucket_start {
+            self.count += 1.0;
+        }
+    }
+
+    /// Smoothed arrival rates `(fast, slow)`, req/s.
+    pub fn rates(&self) -> (f64, f64) {
+        (self.fast, self.slow)
+    }
+
+    /// Pressure boost in `[0, gain]`: positive only while the fast EWMA
+    /// runs ahead of the slow one (a building surge), scaled by the
+    /// relative slope so a 2x ramp saturates it and steady load (fast ==
+    /// slow) contributes nothing.
+    pub fn boost(&mut self, now: f64, gain: f64, floor_rate: f64) -> f64 {
+        self.roll_to(now);
+        if gain <= 0.0 {
+            return 0.0;
+        }
+        let rel = (self.fast - self.slow) / self.slow.max(floor_rate);
+        gain * rel.clamp(0.0, 1.0)
+    }
+}
+
+/// Per-replica directive dwell/switch accounting (mirrored into
+/// [`Metrics`](super::metrics::Metrics) and merged across replicas).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ModeStats {
+    /// Virtual-clock seconds spent under each directive, indexed by
+    /// [`PrecisionDirective::rung`]: `[fp16, mixed, fp8]`.
+    pub dwell_s: [f64; 3],
+    /// Directive transitions (each is one rung: FP16↔Mixed or Mixed↔FP8).
+    pub switches: usize,
+}
+
+/// The per-replica hysteresis state machine. It receives an *assigned*
+/// rung from the cluster ladder every control tick and walks toward it
+/// one rung at a time, subject to dwell times and the post-promotion
+/// cooldown — the assignment can flap, the replica cannot.
+#[derive(Clone, Debug)]
+struct ReplicaFsm {
+    state: PrecisionDirective,
+    entered_at: f64,
+    last_promote_at: f64,
+    last_tick: f64,
+    stats: ModeStats,
+    timeline: Vec<(f64, PrecisionDirective)>,
+}
+
+impl ReplicaFsm {
+    fn new() -> ReplicaFsm {
+        ReplicaFsm {
+            // boot state: "has been FP16 forever" — the first escalation
+            // is never dwell-blocked by an arbitrary t=0 entry stamp
+            state: PrecisionDirective::Fp16,
+            entered_at: f64::NEG_INFINITY,
+            last_promote_at: f64::NEG_INFINITY,
+            last_tick: 0.0,
+            stats: ModeStats::default(),
+            timeline: Vec::new(),
+        }
+    }
+
+    fn tick(
+        &mut self,
+        now: f64,
+        target: PrecisionDirective,
+        cfg: &AutopilotConfig,
+    ) -> PrecisionDirective {
+        let dt = (now - self.last_tick).max(0.0);
+        self.stats.dwell_s[self.state.rung()] += dt;
+        self.last_tick = self.last_tick.max(now);
+        if target != self.state {
+            let escalating = target.rung() > self.state.rung();
+            let in_state = now - self.entered_at;
+            let allowed = if escalating {
+                in_state >= cfg.escalate_dwell_s && now - self.last_promote_at >= cfg.cooldown_s
+            } else {
+                in_state >= cfg.promote_dwell_s
+            };
+            if allowed {
+                self.state = self.state.step_toward(target);
+                self.entered_at = now;
+                self.stats.switches += 1;
+                if !escalating {
+                    self.last_promote_at = now;
+                }
+                self.timeline.push((now, self.state));
+            }
+        }
+        self.state
+    }
+}
+
+/// The cluster-level closed-loop controller. Owned by
+/// [`ClusterRouter`](super::cluster::ClusterRouter) when
+/// [`ClusterConfig::autopilot`](super::cluster::ClusterConfig) is set;
+/// also drivable standalone (property tests, the live TCP server's
+/// wall-clock monitor) through [`Autopilot::control_at`].
+pub struct Autopilot {
+    cfg: AutopilotConfig,
+    trackers: Vec<SloTracker>,
+    fsms: Vec<ReplicaFsm>,
+    predictor: SurgePredictor,
+    /// Cluster ladder position: total demotion rungs distributed over the
+    /// fleet, in `0..=2 * n_replicas` (0 = all FP16, 2n = all FP8).
+    severity: usize,
+    last_control: f64,
+    /// Severity changes driven by the predictor alone (measured pressure
+    /// was still below the escalation threshold) — the "pre-escalations"
+    /// the surge bench reports.
+    pub pre_escalations: usize,
+    /// (time, severity) change points of the cluster ladder.
+    pub ladder_timeline: Vec<(f64, usize)>,
+}
+
+impl Autopilot {
+    pub fn new(n_replicas: usize, cfg: AutopilotConfig) -> Autopilot {
+        assert!(n_replicas > 0, "autopilot needs at least one replica");
+        Autopilot {
+            cfg,
+            trackers: vec![SloTracker::default(); n_replicas],
+            fsms: (0..n_replicas).map(|_| ReplicaFsm::new()).collect(),
+            predictor: SurgePredictor::default(),
+            severity: 0,
+            last_control: f64::NEG_INFINITY,
+            pre_escalations: 0,
+            ladder_timeline: Vec::new(),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.fsms.len()
+    }
+
+    pub fn config(&self) -> &AutopilotConfig {
+        &self.cfg
+    }
+
+    /// Current ladder severity (see [`Autopilot::control_at`]).
+    pub fn severity(&self) -> usize {
+        self.severity
+    }
+
+    /// Current per-replica directives.
+    pub fn directives(&self) -> Vec<PrecisionDirective> {
+        self.fsms.iter().map(|f| f.state).collect()
+    }
+
+    /// One replica's directive change points `(time, new directive)`.
+    pub fn directive_timeline(&self, i: usize) -> &[(f64, PrecisionDirective)] {
+        &self.fsms[i].timeline
+    }
+
+    /// One replica's dwell/switch accounting (call [`Autopilot::finish`]
+    /// first to bill the trailing dwell).
+    pub fn mode_stats(&self, i: usize) -> ModeStats {
+        self.fsms[i].stats
+    }
+
+    /// One replica's sliding-window tracker (read-only).
+    pub fn tracker(&self, i: usize) -> &SloTracker {
+        &self.trackers[i]
+    }
+
+    /// Whether a control tick is due at `now`. Cheap — callers on hot
+    /// driver loops should gate snapshot construction on this before
+    /// paying for [`Autopilot::maybe_control`]'s inputs.
+    pub fn due(&self, now: f64) -> bool {
+        now - self.last_control >= self.cfg.control_interval_s
+    }
+
+    /// Feed the predictor one routed arrival (time non-decreasing).
+    pub fn observe_arrival(&mut self, t: f64) {
+        self.predictor.observe_arrival(t);
+    }
+
+    /// Feed one replica's engine-step outcome into its tracker.
+    pub fn observe_step(&mut self, i: usize, now: f64, step: &EngineStep) {
+        if let Some(gap) = step.tpot_worst {
+            self.trackers[i].observe_tpot(now, gap);
+        }
+        for c in &step.completions {
+            self.trackers[i].observe_ttft(now, c.ttft_s);
+        }
+    }
+
+    /// One replica's pressure score: max of the windowed p99-vs-target
+    /// ratios and the normalized queue depth. 1.0 ≈ "at the SLO edge".
+    pub fn replica_pressure(&mut self, now: f64, i: usize, snap: &ReplicaSnapshot) -> f64 {
+        self.trackers[i].evict(now, self.cfg.window_s);
+        let tp = self.trackers[i].tpot_percentile(99.0).unwrap_or(0.0) / self.cfg.slo.tpot_target;
+        let tt = self.trackers[i].ttft_percentile(99.0).unwrap_or(0.0) / self.cfg.slo.ttft_target;
+        let q = snap.queued_requests as f64 / self.cfg.queue_ref;
+        tp.max(tt).max(q)
+    }
+
+    /// Run one control decision if the control interval elapsed:
+    /// pressures from the trackers + snapshots, predictor boost, then
+    /// [`Autopilot::control_at`]. Returns the directives to apply.
+    pub fn maybe_control(
+        &mut self,
+        now: f64,
+        snaps: &[ReplicaSnapshot],
+    ) -> Option<Vec<PrecisionDirective>> {
+        assert_eq!(snaps.len(), self.fsms.len(), "snapshot count mismatch");
+        if !self.due(now) {
+            return None;
+        }
+        let pressures: Vec<f64> = (0..self.fsms.len())
+            .map(|i| self.replica_pressure(now, i, &snaps[i]))
+            .collect();
+        let boost = self
+            .predictor
+            .boost(now, self.cfg.predictor_gain, self.cfg.predictor_floor_rate);
+        let headroom: Vec<f64> = snaps.iter().map(slo_headroom).collect();
+        Some(self.control_at(now, &pressures, boost, &headroom))
+    }
+
+    /// The control law, on explicit inputs (this is the surface the
+    /// property tests and the live server drive):
+    ///
+    /// * cluster pressure = mean replica pressure + predictor boost;
+    /// * the severity integrator moves **one rung per tick** (damped):
+    ///   up above `up_pressure`, down below `down_pressure`;
+    /// * predictor-driven escalation (boost lifted the mean over the
+    ///   threshold) is capped at severity `n` — the whole fleet can be
+    ///   *pre-armed* to `Mixed`, but pinned FP8 requires measured
+    ///   pressure;
+    /// * severity rungs go to the replicas with the least SLO headroom
+    ///   (highest pressure, sticky toward already-demoted replicas,
+    ///   ties by the router's `slo_headroom`, then highest index), two
+    ///   rungs max per replica;
+    /// * each replica's FSM walks toward its assigned rung under its
+    ///   dwell/cooldown discipline.
+    pub fn control_at(
+        &mut self,
+        now: f64,
+        pressures: &[f64],
+        boost: f64,
+        headroom: &[f64],
+    ) -> Vec<PrecisionDirective> {
+        let n = self.fsms.len();
+        assert_eq!(pressures.len(), n);
+        assert_eq!(headroom.len(), n);
+        self.last_control = now;
+        let mean_p = pressures.iter().sum::<f64>() / n as f64;
+        let cluster = mean_p + boost.max(0.0);
+        let max_sev = 2 * n;
+
+        let mut want = self.severity;
+        if cluster > self.cfg.up_pressure && self.severity < max_sev {
+            let measured = mean_p > self.cfg.up_pressure;
+            let cap = if measured { max_sev } else { n };
+            if self.severity < cap {
+                want = self.severity + 1;
+                if !measured {
+                    self.pre_escalations += 1;
+                }
+            }
+        } else if cluster < self.cfg.down_pressure && self.severity > 0 {
+            want = self.severity - 1;
+        }
+        if want != self.severity {
+            self.severity = want;
+            self.ladder_timeline.push((now, want));
+        }
+
+        // ladder ordering: least SLO headroom first
+        let keys: Vec<f64> = (0..n)
+            .map(|i| {
+                pressures[i]
+                    + if self.fsms[i].state != PrecisionDirective::Fp16 {
+                        self.cfg.sticky_bonus
+                    } else {
+                        0.0
+                    }
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            keys[b]
+                .partial_cmp(&keys[a])
+                .unwrap()
+                .then(headroom[a].partial_cmp(&headroom[b]).unwrap())
+                .then(b.cmp(&a))
+        });
+
+        // distribute severity: up to two rungs per replica, most
+        // pressured first — but a pinned-FP8 rung requires *measured*
+        // pressure on that replica (predictor-driven arming stops at
+        // Mixed; surplus rungs simply go undistributed until pressure
+        // materializes)
+        let mut rungs = vec![0usize; n];
+        let mut left = self.severity;
+        for &i in &order {
+            if left == 0 {
+                break;
+            }
+            let max_rung = if pressures[i] > self.cfg.up_pressure { 2 } else { 1 };
+            let take = left.min(max_rung);
+            rungs[i] = take;
+            left -= take;
+        }
+
+        (0..n)
+            .map(|i| {
+                let target = match rungs[i] {
+                    0 => PrecisionDirective::Fp16,
+                    1 => PrecisionDirective::Mixed,
+                    _ => PrecisionDirective::Fp8,
+                };
+                self.fsms[i].tick(now, target, &self.cfg)
+            })
+            .collect()
+    }
+
+    /// Bill the trailing dwell up to `end` (call once when a run ends,
+    /// before reading [`Autopilot::mode_stats`]).
+    pub fn finish(&mut self, end: f64) {
+        let cfg = self.cfg;
+        for f in &mut self.fsms {
+            let state = f.state;
+            f.tick(end, state, &cfg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use PrecisionDirective::{Fp16, Fp8, Mixed};
+
+    fn ap(n: usize) -> Autopilot {
+        Autopilot::new(n, AutopilotConfig::default())
+    }
+
+    #[test]
+    fn tracker_windows_and_percentiles() {
+        let mut t = SloTracker::default();
+        for i in 0..10 {
+            t.observe_tpot(i as f64, 0.010 * (i + 1) as f64);
+        }
+        t.evict(10.0, 100.0);
+        assert_eq!(t.samples().1, 10);
+        assert!((t.tpot_percentile(50.0).unwrap() - 0.055).abs() < 1e-12);
+        assert!((t.tpot_percentile(100.0).unwrap() - 0.100).abs() < 1e-12);
+        // window eviction: keep only the last 3 seconds of samples
+        t.evict(10.0, 3.0);
+        assert_eq!(t.samples().1, 3);
+        assert!((t.tpot_percentile(0.0).unwrap() - 0.080).abs() < 1e-12);
+        assert!(t.ttft_percentile(50.0).is_none(), "no ttft samples yet");
+    }
+
+    #[test]
+    fn predictor_flags_ramps_not_steady_load() {
+        let mut p = SurgePredictor::default();
+        // steady 4 req/s for 30s
+        for s in 0..30 {
+            for k in 0..4 {
+                p.observe_arrival(s as f64 + 0.2 * k as f64);
+            }
+        }
+        let calm = p.boost(30.0, 1.0, 1.0);
+        assert!(calm < 0.05, "steady load must not pre-escalate: {calm}");
+        // ramp to 16 req/s
+        for s in 30..36 {
+            for k in 0..16 {
+                p.observe_arrival(s as f64 + 0.05 * k as f64);
+            }
+        }
+        let surging = p.boost(36.0, 1.0, 1.0);
+        assert!(surging > 0.3, "4->16 req/s ramp must boost: {surging}");
+        let (fast, slow) = p.rates();
+        assert!(fast > slow, "fast EWMA must lead during the ramp");
+        // after the surge ends the boost decays back toward zero
+        for s in 36..70 {
+            for k in 0..4 {
+                p.observe_arrival(s as f64 + 0.2 * k as f64);
+            }
+        }
+        assert!(p.boost(70.0, 1.0, 1.0) < 0.05, "boost must decay post-surge");
+    }
+
+    #[test]
+    fn ladder_demotes_fewest_replicas_most_pressured_first() {
+        let mut a = ap(3);
+        let hr = [0.0; 3];
+        // replica 1 is the pressured one; cluster mean just over the bar
+        let pressures = [0.6, 2.0, 0.4];
+        let mut dirs = a.control_at(0.0, &pressures, 0.0, &hr);
+        assert_eq!(a.severity(), 1);
+        assert_eq!(dirs, vec![Fp16, Mixed, Fp16], "one rung -> replica 1 arms");
+        // hold the pressure: severity climbs 2 -> replica 1 walks to Fp8
+        // (escalate dwell is 0.5s; ticks at 1s spacing clear it)
+        dirs = a.control_at(1.0, &pressures, 0.0, &hr);
+        assert_eq!(a.severity(), 2);
+        assert_eq!(dirs, vec![Fp16, Fp8, Fp16], "both rungs stay on replica 1");
+        // severity 3: the next-most-pressured replica (0) arms to Mixed
+        dirs = a.control_at(2.0, &pressures, 0.0, &hr);
+        assert_eq!(a.severity(), 3);
+        assert_eq!(dirs, vec![Mixed, Fp8, Fp16]);
+    }
+
+    #[test]
+    fn ladder_promotes_back_as_pressure_drains() {
+        let mut a = ap(2);
+        let hr = [0.0; 2];
+        let mut t = 0.0;
+        while a.severity() < 4 {
+            a.control_at(t, &[2.0, 2.0], 0.0, &hr);
+            t += 1.0;
+        }
+        assert_eq!(a.directives(), vec![Fp8, Fp8]);
+        // drain: severity steps down one per tick, replicas walk back
+        // FP8 -> Mixed -> FP16 under the promote dwell
+        let mut saw_mixed = false;
+        for _ in 0..40 {
+            let d = a.control_at(t, &[0.1, 0.1], 0.0, &hr);
+            saw_mixed |= d.contains(&Mixed);
+            t += 1.0;
+        }
+        assert_eq!(a.severity(), 0);
+        assert_eq!(a.directives(), vec![Fp16, Fp16]);
+        assert!(saw_mixed, "promotion must pass through Mixed");
+    }
+
+    #[test]
+    fn predictor_preescalation_is_capped_at_mixed() {
+        let mut a = ap(2);
+        let hr = [0.0; 2];
+        // measured pressure calm, predictor screaming: severity may reach
+        // n (fleet pre-armed at Mixed) but never pins FP8
+        let mut t = 0.0;
+        for _ in 0..20 {
+            a.control_at(t, &[0.2, 0.2], 10.0, &hr);
+            t += 1.0;
+        }
+        assert_eq!(a.severity(), 2, "pre-escalation caps at n rungs");
+        assert!(a.pre_escalations >= 2);
+        assert_eq!(a.directives(), vec![Mixed, Mixed]);
+        // measured pressure arriving lifts the cap
+        for _ in 0..20 {
+            a.control_at(t, &[2.0, 2.0], 0.0, &hr);
+            t += 1.0;
+        }
+        assert_eq!(a.directives(), vec![Fp8, Fp8]);
+    }
+
+    #[test]
+    fn fsm_dwell_and_cooldown_bound_switch_times() {
+        let cfg = AutopilotConfig::default();
+        let mut f = ReplicaFsm::new();
+        // rapid-fire escalate demands: first step allowed only after
+        // escalate_dwell, the next only escalate_dwell later
+        let mut t = 0.0;
+        while f.state != Fp8 {
+            f.tick(t, Fp8, &cfg);
+            t += 0.01;
+        }
+        // then an immediate promote demand must wait out promote_dwell
+        let t_fp8 = f.timeline.last().unwrap().0;
+        while f.state == Fp8 {
+            f.tick(t, Fp16, &cfg);
+            t += 0.01;
+        }
+        let t_mixed = f.timeline.last().unwrap().0;
+        assert!(
+            t_mixed - t_fp8 >= cfg.promote_dwell_s - 1e-9,
+            "promotion after {} s in FP8 (dwell {})",
+            t_mixed - t_fp8,
+            cfg.promote_dwell_s
+        );
+        // every consecutive pair of switches respects the tighter dwell
+        for w in f.timeline.windows(2) {
+            assert!(
+                w[1].0 - w[0].0 >= cfg.escalate_dwell_s.min(cfg.promote_dwell_s) - 1e-9,
+                "switch gap {} under min dwell",
+                w[1].0 - w[0].0
+            );
+        }
+        // post-promotion cooldown: re-escalation is delayed
+        let t_promoted = f.timeline.last().unwrap().0;
+        while f.state == Mixed {
+            f.tick(t, Fp8, &cfg);
+            t += 0.01;
+        }
+        let t_re = f.timeline.last().unwrap().0;
+        assert!(
+            t_re - t_promoted >= cfg.cooldown_s - 1e-9,
+            "re-escalated {} s after a promotion (cooldown {})",
+            t_re - t_promoted,
+            cfg.cooldown_s
+        );
+    }
+
+    #[test]
+    fn finish_bills_trailing_dwell() {
+        let mut a = ap(1);
+        a.control_at(0.0, &[0.0], 0.0, &[0.0]);
+        a.finish(5.0);
+        let st = a.mode_stats(0);
+        assert!((st.dwell_s.iter().sum::<f64>() - 5.0).abs() < 1e-9);
+        assert!((st.dwell_s[Fp16.rung()] - 5.0).abs() < 1e-9);
+        assert_eq!(st.switches, 0);
+    }
+}

@@ -9,11 +9,15 @@
 //! 1. **Dispatch** — every arriving request is routed once, by a pluggable
 //!    [`RoutingPolicy`], using only cheap per-replica load snapshots
 //!    (free KV blocks, queue depth, TPOT EWMA). No request migration.
-//! 2. **Staged precision escalation** — cluster queue pressure demotes
-//!    replicas to FP8 *one at a time* (highest index first) via
-//!    [`PrecisionController::set_forced`], and releases them one at a time
-//!    as the surge drains. A surge therefore costs FP16 quality only on
-//!    the replicas actually needed to absorb it.
+//! 2. **Cluster-level precision control** — either the PR-1 *staged
+//!    escalation* (queue pressure demotes replicas to FP8 one at a time,
+//!    highest index first, via [`PrecisionController::set_forced`]) or,
+//!    when [`ClusterConfig::autopilot`] is set, the closed-loop
+//!    [`Autopilot`](super::autopilot): sliding-window SLO tracking,
+//!    per-replica FP16 → Mixed → FP8 hysteresis ladders, and an
+//!    EWMA-slope surge predictor that pre-escalates before the queue
+//!    backs up. Either way a surge costs FP16 quality only on the
+//!    replicas actually needed to absorb it.
 //!
 //! Scheduling is discrete-event (see `docs/ARCHITECTURE.md`): the driver
 //! always steps the replica whose local clock lags furthest, so the merged
@@ -24,10 +28,11 @@ use std::collections::VecDeque;
 
 use anyhow::{anyhow, Result};
 
+use super::autopilot::{Autopilot, AutopilotConfig, ModeStats};
 use super::backend::Backend;
 use super::engine::{CompletedRequest, Engine, EngineConfig};
 use super::metrics::Metrics;
-use super::precision::{Precision, PrecisionController};
+use super::precision::{Precision, PrecisionController, PrecisionDirective};
 use super::request::Request;
 use super::router::{ReplicaSnapshot, Router, RoutingPolicy};
 
@@ -55,6 +60,20 @@ impl Default for SurgeConfig {
     }
 }
 
+impl SurgeConfig {
+    /// Thresholds no workload can reach — the legacy staged escalation
+    /// never engages. Used by the static bench arms (a "static FP16"
+    /// baseline must not be quietly demoted mid-run) and implied whenever
+    /// [`ClusterConfig::autopilot`] is set (the autopilot owns forcing).
+    pub fn disabled() -> SurgeConfig {
+        SurgeConfig {
+            queue_per_stage: f64::INFINITY,
+            release_frac: 0.5,
+            min_dwell_s: 0.0,
+        }
+    }
+}
+
 /// Cluster construction parameters.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -62,8 +81,14 @@ pub struct ClusterConfig {
     pub policy: RoutingPolicy,
     /// Per-replica engine configuration (each replica gets a copy).
     pub engine: EngineConfig,
-    /// Staged-escalation thresholds.
+    /// Staged-escalation thresholds (the PR-1 reactive fallback; ignored
+    /// when `autopilot` is set).
     pub surge: SurgeConfig,
+    /// Closed-loop SLO autopilot. When set it **replaces** the staged
+    /// escalation: sliding-window SLO tracking, per-replica
+    /// FP16 → Mixed → FP8 hysteresis ladders, and the surge predictor
+    /// drive every [`PrecisionController::apply_directive`] call.
+    pub autopilot: Option<AutopilotConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -72,6 +97,7 @@ impl Default for ClusterConfig {
             policy: RoutingPolicy::SloHeadroom,
             engine: EngineConfig::default(),
             surge: SurgeConfig::default(),
+            autopilot: None,
         }
     }
 }
@@ -85,6 +111,19 @@ pub struct ReplicaReport {
     pub iterations: usize,
     /// Requests the router dispatched to this replica.
     pub routed: usize,
+    /// Autopilot directive dwell/switch accounting (zeros when the
+    /// autopilot is disabled; also mirrored into `metrics`).
+    pub mode_stats: ModeStats,
+    /// (time, new directive) switch points of the autopilot's
+    /// per-replica ladder (empty when disabled; initial state is FP16).
+    pub directive_timeline: Vec<(f64, PrecisionDirective)>,
+    /// Device blocks free at the end of the run — with the workload fully
+    /// drained this must equal `total_kv_blocks` (the golden-trace suite
+    /// asserts it: leaks fail loudly).
+    pub final_free_kv_blocks: usize,
+    /// Host-tier blocks still resident at the end (must be 0 drained).
+    pub final_host_kv_blocks: usize,
+    pub total_kv_blocks: usize,
 }
 
 /// Outcome of a full cluster run.
@@ -93,8 +132,15 @@ pub struct ClusterReport {
     /// All replicas' metrics merged — cluster-level TTFT/TPOT/goodput.
     pub aggregate: Metrics,
     pub completions: Vec<CompletedRequest>,
-    /// (time, replicas forced to FP8) change points of staged escalation.
+    /// (time, replicas pinned to FP8) change points — staged escalation
+    /// stages, or the count of FP8 directives under the autopilot.
     pub demotion_timeline: Vec<(f64, usize)>,
+    /// (time, ladder severity) change points of the autopilot's cluster
+    /// escalation ladder (empty when disabled).
+    pub ladder_timeline: Vec<(f64, usize)>,
+    /// Severity increases driven by the surge predictor before measured
+    /// pressure crossed the threshold.
+    pub pre_escalations: usize,
 }
 
 impl ClusterReport {
@@ -122,10 +168,13 @@ pub struct ClusterRouter<B: Backend> {
     timelines: Vec<Vec<(f64, bool)>>,
     iterations: Vec<usize>,
     routed: Vec<usize>,
-    /// Current escalation stage == number of replicas forced to FP8.
+    /// Current escalation stage == number of replicas forced to FP8
+    /// (legacy staged escalation only).
     stage: usize,
     stage_changed_at: f64,
     demotion_timeline: Vec<(f64, usize)>,
+    /// The closed-loop controller (None = legacy staged escalation).
+    autopilot: Option<Autopilot>,
     now: f64,
 }
 
@@ -161,6 +210,7 @@ impl<B: Backend> ClusterRouter<B> {
             .into_iter()
             .map(|b| Engine::new(b, cfg.engine.clone()))
             .collect();
+        let autopilot = cfg.autopilot.map(|ap_cfg| Autopilot::new(n, ap_cfg));
         ClusterRouter {
             router: Router::new(cfg.policy),
             replicas,
@@ -172,6 +222,7 @@ impl<B: Backend> ClusterRouter<B> {
             stage: 0,
             stage_changed_at: f64::NEG_INFINITY,
             demotion_timeline: Vec::new(),
+            autopilot,
             now: 0.0,
         }
     }
@@ -185,9 +236,22 @@ impl<B: Backend> ClusterRouter<B> {
         self.now
     }
 
-    /// Replicas currently demoted to FP8 by staged escalation.
+    /// Replicas currently pinned to FP8 (staged escalation stage, or the
+    /// count of FP8 directives under the autopilot).
     pub fn forced_fp8_replicas(&self) -> usize {
-        self.stage
+        match &self.autopilot {
+            Some(ap) => ap
+                .directives()
+                .iter()
+                .filter(|d| **d == PrecisionDirective::Fp8)
+                .count(),
+            None => self.stage,
+        }
+    }
+
+    /// The closed-loop controller, when enabled (tests, benches).
+    pub fn autopilot(&self) -> Option<&Autopilot> {
+        self.autopilot.as_ref()
     }
 
     /// Direct access to a replica engine (tests, inspection).
@@ -252,6 +316,39 @@ impl<B: Backend> ClusterRouter<B> {
         }
     }
 
+    /// One autopilot control pass: tracker pressures + predictor →
+    /// ladder → per-replica FSM directives → controllers. Records the
+    /// FP8-pin count change points in `demotion_timeline` so autopilot
+    /// runs stay comparable with staged-escalation runs.
+    fn run_autopilot_control(&mut self) {
+        let now = self.now;
+        // snapshots are not free (per-replica queue/KV scans): skip them
+        // entirely on driver iterations where no control tick is due
+        if !self.autopilot.as_ref().expect("autopilot enabled").due(now) {
+            return;
+        }
+        let snaps = self.snapshots();
+        let ap = self.autopilot.as_mut().expect("autopilot enabled");
+        let Some(dirs) = ap.maybe_control(now, &snaps) else {
+            return;
+        };
+        let fp8 = dirs
+            .iter()
+            .filter(|d| **d == PrecisionDirective::Fp8)
+            .count();
+        for (e, d) in self.replicas.iter_mut().zip(&dirs) {
+            e.controller.apply_directive(*d);
+        }
+        let changed = self
+            .demotion_timeline
+            .last()
+            .map(|&(_, k)| k != fp8)
+            .unwrap_or(fp8 > 0);
+        if changed {
+            self.demotion_timeline.push((now, fp8));
+        }
+    }
+
     /// Replay a whole workload (requests with arrival timestamps) across
     /// the cluster to completion and report per-replica + aggregate
     /// metrics. Single-shot: build a fresh cluster per run.
@@ -288,17 +385,26 @@ impl<B: Backend> ClusterRouter<B> {
                 let snaps = self.snapshots();
                 let i = self.router.pick(&snaps);
                 self.routed[i] += 1;
+                if let Some(ap) = self.autopilot.as_mut() {
+                    // the predictor sees the arrival-rate series online,
+                    // exactly as routed — no lookahead into `pending`
+                    ap.observe_arrival(r.arrival);
+                }
                 // an idle replica's clock may lag; it "wakes" at arrival
                 self.replicas[i].set_clock(r.arrival);
                 self.replicas[i].submit(r);
             }
 
-            // ---- staged precision escalation ---------------------------
-            let due_soon = pending
-                .iter()
-                .take_while(|r| r.arrival <= self.now + 0.02)
-                .count();
-            self.update_escalation(due_soon);
+            // ---- precision control -------------------------------------
+            if self.autopilot.is_some() {
+                self.run_autopilot_control();
+            } else {
+                let due_soon = pending
+                    .iter()
+                    .take_while(|r| r.arrival <= self.now + 0.02)
+                    .count();
+                self.update_escalation(due_soon);
+            }
 
             // ---- step the lagging replica ------------------------------
             let Some(i) = (0..self.replicas.len())
@@ -324,6 +430,9 @@ impl<B: Backend> ClusterRouter<B> {
                 .count()
                 .div_ceil(self.replicas.len());
             let step = self.replicas[i].step(imminent, &mut self.metrics[i])?;
+            if let Some(ap) = self.autopilot.as_mut() {
+                ap.observe_step(i, self.replicas[i].now(), &step);
+            }
             if self.timelines[i]
                 .last()
                 .map(|&(_, last)| last != step.fp8)
@@ -354,15 +463,30 @@ impl<B: Backend> ClusterRouter<B> {
         }
 
         // ---- reports ------------------------------------------------
+        if let Some(ap) = self.autopilot.as_mut() {
+            ap.finish(self.now);
+        }
         let n = self.replicas.len();
         let mut replicas = Vec::with_capacity(n);
         for i in 0..n {
+            let (mode_stats, directive_timeline) = match &self.autopilot {
+                Some(ap) => (ap.mode_stats(i), ap.directive_timeline(i).to_vec()),
+                None => (ModeStats::default(), Vec::new()),
+            };
+            let mut metrics = std::mem::replace(&mut self.metrics[i], Metrics::new());
+            metrics.observe_modes(mode_stats.dwell_s, mode_stats.switches);
+            let e = &self.replicas[i];
             replicas.push(ReplicaReport {
-                metrics: std::mem::replace(&mut self.metrics[i], Metrics::new()),
-                controller: self.replicas[i].controller.clone(),
+                metrics,
+                controller: e.controller.clone(),
                 mode_timeline: std::mem::take(&mut self.timelines[i]),
                 iterations: self.iterations[i],
                 routed: self.routed[i],
+                mode_stats,
+                directive_timeline,
+                final_free_kv_blocks: e.kv.free_blocks(),
+                final_host_kv_blocks: e.kv.host_blocks(),
+                total_kv_blocks: e.kv.geo.total_blocks,
             });
         }
         let mut aggregate = Metrics::new();
@@ -374,6 +498,16 @@ impl<B: Backend> ClusterRouter<B> {
             aggregate,
             completions,
             demotion_timeline: self.demotion_timeline.clone(),
+            ladder_timeline: self
+                .autopilot
+                .as_ref()
+                .map(|ap| ap.ladder_timeline.clone())
+                .unwrap_or_default(),
+            pre_escalations: self
+                .autopilot
+                .as_ref()
+                .map(|ap| ap.pre_escalations)
+                .unwrap_or(0),
         })
     }
 }
@@ -473,6 +607,7 @@ mod tests {
             policy: RoutingPolicy::RoundRobin,
             engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
             surge: SurgeConfig::default(),
+            autopilot: None,
         };
         let mut c = cluster(2, 0.001, cfg);
         let report = c.run(burst(6, 0.0)).unwrap();
@@ -489,6 +624,7 @@ mod tests {
                 policy: RoutingPolicy::Random { seed: 77 },
                 engine: sim_engine_cfg(PrecisionPolicy::Dual),
                 surge: SurgeConfig::default(),
+                autopilot: None,
             };
             cluster(3, 0.004, cfg)
         };
@@ -513,6 +649,7 @@ mod tests {
             policy: RoutingPolicy::LeastLoadedKv,
             engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
             surge: SurgeConfig::default(),
+            autopilot: None,
         };
         let mut c = cluster(2, 0.050, cfg);
         // first request lands on replica 0 (tie); by the second arrival
@@ -539,6 +676,7 @@ mod tests {
                 release_frac: 0.5,
                 min_dwell_s: 0.0,
             },
+            autopilot: None,
         };
         let mut c = cluster(3, 0.002, cfg);
         // 8 simultaneous arrivals -> pressure 8/3 = 2.67 -> stage 1:
@@ -568,12 +706,91 @@ mod tests {
     }
 
     #[test]
+    fn autopilot_escalates_under_a_burst_and_accounts_dwell() {
+        // FP16-only engines + autopilot: any FP8 iteration can only come
+        // from the autopilot's pinned-FP8 directives.
+        let cfg = ClusterConfig {
+            policy: RoutingPolicy::RoundRobin,
+            engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
+            surge: SurgeConfig::disabled(),
+            autopilot: Some(AutopilotConfig::default()),
+        };
+        let mut c = cluster(2, 0.020, cfg);
+        // 14 simultaneous arrivals with enough decode work (~1 s of
+        // virtual time per replica) for the ladder to walk FP16 → Mixed
+        // → FP8 past both escalate dwells; queue + gap pressure crosses
+        // the threshold from the first control tick
+        let reqs: Vec<Request> = (0..14)
+            .map(|i| Request::new(i as u64, vec![1; 16], 24, 0.0))
+            .collect();
+        let report = c.run(reqs).unwrap();
+        assert_eq!(report.aggregate.completed, 14);
+        assert!(
+            !report.ladder_timeline.is_empty(),
+            "burst never moved the cluster ladder"
+        );
+        assert!(
+            report.replicas.iter().any(|r| r.controller.iters_fp8 > 0),
+            "no replica was ever pinned to FP8"
+        );
+        assert!(report.aggregate.mode_switches > 0);
+        // dwell accounting: every replica is billed the same span (run
+        // start to run end), split across the three rungs
+        let spans: Vec<f64> = report
+            .replicas
+            .iter()
+            .map(|r| r.mode_stats.dwell_s.iter().sum::<f64>())
+            .collect();
+        assert!(spans[0] > 0.0);
+        assert!(
+            (spans[0] - spans[1]).abs() < 1e-6,
+            "replica dwell spans diverged: {spans:?}"
+        );
+        // the aggregate merges dwell by sum
+        let agg: f64 = report.aggregate.mode_dwell_s.iter().sum();
+        assert!((agg - (spans[0] + spans[1])).abs() < 1e-6);
+        // drained cluster leaks no KV anywhere
+        for r in &report.replicas {
+            assert_eq!(r.final_free_kv_blocks, r.total_kv_blocks);
+            assert_eq!(r.final_host_kv_blocks, 0);
+        }
+    }
+
+    #[test]
+    fn autopilot_runs_are_deterministic() {
+        let make = || {
+            let cfg = ClusterConfig {
+                policy: RoutingPolicy::SloHeadroom,
+                engine: sim_engine_cfg(PrecisionPolicy::Dual),
+                surge: SurgeConfig::disabled(),
+                autopilot: Some(AutopilotConfig::default()),
+            };
+            cluster(3, 0.008, cfg)
+        };
+        let mut workload = burst(10, 0.0);
+        workload.extend(
+            (0..8).map(|i| Request::new(100 + i as u64, vec![1; 16], 8, 0.3 + 0.2 * i as f64)),
+        );
+        let a = make().run(workload.clone()).unwrap();
+        let b = make().run(workload).unwrap();
+        let ids = |r: &ClusterReport| -> Vec<u64> { r.completions.iter().map(|c| c.id).collect() };
+        assert_eq!(ids(&a), ids(&b));
+        assert_eq!(a.ladder_timeline, b.ladder_timeline);
+        assert_eq!(a.pre_escalations, b.pre_escalations);
+        assert_eq!(a.aggregate.mode_switches, b.aggregate.mode_switches);
+        for (x, y) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(x.directive_timeline, y.directive_timeline);
+        }
+    }
+
+    #[test]
     fn more_replicas_absorb_the_same_surge_better() {
         let run_with = |n: usize| {
             let cfg = ClusterConfig {
                 policy: RoutingPolicy::RoundRobin,
                 engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
                 surge: SurgeConfig::default(),
+                autopilot: None,
             };
             let mut c = cluster(n, 0.010, cfg);
             c.run(burst(8, 0.0)).unwrap()

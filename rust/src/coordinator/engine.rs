@@ -65,6 +65,11 @@ pub struct EngineStep {
     pub fp8: bool,
     /// Clock advance this iteration, seconds (0 when idle).
     pub latency: f64,
+    /// Worst per-sequence inter-token gap of this iteration's decode
+    /// batch, seconds (`None` for prefill/idle iterations). External
+    /// control loops (the cluster autopilot's sliding-window SLO tracker)
+    /// sample this as their online TPOT signal.
+    pub tpot_worst: Option<f64>,
     /// Requests that finished during the iteration.
     pub completions: Vec<CompletedRequest>,
 }
@@ -204,6 +209,7 @@ impl<B: Backend> Engine<B> {
         self.kv.maintain();
 
         // ---- plan & execute ---------------------------------------
+        let mut tpot_worst = None;
         let plan = self.scheduler.plan(&self.requests, &self.kv);
         match plan {
             IterationPlan::Idle => {
@@ -213,6 +219,7 @@ impl<B: Backend> Engine<B> {
                     ran: false,
                     fp8: is_fp8,
                     latency: self.now - t0,
+                    tpot_worst: None,
                     completions: Vec::new(),
                 });
             }
@@ -220,7 +227,7 @@ impl<B: Backend> Engine<B> {
                 self.run_prefill(id, chunk, precision, metrics)?;
             }
             IterationPlan::Decode { ids } => {
-                self.run_decode(&ids, precision, metrics)?;
+                tpot_worst = Some(self.run_decode(&ids, precision, metrics)?);
             }
         }
 
@@ -254,6 +261,7 @@ impl<B: Backend> Engine<B> {
             ran: true,
             fp8: is_fp8,
             latency: self.now - t0,
+            tpot_worst,
             completions,
         })
     }
@@ -576,12 +584,14 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
+    /// Execute one decode iteration; returns the batch's worst
+    /// per-sequence inter-token gap (the iteration's TPOT sample).
     fn run_decode(
         &mut self,
         ids: &[u64],
         precision: Precision,
         metrics: &mut Metrics,
-    ) -> Result<()> {
+    ) -> Result<f64> {
         let mut slots = Vec::with_capacity(ids.len());
         let mut tokens = Vec::with_capacity(ids.len());
         let mut positions = Vec::with_capacity(ids.len());
@@ -650,7 +660,7 @@ impl<B: Backend> Engine<B> {
             let new_len = ctx.min(self.kv.geo.max_seq);
             self.grow_or_preempt(id, slot.expect("decoding request without slot"), new_len)?;
         }
-        Ok(())
+        Ok(worst)
     }
 }
 

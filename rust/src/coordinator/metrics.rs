@@ -44,6 +44,14 @@ pub struct Metrics {
     /// Peak concurrently admitted sequences (summed over merge: cluster
     /// aggregate = total concurrent capacity actually reached).
     pub peak_live_seqs: usize,
+    // ---- autopilot counters (mirrored from the cluster control loop) ----
+    /// Virtual-clock seconds spent under each precision directive,
+    /// indexed by `PrecisionDirective::rung()`: `[fp16, mixed, fp8]`.
+    /// Summed over merge: the cluster aggregate is total replica-seconds
+    /// per mode.
+    pub mode_dwell_s: [f64; 3],
+    /// Directive switches (one ladder rung each). Summed over merge.
+    pub mode_switches: usize,
 }
 
 impl Metrics {
@@ -150,10 +158,24 @@ impl Metrics {
         self.slo_attained(slo) as f64 / span
     }
 
+    /// Mirror the autopilot's per-replica dwell/switch accounting (see
+    /// `coordinator::autopilot::ModeStats`; passed as plain values to
+    /// keep this module's dependencies one-directional).
+    pub fn observe_modes(&mut self, dwell_s: [f64; 3], switches: usize) {
+        self.mode_dwell_s = dwell_s;
+        self.mode_switches = switches;
+    }
+
     /// Fold another replica's metrics into this one (cluster aggregation).
-    /// Digests concatenate; the per-second worst-TPOT timelines merge by
-    /// second taking the max, so `slo_violation_seconds` counts a second
-    /// as violated when *any* replica violated during it.
+    ///
+    /// Digests concatenate — merged percentile summaries
+    /// ([`Metrics::ttft_summary`] / [`Metrics::tpot_summary`]) are
+    /// therefore recomputed from the **pooled samples**, never from
+    /// averaging per-replica summaries (averaging p99s of skewed replicas
+    /// understates the tail; see `merge_pools_samples_for_percentiles`).
+    /// The per-second worst-TPOT timelines merge by second taking the
+    /// max, so `slo_violation_seconds` counts a second as violated when
+    /// *any* replica violated during it.
     pub fn merge(&mut self, other: &Metrics) {
         self.ttft.extend_from(&other.ttft);
         self.tpot.extend_from(&other.tpot);
@@ -171,6 +193,10 @@ impl Metrics {
         self.kv_transfer_seconds += other.kv_transfer_seconds;
         self.peak_kv_utilization = self.peak_kv_utilization.max(other.peak_kv_utilization);
         self.peak_live_seqs += other.peak_live_seqs;
+        for (d, o) in self.mode_dwell_s.iter_mut().zip(&other.mode_dwell_s) {
+            *d += o;
+        }
+        self.mode_switches += other.mode_switches;
         let mut by_sec: BTreeMap<u64, f64> = self.tpot_by_second.iter().cloned().collect();
         for &(sec, worst) in &other.tpot_by_second {
             let w = by_sec.entry(sec).or_insert(0.0);
@@ -257,6 +283,66 @@ mod tests {
         assert_eq!(m.slo_violation_seconds(&slo), 1);
         assert_eq!(m.slo_attained(&slo), 1);
         assert!((m.goodput_req_s(&slo) - 1.0 / 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_pools_samples_for_percentiles() {
+        // Two deliberately skewed replicas. Replica A: nine fast requests
+        // (TTFT 10 ms, decode gaps 10 ms). Replica B: one slow request
+        // (TTFT 400 ms, decode gaps 100 ms). The pooled p50 sits at the
+        // fast mode; averaging the two per-replica summaries instead
+        // would report the midpoint — and the pooled p99 sits in the slow
+        // tail, which summary-averaging would *understate*. This test
+        // pins the pooled semantics and fails for either skew direction.
+        let mut a = Metrics::new();
+        for i in 0..9 {
+            let t0 = i as f64;
+            a.record_request(&finished_request(t0, t0 + 0.010, t0 + 0.110, 11));
+            a.record_decode_iteration(t0 + 0.5, &[0.010; 10]);
+        }
+        let mut b = Metrics::new();
+        b.record_request(&finished_request(0.0, 0.400, 1.400, 11));
+        b.record_decode_iteration(0.9, &[0.100; 10]);
+
+        // what averaging the per-replica summaries would claim:
+        // 0.205 s and 0.055 s respectively
+        let avg_ttft_p50 = (a.ttft_summary().p50 + b.ttft_summary().p50) / 2.0;
+        let avg_tpot_p99 = (a.tpot_summary().p99 + b.tpot_summary().p99) / 2.0;
+
+        let mut m = Metrics::new();
+        m.merge(&a);
+        m.merge(&b);
+        let ttft = m.ttft_summary();
+        let tpot = m.tpot_summary();
+        assert_eq!(ttft.count, 10, "pooled sample count");
+        assert_eq!(tpot.count, 100);
+        // p50 of 9x10ms + 1x400ms is 10 ms, nowhere near the 205 ms average
+        assert!((ttft.p50 - 0.010).abs() < 1e-9, "pooled p50 {}", ttft.p50);
+        assert!(
+            (ttft.p50 - avg_ttft_p50).abs() > 0.1,
+            "pooled p50 must not look like a summary average"
+        );
+        // p99 of 90x10ms + 10x100ms lands in the slow tail (>= 90 ms);
+        // summary-averaging would halve it
+        assert!(tpot.p99 > 0.090, "pooled p99 {} lost the tail", tpot.p99);
+        assert!(
+            tpot.p99 > avg_tpot_p99 + 0.030,
+            "pooled p99 {} vs averaged {avg_tpot_p99}: tail understated",
+            tpot.p99
+        );
+    }
+
+    #[test]
+    fn mode_counters_merge_by_sum() {
+        let mut a = Metrics::new();
+        a.observe_modes([10.0, 4.0, 1.0], 3);
+        let mut b = Metrics::new();
+        b.observe_modes([2.0, 0.5, 7.5], 5);
+        let mut m = Metrics::new();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.mode_dwell_s, [12.0, 4.5, 8.5]);
+        assert_eq!(m.mode_switches, 8);
     }
 
     #[test]

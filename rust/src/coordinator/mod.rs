@@ -17,10 +17,12 @@
 //! Above the single engine sits the **cluster layer**: [`cluster`] drives
 //! N replica engines on one shared virtual clock, [`router`] picks a
 //! replica per arriving request (round-robin / least-loaded-KV /
-//! SLO-headroom / seeded-random), and staged escalation demotes replicas
-//! to FP8 one at a time during surges — the paper's SLO-management story
-//! at multi-GPU scale. [`server`] exposes both a single engine and a
-//! replica fleet over TCP.
+//! SLO-headroom / seeded-random), and the closed-loop [`autopilot`]
+//! (sliding-window SLO tracking, per-replica FP16 → Mixed → FP8
+//! hysteresis ladders, an EWMA-slope surge predictor) demotes the fewest
+//! replicas needed during surges and promotes them back as the surge
+//! drains — the paper's SLO-management story at multi-GPU scale.
+//! [`server`] exposes both a single engine and a replica fleet over TCP.
 
 pub mod request;
 pub mod kv;
@@ -30,12 +32,14 @@ pub mod metrics;
 pub mod backend;
 pub mod engine;
 pub mod router;
+pub mod autopilot;
 pub mod cluster;
 pub mod server;
 
+pub use autopilot::{Autopilot, AutopilotConfig, ModeStats, SloTracker, SurgePredictor};
 pub use cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
 pub use engine::{Engine, EngineConfig, EngineStep};
 pub use kv::{KvCacheManager, KvGeometry, KvPressureConfig};
-pub use precision::{PrecisionPolicy, SloConfig};
+pub use precision::{PrecisionDirective, PrecisionPolicy, SloConfig};
 pub use request::{Request, RequestId, RequestState};
 pub use router::{ReplicaSnapshot, Router, RoutingPolicy};

@@ -33,6 +33,53 @@ pub enum Precision {
     Fp8,
 }
 
+/// A cluster-level instruction to one replica's controller — the three
+/// rungs of the autopilot's per-replica ladder. `Mixed` hands the
+/// iteration-level decision back to the local policy; the pinned rungs
+/// override it in either direction (an FP16 *quality lock* during calm
+/// periods is as much a directive as an FP8 demotion during a surge).
+///
+/// This subsumes the PR-1 `set_forced(Option<Precision>)` API:
+/// `Some(p)` maps to the pinned rung for `p`, `None` to `Mixed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PrecisionDirective {
+    /// Pin FP16 (quality lock).
+    Fp16,
+    /// Local policy decides per iteration (the default).
+    Mixed,
+    /// Pin FP8 (throughput lock).
+    Fp8,
+}
+
+impl PrecisionDirective {
+    /// Ladder rung index: 0 = Fp16, 1 = Mixed, 2 = Fp8. The autopilot's
+    /// escalation ladder and the dwell accounting both index by this.
+    pub fn rung(self) -> usize {
+        match self {
+            PrecisionDirective::Fp16 => 0,
+            PrecisionDirective::Mixed => 1,
+            PrecisionDirective::Fp8 => 2,
+        }
+    }
+
+    /// The directive one rung toward `target` (used by the per-replica
+    /// state machine: FP16 → Mixed → FP8 and back, never skipping Mixed).
+    pub fn step_toward(self, target: PrecisionDirective) -> PrecisionDirective {
+        use PrecisionDirective::*;
+        match self.rung().cmp(&target.rung()) {
+            std::cmp::Ordering::Equal => self,
+            std::cmp::Ordering::Less => match self {
+                Fp16 => Mixed,
+                _ => Fp8,
+            },
+            std::cmp::Ordering::Greater => match self {
+                Fp8 => Mixed,
+                _ => Fp16,
+            },
+        }
+    }
+}
+
 /// Operating policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PrecisionPolicy {
@@ -50,9 +97,9 @@ pub struct PrecisionController {
     pub policy: PrecisionPolicy,
     pub slo: SloConfig,
     current: Precision,
-    /// Externally imposed precision (cluster-level staged escalation):
-    /// when set, it overrides the local policy until cleared.
-    forced: Option<Precision>,
+    /// Externally imposed rung (cluster autopilot / staged escalation):
+    /// pinned rungs override the local policy until set back to `Mixed`.
+    directive: PrecisionDirective,
     /// EWMA of observed TPOT, seconds.
     ewma_tpot: f64,
     /// Most recent worst-gap observation (fast burst signal).
@@ -89,7 +136,7 @@ impl PrecisionController {
                 PrecisionPolicy::Fp8Only => Precision::Fp8,
                 _ => Precision::Fp16,
             },
-            forced: None,
+            directive: PrecisionDirective::Mixed,
             ewma_tpot: 0.0,
             last_tpot: 0.0,
             ewma_alpha: 0.25,
@@ -117,24 +164,46 @@ impl PrecisionController {
         self.ewma_tpot
     }
 
-    /// Impose (or clear) an external precision override. A cluster router
-    /// uses this to demote one replica to FP8 during a surge while other
-    /// replicas keep serving FP16 — the staged-escalation story of the
-    /// paper's SLO management, lifted to the cluster level. While forced,
+    /// Apply a cluster-level directive. Pinned rungs (`Fp16` / `Fp8`)
+    /// override the local policy until the directive returns to `Mixed`;
+    /// the autopilot's per-replica state machine is the only caller that
+    /// should drive this per control tick (it owns the dwell/cooldown
+    /// discipline — the controller just obeys).
+    pub fn apply_directive(&mut self, d: PrecisionDirective) {
+        self.directive = d;
+    }
+
+    /// The current cluster-level directive.
+    pub fn directive(&self) -> PrecisionDirective {
+        self.directive
+    }
+
+    /// Impose (or clear) an external precision override — the PR-1 API,
+    /// now a thin shim over [`PrecisionController::apply_directive`]. A
+    /// cluster router uses this to demote one replica to FP8 during a
+    /// surge while other replicas keep serving FP16. While pinned,
     /// [`PrecisionController::decide`] ignores the local policy; clearing
     /// returns control to it (after the usual dwell, to avoid flapping).
     pub fn set_forced(&mut self, p: Option<Precision>) {
-        self.forced = p;
+        self.apply_directive(match p {
+            Some(Precision::Fp16) => PrecisionDirective::Fp16,
+            Some(Precision::Fp8) => PrecisionDirective::Fp8,
+            None => PrecisionDirective::Mixed,
+        });
     }
 
-    /// The current external override, if any.
+    /// The current external override, if any (`Mixed` reads as `None`).
     pub fn forced(&self) -> Option<Precision> {
-        self.forced
+        match self.directive {
+            PrecisionDirective::Fp16 => Some(Precision::Fp16),
+            PrecisionDirective::Fp8 => Some(Precision::Fp8),
+            PrecisionDirective::Mixed => None,
+        }
     }
 
     /// Decide the precision for the next iteration.
     pub fn decide(&mut self, queue_depth: usize, kv_utilization: f64) -> Precision {
-        if let Some(f) = self.forced {
+        if let Some(f) = self.forced() {
             if f != self.current {
                 self.switches += 1;
                 self.dwell = self.min_dwell_iters;
@@ -313,6 +382,54 @@ mod tests {
         }
         assert!(saw_fp16, "never recovered to fp16 after release");
         assert!(c.switches <= 2);
+    }
+
+    #[test]
+    fn directive_rungs_and_stepping() {
+        use PrecisionDirective::*;
+        assert_eq!(Fp16.rung(), 0);
+        assert_eq!(Mixed.rung(), 1);
+        assert_eq!(Fp8.rung(), 2);
+        // one rung at a time, never skipping Mixed
+        assert_eq!(Fp16.step_toward(Fp8), Mixed);
+        assert_eq!(Mixed.step_toward(Fp8), Fp8);
+        assert_eq!(Fp8.step_toward(Fp16), Mixed);
+        assert_eq!(Mixed.step_toward(Fp16), Fp16);
+        assert_eq!(Fp8.step_toward(Fp8), Fp8);
+        assert_eq!(Mixed.step_toward(Mixed), Mixed);
+    }
+
+    #[test]
+    fn directive_fp16_quality_locks_a_pressured_dual_controller() {
+        // under load a Dual controller wants FP8; a pinned Fp16 directive
+        // (the autopilot's quality lock) must win
+        let mut c = ctl();
+        c.apply_directive(PrecisionDirective::Fp16);
+        for _ in 0..20 {
+            c.observe_tpot(0.200); // 6x the SLO
+            assert_eq!(c.decide(10, 0.99), Precision::Fp16);
+        }
+        assert_eq!(c.forced(), Some(Precision::Fp16));
+        // releasing to Mixed hands control back: pressure drives FP8
+        c.apply_directive(PrecisionDirective::Mixed);
+        assert_eq!(c.forced(), None);
+        let mut last = Precision::Fp16;
+        for _ in 0..12 {
+            c.observe_tpot(0.200);
+            last = c.decide(10, 0.99);
+        }
+        assert_eq!(last, Precision::Fp8);
+    }
+
+    #[test]
+    fn set_forced_is_a_directive_shim() {
+        let mut c = ctl();
+        c.set_forced(Some(Precision::Fp8));
+        assert_eq!(c.directive(), PrecisionDirective::Fp8);
+        c.set_forced(Some(Precision::Fp16));
+        assert_eq!(c.directive(), PrecisionDirective::Fp16);
+        c.set_forced(None);
+        assert_eq!(c.directive(), PrecisionDirective::Mixed);
     }
 
     #[test]

@@ -65,7 +65,13 @@ pub struct ReplicaSnapshot {
 
 /// SLO-headroom score: higher is a better dispatch target. Ties are
 /// broken by the caller in favour of the lowest index.
-fn slo_score(s: &ReplicaSnapshot) -> f64 {
+///
+/// Public because the cluster [`autopilot`](super::autopilot) orders its
+/// escalation ladder by the same signal: the replica with the *least*
+/// headroom is demoted to FP8 first, and the one with the most is
+/// promoted back to FP16 first — router and controller agree on what
+/// "pressured" means.
+pub fn slo_headroom(s: &ReplicaSnapshot) -> f64 {
     let target = if s.tpot_target > 0.0 { s.tpot_target } else { 1.0 };
     let headroom = ((target - s.ewma_tpot) / target).clamp(-1.0, 1.0);
     let blocks = s.total_kv_blocks.max(1) as f64;
@@ -130,9 +136,9 @@ impl Router {
             }
             RoutingPolicy::SloHeadroom => {
                 let mut best = 0;
-                let mut best_score = slo_score(&replicas[0]);
+                let mut best_score = slo_headroom(&replicas[0]);
                 for (i, s) in replicas.iter().enumerate().skip(1) {
-                    let score = slo_score(s);
+                    let score = slo_headroom(s);
                     if score > best_score {
                         best = i;
                         best_score = score;

@@ -28,6 +28,7 @@ use anyhow::Result;
 
 use super::backend::Backend;
 use super::engine::Engine;
+use super::precision::PrecisionDirective;
 use super::request::Request;
 
 /// A submitted job: prompt plus the channel to answer on.
@@ -49,9 +50,22 @@ pub struct JobResult {
 /// Serve jobs forever on the engine thread: collect whatever is queued,
 /// run it as one workload batch, answer, repeat. Returns when the job
 /// channel closes.
-pub fn engine_worker<B: Backend>(
-    mut engine: Engine<B>,
+pub fn engine_worker<B: Backend>(mut engine: Engine<B>, jobs: mpsc::Receiver<Job>) -> Result<()> {
+    let (_tx, never) = mpsc::channel();
+    engine_worker_controlled(&mut engine, jobs, never)
+}
+
+/// [`engine_worker`] plus a cluster-control side channel: before each
+/// batch the worker drains `directives` and applies the latest one to its
+/// [`PrecisionController`](super::precision::PrecisionController) — the
+/// live-serving (wall-clock) analogue of the virtual-clock autopilot loop
+/// in [`cluster`](super::cluster). `repro serve --autopilot` feeds this
+/// from a monitor thread that runs `Autopilot::control_at` over the
+/// frontend's jobs-in-flight counts.
+pub fn engine_worker_controlled<B: Backend>(
+    engine: &mut Engine<B>,
     jobs: mpsc::Receiver<Job>,
+    directives: mpsc::Receiver<PrecisionDirective>,
 ) -> Result<()> {
     let mut next_id = 0u64;
     loop {
@@ -63,6 +77,13 @@ pub fn engine_worker<B: Backend>(
         let mut batch = vec![first];
         while let Ok(j) = jobs.try_recv() {
             batch.push(j);
+        }
+        // apply the latest directive *after* the (possibly long) idle
+        // wait, so the batch runs under the autopilot's current rung
+        // rather than a pre-idle snapshot; a closed channel just means
+        // no autopilot
+        while let Ok(d) = directives.try_recv() {
+            engine.controller.apply_directive(d);
         }
 
         let mut requests = Vec::new();
@@ -79,7 +100,7 @@ pub fn engine_worker<B: Backend>(
         // run this batch; harvest per-request outputs from a completion
         // callback shim: the engine drops finished bodies, so we record
         // generations by re-running with collection enabled
-        let outputs = run_collecting(&mut engine, requests)?;
+        let outputs = run_collecting(engine, requests)?;
         for (i, job) in batch.into_iter().enumerate() {
             let id = id_base + i as u64;
             let out = outputs
@@ -234,13 +255,13 @@ pub fn serve(listener: TcpListener, jobs: mpsc::Sender<Job>, stop_token: Option<
 }
 
 /// Accept loop over a replica fleet: connections are load-balanced by the
-/// [`ClusterFrontend`].
+/// [`ClusterFrontend`]. Takes the frontend shared so a monitor thread
+/// (e.g. `repro serve --autopilot`) can keep reading its in-flight counts.
 pub fn serve_cluster(
     listener: TcpListener,
-    frontend: ClusterFrontend,
+    frontend: Arc<ClusterFrontend>,
     stop_token: Option<i32>,
 ) -> Result<()> {
-    let frontend = Arc::new(frontend);
     let submit: Submit = Arc::new(move |job| frontend.submit(job));
     serve_with(listener, submit, stop_token)
 }
@@ -398,6 +419,52 @@ mod tests {
         drop(rx1);
         let (j2, _r2) = job();
         assert!(!f.submit(j2));
+    }
+
+    #[test]
+    fn worker_applies_directives_between_batches() {
+        use crate::coordinator::backend::SimBackend;
+        use crate::coordinator::engine::{Engine, EngineConfig};
+        use crate::coordinator::precision::PrecisionPolicy;
+        use crate::gpusim::WeightFormat;
+        use crate::model::zoo;
+
+        let spec = zoo::find("llama31-8b").unwrap();
+        let backend = SimBackend::new(
+            spec,
+            WeightFormat::Nested16,
+            WeightFormat::Nested8,
+            4,
+            256,
+            256,
+        );
+        let mut engine = Engine::new(
+            backend,
+            EngineConfig {
+                policy: PrecisionPolicy::Fp16Only,
+                physical_kv: false,
+                ..Default::default()
+            },
+        );
+        let (jtx, jrx) = mpsc::channel();
+        let (dtx, drx) = mpsc::channel();
+        // a directive queued before the batch must be live during it —
+        // an FP16-only engine then serves FP8, provably via the override
+        dtx.send(PrecisionDirective::Fp8).unwrap();
+        let (rtx, rrx) = mpsc::channel();
+        jtx.send(Job {
+            prompt: vec![65; 8],
+            max_new_tokens: 4,
+            stop_token: None,
+            respond: rtx,
+        })
+        .unwrap();
+        drop(jtx); // worker exits after the batch
+        engine_worker_controlled(&mut engine, jrx, drx).unwrap();
+        let res = rrx.try_recv().expect("batch answered");
+        assert_eq!(res.tokens.len(), 4);
+        assert_eq!(engine.controller.directive(), PrecisionDirective::Fp8);
+        assert!(engine.controller.iters_fp8 > 0, "directive was ignored");
     }
 
     #[test]

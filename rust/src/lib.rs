@@ -27,9 +27,11 @@
 //!   iteration-level **dual-precision controller** switching FP16/FP8.
 //!   On top of it, [`coordinator::cluster`] scales serving out: N replica
 //!   engines behind pluggable routing policies
-//!   ([`coordinator::router`]) on one shared virtual clock, with
-//!   **staged FP8 escalation** demoting individual replicas during
-//!   surges while the rest keep serving FP16.
+//!   ([`coordinator::router`]) on one shared virtual clock, and
+//!   [`coordinator::autopilot`] closes the SLO loop — sliding-window
+//!   TTFT/TPOT tracking, per-replica FP16 → Mixed → FP8 hysteresis
+//!   ladders, and an arrival-slope surge predictor demote the fewest
+//!   replicas needed during surges while the rest keep serving FP16.
 //! * [`gemm`] — the executable compute layer: a cache-blocked,
 //!   multi-threaded CPU GEMM engine that consumes NestedFP weights
 //!   directly — the pack stage fuses the (upper, lower) → FP16

@@ -4,12 +4,12 @@
 //! repro reproduce <exp>      regenerate a paper table/figure
 //!                            exp: table1|table2|table3|fig1a|fig1b|fig3|
 //!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|
-//!                                 gemm|cluster|kvcache|all
+//!                                 gemm|cluster|kvcache|autopilot|all
 //!        [--artifacts DIR]   artifact directory (default: artifacts)
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
 //!        [--json FILE]       also write the reports as machine-readable
 //!                            JSON (perf-trajectory tracking across PRs)
-//!        [--quick]           gemm only: small shape set, CI smoke budget
+//!        [--quick]           gemm/autopilot: reduced scenario, CI budget
 //!        [--update-trajectory]
 //!                            gemm only: rewrite GEMM_BENCH.json from this
 //!                            run's measured GFLOP/s
@@ -17,6 +17,8 @@
 //!        [--addr HOST:PORT]  default 127.0.0.1:7171
 //!        [--mode dual|fp16|fp8]
 //!        [--replicas N]      engine replicas behind the front door (default 1)
+//!        [--autopilot]       wall-clock autopilot monitor: jobs-in-flight
+//!                            pressure drives FP16/Mixed/FP8 directives
 //! repro analyze              weight-store + applicability summary
 //! repro gemm --m M --n N --k K [--format fp16|nested16|nested8|fp8]
 //!                            one autotuned gpusim query (debugging)
@@ -26,7 +28,11 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use nestedfp::bench::gemm::{self as gemmbench, BenchOpts};
-use nestedfp::bench::{cluster, fig1, fig3, fig7, fig8, kvcache, report::Report, table1, table3};
+use nestedfp::bench::{
+    autopilot as autopilotbench, cluster, fig1, fig3, fig7, fig8, kvcache, report::Report,
+    table1, table3,
+};
+use nestedfp::coordinator::autopilot::{Autopilot, AutopilotConfig};
 use nestedfp::coordinator::backend::{ModeMap, RealBackend};
 use nestedfp::coordinator::engine::{Engine, EngineConfig};
 use nestedfp::coordinator::precision::PrecisionPolicy;
@@ -46,8 +52,8 @@ fn main() {
         _ => {
             eprintln!(
                 "nestedfp repro — usage:\n  \
-                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|cluster|kvcache|all> [--json FILE] [--quick]\n  \
-                 repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N]\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|cluster|kvcache|autopilot|all> [--json FILE] [--quick]\n  \
+                 repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N] [--autopilot]\n  \
                  repro analyze\n  \
                  repro gemm --m M --n N --k K [--format ...]"
             );
@@ -76,6 +82,7 @@ fn run_one(
     gemm_opts: BenchOpts,
 ) -> anyhow::Result<Vec<Report>> {
     Ok(match exp {
+        "autopilot" => autopilotbench::autopilot_surge(gemm_opts.quick)?,
         "table1" | "table2" => vec![table1::table12(dir, eval_n)?, table1::table2_weights(dir)?],
         "table3" => vec![table3::table3()],
         "fig1a" => vec![fig1::fig1a()],
@@ -144,7 +151,7 @@ fn cmd_reproduce(args: &Args) -> i32 {
         let mut r = Ok(());
         for e in [
             "fig1a", "fig1b", "fig3", "fig7a", "fig7b", "fig9", "fig13", "fig8", "fig10",
-            "gemm", "cluster", "kvcache", "table3", "table1",
+            "gemm", "cluster", "kvcache", "autopilot", "table3", "table1",
         ] {
             eprintln!("[reproduce] running {e} ...");
             r = run_and_print(e);
@@ -173,6 +180,46 @@ fn cmd_reproduce(args: &Args) -> i32 {
     }
 }
 
+/// The live-serving control loop: every 250 ms of wall time, turn each
+/// replica's jobs-in-flight count into a pressure score and run the same
+/// [`Autopilot::control_at`] law the virtual-clock cluster uses; ship the
+/// resulting FP16/Mixed/FP8 directives to the engine workers. (Workers
+/// apply the latest directive between batches — coarse, but the law,
+/// dwell discipline, and ladder are exactly the tested ones.)
+fn spawn_autopilot_monitor(
+    frontend: std::sync::Arc<server::ClusterFrontend>,
+    directive_senders: Vec<std::sync::mpsc::Sender<nestedfp::coordinator::PrecisionDirective>>,
+) {
+    std::thread::spawn(move || {
+        let n = directive_senders.len();
+        let mut ap = Autopilot::new(n, AutopilotConfig::default());
+        let queue_ref = ap.config().queue_ref;
+        let t0 = std::time::Instant::now();
+        let headroom = vec![0.0; n];
+        let mut last: Vec<nestedfp::coordinator::PrecisionDirective> = Vec::new();
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(250));
+            let outstanding = frontend.outstanding();
+            let pressures: Vec<f64> =
+                outstanding.iter().map(|&q| q as f64 / queue_ref).collect();
+            let dirs = ap.control_at(t0.elapsed().as_secs_f64(), &pressures, 0.0, &headroom);
+            // send only on change: the workers drain their (unbounded)
+            // directive channels only when a job arrives, so an idle
+            // fleet must not accumulate a 4 msg/s backlog forever
+            if dirs != last {
+                eprintln!(
+                    "[autopilot] severity {} directives {dirs:?} (in-flight {outstanding:?})",
+                    ap.severity()
+                );
+                for (tx, d) in directive_senders.iter().zip(&dirs) {
+                    let _ = tx.send(*d);
+                }
+                last = dirs;
+            }
+        }
+    });
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let dir = artifacts_dir(args);
     let addr = args.get_or("addr", "127.0.0.1:7171").to_string();
@@ -182,12 +229,15 @@ fn cmd_serve(args: &Args) -> i32 {
         _ => PrecisionPolicy::Dual,
     };
     let replicas = args.get_usize("replicas", 1).max(1);
+    let autopilot_on = args.flag("autopilot");
     let run = || -> anyhow::Result<()> {
         // PJRT handles are not Send: each replica's runtime lives on its
         // own engine worker thread; clients talk through channels.
         let mut senders = Vec::with_capacity(replicas);
+        let mut directive_senders = Vec::with_capacity(replicas);
         for replica in 0..replicas {
             let (tx, rx) = std::sync::mpsc::channel();
+            let (dtx, drx) = std::sync::mpsc::channel();
             let dir2 = dir.clone();
             std::thread::spawn(move || {
                 let work = || -> anyhow::Result<()> {
@@ -205,7 +255,7 @@ fn cmd_serve(args: &Args) -> i32 {
                         ModeMap::default(),
                         max_batch * (max_seq / 16 + 1) + 32,
                     );
-                    let engine = Engine::new(
+                    let mut engine = Engine::new(
                         backend,
                         EngineConfig {
                             policy,
@@ -214,26 +264,28 @@ fn cmd_serve(args: &Args) -> i32 {
                         },
                     );
                     eprintln!("[replica {replica}] engine ready");
-                    server::engine_worker(engine, rx)
+                    server::engine_worker_controlled(&mut engine, rx, drx)
                 };
                 if let Err(e) = work() {
                     eprintln!("[replica {replica}] engine worker died: {e:#}");
                 }
             });
             senders.push(tx);
+            directive_senders.push(dtx);
         }
         let listener = std::net::TcpListener::bind(&addr)?;
         eprintln!(
-            "listening on {addr} ({replicas} replica(s)) — protocol: GEN <max_new> <prompt>"
+            "listening on {addr} ({replicas} replica(s){}) — protocol: GEN <max_new> <prompt>",
+            if autopilot_on { ", autopilot on" } else { "" }
         );
-        if replicas == 1 {
+        if replicas == 1 && !autopilot_on {
             server::serve(listener, senders.pop().unwrap(), Some(b';' as i32))?;
         } else {
-            server::serve_cluster(
-                listener,
-                server::ClusterFrontend::new(senders),
-                Some(b';' as i32),
-            )?;
+            let frontend = std::sync::Arc::new(server::ClusterFrontend::new(senders));
+            if autopilot_on {
+                spawn_autopilot_monitor(std::sync::Arc::clone(&frontend), directive_senders);
+            }
+            server::serve_cluster(listener, frontend, Some(b';' as i32))?;
         }
         Ok(())
     };

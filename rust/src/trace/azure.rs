@@ -130,6 +130,23 @@ pub fn downscale(rates: &[f64], factor: f64) -> Vec<f64> {
     rates.iter().map(|r| r * factor).collect()
 }
 
+/// A time-shifted window of the day trace: `len_s` seconds of per-second
+/// rates starting `lead_s` seconds *before* `center_s`. The autopilot
+/// bench replays the window around the busiest minute (18:12) — a calm
+/// lead-in, the 31 → 98 req/s spike, and the drain — downscaled to a
+/// small-cluster budget. Returned timestamps are rebased to 0.
+pub fn surge_slice(
+    cfg: &AzureTraceConfig,
+    center_s: usize,
+    lead_s: usize,
+    len_s: usize,
+) -> Vec<f64> {
+    let rates = generate_rate_series(cfg);
+    let start = center_s.saturating_sub(lead_s).min(rates.len());
+    let end = (start + len_s).min(rates.len());
+    rates[start..end].to_vec()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +186,22 @@ mod tests {
     fn downscale_scales() {
         let rates = vec![10.0, 50.0];
         assert_eq!(downscale(&rates, 0.2), vec![2.0, 10.0]);
+    }
+
+    #[test]
+    fn surge_slice_contains_the_spike() {
+        let cfg = AzureTraceConfig::default();
+        let slice = surge_slice(&cfg, cfg.busy_minute_start, 60, 180);
+        assert_eq!(slice.len(), 180);
+        // lead-in is the ambient evening rate; the spike peaks near 98
+        let lead_max = slice[..50].iter().cloned().fold(0.0, f64::max);
+        let spike_max = slice[60..120].iter().cloned().fold(0.0, f64::max);
+        assert!(spike_max > 80.0, "spike missing: {spike_max}");
+        assert!(
+            spike_max > 2.0 * lead_max,
+            "window must ramp: lead {lead_max} spike {spike_max}"
+        );
+        // deterministic
+        assert_eq!(slice, surge_slice(&cfg, cfg.busy_minute_start, 60, 180));
     }
 }

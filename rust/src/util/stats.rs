@@ -45,20 +45,8 @@ impl Digest {
 
     /// Exact percentile by linear interpolation; `q` in [0, 100].
     pub fn percentile(&mut self, q: f64) -> f64 {
-        assert!((0.0..=100.0).contains(&q));
         self.ensure_sorted();
-        if self.samples.is_empty() {
-            return f64::NAN;
-        }
-        let n = self.samples.len();
-        if n == 1 {
-            return self.samples[0];
-        }
-        let pos = q / 100.0 * (n - 1) as f64;
-        let lo = pos.floor() as usize;
-        let hi = pos.ceil() as usize;
-        let frac = pos - lo as f64;
-        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+        percentile_sorted(&self.samples, q)
     }
 
     pub fn mean(&self) -> f64 {
@@ -120,6 +108,27 @@ impl std::fmt::Display for Summary {
             self.count, self.mean, self.p50, self.p90, self.p99, self.max
         )
     }
+}
+
+/// Exact percentile of an already-**sorted** slice by linear
+/// interpolation; `q` in [0, 100]; NaN when empty. The single percentile
+/// definition in the crate — [`Digest::percentile`] and the autopilot's
+/// sliding-window SLO tracker both delegate here, so reported and
+/// control-loop percentiles can never drift apart.
+pub fn percentile_sorted(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q));
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let n = xs.len();
+    if n == 1 {
+        return xs[0];
+    }
+    let pos = q / 100.0 * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    xs[lo] * (1.0 - frac) + xs[hi] * frac
 }
 
 /// Mean of a slice (NaN if empty).

@@ -1,0 +1,241 @@
+//! Property tests on the SLO autopilot's stability guarantees:
+//!
+//! (a) **no thrash** — under *any* pressure/boost series, a replica's
+//!     directive never oscillates faster than the dwell/cooldown
+//!     discipline allows (FP16 → FP8 round trips are bounded below);
+//! (b) **monotone ramps, monotone escalation** — a non-decreasing
+//!     pressure ramp never makes the ladder (or any replica's rung)
+//!     step back down;
+//! (c) **never worse than the quality baseline** — on seeded end-to-end
+//!     surge replays, the autopilot's SLO-violation seconds stay within
+//!     the static-FP16 arm's (±1 s: discrete-event scheduling is not
+//!     perfectly monotone in service speed).
+
+use nestedfp::coordinator::autopilot::{Autopilot, AutopilotConfig};
+use nestedfp::coordinator::backend::SimBackend;
+use nestedfp::coordinator::cluster::{ClusterConfig, ClusterRouter, SurgeConfig};
+use nestedfp::coordinator::engine::EngineConfig;
+use nestedfp::coordinator::precision::{PrecisionDirective, PrecisionPolicy, SloConfig};
+use nestedfp::coordinator::router::RoutingPolicy;
+use nestedfp::gpusim::WeightFormat;
+use nestedfp::kvcache::KvPressureConfig;
+use nestedfp::model::zoo;
+use nestedfp::trace::workload::{build_requests, poisson_arrivals, surge_rates, WorkloadConfig};
+use nestedfp::util::prop;
+use nestedfp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// (a) dwell discipline under adversarial inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_no_oscillation_faster_than_the_dwell_time() {
+    prop::check_res(
+        "autopilot-no-thrash",
+        40,
+        |rng: &mut Pcg64| {
+            // adversarial series: per-tick random per-replica pressures
+            // (0..2, straddling both thresholds) and predictor boosts
+            (0..160)
+                .map(|_| {
+                    (
+                        [rng.f64() * 2.0, rng.f64() * 2.0, rng.f64() * 2.0],
+                        rng.f64() * 0.8,
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |series| {
+            let cfg = AutopilotConfig::default();
+            let mut ap = Autopilot::new(3, cfg);
+            let hr = [0.0; 3];
+            let mut t = 0.0;
+            for (p, boost) in series {
+                ap.control_at(t, p, *boost, &hr);
+                t += cfg.control_interval_s;
+            }
+            let min_dwell = cfg.escalate_dwell_s.min(cfg.promote_dwell_s);
+            for i in 0..3 {
+                let tl = ap.directive_timeline(i);
+                // any two consecutive switches respect the tighter dwell
+                for w in tl.windows(2) {
+                    let gap = w[1].0 - w[0].0;
+                    if gap + 1e-9 < min_dwell {
+                        return Err(format!(
+                            "replica {i}: switches {gap:.3}s apart (< dwell {min_dwell})"
+                        ));
+                    }
+                }
+                // FP16 <-> FP8 round trips are bounded below: reaching
+                // FP8 from FP16 crosses Mixed under the escalate dwell
+                // (and post-promotion cooldown); coming back crosses
+                // Mixed under the promote dwell twice
+                let mut last_fp16: Option<f64> = None;
+                let mut last_fp8: Option<f64> = None;
+                for &(at, d) in tl {
+                    match d {
+                        PrecisionDirective::Fp8 => {
+                            if let Some(t16) = last_fp16 {
+                                let lb = cfg.cooldown_s.max(cfg.escalate_dwell_s)
+                                    + cfg.escalate_dwell_s;
+                                if at - t16 + 1e-9 < lb {
+                                    return Err(format!(
+                                        "replica {i}: FP16->FP8 in {:.3}s (< {lb})",
+                                        at - t16
+                                    ));
+                                }
+                            }
+                            last_fp8 = Some(at);
+                        }
+                        PrecisionDirective::Fp16 => {
+                            if let Some(t8) = last_fp8 {
+                                let lb = 2.0 * cfg.promote_dwell_s;
+                                if at - t8 + 1e-9 < lb {
+                                    return Err(format!(
+                                        "replica {i}: FP8->FP16 in {:.3}s (< {lb})",
+                                        at - t8
+                                    ));
+                                }
+                            }
+                            last_fp16 = Some(at);
+                        }
+                        PrecisionDirective::Mixed => {}
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (b) monotone escalation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_monotone_ramps_escalate_monotonically() {
+    prop::check_res(
+        "autopilot-monotone-ramp",
+        50,
+        |rng: &mut Pcg64| {
+            // a random non-decreasing ramp from calm to overload
+            let peak = 1.0 + rng.f64() * 2.0;
+            let steps = 40 + rng.range_u64(0, 60) as usize;
+            let mut v = 0.0;
+            let mut ramp = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                v = (v + rng.f64() * 2.5 * peak / steps as f64).min(peak);
+                ramp.push(v);
+            }
+            ramp
+        },
+        |ramp| {
+            let cfg = AutopilotConfig::default();
+            let mut ap = Autopilot::new(2, cfg);
+            let hr = [0.0; 2];
+            let mut t = 0.0;
+            let mut last_sev = 0usize;
+            let mut last_rungs = [0usize; 2];
+            for &p in ramp {
+                let dirs = ap.control_at(t, &[p, p], 0.0, &hr);
+                if ap.severity() < last_sev {
+                    return Err(format!(
+                        "ladder stepped down ({} -> {}) at pressure {p:.2}",
+                        last_sev,
+                        ap.severity()
+                    ));
+                }
+                last_sev = ap.severity();
+                for (i, d) in dirs.iter().enumerate() {
+                    if d.rung() < last_rungs[i] {
+                        return Err(format!(
+                            "replica {i} demoted its rung ({} -> {}) on a monotone ramp",
+                            last_rungs[i],
+                            d.rung()
+                        ));
+                    }
+                    last_rungs[i] = d.rung();
+                }
+                t += cfg.control_interval_s;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) end-to-end: never worse than static FP16, any seed
+// ---------------------------------------------------------------------------
+
+/// One small surge replay: 40 s at 3 req/s with a 4x plateau, two
+/// sim-H100 replicas. Returns cluster SLO-violation seconds.
+fn mini_surge_violations(
+    policy: PrecisionPolicy,
+    autopilot: Option<AutopilotConfig>,
+    seed: u64,
+) -> usize {
+    let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
+    let max_seq = 512;
+    let backends: Vec<SimBackend> = (0..2)
+        .map(|_| {
+            SimBackend::new(
+                spec,
+                WeightFormat::Nested16,
+                WeightFormat::Nested8,
+                64,
+                max_seq,
+                64 * (max_seq / 16 + 1) * 2,
+            )
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        policy: RoutingPolicy::SloHeadroom,
+        engine: EngineConfig {
+            policy,
+            slo: SloConfig::default(),
+            physical_kv: false,
+            max_iterations: 0,
+            kv: KvPressureConfig::default(),
+        },
+        surge: SurgeConfig::disabled(),
+        autopilot,
+    };
+    let rates = surge_rates(3.0, 4.0, 40, 12, 10);
+    let arrivals = poisson_arrivals(&rates, seed);
+    let wl = WorkloadConfig {
+        seed: seed ^ 0x5eed,
+        input_len: 0,
+        output_len: 0,
+        chunk_align: 64,
+    };
+    let mut requests = build_requests(&arrivals, &wl, max_seq);
+    for r in &mut requests {
+        r.max_new_tokens = r.max_new_tokens.min(64);
+    }
+    let n = requests.len();
+    let mut cluster = ClusterRouter::new(backends, cfg);
+    let report = cluster.run(requests).expect("mini surge must drain");
+    assert_eq!(report.aggregate.completed, n, "workload did not drain");
+    report
+        .aggregate
+        .slo_violation_seconds(&SloConfig::default())
+}
+
+#[test]
+fn prop_autopilot_violations_at_most_static_fp16() {
+    // same seed, same arrivals, same shapes — only the control differs.
+    // ±1 s slack: a discrete-event schedule is not perfectly monotone in
+    // service speed (a faster early iteration can regroup later batches).
+    for seed in [3u64, 11, 29, 57, 101] {
+        let f16 = mini_surge_violations(PrecisionPolicy::Fp16Only, None, seed);
+        let ap = mini_surge_violations(
+            PrecisionPolicy::Dual,
+            Some(AutopilotConfig::default()),
+            seed,
+        );
+        assert!(
+            ap <= f16 + 1,
+            "seed {seed}: autopilot violated {ap}s, static fp16 only {f16}s"
+        );
+    }
+}

@@ -79,6 +79,90 @@ fn prop_kv_blocks_conserved_under_random_ops() {
     );
 }
 
+#[test]
+fn prop_admit_len_never_overadmits_across_seeded_steps() {
+    // `admit_len` is the scheduler's admission contract. In Paged mode it
+    // must reserve exactly the prompt (never the full expected context —
+    // that is Reserve mode's job), a successful `can_admit` must make the
+    // subsequent `allocate` infallible, and across any 100-step seeded
+    // op sequence the unit accounting must balance exactly:
+    // free + Σ live-sequence device units == total budget.
+    prop::check_res(
+        "kv-admit-len",
+        100,
+        |rng: &mut Pcg64| {
+            (0..100)
+                .map(|_| {
+                    (
+                        rng.range_u64(0, 3) as u8,        // op: admit/admit/release
+                        rng.range_u64(1, 200) as usize,   // prompt len
+                        rng.range_u64(1, 200) as usize,   // max_new
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |steps| {
+            for reserve_mode in [false, true] {
+                let geo = KvGeometry {
+                    n_layers: 1,
+                    n_heads: 1,
+                    max_seq: 96,
+                    head_dim: 1,
+                    block_size: 8,
+                    total_blocks: 24,
+                };
+                let policy = if reserve_mode {
+                    KvPressureConfig::dense_baseline()
+                } else {
+                    KvPressureConfig::default()
+                };
+                let mut kv = KvCacheManager::accounting_only(geo, policy);
+                let total_units = kv.free_units();
+                let mut live: Vec<usize> = Vec::new();
+                for &(op, plen, max_new) in steps {
+                    if op < 2 {
+                        let len = kv.admit_len(plen, max_new);
+                        let want = if reserve_mode {
+                            (plen + max_new).min(geo.max_seq)
+                        } else {
+                            plen.min(geo.max_seq)
+                        };
+                        if len != want {
+                            return Err(format!(
+                                "admit_len({plen}, {max_new}) = {len}, want {want} \
+                                 (reserve_mode={reserve_mode})"
+                            ));
+                        }
+                        if kv.can_admit(len) {
+                            let slot = kv.allocate(len).map_err(|e| {
+                                format!("can_admit said yes but allocate failed: {e}")
+                            })?;
+                            live.push(slot);
+                        }
+                    } else if let Some(slot) = live.pop() {
+                        kv.release(slot);
+                    }
+                    let used: usize =
+                        live.iter().map(|&s| kv.seq_device_units(s)).sum();
+                    if kv.free_units() + used != total_units {
+                        return Err(format!(
+                            "unit accounting broke: free {} + used {used} != {total_units}",
+                            kv.free_units()
+                        ));
+                    }
+                }
+                for slot in live.drain(..) {
+                    kv.release(slot);
+                }
+                if kv.free_units() != total_units {
+                    return Err("blocks leaked after full release".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------------
 // Engine invariants with a scripted backend
 // ---------------------------------------------------------------------------

@@ -1,0 +1,140 @@
+//! Golden-trace regression suite: one small, fully seeded cluster
+//! scenario (the autopilot arm of `bench::autopilot`'s `golden`
+//! scenario) replayed end to end, with its headline metrics compared
+//! against a committed snapshot **exactly**. Any behavioral drift in the
+//! scheduler, autopilot, router, or KV cache changes some number here
+//! and fails with a line-by-line diff.
+//!
+//! Snapshot lifecycle:
+//! * the committed file starts as an `UNINITIALIZED` sentinel (this repo
+//!   is grown in a container without a Rust toolchain); the first test
+//!   run on a real toolchain seeds it with the actual snapshot and asks
+//!   you to commit it;
+//! * afterwards the comparison is exact. Intentional behavior changes
+//!   re-seed with `UPDATE_GOLDEN=1 cargo test --test golden_trace` and
+//!   commit the diff — the point is that drift is *loud and reviewed*,
+//!   never silent.
+
+use nestedfp::bench::autopilot::{run_arm, summarize, surge_workload, Arm, SurgeScenario};
+use nestedfp::coordinator::precision::SloConfig;
+
+const GOLDEN_PATH: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/rust/tests/golden/cluster_scenario.snapshot.txt"
+);
+const SENTINEL: &str = "UNINITIALIZED";
+
+/// Render the scenario's outcome canonically: one `key: value` per line,
+/// fixed float precision, replicas in index order. Diff-friendly by
+/// construction.
+fn render_snapshot() -> String {
+    let sc = SurgeScenario::golden();
+    let slo = SloConfig::default();
+    let n_requests = surge_workload(&sc).len();
+    let mut report = run_arm(Arm::Autopilot, &sc).expect("golden scenario must drain");
+    let s = summarize(&mut report, &slo);
+    let mut out = String::new();
+    out.push_str("schema: nestedfp/golden-trace@1\n");
+    out.push_str(&format!(
+        "scenario: autopilot lead={} len={} scale={:.2} replicas={} seeds={}/{}\n",
+        sc.lead_s, sc.len_s, sc.scale, sc.replicas, sc.arrival_seed, sc.shape_seed
+    ));
+    out.push_str(&format!("requests: {n_requests}\n"));
+    out.push_str(&format!("completed: {}\n", s.completed));
+    out.push_str(&format!(
+        "total_output_tokens: {}\n",
+        report.aggregate.total_output_tokens
+    ));
+    out.push_str(&format!("goodput_req_s: {:.6}\n", s.goodput_req_s));
+    out.push_str(&format!("slo_attained: {}\n", report.aggregate.slo_attained(&slo)));
+    out.push_str(&format!("slo_violation_s: {}\n", s.slo_violation_s));
+    out.push_str(&format!("mode_switches: {}\n", s.mode_switches));
+    out.push_str(&format!("ladder_changes: {}\n", report.ladder_timeline.len()));
+    out.push_str(&format!("pre_escalations: {}\n", s.pre_escalations));
+    out.push_str(&format!(
+        "dwell_s: {:.3}/{:.3}/{:.3}\n",
+        s.dwell_s[0], s.dwell_s[1], s.dwell_s[2]
+    ));
+    for (i, r) in report.replicas.iter().enumerate() {
+        out.push_str(&format!(
+            "replica{i}: routed={} iterations={} switches={} \
+             final_free_blocks={} final_host_blocks={} total_blocks={}\n",
+            r.routed,
+            r.iterations,
+            r.mode_stats.switches,
+            r.final_free_kv_blocks,
+            r.final_host_kv_blocks,
+            r.total_kv_blocks
+        ));
+    }
+    out
+}
+
+#[test]
+fn golden_cluster_scenario_matches_committed_snapshot() {
+    let actual = render_snapshot();
+    let committed = std::fs::read_to_string(GOLDEN_PATH).unwrap_or_default();
+    let reseed = std::env::var("UPDATE_GOLDEN").is_ok()
+        || committed.trim().is_empty()
+        || committed.trim_start().starts_with(SENTINEL);
+    if reseed {
+        std::fs::write(GOLDEN_PATH, &actual).expect("write golden snapshot");
+        eprintln!(
+            "golden_trace: seeded {GOLDEN_PATH} from this run — commit it to \
+             lock the behavior (this message appears only on first run or \
+             under UPDATE_GOLDEN=1)"
+        );
+        return;
+    }
+    if committed != actual {
+        let mut diff = String::new();
+        let c: Vec<&str> = committed.lines().collect();
+        let a: Vec<&str> = actual.lines().collect();
+        for i in 0..c.len().max(a.len()) {
+            let want = c.get(i).copied().unwrap_or("<missing>");
+            let got = a.get(i).copied().unwrap_or("<missing>");
+            if want != got {
+                diff.push_str(&format!("  line {:>2}: - {want}\n           + {got}\n", i + 1));
+            }
+        }
+        panic!(
+            "behavioral drift vs the committed golden trace:\n{diff}\
+             If this change is intentional, regenerate with\n  \
+             UPDATE_GOLDEN=1 cargo test -q --test golden_trace\n\
+             and commit the snapshot diff alongside the code change."
+        );
+    }
+}
+
+/// KV-cache invariant, checked after **every** bench arm: with the
+/// workload fully drained, free + used + host must equal the budget on
+/// every replica — i.e. used == 0, host == 0, free == total. A single
+/// leaked or stranded block anywhere in the admission / demotion /
+/// offload / release paths fails here by name.
+#[test]
+fn kv_blocks_conserve_after_every_bench_arm() {
+    let sc = SurgeScenario::golden();
+    let n = surge_workload(&sc).len();
+    for arm in [Arm::StaticFp16, Arm::StaticFp8, Arm::LocalDual, Arm::Autopilot] {
+        let report = run_arm(arm, &sc).expect("arm must drain");
+        assert_eq!(
+            report.aggregate.completed, n,
+            "{}: workload did not drain",
+            arm.name()
+        );
+        for (i, r) in report.replicas.iter().enumerate() {
+            assert_eq!(
+                r.final_free_kv_blocks, r.total_kv_blocks,
+                "{} replica {i}: leaked {} device blocks",
+                arm.name(),
+                r.total_kv_blocks - r.final_free_kv_blocks
+            );
+            assert_eq!(
+                r.final_host_kv_blocks, 0,
+                "{} replica {i}: {} blocks stranded on the host tier",
+                arm.name(),
+                r.final_host_kv_blocks
+            );
+        }
+    }
+}
