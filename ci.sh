@@ -41,6 +41,12 @@ cargo build --release --offline --examples
 echo "== cargo test (control-layer suites: golden trace + autopilot props) =="
 cargo test -q --offline --test golden_trace --test autopilot_props
 
+# The attention path's central invariant (block-native == dense-gather
+# oracle, bit for bit, across precision mixes / threads / offload
+# cycles) runs by name so a divergence fails with clear attribution.
+echo "== cargo test (attention suite: block-native vs dense oracle) =="
+cargo test -q --offline --test attn_props
+
 echo "== cargo test -q =="
 cargo test -q --offline
 
@@ -49,6 +55,9 @@ echo "== smoke: repro reproduce gemm --quick =="
 
 echo "== smoke: repro reproduce autopilot --quick =="
 ./target/release/repro reproduce autopilot --quick --json /tmp/nestedfp_autopilot_ci.json
+
+echo "== smoke: repro reproduce attention --quick =="
+./target/release/repro reproduce attention --quick --json /tmp/nestedfp_attention_ci.json
 
 echo "== smoke: example kernel_tour (real engine vs gpusim) =="
 cargo run --release --offline --example kernel_tour

@@ -1,0 +1,391 @@
+//! The block-native attention engine.
+//!
+//! One `attend` call computes one layer's attention for a batch of
+//! lanes (sequences), reading K/V straight out of the paged cache's
+//! block tables — FP8 blocks dequantize inside the block load, nothing
+//! is gathered, and no `max_seq`-sized intermediate exists (online
+//! softmax). Work is partitioned into (lane × head) tasks, each of
+//! which writes a disjoint contiguous slice of the output, so the
+//! [`ThreadPool`] determinism contract applies: bit-identical output
+//! for any worker count.
+//!
+//! The new K/V rows of the step being executed must already be
+//! scattered into the cache ([`PagedKvCache::scatter_rows`]) before the
+//! call — a query at position `p` attends positions `0..=p`, which by
+//! then are all block-resident. Padding lanes do not exist here: a
+//! batch is exactly its real lanes (the dense oracle zero-fills pads
+//! instead; see `PagedKvCache::gather_batch_padded`).
+
+use crate::gemm::ThreadPool;
+use crate::kvcache::{BlockKv, PagedKvCache};
+
+use super::kernel::{axpy_f32, axpy_fp8, dot_f32, dot_fp8, e4m3_lut, OnlineSoftmax};
+
+/// One sequence's queries for an `attend` call. All lanes of a call
+/// carry the same token count `t` (1 for decode, the chunk length for
+/// prefill).
+pub struct AttnLane<'a> {
+    /// Paged-cache sequence handle.
+    pub seq: usize,
+    /// Queries, `[t, n_heads * head_dim]` row-major (post-RoPE).
+    pub q: &'a [f32],
+    /// Absolute context position of each query row; positions are the
+    /// causal bound (`q[i]` attends `0..=positions[i]`).
+    pub positions: &'a [i32],
+}
+
+/// Per-call traffic accounting: the structural win the engine exists
+/// to deliver, in bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AttnStats {
+    /// Bytes a dense gather would have copied to serve this call — one
+    /// `[n_heads, max_seq, head_dim]` K+V f32 slab per lane (the old
+    /// backend's per-layer share of `gather_seq`/`gather_batch`).
+    pub dense_bytes: usize,
+    /// KV bytes this call actually streamed: the covering blocks' bytes
+    /// at their *stored* precision (FP8 blocks count roughly half),
+    /// per-layer share.
+    pub touched_bytes: usize,
+}
+
+impl AttnStats {
+    pub fn merge(&mut self, other: AttnStats) {
+        self.dense_bytes += other.dense_bytes;
+        self.touched_bytes += other.touched_bytes;
+    }
+
+    /// Fraction of the dense gather's traffic the block walk avoided.
+    pub fn savings(&self) -> f64 {
+        if self.dense_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.touched_bytes as f64 / self.dense_bytes as f64
+    }
+}
+
+/// The engine: the worker budget plus the E4M3 dequant table (built
+/// once at construction — `attend` runs per layer per step, so the
+/// 256-entry LUT must not be rebuilt on the hot path).
+#[derive(Clone, Copy, Debug)]
+pub struct AttnEngine {
+    threads: usize,
+    lut: [f32; 256],
+}
+
+impl Default for AttnEngine {
+    fn default() -> Self {
+        AttnEngine::new(1)
+    }
+}
+
+impl AttnEngine {
+    /// An engine using at most `threads` workers (clamped to ≥ 1). The
+    /// worker count never changes a single output bit.
+    pub fn new(threads: usize) -> AttnEngine {
+        AttnEngine {
+            threads: threads.max(1),
+            lut: e4m3_lut(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Compute one layer's attention for `lanes`, writing `out` with
+    /// layout `[lane, head, t, head_dim]`. Panics on shape mismatches,
+    /// offloaded lanes, or positions beyond `max_seq` — the same
+    /// contracts the gather path enforced.
+    ///
+    /// LRU note: in-place reads borrow `&KvCacheManager` and cannot bump
+    /// the touch clock; callers that do not also scatter this step
+    /// should call [`PagedKvCache::touch_read`] per lane first.
+    pub fn attend(
+        &self,
+        kv: &PagedKvCache,
+        layer: usize,
+        lanes: &[AttnLane],
+        out: &mut [f32],
+    ) -> AttnStats {
+        let g = kv.geo;
+        let (h, dh) = (g.n_heads, g.head_dim);
+        assert!(layer < g.n_layers, "layer {layer} of {}", g.n_layers);
+        if lanes.is_empty() {
+            assert!(out.is_empty(), "out must be empty for an empty batch");
+            return AttnStats::default();
+        }
+        let t = lanes[0].positions.len();
+        assert!(t > 0, "zero-token lanes");
+        let mut stats = AttnStats::default();
+        for lane in lanes {
+            assert_eq!(lane.positions.len(), t, "lanes must share a token count");
+            assert_eq!(lane.q.len(), t * h * dh, "query shape [t, H*Dh]");
+            assert!(
+                !kv.is_offloaded(lane.seq),
+                "attend on offloaded seq {}",
+                lane.seq
+            );
+            let mut ctx = 0usize;
+            for &p in lane.positions {
+                assert!(p >= 0, "negative position");
+                ctx = ctx.max(p as usize + 1);
+            }
+            assert!(ctx <= g.max_seq, "position beyond max_seq {}", g.max_seq);
+            stats.dense_bytes += g.layer_dense_bytes();
+            stats.touched_bytes += kv.seq_touched_bytes(lane.seq, ctx);
+        }
+        assert_eq!(out.len(), lanes.len() * h * t * dh, "out shape [B, H, t, Dh]");
+
+        let lut = &self.lut;
+        let zeros = vec![0.0f32; dh];
+        // one (lane, head) task per chunk; each task's loop over its own
+        // queries and blocks is fully sequential, so worker count is
+        // irrelevant to the bits
+        ThreadPool::new(self.threads).for_each_chunk(out, t * dh, |c, dst| {
+            let lane = &lanes[c / h];
+            let head = c % h;
+            let mut acc = vec![0.0f32; dh];
+            for ti in 0..t {
+                let q = &lane.q[(ti * h + head) * dh..(ti * h + head + 1) * dh];
+                attend_query(
+                    kv,
+                    layer,
+                    lane.seq,
+                    head,
+                    q,
+                    lane.positions[ti] as usize,
+                    lut,
+                    &zeros,
+                    &mut acc,
+                    &mut dst[ti * dh..(ti + 1) * dh],
+                );
+            }
+        });
+        stats
+    }
+}
+
+/// One query's block walk: online softmax over positions `0..=pos`,
+/// visiting blocks in table order and tokens in ascending position —
+/// the exact operation sequence of the dense oracle, minus the gather.
+#[allow(clippy::too_many_arguments)]
+fn attend_query(
+    kv: &PagedKvCache,
+    layer: usize,
+    seq: usize,
+    head: usize,
+    q: &[f32],
+    pos: usize,
+    lut: &[f32; 256],
+    zeros: &[f32],
+    acc: &mut [f32],
+    dst: &mut [f32],
+) {
+    let g = kv.geo;
+    let (h, dh, bs) = (g.n_heads, g.head_dim, g.block_size);
+    let inv = 1.0 / (dh as f32).sqrt();
+    for a in acc.iter_mut() {
+        *a = 0.0;
+    }
+    let mut sm = OnlineSoftmax::new();
+    let ctx = pos + 1;
+    // (layer, head) slice offset inside a block plane `[L, H, bs, Dh]`
+    let base = (layer * h + head) * bs * dh;
+    let mut bi = 0usize;
+    while bi * bs < ctx {
+        let n_tok = bs.min(ctx - bi * bs);
+        match kv.seq_block_kv(seq, bi) {
+            BlockKv::F32 { k, v } => {
+                for j in 0..n_tok {
+                    let kr = &k[base + j * dh..base + (j + 1) * dh];
+                    let p = sm.admit(dot_f32(q, kr) * inv, acc);
+                    axpy_f32(p, &v[base + j * dh..base + (j + 1) * dh], acc);
+                }
+            }
+            BlockKv::Fp8 {
+                k,
+                v,
+                scale_k,
+                scale_v,
+            } => {
+                for j in 0..n_tok {
+                    let kr = &k[base + j * dh..base + (j + 1) * dh];
+                    let p = sm.admit(dot_fp8(q, kr, scale_k, lut) * inv, acc);
+                    axpy_fp8(p, &v[base + j * dh..base + (j + 1) * dh], scale_v, lut, acc);
+                }
+            }
+            BlockKv::Acct => {
+                // accounting-only pool: the dense gather would have
+                // produced zeros — run the identical law over zeros
+                for _ in 0..n_tok {
+                    let p = sm.admit(dot_f32(q, zeros) * inv, acc);
+                    axpy_f32(p, zeros, acc);
+                }
+            }
+        }
+        bi += 1;
+    }
+    sm.finish(acc, dst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::testutil::{filled_cache, rand_q, test_geo as geo};
+    use crate::kvcache::KvPressureConfig;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn decode_query_matches_two_pass_reference() {
+        // independent numerical check: the engine vs a from-scratch f64
+        // two-pass softmax over the same cache contents
+        let g = geo();
+        let (kv, seqs) = filled_cache(g, &[13], 7, KvPressureConfig::dense_baseline());
+        let (h, dh) = (g.n_heads, g.head_dim);
+        let mut rng = Pcg64::seeded(8);
+        let q = rand_q(&mut rng, h * dh);
+        let pos = [12i32];
+        let lanes = [AttnLane {
+            seq: seqs[0],
+            q: &q,
+            positions: &pos,
+        }];
+        let mut out = vec![0.0f32; h * dh];
+        AttnEngine::new(1).attend(&kv, 1, &lanes, &mut out);
+
+        // rebuild the dense values through the public block view
+        let ctx = 13usize;
+        for head in 0..h {
+            let base = (h + head) * g.block_size * dh; // layer 1
+            let mut scores = Vec::new();
+            let mut vals: Vec<Vec<f32>> = Vec::new();
+            for j in 0..ctx {
+                let (bi, off) = (j / g.block_size, j % g.block_size);
+                let BlockKv::F32 { k, v } = kv.seq_block_kv(seqs[0], bi) else {
+                    panic!("expected f32 blocks");
+                };
+                let kr = &k[base + off * dh..base + (off + 1) * dh];
+                let qh = &q[head * dh..(head + 1) * dh];
+                let s: f64 = qh
+                    .iter()
+                    .zip(kr)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>()
+                    / (dh as f64).sqrt();
+                scores.push(s);
+                vals.push(v[base + off * dh..base + (off + 1) * dh].to_vec());
+            }
+            let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let denom: f64 = scores.iter().map(|&s| (s - m).exp()).sum();
+            for d in 0..dh {
+                let want: f64 = scores
+                    .iter()
+                    .zip(&vals)
+                    .map(|(&s, v)| (s - m).exp() * v[d] as f64)
+                    .sum::<f64>()
+                    / denom;
+                let got = out[head * dh + d] as f64;
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "head {head} d {d}: engine {got} vs reference {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_never_changes_bits() {
+        let g = geo();
+        let (kv, seqs) = filled_cache(g, &[9, 17, 30], 21, KvPressureConfig::dense_baseline());
+        let (h, dh) = (g.n_heads, g.head_dim);
+        let mut rng = Pcg64::seeded(22);
+        let qs: Vec<Vec<f32>> = seqs.iter().map(|_| rand_q(&mut rng, h * dh)).collect();
+        let pos: Vec<[i32; 1]> = [8i32, 16, 29].iter().map(|&p| [p]).collect();
+        let lanes: Vec<AttnLane> = seqs
+            .iter()
+            .zip(&qs)
+            .zip(&pos)
+            .map(|((&seq, q), p)| AttnLane {
+                seq,
+                q,
+                positions: p,
+            })
+            .collect();
+        let n = lanes.len() * h * dh;
+        let mut want = vec![0.0f32; n];
+        let s1 = AttnEngine::new(1).attend(&kv, 0, &lanes, &mut want);
+        for threads in [2, 3, 8] {
+            let mut got = vec![0.0f32; n];
+            let s = AttnEngine::new(threads).attend(&kv, 0, &lanes, &mut got);
+            assert_eq!(s, s1, "stats must not depend on workers");
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads} changed bits"
+            );
+        }
+    }
+
+    #[test]
+    fn stats_count_fp8_blocks_at_half() {
+        let g = geo();
+        let policy = KvPressureConfig {
+            demote_watermark_fp8: 0.0,
+            ..KvPressureConfig::demote_only()
+        };
+        let (mut kv, seqs) = filled_cache(g, &[16], 31, policy);
+        let mut rng = Pcg64::seeded(32);
+        let q = rand_q(&mut rng, g.n_heads * g.head_dim);
+        let pos = [15i32];
+        let mut out = vec![0.0f32; g.n_heads * g.head_dim];
+        let lane = |s| AttnLane {
+            seq: s,
+            q: &q,
+            positions: &pos,
+        };
+        let before = AttnEngine::new(1).attend(&kv, 0, &[lane(seqs[0])], &mut out);
+        assert!(
+            before.touched_bytes < before.dense_bytes,
+            "a 16-token context must stream less than the 32-slot dense gather"
+        );
+        kv.set_precision_pressure(true);
+        assert!(kv.maintain() > 0, "forced demotion must engage");
+        let after = AttnEngine::new(1).attend(&kv, 0, &[lane(seqs[0])], &mut out);
+        assert!(
+            after.touched_bytes < before.touched_bytes,
+            "fp8 blocks must stream fewer bytes: {} !< {}",
+            after.touched_bytes,
+            before.touched_bytes
+        );
+        assert_eq!(after.dense_bytes, before.dense_bytes);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let g = geo();
+        let (kv, _) = filled_cache(g, &[8], 41, KvPressureConfig::dense_baseline());
+        let mut out: Vec<f32> = Vec::new();
+        let stats = AttnEngine::new(4).attend(&kv, 0, &[], &mut out);
+        assert_eq!(stats, AttnStats::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "offloaded")]
+    fn offloaded_lane_panics() {
+        let g = geo();
+        let (mut kv, seqs) = filled_cache(g, &[16], 51, KvPressureConfig::default());
+        kv.offload_sequence(seqs[0]).unwrap();
+        let q = vec![0.0f32; g.n_heads * g.head_dim];
+        let pos = [15i32];
+        let mut out = vec![0.0f32; g.n_heads * g.head_dim];
+        AttnEngine::new(1).attend(
+            &kv,
+            0,
+            &[AttnLane {
+                seq: seqs[0],
+                q: &q,
+                positions: &pos,
+            }],
+            &mut out,
+        );
+    }
+}

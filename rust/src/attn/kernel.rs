@@ -1,0 +1,187 @@
+//! The shared per-query attention law.
+//!
+//! Both the block-native engine and the dense-gather oracle are thin
+//! drivers around the helpers here: one f32 dot per key (ascending
+//! element order), one online-softmax admit, one weighted V accumulate
+//! (ascending element order). Keys are visited in ascending position
+//! order in both paths, so — with the FP8 dequant computing exactly the
+//! value the gather's `codec::decode_block` would have materialized
+//! (`LUT[byte] * scale`, one f32 multiply) — the two paths execute the
+//! identical f32 operation sequence and their outputs match bit for
+//! bit. Keep it that way: no `mul_add`, no reassociation, no
+//! early-exit on zero.
+
+use crate::format::e4m3;
+
+/// 256-entry E4M3 decode table. `LUT[b] == e4m3::decode(b)` exactly, so
+/// `LUT[b] * scale` reproduces `kvcache::codec::decode_block` bit for
+/// bit — the fused dequant and the gather dequant cannot disagree.
+pub(crate) fn e4m3_lut() -> [f32; 256] {
+    let mut lut = [0.0f32; 256];
+    for (b, slot) in lut.iter_mut().enumerate() {
+        *slot = e4m3::decode(b as u8);
+    }
+    lut
+}
+
+/// Online-softmax running state for one (query, head) pair: the running
+/// max `m` and the rescaled partition sum `l`. The V accumulator lives
+/// with the caller (it is `head_dim`-sized) and is rescaled in lockstep.
+pub(crate) struct OnlineSoftmax {
+    m: f32,
+    l: f32,
+}
+
+impl OnlineSoftmax {
+    pub fn new() -> OnlineSoftmax {
+        OnlineSoftmax {
+            m: f32::NEG_INFINITY,
+            l: 0.0,
+        }
+    }
+
+    /// Admit one score: rescale the running state (and `acc`) if `s` is
+    /// a new max, and return the weight `p = exp(s - m)` the caller
+    /// multiplies into the V accumulate.
+    #[inline]
+    pub fn admit(&mut self, s: f32, acc: &mut [f32]) -> f32 {
+        if s > self.m {
+            // first key: l and acc are zero, so the rescale factor is
+            // moot — but exp(-inf - s) would be 0.0 anyway; keep the
+            // explicit branch so a NaN never leaks out of (m - s)
+            let r = if self.m == f32::NEG_INFINITY {
+                0.0
+            } else {
+                (self.m - s).exp()
+            };
+            self.l *= r;
+            for a in acc.iter_mut() {
+                *a *= r;
+            }
+            self.m = s;
+        }
+        let p = (s - self.m).exp();
+        self.l += p;
+        p
+    }
+
+    /// Normalize the accumulator into `dst`. With at least one admitted
+    /// key, `l >= 1` (the running max contributes `exp(0)`), so the
+    /// division is safe.
+    #[inline]
+    pub fn finish(&self, acc: &[f32], dst: &mut [f32]) {
+        for (d, &a) in dst.iter_mut().zip(acc) {
+            *d = a / self.l;
+        }
+    }
+}
+
+/// `q ⋅ k` over f32 rows, ascending element order, one mul + add per
+/// term.
+#[inline]
+pub(crate) fn dot_f32(q: &[f32], k: &[f32]) -> f32 {
+    debug_assert_eq!(q.len(), k.len());
+    let mut s = 0.0f32;
+    for (a, b) in q.iter().zip(k) {
+        s += a * b;
+    }
+    s
+}
+
+/// `q ⋅ dequant(k)` with the dequant fused into the load:
+/// `LUT[byte] * scale` is exactly the f32 the dense gather would have
+/// stored, so the products (and their ascending-order sum) match
+/// [`dot_f32`] over the gathered row bit for bit.
+#[inline]
+pub(crate) fn dot_fp8(q: &[f32], k: &[u8], scale: f32, lut: &[f32; 256]) -> f32 {
+    debug_assert_eq!(q.len(), k.len());
+    let mut s = 0.0f32;
+    for (a, &b) in q.iter().zip(k) {
+        s += a * (lut[b as usize] * scale);
+    }
+    s
+}
+
+/// `acc += p * v` over an f32 row, ascending element order.
+#[inline]
+pub(crate) fn axpy_f32(p: f32, v: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(v.len(), acc.len());
+    for (a, b) in acc.iter_mut().zip(v) {
+        *a += p * b;
+    }
+}
+
+/// `acc += p * dequant(v)` — the PV half of the fused-dequant
+/// microkernel; same bit-match argument as [`dot_fp8`].
+#[inline]
+pub(crate) fn axpy_fp8(p: f32, v: &[u8], scale: f32, lut: &[f32; 256], acc: &mut [f32]) {
+    debug_assert_eq!(v.len(), acc.len());
+    for (a, &b) in acc.iter_mut().zip(v) {
+        *a += p * (lut[b as usize] * scale);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_matches_the_codec_decoder() {
+        let lut = e4m3_lut();
+        for b in 0..=255u8 {
+            let want = e4m3::decode(b);
+            if want.is_nan() {
+                assert!(lut[b as usize].is_nan(), "byte {b:#x}");
+            } else {
+                assert_eq!(lut[b as usize].to_bits(), want.to_bits(), "byte {b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_softmax_matches_two_pass_reference() {
+        // scores chosen so the running max changes mid-stream
+        let scores = [0.5f32, -1.0, 2.0, 1.5, 3.0, -0.5];
+        let vals = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut sm = OnlineSoftmax::new();
+        let mut acc = [0.0f32];
+        for (&s, &v) in scores.iter().zip(&vals) {
+            let p = sm.admit(s, &mut acc);
+            axpy_f32(p, &[v], &mut acc);
+        }
+        let mut out = [0.0f32];
+        sm.finish(&acc, &mut out);
+
+        let m = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let denom: f64 = scores.iter().map(|&s| ((s - m) as f64).exp()).sum();
+        let want: f64 = scores
+            .iter()
+            .zip(&vals)
+            .map(|(&s, &v)| ((s - m) as f64).exp() * v as f64)
+            .sum::<f64>()
+            / denom;
+        assert!(
+            (out[0] as f64 - want).abs() < 1e-6,
+            "online {} vs two-pass {want}",
+            out[0]
+        );
+    }
+
+    #[test]
+    fn fp8_helpers_match_f32_over_dequantized_rows() {
+        let lut = e4m3_lut();
+        let bytes: Vec<u8> = vec![0x00, 0x3C, 0x85, 0xC1, 0x7E, 0x12];
+        let scale = 0.37f32;
+        let dense: Vec<f32> = bytes.iter().map(|&b| lut[b as usize] * scale).collect();
+        let q: Vec<f32> = (0..bytes.len()).map(|i| 0.1 * i as f32 - 0.2).collect();
+        assert_eq!(
+            dot_fp8(&q, &bytes, scale, &lut).to_bits(),
+            dot_f32(&q, &dense).to_bits()
+        );
+        let mut a1 = vec![0.5f32; bytes.len()];
+        let mut a2 = a1.clone();
+        axpy_fp8(0.75, &bytes, scale, &lut, &mut a1);
+        axpy_f32(0.75, &dense, &mut a2);
+        assert!(a1.iter().zip(&a2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}

@@ -1,0 +1,91 @@
+//! Block-native paged attention — the read path the paged KV cache
+//! deserved.
+//!
+//! Until PR 5 the host compute twin dense-gathered every scheduled
+//! sequence's *entire* cache — `O(n_layers × n_heads × max_seq ×
+//! head_dim)` floats copied (and FP8-dequantized) per decode step —
+//! before a single score was computed, erasing the bandwidth advantage
+//! the paged cache (PR 2) exists to deliver. MorphServe (PAPERS.md)
+//! makes the same observation for runtime KV-precision swapping: the
+//! win only materializes when attention consumes quantized blocks **in
+//! place**.
+//!
+//! This module walks [`PagedKvCache`](crate::kvcache::PagedKvCache)
+//! block tables directly:
+//!
+//! * [`engine::AttnEngine`] — per-block QK^T / PV microkernels that fuse
+//!   the FP8 dequant (per-block absmax scale, the same
+//!   `kvcache::codec` law) into the block load, an online-softmax
+//!   accumulator so no `max_seq`-sized intermediate ever exists, and
+//!   fork-join threading over (lane × head) tasks with the
+//!   [`gemm::ThreadPool`](crate::gemm::ThreadPool) determinism
+//!   contract: bit-identical output for any worker count.
+//! * [`oracle`] — the dense-gather reference: materialize the dense
+//!   `[L, H, max_seq, Dh]` cache (exactly what the old backend did),
+//!   then apply the *same* per-query accumulation law. Because both
+//!   paths visit the same values in the same order with the same
+//!   arithmetic, the block-native engine is **bit-identical** to the
+//!   oracle for every precision mix — the gather is pure waste, which
+//!   is precisely the claim `repro reproduce attention` measures.
+//! * `kernel` (crate-private) — the shared law itself (dot, weighted
+//!   accumulate, online-softmax state, the E4M3 dequant LUT), factored
+//!   so the two paths cannot drift apart.
+//!
+//! Accounting: every attend reports [`AttnStats`] — the dense-equivalent
+//! bytes a gather would have copied vs. the block bytes actually
+//! touched (at stored precision, so FP8 blocks count half). The engine
+//! mirrors these into `Metrics` per step; `repro reproduce attention`
+//! and the KV bench surface the savings.
+
+pub mod engine;
+pub(crate) mod kernel;
+pub mod oracle;
+
+pub use engine::{AttnEngine, AttnLane, AttnStats};
+pub use oracle::{attend_dense, attend_dense_step};
+
+/// Shared fixtures for this module's unit tests: a small physical cache
+/// with random-filled sequences.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::kvcache::{KvGeometry, KvPressureConfig, PagedKvCache};
+    use crate::util::rng::Pcg64;
+
+    pub(crate) fn test_geo() -> KvGeometry {
+        KvGeometry {
+            n_layers: 2,
+            n_heads: 2,
+            max_seq: 32,
+            head_dim: 4,
+            block_size: 8,
+            total_blocks: 24,
+        }
+    }
+
+    /// Physical cache holding `lens` sequences filled with seeded
+    /// gaussian K/V.
+    pub(crate) fn filled_cache(
+        g: KvGeometry,
+        lens: &[usize],
+        seed: u64,
+        policy: KvPressureConfig,
+    ) -> (PagedKvCache, Vec<usize>) {
+        let mut kv = PagedKvCache::new(g, policy);
+        let mut rng = Pcg64::seeded(seed);
+        let mut seqs = Vec::new();
+        for &len in lens {
+            let s = kv.allocate(len).expect("test budget");
+            let n = g.n_layers * len * g.n_heads * g.head_dim;
+            let nk: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+            let nv: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.5).collect();
+            kv.scatter_prefill(s, 0, len, &nk, &nv);
+            kv.grow(s, len).unwrap();
+            seqs.push(s);
+        }
+        (kv, seqs)
+    }
+
+    pub(crate) fn rand_q(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * 0.3).collect()
+    }
+}

@@ -1,0 +1,272 @@
+//! The dense-gather oracle — the path the engine replaces, kept as the
+//! reference.
+//!
+//! [`attend_dense`] (one layer) and [`attend_dense_step`] (all layers,
+//! one gather per lane — exactly what the pre-PR 5 backend paid per
+//! decode step) first materialize each lane's dense `[L, H, max_seq,
+//! Dh]` K/V via `PagedKvCache::gather_seq`, then run the *same*
+//! per-query law as the block-native engine (the shared `kernel`
+//! helpers), in the same ascending-position order. The gather dequantizes FP8 blocks
+//! through `kvcache::codec`, producing exactly the f32 values the
+//! engine's fused dequant computes — so engine and oracle outputs are
+//! bit-identical, and any timing difference between them is pure gather
+//! overhead.
+
+use crate::kvcache::PagedKvCache;
+
+use super::engine::{AttnLane, AttnStats};
+use super::kernel::{axpy_f32, dot_f32, OnlineSoftmax};
+
+fn validate(kv: &PagedKvCache, lanes: &[AttnLane]) -> usize {
+    let g = kv.geo;
+    let (h, dh) = (g.n_heads, g.head_dim);
+    let t = lanes.first().map(|l| l.positions.len()).unwrap_or(0);
+    for lane in lanes {
+        assert_eq!(lane.positions.len(), t, "lanes must share a token count");
+        assert_eq!(lane.q.len(), t * h * dh, "query shape [t, H*Dh]");
+        for &p in lane.positions {
+            assert!(p >= 0 && (p as usize) < g.max_seq, "position {p} out of range");
+        }
+    }
+    t
+}
+
+/// One (head, query) pass over a gathered dense plane — the identical
+/// operation sequence to the engine's block walk.
+#[allow(clippy::too_many_arguments)]
+fn dense_query(
+    gk: &[f32],
+    gv: &[f32],
+    s_max: usize,
+    h: usize,
+    dh: usize,
+    layer: usize,
+    head: usize,
+    q: &[f32],
+    pos: usize,
+    acc: &mut [f32],
+    dst: &mut [f32],
+) {
+    let inv = 1.0 / (dh as f32).sqrt();
+    for a in acc.iter_mut() {
+        *a = 0.0;
+    }
+    let mut sm = OnlineSoftmax::new();
+    let row0 = (layer * h + head) * s_max * dh;
+    for j in 0..=pos {
+        let kr = &gk[row0 + j * dh..row0 + (j + 1) * dh];
+        let p = sm.admit(dot_f32(q, kr) * inv, acc);
+        axpy_f32(p, &gv[row0 + j * dh..row0 + (j + 1) * dh], acc);
+    }
+    sm.finish(acc, dst);
+}
+
+/// Dense-gather attention for one layer: gathers each lane's full dense
+/// cache (the cost being eliminated), then applies the shared law.
+/// Output layout matches [`AttnEngine::attend`](super::AttnEngine):
+/// `[lane, head, t, head_dim]`.
+pub fn attend_dense(
+    kv: &mut PagedKvCache,
+    layer: usize,
+    lanes: &[AttnLane],
+    out: &mut [f32],
+) -> AttnStats {
+    let g = kv.geo;
+    let (h, dh, s_max) = (g.n_heads, g.head_dim, g.max_seq);
+    assert!(layer < g.n_layers);
+    let t = validate(kv, lanes);
+    assert_eq!(out.len(), lanes.len() * h * t * dh, "out shape [B, H, t, Dh]");
+    let mut stats = AttnStats::default();
+    let (mut gk, mut gv) = (Vec::new(), Vec::new());
+    let mut acc = vec![0.0f32; dh];
+    for (li, lane) in lanes.iter().enumerate() {
+        kv.gather_seq(lane.seq, &mut gk, &mut gv);
+        // the oracle streams the dense slab it just built: per-layer
+        // share, same units as the engine's counters
+        stats.dense_bytes += g.layer_dense_bytes();
+        stats.touched_bytes += g.layer_dense_bytes();
+        for head in 0..h {
+            for ti in 0..t {
+                let q = &lane.q[(ti * h + head) * dh..(ti * h + head + 1) * dh];
+                let dst0 = ((li * h + head) * t + ti) * dh;
+                dense_query(
+                    &gk,
+                    &gv,
+                    s_max,
+                    h,
+                    dh,
+                    layer,
+                    head,
+                    q,
+                    lane.positions[ti] as usize,
+                    &mut acc,
+                    &mut out[dst0..dst0 + dh],
+                );
+            }
+        }
+    }
+    stats
+}
+
+/// Dense-gather attention for a whole step: **one** gather per lane
+/// serves all `n_layers` attention layers — the exact traffic shape of
+/// the pre-PR 5 `RealBackend::decode`. Output layout `[layer, lane,
+/// head, t, head_dim]` (the per-layer slices match `attend`).
+pub fn attend_dense_step(kv: &mut PagedKvCache, lanes: &[AttnLane], out: &mut [f32]) -> AttnStats {
+    let (mut gk, mut gv) = (Vec::new(), Vec::new());
+    attend_dense_step_with(kv, lanes, out, &mut gk, &mut gv)
+}
+
+/// [`attend_dense_step`] with caller-owned gather scratch. The bench's
+/// timed loop uses this so the dense arm — like the pre-PR 5 backend,
+/// which kept its gather buffers at high-water size — pays no per-step
+/// allocation, and the measured delta is the gather itself.
+pub fn attend_dense_step_with(
+    kv: &mut PagedKvCache,
+    lanes: &[AttnLane],
+    out: &mut [f32],
+    gk: &mut Vec<f32>,
+    gv: &mut Vec<f32>,
+) -> AttnStats {
+    let g = kv.geo;
+    let (l, h, dh, s_max) = (g.n_layers, g.n_heads, g.head_dim, g.max_seq);
+    let t = validate(kv, lanes);
+    let per_layer = lanes.len() * h * t * dh;
+    assert_eq!(out.len(), l * per_layer, "out shape [L, B, H, t, Dh]");
+    let mut stats = AttnStats::default();
+    let mut acc = vec![0.0f32; dh];
+    for (li, lane) in lanes.iter().enumerate() {
+        kv.gather_seq(lane.seq, gk, gv);
+        stats.dense_bytes += l * g.layer_dense_bytes();
+        stats.touched_bytes += l * g.layer_dense_bytes();
+        for layer in 0..l {
+            for head in 0..h {
+                for ti in 0..t {
+                    let q = &lane.q[(ti * h + head) * dh..(ti * h + head + 1) * dh];
+                    let dst0 = layer * per_layer + ((li * h + head) * t + ti) * dh;
+                    dense_query(
+                        gk,
+                        gv,
+                        s_max,
+                        h,
+                        dh,
+                        layer,
+                        head,
+                        q,
+                        lane.positions[ti] as usize,
+                        &mut acc,
+                        &mut out[dst0..dst0 + dh],
+                    );
+                }
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attn::testutil::{filled_cache, rand_q, test_geo as geo};
+    use crate::attn::AttnEngine;
+    use crate::kvcache::KvPressureConfig;
+    use crate::util::rng::Pcg64;
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn engine_is_bit_identical_to_the_oracle_f32() {
+        let g = geo();
+        let (mut kv, seqs) = filled_cache(g, &[11, 24], 61, KvPressureConfig::dense_baseline());
+        let (h, dh) = (g.n_heads, g.head_dim);
+        let mut rng = Pcg64::seeded(62);
+        // prefill-style: 3 queries per lane ending at the context tip
+        let t = 3usize;
+        let qs: Vec<Vec<f32>> = seqs.iter().map(|_| rand_q(&mut rng, t * h * dh)).collect();
+        let pos: Vec<Vec<i32>> = [11usize, 24]
+            .iter()
+            .map(|&len| (len - t..len).map(|p| p as i32).collect())
+            .collect();
+        let lanes: Vec<AttnLane> = seqs
+            .iter()
+            .zip(&qs)
+            .zip(&pos)
+            .map(|((&seq, q), p)| AttnLane {
+                seq,
+                q,
+                positions: p,
+            })
+            .collect();
+        let n = lanes.len() * h * t * dh;
+        for layer in 0..g.n_layers {
+            let mut blk = vec![0.0f32; n];
+            let mut dns = vec![0.0f32; n];
+            AttnEngine::new(3).attend(&kv, layer, &lanes, &mut blk);
+            attend_dense(&mut kv, layer, &lanes, &mut dns);
+            assert_bits(&blk, &dns, &format!("layer {layer}"));
+        }
+    }
+
+    #[test]
+    fn engine_is_bit_identical_to_the_oracle_with_fp8_blocks() {
+        let g = geo();
+        let policy = KvPressureConfig {
+            demote_watermark_fp8: 0.0,
+            ..KvPressureConfig::demote_only()
+        };
+        let (mut kv, seqs) = filled_cache(g, &[30, 19], 71, policy);
+        kv.set_precision_pressure(true);
+        assert!(kv.maintain() > 0, "mixed-precision tables need demotions");
+        let (h, dh) = (g.n_heads, g.head_dim);
+        let mut rng = Pcg64::seeded(72);
+        let qs: Vec<Vec<f32>> = seqs.iter().map(|_| rand_q(&mut rng, h * dh)).collect();
+        let pos = [[29i32], [18i32]];
+        let lanes: Vec<AttnLane> = seqs
+            .iter()
+            .zip(&qs)
+            .zip(pos.iter())
+            .map(|((&seq, q), p)| AttnLane {
+                seq,
+                q,
+                positions: p,
+            })
+            .collect();
+        let n = lanes.len() * h * dh;
+        for layer in 0..g.n_layers {
+            let mut blk = vec![0.0f32; n];
+            let mut dns = vec![0.0f32; n];
+            AttnEngine::new(2).attend(&kv, layer, &lanes, &mut blk);
+            attend_dense(&mut kv, layer, &lanes, &mut dns);
+            assert_bits(&blk, &dns, &format!("fp8 layer {layer}"));
+        }
+    }
+
+    #[test]
+    fn step_oracle_matches_per_layer_slices() {
+        let g = geo();
+        let (mut kv, seqs) = filled_cache(g, &[14], 81, KvPressureConfig::dense_baseline());
+        let (h, dh) = (g.n_heads, g.head_dim);
+        let mut rng = Pcg64::seeded(82);
+        let q = rand_q(&mut rng, h * dh);
+        let pos = [13i32];
+        let lanes = [AttnLane {
+            seq: seqs[0],
+            q: &q,
+            positions: &pos,
+        }];
+        let per = h * dh;
+        let mut step = vec![0.0f32; g.n_layers * per];
+        let st = attend_dense_step(&mut kv, &lanes, &mut step);
+        assert_eq!(st.dense_bytes, g.n_layers * g.layer_dense_bytes());
+        for layer in 0..g.n_layers {
+            let mut one = vec![0.0f32; per];
+            attend_dense(&mut kv, layer, &lanes, &mut one);
+            assert_bits(&one, &step[layer * per..(layer + 1) * per], "slice");
+        }
+    }
+}

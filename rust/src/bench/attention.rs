@@ -1,0 +1,315 @@
+//! Decode-attention microbench: dense-gather oracle vs block-native
+//! walk (`repro reproduce attention`).
+//!
+//! One "step" is what a decode iteration pays for attention: the dense
+//! arm gathers each lane's full `[L, H, max_seq, Dh]` cache once and
+//! attends every layer from the copy (the pre-PR 5 backend); the
+//! block-native arm walks the block tables per layer with fused FP8
+//! dequant and never materializes anything. Both arms execute the
+//! identical per-query law, so outputs are asserted bit-identical and
+//! every measured delta is gather overhead.
+//!
+//! The sweep crosses context length × batch × precision arm. The
+//! acceptance criterion (asserted in this module's tests and annotated
+//! in the report): block-native decode is strictly faster whenever
+//! `max_seq ≥ 4 ×` the mean context, with bit-identical logits.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::attn::oracle::attend_dense_step_with;
+use crate::attn::{AttnEngine, AttnLane, AttnStats};
+use crate::bench::report::Report;
+use crate::kvcache::{KvGeometry, KvPressureConfig, PagedKvCache};
+use crate::util::rng::Pcg64;
+
+/// One sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnCase {
+    /// Precision arm: "fp16" (all-f32 blocks), "mixed" (half demoted),
+    /// "fp8" (everything demotable demoted).
+    pub arm: &'static str,
+    pub batch: usize,
+    /// Mean live context length, tokens (lanes are ragged around it).
+    pub mean_len: usize,
+    pub max_seq: usize,
+    /// Timed repetitions.
+    pub reps: usize,
+}
+
+/// Measured outcome of one case.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnMeasure {
+    /// Seconds per step, dense-gather arm.
+    pub dense_s: f64,
+    /// Seconds per step, block-native arm.
+    pub block_s: f64,
+    pub stats: AttnStats,
+    pub bit_identical: bool,
+}
+
+impl AttnMeasure {
+    pub fn speedup(&self) -> f64 {
+        self.dense_s / self.block_s
+    }
+}
+
+fn bench_geo(max_seq: usize, batch: usize) -> KvGeometry {
+    KvGeometry {
+        n_layers: 4,
+        n_heads: 8,
+        max_seq,
+        head_dim: 32,
+        block_size: 16,
+        total_blocks: batch * (max_seq / 16 + 2) + 4,
+    }
+}
+
+/// Build a physical cache with `batch` ragged sequences around
+/// `mean_len`, demoted per `arm`. Returns the cache, the handles, and
+/// each live length.
+fn build_cache(case: &AttnCase, seed: u64) -> (PagedKvCache, Vec<usize>, Vec<usize>) {
+    let g = bench_geo(case.max_seq, case.batch);
+    let policy = match case.arm {
+        "fp16" => KvPressureConfig::dense_baseline(),
+        // mixed tables: demote everything cold but keep the recent half
+        // of the mean context f32 via a wide hot tail
+        "mixed" => KvPressureConfig {
+            demote_watermark_fp8: 0.0,
+            hot_tail_blocks: (case.mean_len / 32).max(1),
+            ..KvPressureConfig::demote_only()
+        },
+        _ => KvPressureConfig {
+            demote_watermark_fp8: 0.0,
+            ..KvPressureConfig::demote_only()
+        },
+    };
+    let mut kv = PagedKvCache::new(g, policy);
+    let mut rng = Pcg64::seeded(seed);
+    let mut seqs = Vec::new();
+    let mut lens = Vec::new();
+    for i in 0..case.batch {
+        // ragged: 0.5x .. 1.5x the mean, deterministic per lane
+        let jitter = (case.mean_len / 2).max(1);
+        let wobble = (rng.next_u64() % (2 * jitter as u64)) as usize + i % 2;
+        let len = (case.mean_len - jitter + wobble).clamp(1, g.max_seq);
+        let s = kv.allocate(len).expect("bench block budget");
+        let n = g.n_layers * len * g.n_heads * g.head_dim;
+        let nk: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.4).collect();
+        let nv: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.4).collect();
+        kv.scatter_prefill(s, 0, len, &nk, &nv);
+        kv.grow(s, len).unwrap();
+        seqs.push(s);
+        lens.push(len);
+    }
+    if case.arm != "fp16" {
+        kv.set_precision_pressure(true);
+        kv.maintain();
+    }
+    (kv, seqs, lens)
+}
+
+/// Run one case: time `reps` dense steps and `reps` block-native steps
+/// over identical state, and verify bit-identity of the outputs.
+pub fn measure(case: &AttnCase, seed: u64) -> AttnMeasure {
+    let (mut kv, seqs, lens) = build_cache(case, seed);
+    let g = kv.geo;
+    let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
+    let mut rng = Pcg64::seeded(seed ^ 0x5eed);
+    let qs: Vec<Vec<f32>> = seqs
+        .iter()
+        .map(|_| (0..h * dh).map(|_| rng.normal() as f32 * 0.3).collect())
+        .collect();
+    let positions: Vec<[i32; 1]> = lens.iter().map(|&len| [len as i32 - 1]).collect();
+    let lanes: Vec<AttnLane> = seqs
+        .iter()
+        .zip(&qs)
+        .zip(&positions)
+        .map(|((&seq, q), p)| AttnLane {
+            seq,
+            q,
+            positions: p,
+        })
+        .collect();
+    let per_layer = lanes.len() * h * dh;
+    let engine = AttnEngine::new(1); // single-threaded: measure the walk, not parallelism
+    let mut out_block = vec![0.0f32; l * per_layer];
+    let mut out_dense = vec![0.0f32; l * per_layer];
+
+    // gather scratch is hoisted like the pre-PR 5 backend's high-water
+    // buffers, so the dense arm pays no per-step allocation
+    let (mut gk, mut gv) = (Vec::new(), Vec::new());
+
+    // warmup once each (page in payloads, size scratch)
+    let mut stats = AttnStats::default();
+    for layer in 0..l {
+        stats.merge(engine.attend(
+            &kv,
+            layer,
+            &lanes,
+            &mut out_block[layer * per_layer..(layer + 1) * per_layer],
+        ));
+    }
+    attend_dense_step_with(&mut kv, &lanes, &mut out_dense, &mut gk, &mut gv);
+    let bit_identical = out_block
+        .iter()
+        .zip(&out_dense)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+
+    let t0 = Instant::now();
+    for _ in 0..case.reps {
+        for layer in 0..l {
+            engine.attend(
+                &kv,
+                layer,
+                &lanes,
+                &mut out_block[layer * per_layer..(layer + 1) * per_layer],
+            );
+        }
+    }
+    let block_s = t0.elapsed().as_secs_f64() / case.reps as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..case.reps {
+        attend_dense_step_with(&mut kv, &lanes, &mut out_dense, &mut gk, &mut gv);
+    }
+    let dense_s = t0.elapsed().as_secs_f64() / case.reps as f64;
+
+    AttnMeasure {
+        dense_s,
+        block_s,
+        stats,
+        bit_identical,
+    }
+}
+
+fn mb(bytes: usize) -> String {
+    format!("{:.2}", bytes as f64 / (1 << 20) as f64)
+}
+
+/// The `repro reproduce attention` sweep.
+pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
+    let (arms, batches, lens, max_seq, reps): (&[&'static str], &[usize], &[usize], usize, usize) =
+        if quick {
+            (&["fp16", "fp8"], &[4], &[64], 256, 6)
+        } else {
+            (&["fp16", "mixed", "fp8"], &[1, 4, 8], &[32, 64, 128], 512, 24)
+        };
+    let mut rep = Report::new(
+        "Attention — dense-gather oracle vs block-native paged walk (decode step, per-step times)",
+        &[
+            "arm",
+            "batch",
+            "mean_ctx",
+            "max_seq",
+            "dense_us",
+            "block_us",
+            "speedup",
+            "gathered_MB",
+            "touched_MB",
+            "bits",
+        ],
+    );
+    rep.note(
+        "one step = all layers' decode attention for the batch; dense arm gathers \
+         [L,H,max_seq,Dh] per lane first, block arm walks block tables with fused FP8 dequant",
+    );
+    rep.note(
+        "acceptance: speedup > 1 whenever max_seq >= 4x mean_ctx, outputs bit-identical \
+         (asserted in bench tests)",
+    );
+    let mut all_bits = true;
+    for &arm in arms {
+        for &batch in batches {
+            for &mean_len in lens {
+                let case = AttnCase {
+                    arm,
+                    batch,
+                    mean_len,
+                    max_seq,
+                    reps,
+                };
+                let m = measure(&case, 97);
+                all_bits &= m.bit_identical;
+                rep.row(vec![
+                    arm.into(),
+                    batch.to_string(),
+                    mean_len.to_string(),
+                    max_seq.to_string(),
+                    format!("{:.1}", m.dense_s * 1e6),
+                    format!("{:.1}", m.block_s * 1e6),
+                    format!("{:.2}x", m.speedup()),
+                    mb(m.stats.dense_bytes),
+                    mb(m.stats.touched_bytes),
+                    if m.bit_identical { "ok" } else { "DIFF" }.into(),
+                ]);
+            }
+        }
+    }
+    anyhow::ensure!(
+        all_bits,
+        "block-native attention diverged from the dense oracle"
+    );
+    Ok(vec![rep])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The PR's acceptance criterion: at `max_seq >= 4x` the mean
+    /// context, the block-native walk is strictly faster than the
+    /// dense-gather path, with bit-identical outputs.
+    #[test]
+    fn block_native_strictly_beats_dense_gather_at_4x_headroom() {
+        let case = AttnCase {
+            arm: "fp16",
+            batch: 4,
+            mean_len: 64, // max_seq = 8x mean: comfortably past the 4x bound
+            max_seq: 512,
+            reps: 12,
+        };
+        let m = measure(&case, 11);
+        assert!(m.bit_identical, "outputs must match the oracle bit for bit");
+        assert!(
+            m.speedup() > 1.0,
+            "block-native must be strictly faster: dense {:.1}us vs block {:.1}us",
+            m.dense_s * 1e6,
+            m.block_s * 1e6
+        );
+        assert!(
+            m.stats.touched_bytes < m.stats.dense_bytes,
+            "block walk must also touch fewer bytes"
+        );
+    }
+
+    #[test]
+    fn fp8_arm_touches_fewer_bytes_and_stays_bit_identical() {
+        let mk = |arm| AttnCase {
+            arm,
+            batch: 2,
+            mean_len: 64,
+            max_seq: 256,
+            reps: 2,
+        };
+        let f32_m = measure(&mk("fp16"), 13);
+        let fp8_m = measure(&mk("fp8"), 13);
+        assert!(f32_m.bit_identical && fp8_m.bit_identical);
+        assert!(
+            fp8_m.stats.touched_bytes < f32_m.stats.touched_bytes,
+            "demoted blocks must stream fewer bytes: {} !< {}",
+            fp8_m.stats.touched_bytes,
+            f32_m.stats.touched_bytes
+        );
+        assert_eq!(fp8_m.stats.dense_bytes, f32_m.stats.dense_bytes);
+    }
+
+    #[test]
+    fn quick_sweep_runs_and_asserts_bits() {
+        let reports = attention_sweep(true).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert!(!reports[0].rows.is_empty());
+        assert!(reports[0].rows.iter().all(|r| r[9] == "ok"));
+    }
+}

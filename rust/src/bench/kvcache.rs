@@ -103,11 +103,16 @@ pub fn kvcache_pressure() -> Result<Report> {
             "demoted_blocks",
             "offloads",
             "transfer_ms",
+            "kv_read_savings",
         ],
     );
     rep.note(format!(
         "{seconds}s at {base} req/s with a 6x surge; admitted_peak = peak concurrently resident requests"
     ));
+    rep.note(
+        "kv_read_savings = attention KV traffic avoided by the block-native walk vs the \
+         dense gather (PR 5): 1 - touched/gathered bytes",
+    );
     for (name, cfg) in variants() {
         let (mut r, st) = run_pressure(cfg, seconds, base, blocks)?;
         let ttft = r.metrics.ttft_summary();
@@ -123,6 +128,7 @@ pub fn kvcache_pressure() -> Result<Report> {
             st.demoted_blocks.to_string(),
             st.offload_events.to_string(),
             format!("{:.2}", st.transfer_seconds * 1e3),
+            format!("{:.1}%", r.metrics.attn_gather_savings() * 100.0),
         ]);
     }
     Ok(rep)

@@ -3,6 +3,7 @@
 //! paper reports (shape-level reproduction; see DESIGN.md §5).
 
 pub mod report;
+pub mod attention;
 pub mod autopilot;
 pub mod gemm;
 pub mod table1;

@@ -1,18 +1,22 @@
-//! Execution backends: real PJRT artifacts or the gpusim cost model.
+//! Execution backends: host-native NestedFP compute or the gpusim cost
+//! model.
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::attn::AttnEngine;
 use crate::format::nested::NestedTensor;
 use crate::format::tensor::Tensor2;
 use crate::gemm::{GemmEngine, GemmFormat, GemmWeights};
 use crate::gpusim::{self, StepKind, StepQuery, WeightFormat};
 use crate::model::zoo::ModelSpec;
-use crate::runtime::{HostTensor, ModelRuntime};
+use crate::runtime::ModelRuntime;
 
+use super::hostforward::{HostForward, StepLane};
 use super::kv::{KvCacheManager, KvGeometry};
 use super::precision::Precision;
 
 /// Result of one backend step.
+#[derive(Default)]
 pub struct StepRun {
     /// Flattened logits (`[V]` for prefill, `[B, V]` for decode); None
     /// for the simulation backend.
@@ -20,6 +24,12 @@ pub struct StepRun {
     /// Latency this step contributed, seconds (wall for real, modelled
     /// for sim).
     pub latency: f64,
+    /// Bytes a dense-gather attention path would have copied this step
+    /// (the pre-PR 5 `gather_seq`/`gather_batch` traffic).
+    pub attn_dense_bytes: usize,
+    /// KV bytes the block-native attention actually touched, at stored
+    /// precision. The engine mirrors both counters into `Metrics`.
+    pub attn_touched_bytes: usize,
 }
 
 /// A model-execution backend for the engine.
@@ -52,7 +62,7 @@ pub trait Backend {
 }
 
 // ---------------------------------------------------------------------------
-// Real backend: PJRT CPU execution of the AOT artifacts
+// Real backend: host-native NestedFP execution over the artifact store
 // ---------------------------------------------------------------------------
 
 /// Maps the controller's precision to artifact modes.
@@ -74,24 +84,30 @@ impl Default for ModeMap {
     }
 }
 
-/// Executes the compiled step functions; used by the e2e examples and the
-/// integration tests.
+/// Executes real model steps on the host — the e2e examples, the
+/// integration tests, and `repro serve`.
+///
+/// Since PR 5 the step functions run **host-natively**
+/// ([`HostForward`]): linear layers go through the fused NestedFP GEMM
+/// engine straight from the weight store, and attention walks the paged
+/// KV cache's block tables in place ([`crate::attn`]) — the dense
+/// `gather_seq`/`gather_batch` staging the AOT artifacts required is
+/// gone from the hot path (it survives as the test oracle,
+/// `attn::oracle`). The PJRT artifacts remain loadable for the
+/// artifact-parity integration tests (`rt.step` / `rt.run` under the
+/// `pjrt` feature), but serving no longer needs them, so this backend
+/// now works in every build where the artifact *files* exist.
 pub struct RealBackend {
     pub rt: ModelRuntime,
     pub modes: ModeMap,
-    /// Host compute engine over the same weight store the artifacts use.
-    /// `prefill`/`decode` run their linear layers inside the compiled
-    /// artifacts; [`RealBackend::native_gemm`] is the host twin of the
-    /// "gemm"-kind artifacts, and is what the examples and integration
-    /// tests pin the artifacts against (replacing the old reconstruct +
-    /// `Tensor2::matmul` reference path).
+    /// Host compute engine over the same weight store the artifacts
+    /// use; [`RealBackend::native_gemm`] exposes single layers for the
+    /// kernel tour and the artifact-parity tests.
     pub gemm: GemmEngine,
     geo: KvGeometry,
-    /// Reused dense-gather scratch (the AOT inputs are fixed-shape, so
-    /// these stay at their high-water size instead of reallocating per
-    /// step).
-    gather_k: Vec<f32>,
-    gather_v: Vec<f32>,
+    /// Lazily built host step executor (prepares per-mode weight
+    /// operands once, then serves every step).
+    host: Option<HostForward>,
 }
 
 impl RealBackend {
@@ -110,9 +126,23 @@ impl RealBackend {
             modes,
             gemm: GemmEngine::default(),
             geo,
-            gather_k: Vec::new(),
-            gather_v: Vec::new(),
+            host: None,
         }
+    }
+
+    /// Initialize the host step executor on first use. Split from the
+    /// call sites (which re-borrow `self.host` and `self.rt` as
+    /// disjoint fields) so the engine wiring lives in exactly one
+    /// place.
+    fn ensure_host(&mut self) -> Result<()> {
+        if self.host.is_none() {
+            self.host = Some(HostForward::with_engines(
+                &self.rt,
+                self.gemm.clone(),
+                AttnEngine::new(self.gemm.config().threads),
+            )?);
+        }
+        Ok(())
     }
 
     fn mode_str(&self, p: Precision) -> &'static str {
@@ -220,6 +250,10 @@ impl Backend for RealBackend {
         self.rt.manifest.decode_buckets.iter().copied().max().unwrap_or(1)
     }
 
+    /// One prompt chunk, host-native: the forward pass scatters each
+    /// layer's fresh K/V into the slot's blocks and attends over the
+    /// block table directly — the dense `[L, H, max_seq, Dh]` staging
+    /// the AOT path needed never materializes.
     fn prefill(
         &mut self,
         kv: &mut KvCacheManager,
@@ -229,36 +263,35 @@ impl Backend for RealBackend {
         precision: Precision,
     ) -> Result<StepRun> {
         let mode = self.mode_str(precision);
-        let chunk = tokens.len();
-        let step = self.rt.step("prefill", mode, chunk)?;
-        let g = self.geo;
-        // dense-gather the sequence through its block table (FP8 blocks
-        // dequantize on the fly) into the fixed AOT shape
-        kv.gather_seq(slot, &mut self.gather_k, &mut self.gather_v);
-        let dims = vec![g.n_layers, g.n_heads, g.max_seq, g.head_dim];
-        let ck = HostTensor::from_f32(dims.clone(), &self.gather_k);
-        let cv = HostTensor::from_f32(dims, &self.gather_v);
+        self.ensure_host()?;
+        let host = self.host.as_mut().expect("ensured above");
+        // weight-operand preparation happens outside the timed region:
+        // a precision-mode switch must not bill store decoding as step
+        // latency (it would spike TPOT into the SLO control loop)
+        host.prepare(&self.rt, mode)?;
+        let positions: Vec<i32> = (0..tokens.len()).map(|i| (start_pos + i) as i32).collect();
+        let lanes = [StepLane {
+            seq: slot,
+            tokens,
+            positions: &positions,
+        }];
         let t0 = std::time::Instant::now();
-        let out = self.rt.run(
-            step,
-            &[
-                HostTensor::from_i32(vec![chunk], tokens),
-                HostTensor::from_i32(vec![], &[start_pos as i32]),
-                ck,
-                cv,
-            ],
-        )?;
-        let latency = t0.elapsed().as_secs_f64();
-        let logits = out.tensors[0].as_f32()?;
-        let nk = out.tensors[1].as_f32()?;
-        let nv = out.tensors[2].as_f32()?;
-        kv.scatter_prefill(slot, start_pos, chunk, &nk, &nv);
+        let out = host.forward(&self.rt, kv, mode, &lanes)?;
         Ok(StepRun {
-            logits: Some(logits),
-            latency,
+            logits: Some(out.logits),
+            latency: t0.elapsed().as_secs_f64(),
+            attn_dense_bytes: out.attn.dense_bytes,
+            attn_touched_bytes: out.attn.touched_bytes,
         })
     }
 
+    /// One decode iteration, host-native and block-native. The batch is
+    /// exactly its real lanes: padding lanes are zero-length here (the
+    /// pre-PR 5 path padded to the artifact bucket and re-gathered slot
+    /// 0's entire cache per pad lane; a dense path that still needs
+    /// bucket shapes zero-fills instead, via
+    /// `PagedKvCache::gather_batch_padded`). An empty batch returns an
+    /// empty `StepRun` instead of panicking on `slots[0]`.
     fn decode(
         &mut self,
         kv: &mut KvCacheManager,
@@ -267,54 +300,36 @@ impl Backend for RealBackend {
         positions: &[i32],
         precision: Precision,
     ) -> Result<StepRun> {
-        let mode = self.mode_str(precision);
         let n = slots.len();
-        let bucket = self.rt.manifest.decode_bucket_for(n);
-        if n > bucket {
-            return Err(anyhow!("decode batch {n} exceeds largest bucket {bucket}"));
+        if n == 0 {
+            return Ok(StepRun {
+                logits: Some(Vec::new()),
+                ..StepRun::default()
+            });
         }
-        // pad the batch to the bucket: padding lanes reuse slot 0's cache
-        // geometry with token 0 / pos 0; their outputs are discarded
-        let mut pad_slots: Vec<usize> = slots.to_vec();
-        let mut pad_tokens: Vec<i32> = tokens.to_vec();
-        let mut pad_pos: Vec<i32> = positions.to_vec();
-        while pad_slots.len() < bucket {
-            pad_slots.push(slots[0]);
-            pad_tokens.push(0);
-            pad_pos.push(0);
+        let max_batch = self.max_decode_batch();
+        if n > max_batch {
+            return Err(anyhow!("decode batch {n} exceeds max batch {max_batch}"));
         }
-
-        let g = self.geo;
-        kv.gather_batch(&pad_slots, &mut self.gather_k, &mut self.gather_v);
-        let dims = vec![bucket, g.n_layers, g.n_heads, g.max_seq, g.head_dim];
-        let step = self.rt.step("decode", mode, bucket)?;
+        let mode = self.mode_str(precision);
+        self.ensure_host()?;
+        let host = self.host.as_mut().expect("ensured above");
+        // see prefill: mode preparation stays off the step timer
+        host.prepare(&self.rt, mode)?;
+        let lanes: Vec<StepLane> = (0..n)
+            .map(|i| StepLane {
+                seq: slots[i],
+                tokens: &tokens[i..i + 1],
+                positions: &positions[i..i + 1],
+            })
+            .collect();
         let t0 = std::time::Instant::now();
-        let out = self.rt.run(
-            step,
-            &[
-                HostTensor::from_i32(vec![bucket], &pad_tokens),
-                HostTensor::from_i32(vec![bucket], &pad_pos),
-                HostTensor::from_f32(dims.clone(), &self.gather_k),
-                HostTensor::from_f32(dims, &self.gather_v),
-            ],
-        )?;
-        let latency = t0.elapsed().as_secs_f64();
-        let logits_all = out.tensors[0].as_f32()?;
-        let nk = out.tensors[1].as_f32()?; // [B, L, H, Dh]
-        let nv = out.tensors[2].as_f32()?;
-        let vocab = logits_all.len() / bucket;
-        let per = g.n_layers * g.n_heads * g.head_dim;
-        for (i, &slot) in slots.iter().enumerate() {
-            kv.scatter_decode(
-                slot,
-                positions[i] as usize,
-                &nk[i * per..(i + 1) * per],
-                &nv[i * per..(i + 1) * per],
-            );
-        }
+        let out = host.forward(&self.rt, kv, mode, &lanes)?;
         Ok(StepRun {
-            logits: Some(logits_all[..n * vocab].to_vec()),
-            latency,
+            logits: Some(out.logits),
+            latency: t0.elapsed().as_secs_f64(),
+            attn_dense_bytes: out.attn.dense_bytes,
+            attn_touched_bytes: out.attn.touched_bytes,
         })
     }
 }
@@ -391,7 +406,6 @@ impl Backend for SimBackend {
         tokens: &[i32],
         precision: Precision,
     ) -> Result<StepRun> {
-        let _ = (kv.free_blocks(), slot); // accounting only
         let q = StepQuery {
             kind: StepKind::Prefill,
             m: tokens.len(),
@@ -400,9 +414,16 @@ impl Backend for SimBackend {
             format: self.fmt(precision),
             opt: gpusim::OptLevel::Level3,
         };
+        // attention-traffic accounting (the block tables are real even
+        // in the accounting-only cache): dense = one full gather, block
+        // = the covering blocks at stored precision, per layer
+        let g = self.geo;
+        let ctx = (start_pos + tokens.len()).min(g.max_seq);
         Ok(StepRun {
             logits: None,
             latency: gpusim::step_latency(self.spec, &q),
+            attn_dense_bytes: g.n_layers * g.layer_dense_bytes(),
+            attn_touched_bytes: g.n_layers * kv.seq_touched_bytes(slot, ctx),
         })
     }
 
@@ -414,7 +435,6 @@ impl Backend for SimBackend {
         positions: &[i32],
         precision: Precision,
     ) -> Result<StepRun> {
-        let _ = kv.free_blocks();
         let avg_ctx = (positions.iter().map(|&p| p as usize).sum::<usize>()
             / positions.len().max(1))
         .max(1);
@@ -426,9 +446,17 @@ impl Backend for SimBackend {
             format: self.fmt(precision),
             opt: gpusim::OptLevel::Level3,
         };
+        let g = self.geo;
+        let mut touched = 0usize;
+        for (&slot, &pos) in slots.iter().zip(positions) {
+            let ctx = (pos as usize + 1).min(g.max_seq);
+            touched += g.n_layers * kv.seq_touched_bytes(slot, ctx);
+        }
         Ok(StepRun {
             logits: None,
             latency: gpusim::step_latency(self.spec, &q),
+            attn_dense_bytes: slots.len() * g.n_layers * g.layer_dense_bytes(),
+            attn_touched_bytes: touched,
         })
     }
 }

@@ -563,6 +563,7 @@ mod tests {
             Ok(StepRun {
                 logits: None,
                 latency: self.latency,
+                ..StepRun::default()
             })
         }
         fn decode(
@@ -576,6 +577,7 @@ mod tests {
             Ok(StepRun {
                 logits: None,
                 latency: self.latency,
+                ..StepRun::default()
             })
         }
     }

@@ -512,7 +512,7 @@ impl<B: Backend> Engine<B> {
         id: u64,
         chunk: usize,
         precision: Precision,
-        _metrics: &mut Metrics,
+        metrics: &mut Metrics,
     ) -> Result<()> {
         // admit if needed
         let (slot, start_pos, tokens) = {
@@ -545,10 +545,16 @@ impl<B: Backend> Engine<B> {
             (r.slot.unwrap(), start, toks)
         };
 
-        let StepRun { logits, latency } =
-            self.backend
-                .prefill(&mut self.kv, slot, start_pos, &tokens, precision)?;
+        let StepRun {
+            logits,
+            latency,
+            attn_dense_bytes,
+            attn_touched_bytes,
+        } = self
+            .backend
+            .prefill(&mut self.kv, slot, start_pos, &tokens, precision)?;
         self.now += latency;
+        metrics.observe_attn(attn_dense_bytes, attn_touched_bytes);
 
         let r_done;
         {
@@ -602,10 +608,16 @@ impl<B: Backend> Engine<B> {
             positions.push(r.context_len() as i32 - 1);
         }
 
-        let StepRun { logits, latency } =
-            self.backend
-                .decode(&mut self.kv, &slots, &tokens, &positions, precision)?;
+        let StepRun {
+            logits,
+            latency,
+            attn_dense_bytes,
+            attn_touched_bytes,
+        } = self
+            .backend
+            .decode(&mut self.kv, &slots, &tokens, &positions, precision)?;
         self.now += latency;
+        metrics.observe_attn(attn_dense_bytes, attn_touched_bytes);
         // true per-sequence TPOT: gap since that sequence's previous token
         // (includes time spent waiting on other iterations)
         let gaps: Vec<f64> = ids
@@ -745,6 +757,7 @@ mod tests {
             Ok(StepRun {
                 logits: Some(self.logits_for(1)),
                 latency: self.latency,
+                ..StepRun::default()
             })
         }
         fn decode(
@@ -759,6 +772,7 @@ mod tests {
             Ok(StepRun {
                 logits: Some(self.logits_for(slots.len())),
                 latency: self.latency,
+                ..StepRun::default()
             })
         }
     }

@@ -1,0 +1,539 @@
+//! Host-native execution of the model step functions — the CPU twin of
+//! the AOT prefill/decode artifacts, built on the fused GEMM engine and
+//! **block-native paged attention**.
+//!
+//! PR 3 gave the host a real compute path for single GEMMs
+//! (`RealBackend::native_gemm`); this module completes the twin: the
+//! whole decoder step (embed → per-layer RMSNorm / QKV / RoPE /
+//! attention / SwiGLU → final norm → LM head) runs on the host, with
+//! every linear layer served straight from the NestedFP weight store by
+//! [`GemmEngine`] and every attention layer consuming the paged KV
+//! cache **in place** via [`AttnEngine`]. Nothing dense-gathers: each
+//! layer's fresh K/V rows are scattered into their blocks
+//! (`PagedKvCache::scatter_rows`) and the block walk reads them
+//! back together with the (possibly FP8-demoted) past.
+//!
+//! Numerics mirror `python/compile/model.py` step functions: f32
+//! accumulation with activations rounded to FP16 at the same points the
+//! JAX model casts (`attn_in`, `ctx`, `mlp_in`, `act`, the LM-head
+//! input), RoPE/RMSNorm in f32, and — in `nested8` mode — the paper's
+//! static per-tensor activation fake-quant with the manifest's
+//! calibrated scales. Exception layers (manifest `exception_layers`)
+//! fall back to their FP16 plane in every mode, per §4.2. The host twin
+//! does not promise bit-equality with the XLA-compiled artifacts (op
+//! fusion differs); it promises the same *model* — and, unlike the
+//! artifacts, it runs in every build, `pjrt` or not.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::attn::{AttnEngine, AttnLane, AttnStats};
+use crate::format::e4m3;
+use crate::format::fp16::F16;
+use crate::format::nested::NestedTensor;
+use crate::format::tensor::Tensor2;
+use crate::gemm::{GemmEngine, GemmFormat, GemmWeights};
+use crate::runtime::ModelRuntime;
+
+use super::kv::KvCacheManager;
+
+/// RMSNorm epsilon — fixed by `python/compile/model.py::ModelConfig`
+/// (the manifest does not carry it).
+const NORM_EPS: f32 = 1e-5;
+/// RoPE base, likewise fixed by the trainer's `ModelConfig`.
+const ROPE_THETA: f32 = 10000.0;
+
+/// One sequence's slice of a step: `tokens[i]` sits at absolute context
+/// position `positions[i]` (contiguous, ascending). All lanes of one
+/// forward call carry the same token count — 1 for decode, the chunk
+/// length for prefill.
+pub struct StepLane<'a> {
+    /// Paged-cache sequence handle.
+    pub seq: usize,
+    pub tokens: &'a [i32],
+    pub positions: &'a [i32],
+}
+
+/// Result of one host-native step.
+pub struct ForwardOut {
+    /// Logits of each lane's **last** token, `[n_lanes, vocab]`
+    /// flattened (matching the artifacts: prefill returns the chunk's
+    /// final-position logits, decode one row per lane).
+    pub logits: Vec<f32>,
+    /// Attention traffic accounting, summed over layers.
+    pub attn: AttnStats,
+}
+
+struct Linear {
+    w: GemmWeights,
+    fmt: GemmFormat,
+    /// `Some(s)` on the FP8 path: activations are fake-quantized as
+    /// `dequant(quant(x * s)) / s` with the calibrated static scale.
+    act_scale: Option<f32>,
+}
+
+struct ModeLayer {
+    wq: Linear,
+    wk: Linear,
+    wv: Linear,
+    wo: Linear,
+    w_gate: Linear,
+    w_up: Linear,
+    w_down: Linear,
+}
+
+/// The host step executor. Construction decodes the mode-independent
+/// tensors (embeddings, norms, LM head) once; per-mode linear stores
+/// are prepared on first use ([`Self::prepare`]) and cached for the
+/// executor's lifetime. Each prepared mode holds its own copy of the
+/// linear-layer planes (mirroring `RealBackend::store_weights`) — at
+/// this model scale that is kilobytes; borrowed store views are the
+/// upgrade path if a full-size checkpoint ever runs through here.
+pub struct HostForward {
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    embed: Vec<f32>,
+    final_norm: Vec<f32>,
+    norms: Vec<(Vec<f32>, Vec<f32>)>,
+    lm_head: GemmWeights,
+    modes: BTreeMap<String, Vec<ModeLayer>>,
+    gemm: GemmEngine,
+    attn: AttnEngine,
+}
+
+impl HostForward {
+    /// Build with default (single-threaded) compute engines.
+    pub fn new(rt: &ModelRuntime) -> Result<HostForward> {
+        Self::with_engines(rt, GemmEngine::default(), AttnEngine::default())
+    }
+
+    /// Build with explicit compute engines — how the backend plumbs its
+    /// public `gemm` configuration (and a matching attention worker
+    /// budget) into the serving path.
+    pub fn with_engines(
+        rt: &ModelRuntime,
+        gemm: GemmEngine,
+        attn: AttnEngine,
+    ) -> Result<HostForward> {
+        let m = &rt.manifest.model;
+        if m.d_model != m.n_heads * m.head_dim {
+            bail!(
+                "manifest model: d_model {} != n_heads {} * head_dim {}",
+                m.d_model,
+                m.n_heads,
+                m.head_dim
+            );
+        }
+        let embed_t = rt.weights.get("embed")?;
+        if embed_t.dims != vec![m.vocab, m.d_model] {
+            bail!("embed: dims {:?}, expected [{}, {}]", embed_t.dims, m.vocab, m.d_model);
+        }
+        let embed = f16_bits_to_f32(&embed_t.as_u16()?);
+        let final_norm = rt.weights.get("final_norm")?.as_f32()?;
+        let lm_t = rt.weights.get("lm_head")?;
+        if lm_t.dims != vec![m.vocab, m.d_model] {
+            bail!("lm_head: dims {:?}, expected [{}, {}]", lm_t.dims, m.vocab, m.d_model);
+        }
+        let lm_head = GemmWeights::F16 {
+            rows: m.vocab,
+            cols: m.d_model,
+            bits: lm_t.as_u16()?,
+        };
+        let mut norms = Vec::with_capacity(m.n_layers);
+        for i in 0..m.n_layers {
+            norms.push((
+                rt.weights.get(&format!("layers.{i}.attn_norm"))?.as_f32()?,
+                rt.weights.get(&format!("layers.{i}.mlp_norm"))?.as_f32()?,
+            ));
+        }
+        Ok(HostForward {
+            vocab: m.vocab,
+            d_model: m.d_model,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            head_dim: m.head_dim,
+            embed,
+            final_norm,
+            norms,
+            lm_head,
+            modes: BTreeMap::new(),
+            gemm,
+            attn,
+        })
+    }
+
+    /// Prepare (and cache) one mode's linear operands. `forward` calls
+    /// this itself; backends call it *before* starting their step timer
+    /// so a precision-mode switch never bills weight decoding as step
+    /// latency.
+    pub fn prepare(&mut self, rt: &ModelRuntime, mode: &str) -> Result<()> {
+        self.prepare_mode(rt, mode)
+    }
+
+    /// Assemble one linear layer's stored operand for `mode`, honoring
+    /// the manifest's exception list (those layers stay FP16 in every
+    /// mode, §4.2).
+    fn load_linear(&self, rt: &ModelRuntime, mode: &str, i: usize, name: &str) -> Result<Linear> {
+        let key = format!("layers.{i}.{name}");
+        let exception = rt.manifest.exception_layers.iter().any(|e| e == &key);
+        let use_mode = if exception { "fp16" } else { mode };
+        let (w, fmt) = match use_mode {
+            "fp16" => {
+                let t = rt.weights.get(&format!("{key}.f16"))?;
+                if t.dims.len() != 2 {
+                    bail!("{key}.f16: expected [N,K], got {:?}", t.dims);
+                }
+                (
+                    GemmWeights::F16 {
+                        rows: t.dims[0],
+                        cols: t.dims[1],
+                        bits: t.as_u16()?,
+                    },
+                    GemmFormat::Fp16,
+                )
+            }
+            // the paper's FP8 *baseline*: per-channel absmax weight
+            // fake-quant baked offline into the fq16 plane (plain f16
+            // GEMM numerics) + the same static activation quant
+            "fp8base" => {
+                let t = rt.weights.get(&format!("{key}.fq16"))?;
+                if t.dims.len() != 2 {
+                    bail!("{key}.fq16: expected [N,K], got {:?}", t.dims);
+                }
+                (
+                    GemmWeights::F16 {
+                        rows: t.dims[0],
+                        cols: t.dims[1],
+                        bits: t.as_u16()?,
+                    },
+                    GemmFormat::Fp16,
+                )
+            }
+            "nested16" | "nested8" => {
+                let upper = rt.weights.get(&format!("{key}.upper"))?;
+                if upper.dims.len() != 2 {
+                    bail!("{key}.upper: expected [N,K], got {:?}", upper.dims);
+                }
+                // the memory story holds here too: the lower plane is
+                // only fetched in nested16 mode
+                let lower = if use_mode == "nested16" {
+                    rt.weights.get(&format!("{key}.lower"))?.bytes.clone()
+                } else {
+                    Vec::new()
+                };
+                let t = NestedTensor {
+                    rows: upper.dims[0],
+                    cols: upper.dims[1],
+                    upper: upper.bytes.clone(),
+                    lower,
+                    fully_eligible: true,
+                };
+                let fmt = if use_mode == "nested16" {
+                    GemmFormat::Nested16
+                } else {
+                    GemmFormat::Nested8
+                };
+                (GemmWeights::Nested(t), fmt)
+            }
+            other => bail!("host forward: unknown mode '{other}'"),
+        };
+        // both FP8 paths quantize activations with the calibrated
+        // static per-tensor scale; exception layers (use_mode "fp16")
+        // skip it like the python model does. A key missing from
+        // act_scales falls back to 1.0 — the same default model.py's
+        // `scale_of` uses (`act_scales.get(name, 1.0)`), so partial
+        // calibrations degrade identically on both sides.
+        let act_scale = if fmt == GemmFormat::Nested8 || use_mode == "fp8base" {
+            Some(*rt.manifest.act_scales.get(&key).unwrap_or(&1.0) as f32)
+        } else {
+            None
+        };
+        Ok(Linear { w, fmt, act_scale })
+    }
+
+    fn prepare_mode(&mut self, rt: &ModelRuntime, mode: &str) -> Result<()> {
+        if self.modes.contains_key(mode) {
+            return Ok(());
+        }
+        let mut layers = Vec::with_capacity(self.n_layers);
+        for i in 0..self.n_layers {
+            layers.push(ModeLayer {
+                wq: self.load_linear(rt, mode, i, "wq")?,
+                wk: self.load_linear(rt, mode, i, "wk")?,
+                wv: self.load_linear(rt, mode, i, "wv")?,
+                wo: self.load_linear(rt, mode, i, "wo")?,
+                w_gate: self.load_linear(rt, mode, i, "w_gate")?,
+                w_up: self.load_linear(rt, mode, i, "w_up")?,
+                w_down: self.load_linear(rt, mode, i, "w_down")?,
+            });
+        }
+        self.modes.insert(mode.to_string(), layers);
+        Ok(())
+    }
+
+    /// Execute one step over `lanes` under artifact mode `mode`
+    /// ("fp16" | "nested16" | "nested8" | "fp8base"). Scatters each
+    /// layer's fresh
+    /// K/V into the paged cache, attends block-natively, and returns
+    /// the last-token logits per lane. An empty batch is a no-op.
+    pub fn forward(
+        &mut self,
+        rt: &ModelRuntime,
+        kv: &mut KvCacheManager,
+        mode: &str,
+        lanes: &[StepLane],
+    ) -> Result<ForwardOut> {
+        self.prepare_mode(rt, mode)?;
+        self.forward_prepared(kv, mode, lanes)
+    }
+
+    fn forward_prepared(
+        &self,
+        kv: &mut KvCacheManager,
+        mode: &str,
+        lanes: &[StepLane],
+    ) -> Result<ForwardOut> {
+        let layers = self.modes.get(mode).expect("mode prepared");
+        let (h, dh, d) = (self.n_heads, self.head_dim, self.d_model);
+        if lanes.is_empty() {
+            return Ok(ForwardOut {
+                logits: Vec::new(),
+                attn: AttnStats::default(),
+            });
+        }
+        let t = lanes[0].tokens.len();
+        if t == 0 {
+            bail!("host forward: zero-token lanes");
+        }
+        for lane in lanes {
+            if lane.tokens.len() != t || lane.positions.len() != t {
+                bail!("host forward: lanes must share one token count");
+            }
+            for w in lane.positions.windows(2) {
+                if w[1] != w[0] + 1 {
+                    bail!("host forward: lane positions must be contiguous");
+                }
+            }
+        }
+        let n = lanes.len();
+        let mtot = n * t;
+
+        // ---- embeddings ------------------------------------------------
+        let mut x = Tensor2::zeros(mtot, d);
+        for (li, lane) in lanes.iter().enumerate() {
+            for (ti, &tok) in lane.tokens.iter().enumerate() {
+                if tok < 0 || tok as usize >= self.vocab {
+                    bail!("token {tok} outside vocab {}", self.vocab);
+                }
+                let src = tok as usize * d;
+                let dst = (li * t + ti) * d;
+                x.data[dst..dst + d].copy_from_slice(&self.embed[src..src + d]);
+            }
+        }
+
+        let mut stats = AttnStats::default();
+        let mut ctx_hm = vec![0.0f32; n * h * t * dh];
+        for (i, layer) in layers.iter().enumerate() {
+            let (attn_norm, mlp_norm) = &self.norms[i];
+
+            // -- attention sublayer --
+            let mut attn_in = x.clone();
+            rms_norm_rows(&mut attn_in, attn_norm);
+            round_f16(&mut attn_in.data);
+            let mut q = self.run_linear(&attn_in, &layer.wq);
+            let mut k = self.run_linear(&attn_in, &layer.wk);
+            let v = self.run_linear(&attn_in, &layer.wv);
+            for (li, lane) in lanes.iter().enumerate() {
+                for (ti, &pos) in lane.positions.iter().enumerate() {
+                    let row = (li * t + ti) * d;
+                    rope_row(&mut q.data[row..row + d], h, dh, pos as f32);
+                    rope_row(&mut k.data[row..row + d], h, dh, pos as f32);
+                }
+            }
+            // write this layer's fresh K/V into their blocks, then walk
+            // the block table — queries at position p read 0..=p with
+            // the step's own tokens already resident; no dense staging
+            for (li, lane) in lanes.iter().enumerate() {
+                let row0 = li * t * d;
+                kv.scatter_rows(
+                    lane.seq,
+                    i,
+                    lane.positions[0] as usize,
+                    t,
+                    &k.data[row0..row0 + t * d],
+                    &v.data[row0..row0 + t * d],
+                );
+            }
+            let attn_lanes: Vec<AttnLane> = lanes
+                .iter()
+                .enumerate()
+                .map(|(li, lane)| AttnLane {
+                    seq: lane.seq,
+                    q: &q.data[li * t * d..(li + 1) * t * d],
+                    positions: lane.positions,
+                })
+                .collect();
+            stats.merge(self.attn.attend(kv, i, &attn_lanes, &mut ctx_hm));
+            // [lane, H, T, Dh] -> token rows [M, D]
+            let mut ctx = Tensor2::zeros(mtot, d);
+            for li in 0..n {
+                for head in 0..h {
+                    for ti in 0..t {
+                        let src = ((li * h + head) * t + ti) * dh;
+                        let dst = (li * t + ti) * d + head * dh;
+                        ctx.data[dst..dst + dh].copy_from_slice(&ctx_hm[src..src + dh]);
+                    }
+                }
+            }
+            round_f16(&mut ctx.data);
+            let attn_out = self.run_linear(&ctx, &layer.wo);
+            add_assign(&mut x.data, &attn_out.data);
+
+            // -- MLP sublayer (SwiGLU) --
+            let mut mlp_in = x.clone();
+            rms_norm_rows(&mut mlp_in, mlp_norm);
+            round_f16(&mut mlp_in.data);
+            let gate = self.run_linear(&mlp_in, &layer.w_gate);
+            let up = self.run_linear(&mlp_in, &layer.w_up);
+            let mut act = gate;
+            for (a, &u) in act.data.iter_mut().zip(&up.data) {
+                let g = *a;
+                *a = g / (1.0 + (-g).exp()) * u; // silu(g) * u
+            }
+            round_f16(&mut act.data);
+            let down = self.run_linear(&act, &layer.w_down);
+            add_assign(&mut x.data, &down.data);
+        }
+
+        // ---- final norm + LM head on each lane's last token ------------
+        let mut last = Tensor2::zeros(n, d);
+        for li in 0..n {
+            let row = (li * t + t - 1) * d;
+            last.data[li * d..(li + 1) * d].copy_from_slice(&x.data[row..row + d]);
+        }
+        rms_norm_rows(&mut last, &self.final_norm);
+        round_f16(&mut last.data);
+        let logits = self.gemm.matmul(&last, &self.lm_head, GemmFormat::Fp16);
+        Ok(ForwardOut {
+            logits: logits.data,
+            attn: stats,
+        })
+    }
+
+    fn run_linear(&self, x: &Tensor2, lin: &Linear) -> Tensor2 {
+        match lin.act_scale {
+            Some(s) => {
+                // FP8 path: static per-tensor activation fake-quant at
+                // the calibrated scale (model.py `linear`, nested8 arm)
+                let mut xq = x.clone();
+                for v in xq.data.iter_mut() {
+                    *v = e4m3::decode(e4m3::encode_sat(*v * s)) / s;
+                }
+                self.gemm.matmul(&xq, &lin.w, lin.fmt)
+            }
+            None => self.gemm.matmul(x, &lin.w, lin.fmt),
+        }
+    }
+}
+
+fn f16_bits_to_f32(bits: &[u16]) -> Vec<f32> {
+    bits.iter().map(|&b| F16::from_bits(b).to_f32()).collect()
+}
+
+fn round_f16(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = F16::from_f32(*v).to_f32();
+    }
+}
+
+fn add_assign(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Row-wise RMSNorm with a learned scale (model.py `rms_norm`).
+fn rms_norm_rows(x: &mut Tensor2, scale: &[f32]) {
+    let d = x.cols;
+    debug_assert_eq!(scale.len(), d);
+    for r in 0..x.rows {
+        let row = &mut x.data[r * d..(r + 1) * d];
+        let mut ss = 0.0f32;
+        for &v in row.iter() {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d as f32 + NORM_EPS).sqrt();
+        for (v, &g) in row.iter_mut().zip(scale) {
+            *v = *v * inv * g;
+        }
+    }
+}
+
+/// Rotary embedding of one `[H * Dh]` row at absolute position `pos`
+/// (model.py `rope`: split-half rotation, `freq_j = theta^(-j/half)`).
+fn rope_row(row: &mut [f32], h: usize, dh: usize, pos: f32) {
+    let half = dh / 2;
+    let log_theta = ROPE_THETA.ln();
+    // the rotation angles depend only on j — compute them once per row
+    // (mirroring model.py, which builds `freqs` once per rope() call),
+    // not once per head
+    let mut rot = vec![0.0f32; 2 * half]; // (sin, cos) pairs
+    for j in 0..half {
+        let freq = (-(j as f32) * (log_theta / half as f32)).exp();
+        let (sin, cos) = (pos * freq).sin_cos();
+        rot[2 * j] = sin;
+        rot[2 * j + 1] = cos;
+    }
+    for hi in 0..h {
+        let base = hi * dh;
+        for j in 0..half {
+            let (sin, cos) = (rot[2 * j], rot[2 * j + 1]);
+            let a = row[base + j];
+            let b = row[base + half + j];
+            row[base + j] = a * cos - b * sin;
+            row[base + half + j] = a * sin + b * cos;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut row = vec![0.5f32, -1.0, 2.0, 0.25];
+        let want = row.clone();
+        rope_row(&mut row, 1, 4, 0.0);
+        for (a, b) in row.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_depends_on_position() {
+        let mut a = vec![0.3f32, 0.7, -0.2, 1.1, 0.9, -0.4, 0.0, 0.6];
+        let norm0: f32 = a.iter().map(|x| x * x).sum();
+        let b0 = a.clone();
+        rope_row(&mut a, 2, 4, 7.0);
+        let norm1: f32 = a.iter().map(|x| x * x).sum();
+        assert!((norm0 - norm1).abs() < 1e-4, "rotation preserves norm");
+        assert!(a.iter().zip(&b0).any(|(x, y)| (x - y).abs() > 1e-6));
+    }
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        // a row of equal values normalizes to ~the scale vector
+        let mut x = Tensor2::from_vec(1, 4, vec![3.0; 4]);
+        rms_norm_rows(&mut x, &[1.0, 2.0, 0.5, 1.0]);
+        let want = [1.0f32, 2.0, 0.5, 1.0];
+        for (a, b) in x.data.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+}

@@ -52,6 +52,15 @@ pub struct Metrics {
     pub mode_dwell_s: [f64; 3],
     /// Directive switches (one ladder rung each). Summed over merge.
     pub mode_switches: usize,
+    // ---- attention-traffic counters (mirrored from StepRun) ----
+    /// Cumulative bytes a dense-gather attention path would have copied
+    /// (the pre-PR 5 `gather_seq`/`gather_batch` traffic). Summed over
+    /// merge.
+    pub attn_dense_bytes: usize,
+    /// Cumulative KV bytes the block-native attention actually touched,
+    /// at stored precision (FP8 blocks count roughly half). Summed over
+    /// merge.
+    pub attn_touched_bytes: usize,
 }
 
 impl Metrics {
@@ -158,6 +167,23 @@ impl Metrics {
         self.slo_attained(slo) as f64 / span
     }
 
+    /// Accumulate one step's attention-traffic counters (from
+    /// `StepRun`): dense-equivalent gathered bytes vs. block bytes
+    /// actually touched.
+    pub fn observe_attn(&mut self, dense_bytes: usize, touched_bytes: usize) {
+        self.attn_dense_bytes += dense_bytes;
+        self.attn_touched_bytes += touched_bytes;
+    }
+
+    /// Fraction of the dense gather's KV traffic the block-native
+    /// attention avoided over the run (0 when nothing was recorded).
+    pub fn attn_gather_savings(&self) -> f64 {
+        if self.attn_dense_bytes == 0 {
+            return 0.0;
+        }
+        1.0 - self.attn_touched_bytes as f64 / self.attn_dense_bytes as f64
+    }
+
     /// Mirror the autopilot's per-replica dwell/switch accounting (see
     /// `coordinator::autopilot::ModeStats`; passed as plain values to
     /// keep this module's dependencies one-directional).
@@ -197,6 +223,8 @@ impl Metrics {
             *d += o;
         }
         self.mode_switches += other.mode_switches;
+        self.attn_dense_bytes += other.attn_dense_bytes;
+        self.attn_touched_bytes += other.attn_touched_bytes;
         let mut by_sec: BTreeMap<u64, f64> = self.tpot_by_second.iter().cloned().collect();
         for &(sec, worst) in &other.tpot_by_second {
             let w = by_sec.entry(sec).or_insert(0.0);
@@ -343,6 +371,25 @@ mod tests {
         m.merge(&b);
         assert_eq!(m.mode_dwell_s, [12.0, 4.5, 8.5]);
         assert_eq!(m.mode_switches, 8);
+    }
+
+    #[test]
+    fn attn_counters_accumulate_and_merge() {
+        let mut a = Metrics::new();
+        a.observe_attn(1000, 250);
+        a.observe_attn(1000, 150);
+        assert_eq!(a.attn_dense_bytes, 2000);
+        assert_eq!(a.attn_touched_bytes, 400);
+        assert!((a.attn_gather_savings() - 0.8).abs() < 1e-12);
+        let mut b = Metrics::new();
+        b.observe_attn(2000, 2000); // a replica with no headroom
+        let mut m = Metrics::new();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.attn_dense_bytes, 4000);
+        assert_eq!(m.attn_touched_bytes, 2400);
+        assert!((m.attn_gather_savings() - 0.4).abs() < 1e-12);
+        assert_eq!(Metrics::new().attn_gather_savings(), 0.0);
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //! the same NestedFP weight store.
 //!
 //! The engine is generic over a [`backend::Backend`]:
-//! * [`backend::RealBackend`] — executes the AOT artifacts on the PJRT
-//!   CPU client (real logits, greedy decoding; the e2e example).
+//! * [`backend::RealBackend`] — executes real model steps host-natively
+//!   ([`hostforward`]): fused NestedFP GEMMs over the artifact weight
+//!   store plus block-native paged attention ([`crate::attn`]) — real
+//!   logits, greedy decoding, no dense KV gather, no PJRT required.
 //! * [`backend::SimBackend`] — costs each iteration with the `gpusim`
 //!   H100 model and advances a virtual clock (the performance figures).
 //!
@@ -29,6 +31,7 @@ pub mod kv;
 pub mod scheduler;
 pub mod precision;
 pub mod metrics;
+pub mod hostforward;
 pub mod backend;
 pub mod engine;
 pub mod router;

@@ -44,7 +44,7 @@ pub mod policy;
 pub use block::{BlockId, BlockPrecision};
 pub use codec::{decode_block, encode_block};
 pub use offload::HostTier;
-pub use paged::{KvCacheStats, PagedKvCache};
+pub use paged::{BlockKv, KvCacheStats, PagedKvCache};
 pub use policy::{AdmissionMode, KvPressureConfig};
 
 /// Geometry of the cache (formerly `coordinator::kv::KvGeometry`; the
@@ -86,6 +86,15 @@ impl KvGeometry {
     pub fn blocks_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_size)
     }
+
+    /// Bytes the dense gather materializes **per layer** per sequence
+    /// (K + V, f32): the per-layer share of [`Self::slot_elems`]. This
+    /// is what one layer of gather-based attention pays regardless of
+    /// the live context — the quantity the block-native engine's
+    /// `touched_bytes` is measured against.
+    pub fn layer_dense_bytes(&self) -> usize {
+        self.n_heads * self.max_seq * self.head_dim * 4 * 2
+    }
 }
 
 #[cfg(test)]
@@ -109,5 +118,6 @@ mod tests {
         assert_eq!(g.blocks_for(1), 1);
         assert_eq!(g.blocks_for(16), 1);
         assert_eq!(g.blocks_for(17), 2);
+        assert_eq!(g.layer_dense_bytes() * g.n_layers, g.slot_elems() * 4 * 2);
     }
 }

@@ -41,6 +41,26 @@ pub struct KvCacheStats {
     pub peak_utilization: f64,
 }
 
+/// Borrowed view of one block's stored K/V payload — what the
+/// block-native attention engine ([`crate::attn`]) reads in place,
+/// fusing FP8 dequantization into the block load instead of gathering.
+pub enum BlockKv<'a> {
+    /// Accounting-only pool (or released block): no payload; readers
+    /// treat the contents as zeros, exactly like the dense gather does.
+    Acct,
+    /// Full-precision payload, plane layout `[L, H, block_size, Dh]`.
+    F32 { k: &'a [f32], v: &'a [f32] },
+    /// FP8-demoted payload: one E4M3 byte per element plus the
+    /// per-block absmax scale per plane (`value = decode(byte) * scale`,
+    /// the [`codec`] law).
+    Fp8 {
+        k: &'a [u8],
+        v: &'a [u8],
+        scale_k: f32,
+        scale_v: f32,
+    },
+}
+
 struct Seq {
     table: Vec<BlockId>,
     /// Valid context length, tokens.
@@ -171,6 +191,64 @@ impl PagedKvCache {
 
     pub fn is_offloaded(&self, seq: usize) -> bool {
         self.seq(seq).offloaded
+    }
+
+    /// Borrow block `bi` of `seq`'s table for an in-place read. Panics
+    /// on host-resident blocks — offloaded sequences are never
+    /// scheduled, the same contract [`Self::gather_seq`] asserts.
+    pub fn seq_block_kv(&self, seq: usize, bi: usize) -> BlockKv<'_> {
+        let id = self.seq(seq).table[bi];
+        let b = &self.pool.blocks[id as usize];
+        assert!(
+            !b.on_host,
+            "block-native read of host block (seq {seq}, block {bi})"
+        );
+        match &b.payload {
+            super::block::BlockPayload::Acct => BlockKv::Acct,
+            super::block::BlockPayload::F32 { k, v } => BlockKv::F32 { k, v },
+            super::block::BlockPayload::Fp8 {
+                k,
+                v,
+                scale_k,
+                scale_v,
+            } => BlockKv::Fp8 {
+                k,
+                v,
+                scale_k: *scale_k,
+                scale_v: *scale_v,
+            },
+        }
+    }
+
+    /// Bump `seq`'s LRU stamp for a block-native read. Gathers and
+    /// scatters touch implicitly; in-place readers borrow `&self` (they
+    /// run under the fork-join pool) and call this beforehand instead.
+    pub fn touch_read(&mut self, seq: usize) {
+        self.touch(seq);
+    }
+
+    /// KV bytes one attention layer's block walk streams for the first
+    /// `tokens` positions of `seq`: the per-layer share of the covering
+    /// blocks' K+V bytes at their **stored** precision (an FP8 block
+    /// counts roughly half an f32 block). A full step over all layers
+    /// touches `n_layers ×` this; compare
+    /// [`KvGeometry::layer_dense_bytes`](super::KvGeometry::layer_dense_bytes),
+    /// the dense gather's per-layer cost, which scales with `max_seq`
+    /// instead of the live context.
+    pub fn seq_touched_bytes(&self, seq: usize, tokens: usize) -> usize {
+        let g = self.geo;
+        let per_layer = g.block_size * g.n_heads * g.head_dim;
+        let s = self.seq(seq);
+        let n = g.blocks_for(tokens).min(s.table.len());
+        let mut bytes = 0usize;
+        for &id in &s.table[..n] {
+            bytes += match self.pool.blocks[id as usize].precision {
+                BlockPrecision::F32 => per_layer * 4 * 2,
+                // two u8 planes + the two f32 scales
+                BlockPrecision::Fp8 => per_layer * 2 + 8,
+            };
+        }
+        bytes
     }
 
     fn seq(&self, i: usize) -> &Seq {
@@ -499,20 +577,28 @@ impl PagedKvCache {
         (s.table[bi], pos % self.geo.block_size)
     }
 
-    /// Scatter new K/V rows for `count` tokens starting at `start_pos`.
-    /// `new_k`/`new_v` layout: `[L, T, H, Dh]` (prefill) flattened.
-    pub fn scatter_prefill(
+    /// Scatter one **layer**'s new K/V rows for `count` tokens starting
+    /// at `start_pos`. `new_k`/`new_v` layout: `[T, H, Dh]` flattened —
+    /// the natural shape of one layer's projection output, which is
+    /// what lets the host-native forward pass write each layer into the
+    /// cache *before* its block-native attention reads it (no dense
+    /// staging buffer anywhere). The whole-token wrappers
+    /// [`Self::scatter_prefill`] / [`Self::scatter_decode`] delegate
+    /// here per layer.
+    pub fn scatter_rows(
         &mut self,
         seq: usize,
+        layer: usize,
         start_pos: usize,
         count: usize,
         new_k: &[f32],
         new_v: &[f32],
     ) {
         let g = self.geo;
-        let (l, h, dh, bs) = (g.n_layers, g.n_heads, g.head_dim, g.block_size);
-        debug_assert_eq!(new_k.len(), l * count * h * dh, "new_k length");
-        debug_assert_eq!(new_v.len(), l * count * h * dh, "new_v length");
+        let (h, dh, bs) = (g.n_heads, g.head_dim, g.block_size);
+        debug_assert!(layer < g.n_layers, "layer {layer} of {}", g.n_layers);
+        debug_assert_eq!(new_k.len(), count * h * dh, "new_k length");
+        debug_assert_eq!(new_v.len(), count * h * dh, "new_v length");
         self.touch(seq);
         if !self.physical {
             return;
@@ -524,14 +610,39 @@ impl PagedKvCache {
             let super::block::BlockPayload::F32 { k, v } = &mut block.payload else {
                 panic!("scatter into demoted/offloaded block (seq {seq}, pos {pos})");
             };
-            for li in 0..l {
-                for hi in 0..h {
-                    let src = ((li * count + t) * h + hi) * dh;
-                    let dst = ((li * h + hi) * bs + off) * dh;
-                    k[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
-                    v[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
-                }
+            for hi in 0..h {
+                let src = (t * h + hi) * dh;
+                let dst = ((layer * h + hi) * bs + off) * dh;
+                k[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
+                v[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
             }
+        }
+    }
+
+    /// Scatter new K/V rows for `count` tokens starting at `start_pos`.
+    /// `new_k`/`new_v` layout: `[L, T, H, Dh]` (prefill) flattened.
+    pub fn scatter_prefill(
+        &mut self,
+        seq: usize,
+        start_pos: usize,
+        count: usize,
+        new_k: &[f32],
+        new_v: &[f32],
+    ) {
+        let g = self.geo;
+        let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
+        debug_assert_eq!(new_k.len(), l * count * h * dh, "new_k length");
+        debug_assert_eq!(new_v.len(), l * count * h * dh, "new_v length");
+        let per = count * h * dh;
+        for li in 0..l {
+            self.scatter_rows(
+                seq,
+                li,
+                start_pos,
+                count,
+                &new_k[li * per..(li + 1) * per],
+                &new_v[li * per..(li + 1) * per],
+            );
         }
     }
 
@@ -539,25 +650,19 @@ impl PagedKvCache {
     /// for this sequence (already sliced out of the batch output).
     pub fn scatter_decode(&mut self, seq: usize, pos: usize, new_k: &[f32], new_v: &[f32]) {
         let g = self.geo;
-        let (l, h, dh, bs) = (g.n_layers, g.n_heads, g.head_dim, g.block_size);
+        let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
         debug_assert_eq!(new_k.len(), l * h * dh, "new_k length");
         debug_assert_eq!(new_v.len(), l * h * dh, "new_v length");
-        self.touch(seq);
-        if !self.physical {
-            return;
-        }
-        let (id, off) = self.locate(seq, pos);
-        let block = &mut self.pool.blocks[id as usize];
-        let super::block::BlockPayload::F32 { k, v } = &mut block.payload else {
-            panic!("scatter into demoted/offloaded block (seq {seq}, pos {pos})");
-        };
+        let per = h * dh;
         for li in 0..l {
-            for hi in 0..h {
-                let src = (li * h + hi) * dh;
-                let dst = ((li * h + hi) * bs + off) * dh;
-                k[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
-                v[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
-            }
+            self.scatter_rows(
+                seq,
+                li,
+                pos,
+                1,
+                &new_k[li * per..(li + 1) * per],
+                &new_v[li * per..(li + 1) * per],
+            );
         }
     }
 
@@ -585,6 +690,37 @@ impl PagedKvCache {
         out_k.resize(per * seqs.len(), 0.0);
         out_v.clear();
         out_v.resize(per * seqs.len(), 0.0);
+        for (i, &sq) in seqs.iter().enumerate() {
+            self.touch(sq);
+            if self.physical {
+                let (ks, vs) = (
+                    &mut out_k[i * per..(i + 1) * per],
+                    &mut out_v[i * per..(i + 1) * per],
+                );
+                self.gather_into(sq, ks, vs);
+            }
+        }
+    }
+
+    /// Gather a decode batch padded to `bucket` lanes: real lanes are
+    /// dense-gathered, padding lanes are **zero-filled**. (The pre-PR 5
+    /// backend re-gathered slot 0's entire cache for every padding lane
+    /// — pure waste, and a data dependency the padding never needed.
+    /// The block-native path has no padding lanes at all; this is the
+    /// dense oracle's equivalent.)
+    pub fn gather_batch_padded(
+        &mut self,
+        seqs: &[usize],
+        bucket: usize,
+        out_k: &mut Vec<f32>,
+        out_v: &mut Vec<f32>,
+    ) {
+        assert!(seqs.len() <= bucket, "batch {} exceeds bucket {bucket}", seqs.len());
+        let per = self.geo.slot_elems();
+        out_k.clear();
+        out_k.resize(per * bucket, 0.0);
+        out_v.clear();
+        out_v.resize(per * bucket, 0.0);
         for (i, &sq) in seqs.iter().enumerate() {
             self.touch(sq);
             if self.physical {
@@ -950,5 +1086,111 @@ mod tests {
         let g = geo();
         let n = g.n_layers * g.n_heads * g.head_dim;
         kv.scatter_decode(s, 0, &vec![0.0f32; n], &vec![0.0f32; n + 1]);
+    }
+
+    #[test]
+    fn block_view_sees_what_scatter_wrote() {
+        let mut kv = physical();
+        let s = kv.allocate(12).unwrap();
+        let g = geo();
+        let (l, h, dh, bs) = (g.n_layers, g.n_heads, g.head_dim, g.block_size);
+        let count = 10;
+        let nk: Vec<f32> = (0..l * count * h * dh).map(|i| i as f32).collect();
+        let nv: Vec<f32> = nk.iter().map(|x| -x).collect();
+        kv.scatter_prefill(s, 0, count, &nk, &nv);
+        kv.grow(s, count).unwrap();
+        // in-place readers bump the LRU stamp explicitly (gathers do it
+        // implicitly): after touch_read, s is the freshest sequence
+        kv.touch_read(s);
+        // token 9 (block 1, offset 1), layer 1, head 1, elem 2
+        let BlockKv::F32 { k, v } = kv.seq_block_kv(s, 1) else {
+            panic!("fresh blocks are f32");
+        };
+        let (li, t, hi, e) = (1usize, 9usize, 1usize, 2usize);
+        let src = ((li * count + t) * h + hi) * dh + e;
+        let idx = ((li * h + hi) * bs + (t % bs)) * dh + e;
+        assert_eq!(k[idx], nk[src]);
+        assert_eq!(v[idx], nv[src]);
+    }
+
+    #[test]
+    fn per_layer_scatter_rows_compose_to_scatter_decode() {
+        let g = geo();
+        let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
+        let token: Vec<f32> = (0..l * h * dh).map(|i| 3.0 + i as f32).collect();
+        let tv: Vec<f32> = token.iter().map(|x| x * 0.5).collect();
+        // one cache written whole-token, one written layer by layer
+        let mut whole = physical();
+        let a = whole.allocate(4).unwrap();
+        whole.scatter_decode(a, 2, &token, &tv);
+        let mut by_layer = physical();
+        let b = by_layer.allocate(4).unwrap();
+        for li in 0..l {
+            by_layer.scatter_rows(b, li, 2, 1, &token[li * h * dh..(li + 1) * h * dh], &tv[li * h * dh..(li + 1) * h * dh]);
+        }
+        for (s, kv) in [(a, &mut whole), (b, &mut by_layer)] {
+            kv.grow(s, 3).unwrap();
+        }
+        let (mut k1, mut v1) = (Vec::new(), Vec::new());
+        whole.gather_seq(a, &mut k1, &mut v1);
+        let (mut k2, mut v2) = (Vec::new(), Vec::new());
+        by_layer.gather_seq(b, &mut k2, &mut v2);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn padded_gather_zero_fills_padding_lanes() {
+        let mut kv = physical();
+        let s = kv.allocate(4).unwrap();
+        let g = geo();
+        let n = g.n_layers * g.n_heads * g.head_dim;
+        let nk: Vec<f32> = (0..n).map(|i| 1.0 + i as f32).collect();
+        kv.scatter_decode(s, 0, &nk, &nk);
+        kv.grow(s, 1).unwrap();
+        let per = g.slot_elems();
+        let (mut bk, mut bv) = (Vec::new(), Vec::new());
+        kv.gather_batch_padded(&[s], 3, &mut bk, &mut bv);
+        assert_eq!(bk.len(), 3 * per);
+        // real lane matches the per-sequence gather ...
+        let (mut sk, mut sv) = (Vec::new(), Vec::new());
+        kv.gather_seq(s, &mut sk, &mut sv);
+        assert_eq!(&bk[..per], &sk[..]);
+        assert_eq!(&bv[..per], &sv[..]);
+        // ... and padding lanes are zeros, not slot-0 copies
+        assert!(bk[per..].iter().all(|&x| x == 0.0));
+        assert!(bv[per..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn touched_bytes_track_stored_precision() {
+        let mut kv = PagedKvCache::new(
+            geo(),
+            KvPressureConfig {
+                demote_watermark_fp8: 0.0,
+                ..KvPressureConfig::demote_only()
+            },
+        );
+        let g = geo();
+        let s = kv.allocate(24).unwrap();
+        let n = g.n_layers * 24 * g.n_heads * g.head_dim;
+        let nk: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.1).collect();
+        kv.scatter_prefill(s, 0, 24, &nk, &nk);
+        kv.grow(s, 24).unwrap();
+        let per_layer = g.block_size * g.n_heads * g.head_dim;
+        // 24 tokens = 3 blocks, all f32
+        assert_eq!(kv.seq_touched_bytes(s, 24), 3 * per_layer * 8);
+        assert_eq!(kv.seq_touched_bytes(s, 8), per_layer * 8);
+        assert_eq!(kv.seq_touched_bytes(s, 0), 0);
+        // demote (frontier 3, hot tail 1 -> blocks 0 and 1 demote)
+        kv.set_precision_pressure(true);
+        assert_eq!(kv.maintain(), 2);
+        assert_eq!(
+            kv.seq_touched_bytes(s, 24),
+            2 * (per_layer * 2 + 8) + per_layer * 8,
+            "fp8 blocks stream at half (plus scales)"
+        );
+        // walking less context touches fewer blocks
+        assert!(kv.seq_touched_bytes(s, 9) < kv.seq_touched_bytes(s, 24));
     }
 }

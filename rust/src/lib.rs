@@ -21,6 +21,11 @@
 //!   demotes LRU-cold blocks to half the bytes under precision pressure,
 //!   and a host-offload tier whose transfer latency is charged on the
 //!   engine's virtual clock.
+//! * [`attn`] — block-native paged attention: per-block QK^T/PV
+//!   microkernels that walk the cache's block tables in place (FP8
+//!   dequant fused into the block load, online softmax, deterministic
+//!   fork-join threading), bit-identical to the dense-gather oracle it
+//!   replaced on the decode hot path.
 //! * [`coordinator`] — the vLLM-style serving engine: continuous batching
 //!   with chunked prefill, paged KV management, request router,
 //!   latency metrics, and the paper's headline feature — an
@@ -50,6 +55,7 @@
 pub mod util;
 pub mod format;
 pub mod kvcache;
+pub mod attn;
 pub mod model;
 pub mod gemm;
 pub mod gpusim;

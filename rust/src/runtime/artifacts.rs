@@ -58,6 +58,10 @@ pub struct Manifest {
     pub prefill_chunks: Vec<usize>,
     pub modes: Vec<String>,
     pub act_scales: BTreeMap<String, f64>,
+    /// Linear layers that exceeded the NestedFP eligibility bound and
+    /// stay FP16 in every mode (manifest `exception_layers`; names like
+    /// `layers.3.w_down`). Empty for the in-repo trained model.
+    pub exception_layers: Vec<String>,
     pub executables: Vec<ExecSpec>,
     pub dir: PathBuf,
     pub final_train_loss: Option<f64>,
@@ -103,6 +107,15 @@ impl Manifest {
             for (k, v) in obj {
                 if let Some(f) = v.as_f64() {
                     act_scales.insert(k.clone(), f);
+                }
+            }
+        }
+
+        let mut exception_layers = Vec::new();
+        if let Some(obj) = j.get("exception_layers").and_then(|v| v.as_obj()) {
+            for (k, v) in obj {
+                if v.as_bool().unwrap_or(false) {
+                    exception_layers.push(k.clone());
                 }
             }
         }
@@ -198,6 +211,7 @@ impl Manifest {
                 })
                 .unwrap_or_default(),
             act_scales,
+            exception_layers,
             executables,
             dir: dir.to_path_buf(),
             final_train_loss: j.get("final_train_loss").and_then(|v| v.as_f64()),
@@ -243,6 +257,7 @@ mod tests {
       "prefill_chunks": [32, 64],
       "modes": ["fp16", "nested16", "nested8"],
       "act_scales": {"layers.0.wq": 30.5},
+      "exception_layers": {"layers.1.w_down": true},
       "final_train_loss": 1.98,
       "executables": [
         {"kind": "decode", "mode": "fp16", "size": 2, "path": "decode_fp16_b2.hlo.txt",
@@ -264,6 +279,7 @@ mod tests {
         assert_eq!(e.dynamic_inputs[0].dims, vec![2]);
         assert!(m.find("decode", "fp16", 9).is_err());
         assert!((m.act_scales["layers.0.wq"] - 30.5).abs() < 1e-12);
+        assert_eq!(m.exception_layers, vec!["layers.1.w_down".to_string()]);
     }
 
     #[test]

@@ -2,12 +2,14 @@
 //!
 //! Mirrors the public surface of the real `client` module (`ModelRuntime`,
 //! `StepExecutable`, `StepOutput`, `log`) so the rest of the crate compiles
-//! unchanged, but refuses to execute anything: the real module compiles HLO
-//! through the `xla` PJRT bindings, which link the XLA C++ runtime and are
-//! unavailable in offline builds. Every entry point that would touch the
-//! device returns a descriptive error instead; callers that probe for
-//! artifacts (the integration tests, `repro serve`, the e2e examples)
-//! already handle that error path gracefully.
+//! unchanged. Since PR 5 the stub **loads** artifacts for real — the
+//! manifest and weight store are plain files, and the host-native step
+//! path (`coordinator::hostforward` + the block-native attention
+//! engine) serves prefill/decode from them without any compiled
+//! executable. Only artifact *execution* (`step`/`run`, the
+//! artifact-parity tests) still needs the `xla` PJRT bindings, which
+//! link the XLA C++ runtime and are unavailable in offline builds;
+//! those entry points return a descriptive error here.
 
 use std::path::Path;
 
@@ -30,30 +32,29 @@ pub struct StepOutput {
     pub exec_micros: u64,
 }
 
-/// The model runtime stub: can parse artifacts, cannot execute them.
+/// The model runtime stub: parses artifacts (enough for the host-native
+/// backend), cannot execute the compiled step functions.
 pub struct ModelRuntime {
     pub manifest: Manifest,
     pub weights: WeightStore,
 }
 
 impl ModelRuntime {
-    /// Parse the artifact manifest and weight store, then fail with a
-    /// clear message: executing the step functions needs the `pjrt`
-    /// feature (and the `xla` bindings it implies).
+    /// Parse the artifact manifest and weight store. `modes`/`kinds`
+    /// are validated against the manifest the same way the real client
+    /// filters compilations, so an empty match still errors loudly.
     pub fn load(dir: &Path, modes: &[&str], kinds: &[&str]) -> Result<ModelRuntime> {
         let manifest = Manifest::load(dir)?;
-        let _weights = WeightStore::load(&dir.join("weights.bin"))?;
+        let weights = WeightStore::load(&dir.join("weights.bin"))?;
         let matched = manifest
             .executables
             .iter()
             .filter(|e| modes.contains(&e.mode.as_str()) && kinds.contains(&e.kind.as_str()))
             .count();
-        bail!(
-            "{matched} executables matched modes {modes:?} kinds {kinds:?}, but this \
-             binary was built without the `pjrt` feature and cannot run them; \
-             rebuild with `cargo build --features pjrt` (requires the `xla` PJRT \
-             bindings) or use the simulation backend"
-        );
+        if matched == 0 {
+            bail!("no executables matched modes {modes:?} kinds {kinds:?}");
+        }
+        Ok(ModelRuntime { manifest, weights })
     }
 
     pub fn step(&self, kind: &str, mode: &str, size: usize) -> Result<&StepExecutable> {

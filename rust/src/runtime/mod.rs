@@ -15,8 +15,10 @@ pub mod artifacts;
 
 // The real PJRT client needs the `xla` bindings (XLA C++ runtime), which
 // cannot be built offline. Without the `pjrt` feature a stub with the same
-// surface loads manifests/weights but refuses to execute — the simulation
-// backend covers every figure, bench, and example in that configuration.
+// surface loads manifests/weights (enough for the host-native backend:
+// `coordinator::hostforward` serves prefill/decode from the store with
+// block-native attention) but refuses to execute compiled artifacts —
+// the simulation backend covers every figure and bench either way.
 #[cfg(feature = "pjrt")]
 pub mod client;
 #[cfg(not(feature = "pjrt"))]

@@ -6,10 +6,16 @@
 //! caches the sorted view.
 
 /// Accumulates samples; computes exact order statistics on demand.
+///
+/// NaN samples are tolerated but never poison a query: they sort last
+/// and are dropped (counted in [`Digest::nan_dropped`]) the next time
+/// the digest sorts, and the streaming queries ([`Digest::mean`],
+/// [`Digest::frac_above`]) skip them.
 #[derive(Clone, Debug, Default)]
 pub struct Digest {
     samples: Vec<f64>,
     sorted: bool,
+    nan_dropped: usize,
 }
 
 impl Digest {
@@ -35,12 +41,29 @@ impl Digest {
         self.samples.is_empty()
     }
 
+    /// NaN samples seen and discarded so far (diagnostic counter).
+    pub fn nan_dropped(&self) -> usize {
+        self.nan_dropped
+    }
+
     fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
-            self.sorted = true;
+        if self.sorted {
+            return;
         }
+        // total order with NaNs last, then drop them: a poisoned sample
+        // must degrade one data point, not panic every percentile query
+        self.samples
+            .sort_unstable_by(|a, b| match (a.is_nan(), b.is_nan()) {
+                (false, false) => a.partial_cmp(b).expect("both non-NaN"),
+                (false, true) => std::cmp::Ordering::Less,
+                (true, false) => std::cmp::Ordering::Greater,
+                (true, true) => std::cmp::Ordering::Equal,
+            });
+        while self.samples.last().is_some_and(|v| v.is_nan()) {
+            self.samples.pop();
+            self.nan_dropped += 1;
+        }
+        self.sorted = true;
     }
 
     /// Exact percentile by linear interpolation; `q` in [0, 100].
@@ -50,10 +73,19 @@ impl Digest {
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
-            return f64::NAN;
+        let mut sum = 0.0f64;
+        let mut n = 0usize;
+        for &v in &self.samples {
+            if !v.is_nan() {
+                sum += v;
+                n += 1;
+            }
         }
-        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        if n == 0 {
+            f64::NAN
+        } else {
+            sum / n as f64
+        }
     }
 
     pub fn min(&mut self) -> f64 {
@@ -66,16 +98,17 @@ impl Digest {
         self.samples.last().copied().unwrap_or(f64::NAN)
     }
 
-    /// Fraction of samples strictly greater than `threshold`.
+    /// Fraction of (non-NaN) samples strictly greater than `threshold`.
     pub fn frac_above(&self, threshold: f64) -> f64 {
-        if self.samples.is_empty() {
+        let n = self.samples.iter().filter(|v| !v.is_nan()).count();
+        if n == 0 {
             return 0.0;
         }
-        self.samples.iter().filter(|&&v| v > threshold).count() as f64
-            / self.samples.len() as f64
+        self.samples.iter().filter(|&&v| v > threshold).count() as f64 / n as f64
     }
 
     pub fn summary(&mut self) -> Summary {
+        self.ensure_sorted(); // drop NaNs first so count/mean/order agree
         Summary {
             count: self.len(),
             mean: self.mean(),
@@ -111,15 +144,17 @@ impl std::fmt::Display for Summary {
 }
 
 /// Exact percentile of an already-**sorted** slice by linear
-/// interpolation; `q` in [0, 100]; NaN when empty. The single percentile
-/// definition in the crate — [`Digest::percentile`] and the autopilot's
+/// interpolation; `q` clamps to [0, 100] (an out-of-range rank is a
+/// caller bug worth a min/max answer, not a panic in the metrics path);
+/// NaN when empty or when `q` is NaN. The single percentile definition
+/// in the crate — [`Digest::percentile`] and the autopilot's
 /// sliding-window SLO tracker both delegate here, so reported and
 /// control-loop percentiles can never drift apart.
 pub fn percentile_sorted(xs: &[f64], q: f64) -> f64 {
-    assert!((0.0..=100.0).contains(&q));
-    if xs.is_empty() {
+    if xs.is_empty() || q.is_nan() {
         return f64::NAN;
     }
+    let q = q.clamp(0.0, 100.0);
     let n = xs.len();
     if n == 1 {
         return xs[0];
@@ -207,5 +242,62 @@ mod tests {
         assert!((mean(&[2.0, 4.0]) - 3.0).abs() < 1e-12);
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
         assert!(stddev(&[1.0, 1.0, 1.0]) < 1e-12);
+    }
+
+    #[test]
+    fn empty_digest_never_panics() {
+        let mut d = Digest::new();
+        assert!(d.percentile(50.0).is_nan());
+        assert!(d.mean().is_nan());
+        assert!(d.min().is_nan() && d.max().is_nan());
+        assert_eq!(d.frac_above(0.0), 0.0);
+        let s = d.summary();
+        assert_eq!(s.count, 0);
+        assert!(s.p99.is_nan());
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        let mut d = Digest::new();
+        d.add(3.5);
+        for q in [0.0, 37.0, 50.0, 100.0] {
+            assert_eq!(d.percentile(q), 3.5);
+        }
+        let s = d.summary();
+        assert_eq!((s.min, s.max, s.mean), (3.5, 3.5, 3.5));
+    }
+
+    #[test]
+    fn nan_samples_drop_instead_of_panicking() {
+        let mut d = Digest::new();
+        for v in [2.0, f64::NAN, 1.0, 3.0, f64::NAN] {
+            d.add(v);
+        }
+        // streaming queries skip NaNs even before a sort happens
+        assert!((d.mean() - 2.0).abs() < 1e-12);
+        assert!((d.frac_above(1.5) - 2.0 / 3.0).abs() < 1e-12);
+        // ordered queries sort NaNs last and drop them, with a count
+        assert_eq!(d.percentile(50.0), 2.0);
+        assert_eq!(d.len(), 3, "NaNs no longer stored after sorting");
+        assert_eq!(d.nan_dropped(), 2);
+        assert_eq!(d.max(), 3.0, "max is the largest real sample");
+        let s = d.summary();
+        assert_eq!(s.count, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_range_q_clamps_to_min_max() {
+        let xs = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_sorted(&xs, -10.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 170.0), 3.0);
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 3.0);
+        assert!(percentile_sorted(&xs, f64::NAN).is_nan());
+        let mut d = Digest::new();
+        d.add(5.0);
+        d.add(7.0);
+        assert_eq!(d.percentile(-1.0), 5.0);
+        assert_eq!(d.percentile(101.0), 7.0);
     }
 }

@@ -1,0 +1,430 @@
+//! Property tests for the block-native attention path (PR 5).
+//!
+//! Part 1 — the central invariant: for ANY cache state (ragged lengths,
+//! f32 / FP8-demoted / mixed block tables, offloaded-then-resumed
+//! sequences) and ANY worker count, the block-native engine is
+//! bit-identical to the dense-gather oracle.
+//!
+//! Part 2 (`host_backend`, non-`pjrt` builds) — the rewired
+//! `RealBackend` end to end over a synthesized tiny artifact store:
+//! the empty-decode-batch regression, pad-lane-free batching, and a
+//! full `Engine::run` on the host-native step path.
+
+use nestedfp::attn::{attend_dense, AttnEngine, AttnLane};
+use nestedfp::kvcache::{KvGeometry, KvPressureConfig, PagedKvCache};
+use nestedfp::util::prop::check_res;
+use nestedfp::util::rng::Pcg64;
+
+/// One generated scenario.
+#[derive(Debug)]
+struct Scenario {
+    geo: KvGeometry,
+    lens: Vec<usize>,
+    /// Queries per lane this step (1 = decode, >1 = prefill tail).
+    t: usize,
+    /// Demote LRU-cold blocks before attending.
+    demote: bool,
+    /// Offload the first sequence to the host tier and fetch it back
+    /// before attending (payloads must survive the round trip).
+    offload_cycle: bool,
+    seed: u64,
+}
+
+fn gen_scenario(rng: &mut Pcg64) -> Scenario {
+    let bs = [4usize, 8][(rng.next_u32() % 2) as usize];
+    let max_seq = bs * (3 + (rng.next_u32() % 4) as usize);
+    let geo = KvGeometry {
+        n_layers: 1 + (rng.next_u32() % 3) as usize,
+        n_heads: 1 + (rng.next_u32() % 2) as usize,
+        max_seq,
+        head_dim: [2usize, 4][(rng.next_u32() % 2) as usize],
+        block_size: bs,
+        total_blocks: 3 * (max_seq / bs + 2),
+    };
+    let n_seqs = 1 + (rng.next_u32() % 3) as usize;
+    let t = 1 + (rng.next_u32() % 3) as usize;
+    let lens = (0..n_seqs)
+        .map(|_| t + (rng.next_u64() as usize % (max_seq - t + 1)))
+        .collect();
+    Scenario {
+        geo,
+        lens,
+        t,
+        demote: rng.next_u32() % 2 == 0,
+        offload_cycle: rng.next_u32() % 3 == 0,
+        seed: rng.next_u64(),
+    }
+}
+
+fn build(sc: &Scenario) -> (PagedKvCache, Vec<usize>) {
+    let policy = if sc.demote {
+        KvPressureConfig {
+            demote_watermark_fp8: 0.0,
+            ..KvPressureConfig::default()
+        }
+    } else {
+        KvPressureConfig::default()
+    };
+    let mut kv = PagedKvCache::new(sc.geo, policy);
+    let mut rng = Pcg64::seeded(sc.seed);
+    let g = sc.geo;
+    let mut seqs = Vec::new();
+    for &len in &sc.lens {
+        let s = kv.allocate(len).expect("scenario block budget");
+        let n = g.n_layers * len * g.n_heads * g.head_dim;
+        let nk: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.6).collect();
+        let nv: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.6).collect();
+        kv.scatter_prefill(s, 0, len, &nk, &nv);
+        kv.grow(s, len).unwrap();
+        seqs.push(s);
+    }
+    if sc.demote {
+        kv.set_precision_pressure(true);
+        kv.maintain();
+    }
+    if sc.offload_cycle {
+        kv.offload_sequence(seqs[0]).expect("offload enabled");
+        kv.fetch_sequence(seqs[0]).expect("fetch fits: nothing new allocated");
+    }
+    (kv, seqs)
+}
+
+#[test]
+fn block_native_is_bit_identical_to_the_dense_oracle() {
+    check_res(
+        "attn-block-native-vs-oracle",
+        40,
+        gen_scenario,
+        |sc| {
+            let (mut kv, seqs) = build(sc);
+            let g = sc.geo;
+            let (h, dh) = (g.n_heads, g.head_dim);
+            let mut rng = Pcg64::seeded(sc.seed ^ 0xabcd);
+            let qs: Vec<Vec<f32>> = seqs
+                .iter()
+                .map(|_| (0..sc.t * h * dh).map(|_| rng.normal() as f32 * 0.4).collect())
+                .collect();
+            // queries are the tail of each context (prefill-style for
+            // t > 1, plain decode for t == 1)
+            let positions: Vec<Vec<i32>> = sc
+                .lens
+                .iter()
+                .map(|&len| ((len - sc.t)..len).map(|p| p as i32).collect())
+                .collect();
+            let lanes: Vec<AttnLane> = seqs
+                .iter()
+                .zip(&qs)
+                .zip(&positions)
+                .map(|((&seq, q), p)| AttnLane {
+                    seq,
+                    q,
+                    positions: p,
+                })
+                .collect();
+            let n_out = lanes.len() * h * sc.t * dh;
+            for layer in 0..g.n_layers {
+                let mut dns = vec![0.0f32; n_out];
+                attend_dense(&mut kv, layer, &lanes, &mut dns);
+                for threads in [1usize, 2, 5] {
+                    let mut blk = vec![0.0f32; n_out];
+                    AttnEngine::new(threads).attend(&kv, layer, &lanes, &mut blk);
+                    for (i, (a, b)) in blk.iter().zip(&dns).enumerate() {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!(
+                                "layer {layer} threads {threads} elem {i}: block {a} vs dense {b}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mixed_precision_tables_really_occur_in_the_generator() {
+    // guard the property above against silently testing only-f32 caches
+    let mut rng = Pcg64::seeded(0x5eed_0001);
+    let mut saw_fp8 = false;
+    let mut saw_offload = false;
+    for _ in 0..40 {
+        let sc = gen_scenario(&mut rng);
+        let (kv, seqs) = build(&sc);
+        saw_fp8 |= kv.fp8_blocks() > 0;
+        saw_offload |= sc.offload_cycle;
+        let _ = seqs;
+    }
+    assert!(saw_fp8, "no scenario produced FP8-demoted blocks");
+    assert!(saw_offload, "no scenario exercised the offload round trip");
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: the rewired RealBackend over synthesized tiny artifacts.
+// The stub runtime loads manifest + weights without PJRT, so these run
+// in the default build; the pjrt build's real client would try to
+// compile the (nonexistent) HLO files, so they are gated out there.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod host_backend {
+    use std::io::Write as _;
+    use std::path::PathBuf;
+    use std::sync::OnceLock;
+
+    use nestedfp::coordinator::backend::{Backend, ModeMap, RealBackend};
+    use nestedfp::coordinator::engine::{Engine, EngineConfig};
+    use nestedfp::coordinator::kv::KvCacheManager;
+    use nestedfp::coordinator::precision::{Precision, PrecisionPolicy};
+    use nestedfp::coordinator::request::Request;
+    use nestedfp::format::fp16::F16;
+    use nestedfp::format::nested::{self, DecomposeResult};
+    use nestedfp::kvcache::KvPressureConfig;
+    use nestedfp::runtime::ModelRuntime;
+    use nestedfp::util::rng::Pcg64;
+
+    const VOCAB: usize = 16;
+    const D: usize = 8;
+    const L: usize = 2;
+    const DFF: usize = 12;
+
+    struct StoreWriter {
+        tensors: Vec<(String, u8, Vec<usize>, Vec<u8>)>,
+    }
+
+    impl StoreWriter {
+        fn new() -> StoreWriter {
+            StoreWriter {
+                tensors: Vec::new(),
+            }
+        }
+
+        fn u16s(&mut self, name: &str, dims: &[usize], bits: &[u16]) {
+            let mut bytes = Vec::with_capacity(bits.len() * 2);
+            for b in bits {
+                bytes.extend_from_slice(&b.to_le_bytes());
+            }
+            self.tensors.push((name.into(), 1, dims.to_vec(), bytes));
+        }
+
+        fn f32s(&mut self, name: &str, dims: &[usize], vals: &[f32]) {
+            let mut bytes = Vec::with_capacity(vals.len() * 4);
+            for v in vals {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            self.tensors.push((name.into(), 2, dims.to_vec(), bytes));
+        }
+
+        fn u8s(&mut self, name: &str, dims: &[usize], vals: &[u8]) {
+            self.tensors.push((name.into(), 0, dims.to_vec(), vals.to_vec()));
+        }
+
+        fn write(&self, path: &std::path::Path) {
+            let mut f = std::fs::File::create(path).unwrap();
+            f.write_all(b"NFPW").unwrap();
+            f.write_all(&1u32.to_le_bytes()).unwrap();
+            f.write_all(&(self.tensors.len() as u32).to_le_bytes()).unwrap();
+            for (name, code, dims, bytes) in &self.tensors {
+                f.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+                f.write_all(name.as_bytes()).unwrap();
+                f.write_all(&[*code, dims.len() as u8]).unwrap();
+                for &d in dims {
+                    f.write_all(&(d as u32).to_le_bytes()).unwrap();
+                }
+                f.write_all(&(bytes.len() as u64).to_le_bytes()).unwrap();
+                f.write_all(bytes).unwrap();
+            }
+        }
+    }
+
+    /// Random eligible (|w| ≤ 1.7) f16 bit matrix.
+    fn gauss_bits(rng: &mut Pcg64, n: usize) -> Vec<u16> {
+        (0..n)
+            .map(|_| F16::from_f32((rng.normal() as f32 * 0.3).clamp(-1.7, 1.7)).to_bits())
+            .collect()
+    }
+
+    fn add_linear(w: &mut StoreWriter, rng: &mut Pcg64, key: &str, rows: usize, cols: usize) {
+        let bits = gauss_bits(rng, rows * cols);
+        let DecomposeResult::Nested(t) = nested::decompose_tensor(rows, cols, &bits) else {
+            panic!("{key}: clamped weights must be nestable");
+        };
+        w.u16s(&format!("{key}.f16"), &[rows, cols], &bits);
+        w.u8s(&format!("{key}.upper"), &[rows, cols], &t.upper);
+        w.u8s(&format!("{key}.lower"), &[rows, cols], &t.lower);
+    }
+
+    /// Build the tiny artifact dir once per process.
+    fn artifacts() -> &'static PathBuf {
+        static DIR: OnceLock<PathBuf> = OnceLock::new();
+        DIR.get_or_init(|| {
+            let dir = std::env::temp_dir().join(format!("nestedfp_attnprops_{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let manifest = format!(
+                r#"{{
+  "model": {{"vocab": {VOCAB}, "d_model": {D}, "n_layers": {L}, "n_heads": 2,
+            "d_ff": {DFF}, "max_seq": 64, "head_dim": 4}},
+  "decode_buckets": [1, 2, 4],
+  "prefill_chunks": [4, 8],
+  "modes": ["nested16", "nested8"],
+  "act_scales": {{}},
+  "executables": [
+    {{"kind": "decode", "mode": "nested16", "size": 1, "path": "host_native.hlo.txt"}},
+    {{"kind": "prefill", "mode": "nested16", "size": 8, "path": "host_native.hlo.txt"}}
+  ]
+}}
+"#
+            );
+            std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+            let mut w = StoreWriter::new();
+            let mut rng = Pcg64::seeded(0xfeed);
+            w.u16s("embed", &[VOCAB, D], &gauss_bits(&mut rng, VOCAB * D));
+            w.f32s("final_norm", &[D], &vec![1.0f32; D]);
+            w.u16s("lm_head", &[VOCAB, D], &gauss_bits(&mut rng, VOCAB * D));
+            for i in 0..L {
+                w.f32s(&format!("layers.{i}.attn_norm"), &[D], &vec![1.0f32; D]);
+                w.f32s(&format!("layers.{i}.mlp_norm"), &[D], &vec![1.0f32; D]);
+                for name in ["wq", "wk", "wv", "wo"] {
+                    add_linear(&mut w, &mut rng, &format!("layers.{i}.{name}"), D, D);
+                }
+                add_linear(&mut w, &mut rng, &format!("layers.{i}.w_gate"), DFF, D);
+                add_linear(&mut w, &mut rng, &format!("layers.{i}.w_up"), DFF, D);
+                add_linear(&mut w, &mut rng, &format!("layers.{i}.w_down"), D, DFF);
+            }
+            w.write(&dir.join("weights.bin"));
+            dir
+        })
+    }
+
+    fn backend() -> RealBackend {
+        let rt = ModelRuntime::load(artifacts(), &["nested16", "nested8"], &["decode", "prefill"])
+            .expect("stub runtime must load synthesized artifacts");
+        RealBackend::new(rt, ModeMap::default(), 48)
+    }
+
+    fn fresh_kv(b: &RealBackend) -> KvCacheManager {
+        KvCacheManager::new(b.geometry(), KvPressureConfig::dense_baseline())
+    }
+
+    /// Regression (ISSUE 5 satellite 1): the old pad loop indexed
+    /// `slots[0]` unconditionally, so an empty batch panicked.
+    #[test]
+    fn empty_decode_batch_returns_an_empty_step() {
+        let mut b = backend();
+        let mut kv = fresh_kv(&b);
+        let run = b
+            .decode(&mut kv, &[], &[], &[], Precision::Fp16)
+            .expect("empty batch must not error");
+        assert_eq!(run.logits.map(|v| v.len()), Some(0));
+        assert_eq!(run.latency, 0.0);
+        assert_eq!(run.attn_dense_bytes, 0);
+        assert_eq!(run.attn_touched_bytes, 0);
+    }
+
+    /// Prefill then one decode over the host-native path: logits have
+    /// the right shapes and the attention counters show the block walk
+    /// touching less than a dense gather would have copied.
+    fn prefill_and_decode(
+        b: &mut RealBackend,
+        kv: &mut KvCacheManager,
+        prompt: &[i32],
+        precision: Precision,
+    ) -> (usize, Vec<f32>) {
+        let slot = kv.allocate(prompt.len()).unwrap();
+        let run = b.prefill(kv, slot, 0, prompt, precision).unwrap();
+        let logits = run.logits.unwrap();
+        assert_eq!(logits.len(), VOCAB, "prefill returns last-token logits");
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(
+            run.attn_touched_bytes < run.attn_dense_bytes,
+            "short context must beat the max_seq-sized gather: {} !< {}",
+            run.attn_touched_bytes,
+            run.attn_dense_bytes
+        );
+        kv.grow(slot, prompt.len()).unwrap();
+        (slot, logits)
+    }
+
+    #[test]
+    fn host_native_prefill_and_decode_produce_logits() {
+        for precision in [Precision::Fp16, Precision::Fp8] {
+            let mut b = backend();
+            let mut kv = fresh_kv(&b);
+            let prompt: Vec<i32> = (0..8).map(|i| (i % VOCAB) as i32).collect();
+            let (slot, _) = prefill_and_decode(&mut b, &mut kv, &prompt, precision);
+            let run = b
+                .decode(&mut kv, &[slot], &[3], &[8], precision)
+                .unwrap();
+            let logits = run.logits.unwrap();
+            assert_eq!(logits.len(), VOCAB, "decode returns [B, vocab]");
+            assert!(logits.iter().all(|v| v.is_finite()), "{precision:?}");
+        }
+    }
+
+    /// Satellite 2: no padding lanes means no cross-talk — a lane's
+    /// decode logits are bit-identical whether it runs alone or batched
+    /// with another sequence.
+    #[test]
+    fn batched_decode_lanes_do_not_cross_talk() {
+        let run_scenario = |batch_both: bool| -> Vec<f32> {
+            let mut b = backend();
+            let mut kv = fresh_kv(&b);
+            let p0: Vec<i32> = (0..8).map(|i| (i % VOCAB) as i32).collect();
+            let p1: Vec<i32> = (0..8).map(|i| ((i + 5) % VOCAB) as i32).collect();
+            let (s0, _) = prefill_and_decode(&mut b, &mut kv, &p0, Precision::Fp16);
+            let (s1, _) = prefill_and_decode(&mut b, &mut kv, &p1, Precision::Fp16);
+            let (slots, toks, pos): (Vec<usize>, Vec<i32>, Vec<i32>) = if batch_both {
+                (vec![s0, s1], vec![3, 7], vec![8, 8])
+            } else {
+                (vec![s0], vec![3], vec![8])
+            };
+            let run = b.decode(&mut kv, &slots, &toks, &pos, Precision::Fp16).unwrap();
+            run.logits.unwrap()[..VOCAB].to_vec()
+        };
+        let solo = run_scenario(false);
+        let batched = run_scenario(true);
+        assert_eq!(solo.len(), batched.len());
+        for (i, (a, b)) in solo.iter().zip(&batched).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "logit {i} differs between solo and batched decode: {a} vs {b}"
+            );
+        }
+    }
+
+    /// The whole serving loop on the host twin: requests admit, prefill,
+    /// batch-decode, and finish — with the gather-vs-touched counters
+    /// flowing into `Metrics`.
+    #[test]
+    fn engine_runs_end_to_end_on_the_host_twin() {
+        let b = backend();
+        let mut engine = Engine::new(
+            b,
+            EngineConfig {
+                policy: PrecisionPolicy::Fp16Only,
+                physical_kv: true,
+                ..Default::default()
+            },
+        );
+        let requests: Vec<Request> = (0..3)
+            .map(|i| Request::new(i, vec![(1 + i as i32) % VOCAB as i32; 8], 4, 0.0))
+            .collect();
+        let report = engine.run(requests).unwrap();
+        assert_eq!(report.metrics.completed, 3);
+        assert_eq!(report.metrics.total_output_tokens, 12);
+        for c in &report.completions {
+            assert!(!c.tokens.is_empty());
+            assert!(c.tokens.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        }
+        assert!(
+            report.metrics.attn_dense_bytes > 0,
+            "attention counters must reach Metrics"
+        );
+        assert!(
+            report.metrics.attn_gather_savings() > 0.5,
+            "short contexts vs max_seq 64 must show large gather savings, got {}",
+            report.metrics.attn_gather_savings()
+        );
+    }
+}

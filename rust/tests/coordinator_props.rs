@@ -194,6 +194,7 @@ impl Backend for ScriptBackend {
         Ok(StepRun {
             logits: Some(vec![0.0; self.vocab]),
             latency: self.latency,
+            ..StepRun::default()
         })
     }
     fn decode(
@@ -207,6 +208,7 @@ impl Backend for ScriptBackend {
         Ok(StepRun {
             logits: Some(vec![0.0; self.vocab * slots.len()]),
             latency: self.latency,
+            ..StepRun::default()
         })
     }
 }
