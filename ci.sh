@@ -47,6 +47,12 @@ cargo test -q --offline --test golden_trace --test autopilot_props
 echo "== cargo test (attention suite: block-native vs dense oracle) =="
 cargo test -q --offline --test attn_props
 
+# The event core's central invariant (heap driver == lockstep oracle,
+# bit for bit, across routing policies and autopilot on/off) runs by
+# name so a scheduler divergence fails with clear attribution.
+echo "== cargo test (event core: heap driver vs lockstep oracle) =="
+cargo test -q --offline --test event_core_props
+
 echo "== cargo test -q =="
 cargo test -q --offline
 
@@ -58,6 +64,9 @@ echo "== smoke: repro reproduce autopilot --quick =="
 
 echo "== smoke: repro reproduce attention --quick =="
 ./target/release/repro reproduce attention --quick --json /tmp/nestedfp_attention_ci.json
+
+echo "== smoke: repro reproduce cluster --scale --quick =="
+./target/release/repro reproduce cluster --scale --quick --json /tmp/nestedfp_cluster_scale_ci.json
 
 echo "== smoke: example kernel_tour (real engine vs gpusim) =="
 cargo run --release --offline --example kernel_tour

@@ -139,8 +139,10 @@ pub fn surge_workload(sc: &SurgeScenario) -> Vec<Request> {
     requests
 }
 
-/// Run one arm of the study on simulated H100s (llama-3.1-8b).
-pub fn run_arm(arm: Arm, sc: &SurgeScenario) -> Result<ClusterReport> {
+/// Build one arm's cluster (simulated H100s, llama-3.1-8b) without
+/// running it — the equivalence suite drives the same construction
+/// through both the event-core driver and the lockstep oracle.
+pub fn arm_cluster(arm: Arm, sc: &SurgeScenario) -> ClusterRouter<SimBackend> {
     let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
     let max_seq = 1024;
     let backends: Vec<SimBackend> = (0..sc.replicas)
@@ -176,8 +178,12 @@ pub fn run_arm(arm: Arm, sc: &SurgeScenario) -> Result<ClusterReport> {
             _ => None,
         },
     };
-    let mut cluster = ClusterRouter::new(backends, cfg);
-    cluster.run(surge_workload(sc))
+    ClusterRouter::new(backends, cfg)
+}
+
+/// Run one arm of the study on simulated H100s (llama-3.1-8b).
+pub fn run_arm(arm: Arm, sc: &SurgeScenario) -> Result<ClusterReport> {
+    arm_cluster(arm, sc).run(surge_workload(sc))
 }
 
 /// Headline numbers of one arm (exactly what the report rows print; the

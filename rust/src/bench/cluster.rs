@@ -1,5 +1,8 @@
 //! Cluster scaling scenario: one traffic surge replayed against 1, 2, and
-//! 4 engine replicas (`repro reproduce cluster`).
+//! 4 engine replicas (`repro reproduce cluster`), plus the discrete-event
+//! scale arm (`repro reproduce cluster --scale`): 100+ replicas replaying
+//! a multi-hour Azure day slice — ≥1M simulated requests — with
+//! per-event accounting proving idle replicas cost zero events.
 //!
 //! The single-replica experiments (Fig 1b) show dual precision absorbing
 //! a surge *in time* (switch to FP8 for the bad seconds). This scenario
@@ -8,9 +11,12 @@
 //! undersized clusters demote their tail replicas (staged escalation)
 //! and still contain the violation window.
 
-use anyhow::Result;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
 
 use crate::bench::report::Report;
+use crate::coordinator::autopilot::AutopilotConfig;
 use crate::coordinator::backend::SimBackend;
 use crate::coordinator::cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
 use crate::coordinator::engine::EngineConfig;
@@ -19,6 +25,7 @@ use crate::coordinator::router::RoutingPolicy;
 use crate::gpusim::WeightFormat;
 use crate::kvcache::KvPressureConfig;
 use crate::model::zoo;
+use crate::trace::azure::{day_slice, downscale, AzureTraceConfig};
 use crate::trace::workload::{build_requests, poisson_arrivals, surge_rates, WorkloadConfig};
 
 /// The scenario's fixed shape: 60 s at `base` req/s with a 5x surge for
@@ -116,6 +123,195 @@ pub fn cluster_scaling() -> Result<Report> {
     Ok(rep)
 }
 
+/// The `--scale` scenario: a fleet of replicas replaying a multi-hour
+/// slice of the synthetic Azure day trace (paper Fig 1a) under the
+/// autopilot. Request shapes are tiny and fixed — the arm measures the
+/// *driver* (event dispatch over hundreds of components and millions of
+/// events), not per-request realism.
+#[derive(Clone, Copy, Debug)]
+pub struct ScaleScenario {
+    pub replicas: usize,
+    /// Slice start within the trace day, seconds (0 = midnight).
+    pub start_s: usize,
+    /// Slice length, seconds.
+    pub len_s: usize,
+    /// Rate downscale factor applied to the day trace.
+    pub scale: f64,
+    pub arrival_seed: u64,
+    pub shape_seed: u64,
+}
+
+impl ScaleScenario {
+    /// The headline arm: 120 replicas over the 00:00–06:00 slice (the
+    /// diurnal curve runs 76–88 req/s there, peaking ~03:00), scaled to
+    /// 0.75 — about 1.3M requests over six simulated hours.
+    pub fn full() -> ScaleScenario {
+        ScaleScenario {
+            replicas: 120,
+            start_s: 0,
+            len_s: 21_600,
+            scale: 0.75,
+            arrival_seed: 31,
+            shape_seed: 12,
+        }
+    }
+
+    /// CI smoke: still ≥100 replicas, but 15 simulated minutes (~50k
+    /// requests) so the arm finishes in seconds.
+    pub fn quick() -> ScaleScenario {
+        ScaleScenario {
+            len_s: 900,
+            replicas: 100,
+            ..ScaleScenario::full()
+        }
+    }
+}
+
+/// Build the scale workload: Azure day slice → downscale → Poisson
+/// arrivals → fixed 16-in/8-out requests (context 64, so each request
+/// costs a handful of KV blocks and the fleet stays decode-bound).
+pub fn scale_workload(sc: &ScaleScenario) -> Vec<crate::coordinator::request::Request> {
+    let rates = day_slice(&AzureTraceConfig::default(), sc.start_s, sc.len_s);
+    let rates = downscale(&rates, sc.scale);
+    let arrivals = poisson_arrivals(&rates, sc.arrival_seed);
+    let wl = WorkloadConfig {
+        seed: sc.shape_seed,
+        input_len: 16,
+        output_len: 8,
+        chunk_align: 16,
+    };
+    build_requests(&arrivals, &wl, 64)
+}
+
+/// Run one scale scenario to completion. Returns the cluster report and
+/// the request count; the acceptance floors live in
+/// [`cluster_scale`], so tests can drive small scenarios through the
+/// exact same construction path.
+pub fn run_scale(sc: &ScaleScenario) -> Result<(ClusterReport, usize)> {
+    let workload = scale_workload(sc);
+    let n_requests = workload.len();
+    let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
+    let max_seq = 64;
+    let backends: Vec<SimBackend> = (0..sc.replicas)
+        .map(|_| {
+            SimBackend::new(
+                spec,
+                WeightFormat::Nested16,
+                WeightFormat::Nested8,
+                32,
+                max_seq,
+                320,
+            )
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        policy: RoutingPolicy::SloHeadroom,
+        engine: EngineConfig {
+            policy: PrecisionPolicy::Dual,
+            slo: SloConfig::default(),
+            physical_kv: false,
+            max_iterations: 0,
+            kv: KvPressureConfig::default(),
+        },
+        surge: SurgeConfig::disabled(),
+        autopilot: Some(AutopilotConfig::default()),
+    };
+    let mut cluster = ClusterRouter::new(backends, cfg);
+    let report = cluster.run(workload)?;
+    Ok((report, n_requests))
+}
+
+/// `repro reproduce cluster --scale [--quick]`: the event-core scale
+/// demonstration, with the tentpole floors enforced (`--quick` keeps the
+/// replica floor but shortens the trace) and per-event accounting in the
+/// report/JSON.
+pub fn cluster_scale(quick: bool) -> Result<Report> {
+    let sc = if quick {
+        ScaleScenario::quick()
+    } else {
+        ScaleScenario::full()
+    };
+    let slo = SloConfig::default();
+    let t0 = Instant::now();
+    let (mut r, n_requests) = run_scale(&sc)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    ensure!(
+        sc.replicas >= 100,
+        "scale arm must drive >= 100 replicas (got {})",
+        sc.replicas
+    );
+    let request_floor = if quick { 10_000 } else { 1_000_000 };
+    ensure!(
+        n_requests >= request_floor,
+        "scale arm generated only {n_requests} requests (floor {request_floor})"
+    );
+    ensure!(
+        r.aggregate.completed == n_requests,
+        "scale workload did not drain: {} of {n_requests} completed",
+        r.aggregate.completed
+    );
+    ensure!(
+        r.events.idle_replica_events == 0,
+        "{} events were dispatched to idle replicas (must be 0)",
+        r.events.idle_replica_events
+    );
+    for (i, rep) in r.replicas.iter().enumerate() {
+        ensure!(
+            rep.final_free_kv_blocks == rep.total_kv_blocks && rep.final_host_kv_blocks == 0,
+            "replica {i} leaked KV at scale: free {}/{} host {}",
+            rep.final_free_kv_blocks,
+            rep.total_kv_blocks,
+            rep.final_host_kv_blocks
+        );
+    }
+
+    let ev = r.events;
+    let ttft = r.aggregate.ttft_summary();
+    let mut rep = Report::new(
+        &format!(
+            "Cluster — discrete-event scale arm ({} replicas, Azure day slice {}–{} s x{:.2})",
+            sc.replicas,
+            sc.start_s,
+            sc.start_s + sc.len_s,
+            sc.scale
+        ),
+        &["metric", "value"],
+    );
+    rep.note(
+        "event-core driver: min-heap over arrival/control/predictor/replica components; \
+         idle replicas are parked (idle_replica_events must be 0)",
+    );
+    let mut kv = |k: &str, v: String| rep.row(vec![k.to_string(), v]);
+    kv("replicas", sc.replicas.to_string());
+    kv("requests", n_requests.to_string());
+    kv("sim_hours", format!("{:.2}", sc.len_s as f64 / 3600.0));
+    kv("wall_s", format!("{wall_s:.1}"));
+    kv("events_popped", ev.queue.popped.to_string());
+    kv("events_scheduled", ev.queue.scheduled.to_string());
+    kv("arrival_events", ev.arrival_events.to_string());
+    kv("control_events", ev.control_events.to_string());
+    kv("predictor_events", ev.predictor_events.to_string());
+    kv("replica_step_events", ev.replica_step_events.to_string());
+    kv("replica_blocked_wakes", ev.replica_blocked_wakes.to_string());
+    kv("idle_replica_events", ev.idle_replica_events.to_string());
+    kv(
+        "events_per_request",
+        format!("{:.2}", ev.queue.popped as f64 / n_requests as f64),
+    );
+    kv(
+        "events_per_wall_s",
+        format!("{:.0}", ev.queue.popped as f64 / wall_s.max(1e-9)),
+    );
+    kv("p99_ttft_ms", format!("{:.1}", ttft.p99 * 1e3));
+    kv(
+        "goodput_req_s",
+        format!("{:.2}", r.aggregate.goodput_req_s(&slo)),
+    );
+    kv("fp16_time_frac", format!("{:.0}%", r.fp16_fraction() * 100.0));
+    Ok(rep)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +339,54 @@ mod tests {
             t1.p90
         );
         assert!(four.aggregate.goodput_req_s(&slo) >= one.aggregate.goodput_req_s(&slo) - 1e-9);
+    }
+
+    #[test]
+    fn scale_path_drains_with_zero_idle_events() {
+        // a shrunken ScaleScenario through the exact --scale construction
+        // path: same backends, autopilot, and workload pipeline
+        let sc = ScaleScenario {
+            replicas: 6,
+            start_s: 0,
+            len_s: 30,
+            scale: 0.05,
+            ..ScaleScenario::full()
+        };
+        let (r, n) = run_scale(&sc).unwrap();
+        assert!(n > 20, "degenerate workload: {n} requests");
+        assert_eq!(r.aggregate.completed, n);
+        assert_eq!(r.events.arrival_events, n);
+        assert_eq!(r.events.idle_replica_events, 0);
+        assert!(r.events.control_events > 0, "autopilot control never ticked");
+        assert!(r.events.predictor_events > 0, "predictor clock never ticked");
+        // every pop is accounted to exactly one component class
+        let dispatched = r.events.arrival_events
+            + r.events.control_events
+            + r.events.predictor_events
+            + r.events.replica_step_events
+            + r.events.idle_replica_events;
+        assert_eq!(r.events.queue.popped as usize, dispatched);
+        for rep in &r.replicas {
+            assert_eq!(rep.final_free_kv_blocks, rep.total_kv_blocks);
+            assert_eq!(rep.final_host_kv_blocks, 0);
+        }
+    }
+
+    #[test]
+    fn scale_workload_is_deterministic() {
+        let sc = ScaleScenario {
+            replicas: 4,
+            len_s: 60,
+            scale: 0.1,
+            ..ScaleScenario::full()
+        };
+        let a = scale_workload(&sc);
+        let b = scale_workload(&sc);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrival == y.arrival));
+        // fixed tiny shapes: 16-in (aligned), 8-out
+        assert!(a.iter().all(|r| r.prompt.len() == 16 && r.max_new_tokens == 8));
     }
 
     #[test]

@@ -58,6 +58,9 @@ pub struct BenchOpts {
     pub quick: bool,
     /// Rewrite `GEMM_BENCH.json` from this run's measurements.
     pub update_trajectory: bool,
+    /// cluster only: the 100+-replica discrete-event scale arm instead
+    /// of the 1/2/4-replica surge table.
+    pub scale: bool,
 }
 
 /// The swept shapes: (M, N, K, tag). 512³ is the acceptance shape.

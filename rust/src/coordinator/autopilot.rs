@@ -180,7 +180,9 @@ impl Default for SurgePredictor {
 impl SurgePredictor {
     /// Close every whole bucket up to `t`, feeding its rate into the
     /// EWMAs (empty buckets feed zeros — decay is part of the signal).
-    fn roll_to(&mut self, t: f64) {
+    /// Idempotent for a fixed `t`, so the event core's bucket clock can
+    /// call it on exact boundaries without perturbing the signal.
+    pub fn roll_to(&mut self, t: f64) {
         while t >= self.bucket_start + self.bucket_s {
             let rate = self.count / self.bucket_s;
             if self.primed {
@@ -209,6 +211,21 @@ impl SurgePredictor {
     /// Smoothed arrival rates `(fast, slow)`, req/s.
     pub fn rates(&self) -> (f64, f64) {
         (self.fast, self.slow)
+    }
+
+    /// The next bucket boundary: the earliest time at which
+    /// [`SurgePredictor::roll_to`] would close another bucket. Exact f64
+    /// integers for the default 1 s buckets, so an event scheduled here
+    /// lands on the boundary bit-for-bit.
+    pub fn next_boundary(&self) -> f64 {
+        self.bucket_start + self.bucket_s
+    }
+
+    /// The first bucket boundary strictly after `t` (used to seed the
+    /// event core's predictor clock at the first arrival).
+    pub fn boundary_after(&self, t: f64) -> f64 {
+        let k = ((t - self.bucket_start) / self.bucket_s).floor().max(0.0) + 1.0;
+        self.bucket_start + k * self.bucket_s
     }
 
     /// Pressure boost in `[0, gain]`: positive only while the fast EWMA
@@ -401,15 +418,32 @@ impl Autopilot {
     /// Run one control decision if the control interval elapsed:
     /// pressures from the trackers + snapshots, predictor boost, then
     /// [`Autopilot::control_at`]. Returns the directives to apply.
+    ///
+    /// Wall-clock callers (the live server monitor) use this `due()`
+    /// gate; the discrete-event cluster driver schedules control ticks
+    /// itself and calls [`Autopilot::control_with_snapshots`] directly —
+    /// its schedule *is* the cadence, and re-gating on float arithmetic
+    /// here would skip exactly-on-time ticks to rounding.
     pub fn maybe_control(
         &mut self,
         now: f64,
         snaps: &[ReplicaSnapshot],
     ) -> Option<Vec<PrecisionDirective>> {
-        assert_eq!(snaps.len(), self.fsms.len(), "snapshot count mismatch");
         if !self.due(now) {
             return None;
         }
+        Some(self.control_with_snapshots(now, snaps))
+    }
+
+    /// One control decision at `now`, unconditionally: derive pressures
+    /// from the trackers + snapshots, the predictor boost, and the
+    /// routing headroom, then run [`Autopilot::control_at`].
+    pub fn control_with_snapshots(
+        &mut self,
+        now: f64,
+        snaps: &[ReplicaSnapshot],
+    ) -> Vec<PrecisionDirective> {
+        assert_eq!(snaps.len(), self.fsms.len(), "snapshot count mismatch");
         let pressures: Vec<f64> = (0..self.fsms.len())
             .map(|i| self.replica_pressure(now, i, &snaps[i]))
             .collect();
@@ -417,7 +451,24 @@ impl Autopilot {
             .predictor
             .boost(now, self.cfg.predictor_gain, self.cfg.predictor_floor_rate);
         let headroom: Vec<f64> = snaps.iter().map(slo_headroom).collect();
-        Some(self.control_at(now, &pressures, boost, &headroom))
+        self.control_at(now, &pressures, boost, &headroom)
+    }
+
+    /// Advance the surge predictor's bucket clock to `t` (idempotent;
+    /// the event core's predictor component drives this on exact bucket
+    /// boundaries so `rates()` stays current through arrival droughts).
+    pub fn roll_predictor_to(&mut self, t: f64) {
+        self.predictor.roll_to(t);
+    }
+
+    /// See [`SurgePredictor::next_boundary`].
+    pub fn next_predictor_boundary(&self) -> f64 {
+        self.predictor.next_boundary()
+    }
+
+    /// See [`SurgePredictor::boundary_after`].
+    pub fn predictor_boundary_after(&self, t: f64) -> f64 {
+        self.predictor.boundary_after(t)
     }
 
     /// The control law, on explicit inputs (this is the surface the

@@ -1,5 +1,5 @@
 //! Cluster-scale serving: N independent engine replicas behind one router,
-//! driven on a shared virtual clock.
+//! driven by the discrete-event core.
 //!
 //! Each replica is a full [`Engine`] — its own `KvCacheManager`,
 //! `Scheduler`, and `PrecisionController` — exactly as if it were a
@@ -19,10 +19,17 @@
 //!    backs up. Either way a surge costs FP16 quality only on the
 //!    replicas actually needed to absorb it.
 //!
-//! Scheduling is discrete-event (see `docs/ARCHITECTURE.md`): the driver
-//! always steps the replica whose local clock lags furthest, so the merged
-//! event order is the order a real cluster would produce, and the whole
-//! run is deterministic and benchmarkable — same workload, same report.
+//! Scheduling is discrete-event (see [`event_core`](super::event_core)
+//! and `docs/ARCHITECTURE.md` §"The Event Core"): arrival injection, the
+//! control loop, the predictor's bucket clock, and every replica engine
+//! are [`Component`]s drained from one deterministic min-heap, ties
+//! broken by component id. Idle replicas are parked — they cost zero
+//! work between their events (the run reports
+//! [`EventStats::idle_replica_events`], which must stay 0), so a
+//! scenario can drive hundreds of replicas over multi-hour traces. The
+//! retired lockstep loop survives as the `drive_lockstep` oracle behind
+//! [`ClusterRouter::run_lockstep`], and the equivalence suite pins the
+//! two drivers bit-for-bit.
 
 use std::collections::VecDeque;
 
@@ -31,6 +38,7 @@ use anyhow::{anyhow, Result};
 use super::autopilot::{Autopilot, AutopilotConfig, ModeStats};
 use super::backend::Backend;
 use super::engine::{CompletedRequest, Engine, EngineConfig};
+use super::event_core::{self, Component, ComponentId, QueueStats, Waker};
 use super::metrics::Metrics;
 use super::precision::{Precision, PrecisionController, PrecisionDirective};
 use super::request::Request;
@@ -48,6 +56,12 @@ pub struct SurgeConfig {
     pub release_frac: f64,
     /// Minimum seconds between stage changes (dwell against flapping).
     pub min_dwell_s: f64,
+    /// Spacing of staged-escalation control ticks on the virtual clock.
+    /// The event core schedules the control loop as its own component at
+    /// exactly this cadence (matching the autopilot's
+    /// `control_interval_s` default), instead of piggybacking on
+    /// whichever replica event happens to land nearby.
+    pub control_interval_s: f64,
 }
 
 impl Default for SurgeConfig {
@@ -56,6 +70,7 @@ impl Default for SurgeConfig {
             queue_per_stage: 3.0,
             release_frac: 0.5,
             min_dwell_s: 1.0,
+            control_interval_s: 0.25,
         }
     }
 }
@@ -65,11 +80,14 @@ impl SurgeConfig {
     /// never engages. Used by the static bench arms (a "static FP16"
     /// baseline must not be quietly demoted mid-run) and implied whenever
     /// [`ClusterConfig::autopilot`] is set (the autopilot owns forcing).
+    /// The control-loop component stays entirely unscheduled in this
+    /// state — disabled control costs zero events, not cheap events.
     pub fn disabled() -> SurgeConfig {
         SurgeConfig {
             queue_per_stage: f64::INFINITY,
             release_frac: 0.5,
             min_dwell_s: 0.0,
+            control_interval_s: 0.25,
         }
     }
 }
@@ -126,6 +144,33 @@ pub struct ReplicaReport {
     pub total_kv_blocks: usize,
 }
 
+/// Per-event accounting of one cluster run: how many times each
+/// component class was dispatched. Surfaced in the `--scale` bench JSON;
+/// the equivalence suite asserts the dispatch counters match across the
+/// heap driver and the lockstep oracle.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EventStats {
+    /// Arrival-injector dispatches (one per routed request).
+    pub arrival_events: usize,
+    /// Control-loop dispatches (staged escalation or autopilot).
+    pub control_events: usize,
+    /// Predictor bucket-clock dispatches (autopilot runs only).
+    pub predictor_events: usize,
+    /// Replica dispatches that ran or attempted an engine step.
+    pub replica_step_events: usize,
+    /// Replica dispatches whose engine step reported `ran == false`
+    /// (queued-but-unadmittable work; the replica re-arms at the next
+    /// arrival instead of spinning).
+    pub replica_blocked_wakes: usize,
+    /// Events dispatched to a replica with **no active work**. The event
+    /// core's contract is that this stays zero: idle replicas are
+    /// parked, not polled — the `--scale` arm asserts it at 100+
+    /// replicas.
+    pub idle_replica_events: usize,
+    /// Driver-level queue counters (scheduled / popped / stale).
+    pub queue: QueueStats,
+}
+
 /// Outcome of a full cluster run.
 pub struct ClusterReport {
     pub replicas: Vec<ReplicaReport>,
@@ -141,6 +186,14 @@ pub struct ClusterReport {
     /// Severity increases driven by the surge predictor before measured
     /// pressure crossed the threshold.
     pub pre_escalations: usize,
+    /// Virtual times of every control tick that fired. The event core
+    /// schedules these exactly `control_interval_s` apart from the first
+    /// arrival onward — including across arrival droughts where no
+    /// replica event lands on the same instant (the control-tick-skew
+    /// regression suite asserts the cadence).
+    pub control_ticks: Vec<f64>,
+    /// Per-event accounting for the run.
+    pub events: EventStats,
 }
 
 impl ClusterReport {
@@ -159,7 +212,19 @@ impl ClusterReport {
     }
 }
 
-/// N engine replicas + router + staged escalation on one virtual clock.
+// ---- component ids --------------------------------------------------
+// The id is the index in the component slice (the event core's tie-break
+// law), so the ordering below is part of the scheduler's semantics: at
+// one virtual instant, arrivals inject first, then the control loop
+// decides, then the predictor rolls, then replicas step in index order.
+const ARRIVALS: ComponentId = 0;
+const CONTROL: ComponentId = 1;
+const PREDICTOR: ComponentId = 2;
+/// Replica `i` is component `REPLICA0 + i`.
+const REPLICA0: ComponentId = 3;
+
+/// N engine replicas + router + cluster precision control, drained from
+/// the discrete-event core.
 pub struct ClusterRouter<B: Backend> {
     replicas: Vec<Engine<B>>,
     router: Router,
@@ -176,6 +241,18 @@ pub struct ClusterRouter<B: Backend> {
     /// The closed-loop controller (None = legacy staged escalation).
     autopilot: Option<Autopilot>,
     now: f64,
+    // ---- event-core run state ---------------------------------------
+    /// Workload not yet injected, sorted by arrival.
+    pending: VecDeque<Request>,
+    /// Completions accumulated across replica steps.
+    completions: Vec<CompletedRequest>,
+    /// Cached per-replica snapshots, refreshed at every mutation point
+    /// (submit / step / directive change) so routing a single arrival is
+    /// O(n) in the score scan but never rebuilds n engine scans. Debug
+    /// builds cross-check the cache against fresh snapshots.
+    snaps: Vec<ReplicaSnapshot>,
+    control_ticks: Vec<f64>,
+    events: EventStats,
 }
 
 impl<B: Backend> ClusterRouter<B> {
@@ -224,6 +301,11 @@ impl<B: Backend> ClusterRouter<B> {
             demotion_timeline: Vec::new(),
             autopilot,
             now: 0.0,
+            pending: VecDeque::new(),
+            completions: Vec::new(),
+            snaps: Vec::new(),
+            control_ticks: Vec::new(),
+            events: EventStats::default(),
         }
     }
 
@@ -231,7 +313,8 @@ impl<B: Backend> ClusterRouter<B> {
         self.replicas.len()
     }
 
-    /// The cluster clock (max of nothing yet run is 0).
+    /// The cluster clock: the virtual time of the last dispatched event
+    /// (0 before anything ran).
     pub fn now(&self) -> f64 {
         self.now
     }
@@ -278,11 +361,209 @@ impl<B: Backend> ClusterRouter<B> {
         (0..self.replicas.len()).map(|i| self.snapshot(i)).collect()
     }
 
+    fn refresh_snap(&mut self, i: usize) {
+        self.snaps[i] = self.snapshot(i);
+    }
+
+    fn refresh_all_snaps(&mut self) {
+        for i in 0..self.replicas.len() {
+            self.snaps[i] = self.snapshot(i);
+        }
+    }
+
+    /// Cross-check the snapshot cache against freshly built snapshots
+    /// (debug builds only). Both drivers run through the same cache, so
+    /// a missed refresh would be invisible to the equivalence suite —
+    /// this tripwire is what catches it.
+    fn debug_check_snaps(&self) {
+        debug_assert_eq!(self.snapshots(), self.snaps, "stale replica snapshot cache");
+    }
+
+    /// Whether the control loop is a live component at all: the
+    /// autopilot owns control when set; otherwise the staged escalation
+    /// must have reachable thresholds ([`SurgeConfig::disabled`] has
+    /// none, and then control costs zero events).
+    fn control_enabled(&self) -> bool {
+        self.autopilot.is_some() || self.cfg.surge.queue_per_stage.is_finite()
+    }
+
+    fn control_interval(&self) -> f64 {
+        match &self.autopilot {
+            Some(ap) => ap.config().control_interval_s,
+            None => self.cfg.surge.control_interval_s,
+        }
+    }
+
+    /// Any replica still holding active work (from the snapshot cache).
+    fn fleet_active(&self) -> bool {
+        self.snaps.iter().any(|s| s.active_requests > 0)
+    }
+
+    /// The control loop's next event after a tick at `now`: the exact
+    /// interval cadence while the run is live, parked once the workload
+    /// is fully injected and the fleet is idle (nothing left to govern).
+    fn next_control_after(&self, now: f64) -> Option<f64> {
+        if self.pending.is_empty() && !self.fleet_active() {
+            None
+        } else {
+            Some(now + self.control_interval())
+        }
+    }
+
+    // ---- event handlers (shared verbatim by both drivers) -----------
+
+    /// Inject the next pending arrival: route it, feed the predictor,
+    /// submit to the chosen replica, and wake that replica at its engine
+    /// clock (an idle replica's clock may lag; submission "wakes" it).
+    fn inject_arrival(&mut self, now: f64, wake: &mut Waker) {
+        self.now = now;
+        self.events.arrival_events += 1;
+        let r = self.pending.pop_front().expect("arrival event without a pending request");
+        debug_assert_eq!(r.arrival.to_bits(), now.to_bits());
+        self.debug_check_snaps();
+        let i = self.router.pick(&self.snaps);
+        self.routed[i] += 1;
+        if let Some(ap) = self.autopilot.as_mut() {
+            // the predictor sees the arrival-rate series online, exactly
+            // as routed — no lookahead into `pending`
+            ap.observe_arrival(r.arrival);
+        }
+        self.replicas[i].set_clock(r.arrival);
+        self.replicas[i].submit(r);
+        self.refresh_snap(i);
+        wake.wake_at(REPLICA0 + i, self.replicas[i].now());
+    }
+
+    /// One control tick at its scheduled virtual time: the autopilot's
+    /// control law, or the legacy staged escalation. Called without any
+    /// `due()` float gate — the event schedule *is* the cadence (the
+    /// pre-event-core driver gated on `due()` from whatever iteration
+    /// time happened to be near, which both skewed tick times and
+    /// skipped ticks entirely across arrival droughts).
+    fn control_tick(&mut self, now: f64) {
+        self.now = now;
+        self.events.control_events += 1;
+        self.control_ticks.push(now);
+        if self.autopilot.is_some() {
+            self.debug_check_snaps();
+            let snaps = &self.snaps;
+            let ap = self.autopilot.as_mut().expect("autopilot enabled");
+            let dirs = ap.control_with_snapshots(now, snaps);
+            let fp8 = dirs
+                .iter()
+                .filter(|d| **d == PrecisionDirective::Fp8)
+                .count();
+            for (e, d) in self.replicas.iter_mut().zip(&dirs) {
+                e.controller.apply_directive(*d);
+            }
+            self.refresh_all_snaps();
+            let changed = self
+                .demotion_timeline
+                .last()
+                .map(|&(_, k)| k != fp8)
+                .unwrap_or(fp8 > 0);
+            if changed {
+                self.demotion_timeline.push((now, fp8));
+            }
+        } else {
+            let due_soon = self
+                .pending
+                .iter()
+                .take_while(|r| r.arrival <= now + 0.02)
+                .count();
+            self.update_escalation(now, due_soon);
+        }
+    }
+
+    /// Advance the surge predictor's bucket clock (autopilot runs only).
+    /// Observationally neutral to the control law — `boost` rolls to
+    /// `now` itself — but keeps `rates()` reads current through arrival
+    /// droughts and gives the predictor its own event stream.
+    fn predictor_tick(&mut self, now: f64) -> Option<f64> {
+        self.now = now;
+        self.events.predictor_events += 1;
+        let live = !self.pending.is_empty() || self.fleet_active();
+        let ap = self
+            .autopilot
+            .as_mut()
+            .expect("predictor clock scheduled without an autopilot");
+        ap.roll_predictor_to(now);
+        if live {
+            Some(ap.next_predictor_boundary())
+        } else {
+            None
+        }
+    }
+
+    /// One replica event: step the engine at its own clock. Returns the
+    /// replica's next event time — its new clock while it holds active
+    /// work, a re-arm at the next arrival when blocked, `None` (parked)
+    /// when drained.
+    fn replica_tick(&mut self, i: usize, now: f64) -> Result<Option<f64>> {
+        self.now = now;
+        if self.replicas[i].is_idle() {
+            // contract tripwire: parked replicas must receive no events
+            self.events.idle_replica_events += 1;
+            return Ok(None);
+        }
+        self.events.replica_step_events += 1;
+        let t0 = self.replicas[i].now();
+        debug_assert_eq!(t0.to_bits(), now.to_bits());
+        // each replica will receive only ~1/N of the imminent arrivals,
+        // so feed its local controller the per-replica share — the full
+        // count would push every Dual controller over its queue
+        // threshold at once and defeat *selective* demotion (the
+        // cluster-wide signal lives in escalation)
+        let imminent = self
+            .pending
+            .iter()
+            .take_while(|r| r.arrival <= t0 + 0.02)
+            .count()
+            .div_ceil(self.replicas.len());
+        let step = self.replicas[i].step(imminent, &mut self.metrics[i])?;
+        if let Some(ap) = self.autopilot.as_mut() {
+            ap.observe_step(i, self.replicas[i].now(), &step);
+        }
+        if self.timelines[i]
+            .last()
+            .map(|&(_, last)| last != step.fp8)
+            .unwrap_or(true)
+        {
+            self.timelines[i].push((t0, step.fp8));
+        }
+        let next = if step.ran {
+            self.iterations[i] += 1;
+            self.completions.extend(step.completions);
+            let e = &self.replicas[i];
+            (e.active_requests() > 0).then(|| e.now())
+        } else {
+            // replica i has queued work it cannot admit and no decode in
+            // flight; only time (the next arrival) can change that
+            self.events.replica_blocked_wakes += 1;
+            match self.pending.front() {
+                Some(next_req) => {
+                    let t = next_req.arrival.max(t0 + 1e-4);
+                    self.replicas[i].set_clock(t);
+                    Some(self.replicas[i].now())
+                }
+                None => {
+                    return Err(anyhow!(
+                        "cluster deadlock: replica {i} has {} active requests \
+                         but nothing runnable and no arrivals left",
+                        self.replicas[i].active_requests()
+                    ));
+                }
+            }
+        };
+        self.refresh_snap(i);
+        Ok(next)
+    }
+
     /// Staged escalation: compare cluster queue pressure (queued requests
     /// per replica, including imminent arrivals) against the per-stage
     /// thresholds; demote/release the tail replicas accordingly. Replica 0
     /// is demoted last, so it keeps FP16 quality the longest.
-    fn update_escalation(&mut self, imminent_arrivals: usize) {
+    fn update_escalation(&mut self, now: f64, imminent_arrivals: usize) {
         let n = self.replicas.len();
         let queued: usize = self
             .replicas
@@ -303,166 +584,70 @@ impl<B: Backend> ClusterRouter<B> {
             // release one stage at a time
             want = self.stage - 1;
         }
-        if want != self.stage && self.now - self.stage_changed_at >= s.min_dwell_s {
+        if want != self.stage && now - self.stage_changed_at >= s.min_dwell_s {
             self.stage = want;
-            self.stage_changed_at = self.now;
+            self.stage_changed_at = now;
             let stage = self.stage;
             for (i, e) in self.replicas.iter_mut().enumerate() {
                 let demote = i >= n - stage;
                 e.controller
                     .set_forced(if demote { Some(Precision::Fp8) } else { None });
             }
-            self.demotion_timeline.push((self.now, stage));
+            self.refresh_all_snaps();
+            self.demotion_timeline.push((now, stage));
         }
     }
 
-    /// One autopilot control pass: tracker pressures + predictor →
-    /// ladder → per-replica FSM directives → controllers. Records the
-    /// FP8-pin count change points in `demotion_timeline` so autopilot
-    /// runs stay comparable with staged-escalation runs.
-    fn run_autopilot_control(&mut self) {
-        let now = self.now;
-        // snapshots are not free (per-replica queue/KV scans): skip them
-        // entirely on driver iterations where no control tick is due
-        if !self.autopilot.as_ref().expect("autopilot enabled").due(now) {
-            return;
+    // ---- run drivers ------------------------------------------------
+
+    fn begin(&mut self, mut workload: Vec<Request>) {
+        workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        self.pending = VecDeque::from(workload);
+        self.completions = Vec::new();
+        self.snaps = self.snapshots();
+        self.control_ticks = Vec::new();
+        self.events = EventStats::default();
+    }
+
+    fn components(n: usize) -> Vec<Box<dyn Component<Self>>> {
+        let mut cs: Vec<Box<dyn Component<Self>>> = vec![
+            Box::new(ArrivalInjector),
+            Box::new(ControlLoop),
+            Box::new(PredictorClock),
+        ];
+        for i in 0..n {
+            cs.push(Box::new(ReplicaComponent { i }));
         }
-        let snaps = self.snapshots();
-        let ap = self.autopilot.as_mut().expect("autopilot enabled");
-        let Some(dirs) = ap.maybe_control(now, &snaps) else {
-            return;
-        };
-        let fp8 = dirs
-            .iter()
-            .filter(|d| **d == PrecisionDirective::Fp8)
-            .count();
-        for (e, d) in self.replicas.iter_mut().zip(&dirs) {
-            e.controller.apply_directive(*d);
-        }
-        let changed = self
-            .demotion_timeline
-            .last()
-            .map(|&(_, k)| k != fp8)
-            .unwrap_or(fp8 > 0);
-        if changed {
-            self.demotion_timeline.push((now, fp8));
-        }
+        cs
     }
 
     /// Replay a whole workload (requests with arrival timestamps) across
     /// the cluster to completion and report per-replica + aggregate
-    /// metrics. Single-shot: build a fresh cluster per run.
-    pub fn run(&mut self, mut workload: Vec<Request>) -> Result<ClusterReport> {
-        workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        let mut pending: VecDeque<Request> = VecDeque::from(workload);
-        let mut completions: Vec<CompletedRequest> = Vec::new();
+    /// metrics. Drained through the event core's binary-heap driver;
+    /// single-shot — build a fresh cluster per run.
+    pub fn run(&mut self, workload: Vec<Request>) -> Result<ClusterReport> {
+        self.begin(workload);
+        let mut components = Self::components(self.replicas.len());
+        let queue_stats = event_core::drive(&mut components, self)?;
+        self.events.queue = queue_stats;
+        self.build_report()
+    }
 
-        loop {
-            // ---- cluster clock: the lagging active replica, else the
-            // next arrival ------------------------------------------------
-            let active_min = self
-                .replicas
-                .iter()
-                .filter(|e| e.active_requests() > 0)
-                .map(|e| e.now())
-                .fold(f64::INFINITY, f64::min);
-            self.now = if active_min.is_finite() {
-                active_min
-            } else {
-                match pending.front() {
-                    Some(next) => next.arrival,
-                    None => break, // all drained
-                }
-            };
+    /// [`ClusterRouter::run`] through the naive-scan lockstep oracle
+    /// instead of the binary heap — identical component semantics,
+    /// O(components) scan per event. Test-only surface (the equivalence
+    /// suite pins `run` against it bit-for-bit); hidden from docs so
+    /// nobody reaches for it in production code.
+    #[doc(hidden)]
+    pub fn run_lockstep(&mut self, workload: Vec<Request>) -> Result<ClusterReport> {
+        self.begin(workload);
+        let mut components = Self::components(self.replicas.len());
+        let queue_stats = event_core::drive_lockstep(&mut components, self)?;
+        self.events.queue = queue_stats;
+        self.build_report()
+    }
 
-            // ---- route arrivals due by the cluster clock ---------------
-            while pending
-                .front()
-                .map(|r| r.arrival <= self.now)
-                .unwrap_or(false)
-            {
-                let r = pending.pop_front().unwrap();
-                let snaps = self.snapshots();
-                let i = self.router.pick(&snaps);
-                self.routed[i] += 1;
-                if let Some(ap) = self.autopilot.as_mut() {
-                    // the predictor sees the arrival-rate series online,
-                    // exactly as routed — no lookahead into `pending`
-                    ap.observe_arrival(r.arrival);
-                }
-                // an idle replica's clock may lag; it "wakes" at arrival
-                self.replicas[i].set_clock(r.arrival);
-                self.replicas[i].submit(r);
-            }
-
-            // ---- precision control -------------------------------------
-            if self.autopilot.is_some() {
-                self.run_autopilot_control();
-            } else {
-                let due_soon = pending
-                    .iter()
-                    .take_while(|r| r.arrival <= self.now + 0.02)
-                    .count();
-                self.update_escalation(due_soon);
-            }
-
-            // ---- step the lagging replica ------------------------------
-            let Some(i) = (0..self.replicas.len())
-                .filter(|&i| self.replicas[i].active_requests() > 0)
-                .min_by(|&a, &b| {
-                    self.replicas[a]
-                        .now()
-                        .partial_cmp(&self.replicas[b].now())
-                        .unwrap()
-                })
-            else {
-                continue; // arrivals were all in the future; clock moved
-            };
-            let t0 = self.replicas[i].now();
-            // each replica will receive only ~1/N of the imminent
-            // arrivals, so feed its local controller the per-replica
-            // share — the full count would push every Dual controller
-            // over its queue threshold at once and defeat *selective*
-            // demotion (the cluster-wide signal lives in escalation)
-            let imminent = pending
-                .iter()
-                .take_while(|r| r.arrival <= t0 + 0.02)
-                .count()
-                .div_ceil(self.replicas.len());
-            let step = self.replicas[i].step(imminent, &mut self.metrics[i])?;
-            if let Some(ap) = self.autopilot.as_mut() {
-                ap.observe_step(i, self.replicas[i].now(), &step);
-            }
-            if self.timelines[i]
-                .last()
-                .map(|&(_, last)| last != step.fp8)
-                .unwrap_or(true)
-            {
-                self.timelines[i].push((t0, step.fp8));
-            }
-            if step.ran {
-                self.iterations[i] += 1;
-                completions.extend(step.completions);
-            } else {
-                // replica i has queued work it cannot admit and no decode
-                // in flight; only time (the next arrival) can change that
-                match pending.front() {
-                    Some(next) => {
-                        let t = next.arrival.max(t0 + 1e-4);
-                        self.replicas[i].set_clock(t);
-                    }
-                    None => {
-                        return Err(anyhow!(
-                            "cluster deadlock: replica {i} has {} active requests \
-                             but nothing runnable and no arrivals left",
-                            self.replicas[i].active_requests()
-                        ));
-                    }
-                }
-            }
-        }
-
-        // ---- reports ------------------------------------------------
+    fn build_report(&mut self) -> Result<ClusterReport> {
         if let Some(ap) = self.autopilot.as_mut() {
             ap.finish(self.now);
         }
@@ -496,7 +681,7 @@ impl<B: Backend> ClusterRouter<B> {
         Ok(ClusterReport {
             replicas,
             aggregate,
-            completions,
+            completions: std::mem::take(&mut self.completions),
             demotion_timeline: self.demotion_timeline.clone(),
             ladder_timeline: self
                 .autopilot
@@ -508,7 +693,96 @@ impl<B: Backend> ClusterRouter<B> {
                 .as_ref()
                 .map(|ap| ap.pre_escalations)
                 .unwrap_or(0),
+            control_ticks: std::mem::take(&mut self.control_ticks),
+            events: self.events,
         })
+    }
+}
+
+// ---- the cluster's components ---------------------------------------
+
+/// Component 0: pops one pending request per event at its arrival time.
+/// Same-time arrivals drain back-to-back before anything else at that
+/// instant (id 0 wins every tie), so routing still sees arrival order.
+struct ArrivalInjector;
+
+impl<B: Backend> Component<ClusterRouter<B>> for ArrivalInjector {
+    fn next_tick(&self, sys: &ClusterRouter<B>) -> Option<f64> {
+        sys.pending.front().map(|r| r.arrival)
+    }
+    fn tick(
+        &mut self,
+        now: f64,
+        sys: &mut ClusterRouter<B>,
+        wake: &mut Waker,
+    ) -> Result<Option<f64>> {
+        sys.inject_arrival(now, wake);
+        Ok(sys.pending.front().map(|r| r.arrival))
+    }
+}
+
+/// Component 1: the precision control loop (autopilot or staged
+/// escalation), first firing with the first arrival and then at exactly
+/// `control_interval_s` spacing while the run is live.
+struct ControlLoop;
+
+impl<B: Backend> Component<ClusterRouter<B>> for ControlLoop {
+    fn next_tick(&self, sys: &ClusterRouter<B>) -> Option<f64> {
+        if !sys.control_enabled() {
+            return None;
+        }
+        sys.pending.front().map(|r| r.arrival)
+    }
+    fn tick(
+        &mut self,
+        now: f64,
+        sys: &mut ClusterRouter<B>,
+        _wake: &mut Waker,
+    ) -> Result<Option<f64>> {
+        sys.control_tick(now);
+        Ok(sys.next_control_after(now))
+    }
+}
+
+/// Component 2: the surge predictor's one-second bucket clock (autopilot
+/// runs only; parked otherwise).
+struct PredictorClock;
+
+impl<B: Backend> Component<ClusterRouter<B>> for PredictorClock {
+    fn next_tick(&self, sys: &ClusterRouter<B>) -> Option<f64> {
+        let ap = sys.autopilot.as_ref()?;
+        sys.pending
+            .front()
+            .map(|r| ap.predictor_boundary_after(r.arrival))
+    }
+    fn tick(
+        &mut self,
+        now: f64,
+        sys: &mut ClusterRouter<B>,
+        _wake: &mut Waker,
+    ) -> Result<Option<f64>> {
+        Ok(sys.predictor_tick(now))
+    }
+}
+
+/// Components 3..3+N: one per replica engine, scheduled at the engine's
+/// own clock whenever it holds active work, parked otherwise.
+struct ReplicaComponent {
+    i: usize,
+}
+
+impl<B: Backend> Component<ClusterRouter<B>> for ReplicaComponent {
+    fn next_tick(&self, sys: &ClusterRouter<B>) -> Option<f64> {
+        let e = &sys.replicas[self.i];
+        (!e.is_idle()).then(|| e.now())
+    }
+    fn tick(
+        &mut self,
+        now: f64,
+        sys: &mut ClusterRouter<B>,
+        _wake: &mut Waker,
+    ) -> Result<Option<f64>> {
+        sys.replica_tick(self.i, now)
     }
 }
 
@@ -677,6 +951,7 @@ mod tests {
                 queue_per_stage: 2.0,
                 release_frac: 0.5,
                 min_dwell_s: 0.0,
+                control_interval_s: 0.25,
             },
             autopilot: None,
         };
@@ -780,6 +1055,8 @@ mod tests {
         assert_eq!(a.ladder_timeline, b.ladder_timeline);
         assert_eq!(a.pre_escalations, b.pre_escalations);
         assert_eq!(a.aggregate.mode_switches, b.aggregate.mode_switches);
+        assert_eq!(a.control_ticks, b.control_ticks);
+        assert_eq!(a.events, b.events);
         for (x, y) in a.replicas.iter().zip(&b.replicas) {
             assert_eq!(x.directive_timeline, y.directive_timeline);
         }
@@ -799,7 +1076,7 @@ mod tests {
         };
         let mut one = run_with(1);
         let mut four = run_with(4);
-        assert_eq!(one.aggregate.completed, 4 * 2); // sanity: same workload
+        assert_eq!(one.aggregate.completed, 8);
         assert_eq!(four.aggregate.completed, 8);
         let s1 = one.aggregate.ttft_summary();
         let s4 = four.aggregate.ttft_summary();
@@ -809,5 +1086,77 @@ mod tests {
             s4.max,
             s1.max
         );
+    }
+
+    /// The tentpole invariant, pinned in-module on the cheap backend
+    /// (the SimBackend version lives in `rust/tests/event_core_props.rs`):
+    /// the heap driver and the lockstep oracle produce bit-identical
+    /// cluster runs.
+    #[test]
+    fn event_driver_matches_lockstep_oracle() {
+        let make = || {
+            let cfg = ClusterConfig {
+                policy: RoutingPolicy::SloHeadroom,
+                engine: sim_engine_cfg(PrecisionPolicy::Dual),
+                surge: SurgeConfig::disabled(),
+                autopilot: Some(AutopilotConfig::default()),
+            };
+            cluster(3, 0.008, cfg)
+        };
+        let mut workload = burst(10, 0.0);
+        workload.extend(
+            (0..8).map(|i| Request::new(100 + i as u64, vec![1; 16], 12, 0.3 + 0.2 * i as f64)),
+        );
+        let a = make().run(workload.clone()).unwrap();
+        let b = make().run_lockstep(workload).unwrap();
+        let ids = |r: &ClusterReport| -> Vec<u64> { r.completions.iter().map(|c| c.id).collect() };
+        assert_eq!(ids(&a), ids(&b));
+        let bits = |xs: &[f64]| -> Vec<u64> { xs.iter().map(|x| x.to_bits()).collect() };
+        assert_eq!(bits(&a.control_ticks), bits(&b.control_ticks));
+        assert_eq!(a.ladder_timeline, b.ladder_timeline);
+        assert_eq!(a.aggregate.completed, b.aggregate.completed);
+        assert_eq!(
+            a.aggregate.total_output_tokens,
+            b.aggregate.total_output_tokens
+        );
+        for (x, y) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(x.routed, y.routed);
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.directive_timeline, y.directive_timeline);
+        }
+        // dispatch counters agree (heap lazy deletions excepted)
+        assert_eq!(a.events.arrival_events, b.events.arrival_events);
+        assert_eq!(a.events.control_events, b.events.control_events);
+        assert_eq!(a.events.predictor_events, b.events.predictor_events);
+        assert_eq!(a.events.replica_step_events, b.events.replica_step_events);
+        assert_eq!(a.events.queue.popped, b.events.queue.popped);
+    }
+
+    /// Idle replicas are parked, not polled: a one-request workload on a
+    /// wide cluster must dispatch zero events to the replicas that never
+    /// receive work.
+    #[test]
+    fn idle_replicas_cost_zero_events() {
+        let cfg = ClusterConfig {
+            policy: RoutingPolicy::LeastLoadedKv,
+            engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
+            surge: SurgeConfig::disabled(),
+            autopilot: None,
+        };
+        let mut c = cluster(8, 0.002, cfg);
+        let report = c.run(vec![Request::new(1, vec![1; 16], 8, 0.0)]).unwrap();
+        assert_eq!(report.aggregate.completed, 1);
+        assert_eq!(report.events.idle_replica_events, 0);
+        assert_eq!(report.events.arrival_events, 1);
+        // control + predictor are disabled here, so every popped event
+        // is the arrival or a step of the one working replica
+        assert_eq!(report.events.control_events, 0);
+        assert_eq!(report.events.predictor_events, 0);
+        assert_eq!(
+            report.events.queue.popped as usize,
+            1 + report.events.replica_step_events
+        );
+        let working: usize = report.replicas.iter().filter(|r| r.iterations > 0).count();
+        assert_eq!(working, 1, "exactly one replica should ever run");
     }
 }

@@ -134,6 +134,13 @@ impl<B: Backend> Engine<B> {
         self.requests.iter().filter(|r| !r.is_finished()).count()
     }
 
+    /// No unfinished work at all — the event core parks idle replicas
+    /// (no scheduled event) until an arrival wakes them, and counts any
+    /// event delivered to an idle replica as a contract violation.
+    pub fn is_idle(&self) -> bool {
+        self.active_requests() == 0
+    }
+
     /// Requests waiting for KV capacity: queued for admission,
     /// mid-prefill, or preempted to the host tier — the controller's
     /// queue-pressure signal, and the router's load signal.

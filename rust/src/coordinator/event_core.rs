@@ -1,0 +1,370 @@
+//! The event core: a deterministic discrete-event scheduler for the
+//! cluster layer.
+//!
+//! The cluster used to advance every replica engine in lockstep on a
+//! shared virtual clock — each driver iteration scanned the whole fleet
+//! to find the lagging replica, so idle replicas burned driver work and
+//! scenarios topped out at a handful of replicas. This module replaces
+//! that loop with the classic discrete-event design (the embedded_emul
+//! execution engine is the exemplar): everything that can act — replica
+//! engines, the control loop, the surge predictor's bucket clock, trace
+//! arrival injection — is a [`Component`] with a `next_tick()` /
+//! `tick(now)` surface, drained from one binary-heap [`EventQueue`].
+//!
+//! Determinism is a contract, not an accident:
+//!
+//! * **Ordering law** — events pop in ascending `(time, component id)`
+//!   order. Ties at the same virtual instant always resolve to the
+//!   lowest component id, regardless of insertion order, so a run is
+//!   bit-reproducible (`f64::total_cmp` on time; no NaNs admitted).
+//! * **Clock monotonicity** — scheduling an event before the last
+//!   popped time is a bug and panics ("no time travel").
+//! * **Idle costs zero** — a component with nothing scheduled is simply
+//!   absent from the heap. It receives no ticks, burns no scans, and is
+//!   woken only by an explicit [`Waker::wake_at`] from another
+//!   component's tick (e.g. an arrival routed to a parked replica).
+//!
+//! Two drivers share the exact same component/waker semantics:
+//! [`drive`] (the binary heap, production) and [`drive_lockstep`] (a
+//! naive O(n) scan per event, the test oracle). The equivalence suite
+//! (`rust/tests/event_core_props.rs`) pins them bit-for-bit against
+//! each other on full cluster scenarios.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+/// Stable identity of a component: its index in the driver's component
+/// slice. The heap's tie-break law makes this id the *priority* at equal
+/// timestamps, so component order is part of the scheduler's semantics.
+pub type ComponentId = usize;
+
+/// One schedulable actor in the discrete-event simulation.
+///
+/// `S` is the shared system state (for the cluster,
+/// `ClusterRouter<B>` itself) — components stay thin: identity plus the
+/// two scheduling hooks, with the actual mutation logic living on `S`.
+pub trait Component<S> {
+    /// The component's first event time on an empty queue, or `None` to
+    /// start parked (idle components cost nothing until woken).
+    fn next_tick(&self, sys: &S) -> Option<f64>;
+
+    /// Handle this component's event at virtual time `now`. Return the
+    /// component's own next event time (`None` parks it); request
+    /// cross-component wake-ups through `wake` — never by returning
+    /// another component's time.
+    fn tick(&mut self, now: f64, sys: &mut S, wake: &mut Waker) -> Result<Option<f64>>;
+}
+
+/// Cross-component wake requests gathered during one tick and applied
+/// by the driver after it. `wake_at(c, t)` means "ensure component `c`
+/// has an event no later than `t`": a parked component is scheduled at
+/// `t`, an earlier existing event wins, a later one is pulled forward.
+#[derive(Debug, Default)]
+pub struct Waker {
+    requests: Vec<(ComponentId, f64)>,
+}
+
+impl Waker {
+    pub fn wake_at(&mut self, c: ComponentId, at: f64) {
+        self.requests.push((c, at));
+    }
+
+    fn drain(&mut self) -> std::vec::Drain<'_, (ComponentId, f64)> {
+        self.requests.drain(..)
+    }
+}
+
+/// Driver-level event accounting (surfaced in the cluster's bench JSON).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QueueStats {
+    /// Events actually (re)scheduled (no-op `wake_at`s don't count).
+    pub scheduled: u64,
+    /// Events dispatched to a component tick.
+    pub popped: u64,
+    /// Lazily-deleted heap entries skipped on pop (an earlier `wake_at`
+    /// superseded them). The naive-scan oracle never produces these.
+    pub stale: u64,
+}
+
+/// One heap entry. Ordering is *inverted* (earliest time, then lowest
+/// id, compares greatest) so Rust's max-heap pops the minimum; `gen`
+/// implements lazy deletion and takes no part in the ordering.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    at: f64,
+    id: ComponentId,
+    gen: u64,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smaller (at, id) is "greater" for the max-heap
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+/// The deterministic min-heap event queue: at most one live event per
+/// component (a `sched` mirror holds its time + generation; superseded
+/// heap entries are skipped lazily on pop).
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    /// Per-component live event: `(time, generation)`.
+    sched: Vec<Option<(f64, u64)>>,
+    next_gen: u64,
+    last_popped: f64,
+    pub stats: QueueStats,
+}
+
+impl EventQueue {
+    pub fn new(n_components: usize) -> EventQueue {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            sched: vec![None; n_components],
+            next_gen: 0,
+            last_popped: f64::NEG_INFINITY,
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// Ensure component `id` has an event no later than `at`. Panics on
+    /// NaN and on time travel (scheduling before the last popped time).
+    pub fn schedule(&mut self, id: ComponentId, at: f64) {
+        assert!(!at.is_nan(), "component {id}: NaN event time");
+        assert!(
+            at >= self.last_popped,
+            "time travel: component {id} scheduled at {at} after the \
+             clock reached {}",
+            self.last_popped
+        );
+        if let Some((existing, _)) = self.sched[id] {
+            if existing <= at {
+                return; // an earlier (or equal) event already covers this
+            }
+        }
+        self.next_gen += 1;
+        self.sched[id] = Some((at, self.next_gen));
+        self.heap.push(Entry {
+            at,
+            id,
+            gen: self.next_gen,
+        });
+        self.stats.scheduled += 1;
+    }
+
+    /// Pop the next live event in `(time, id)` order; `None` drains.
+    pub fn pop_next(&mut self) -> Option<(f64, ComponentId)> {
+        while let Some(e) = self.heap.pop() {
+            match self.sched[e.id] {
+                Some((at, gen)) if gen == e.gen => {
+                    debug_assert_eq!(at.to_bits(), e.at.to_bits());
+                    self.sched[e.id] = None;
+                    debug_assert!(e.at >= self.last_popped, "heap order violated");
+                    self.last_popped = e.at;
+                    self.stats.popped += 1;
+                    return Some((e.at, e.id));
+                }
+                _ => self.stats.stale += 1, // superseded by a later schedule
+            }
+        }
+        None
+    }
+
+    /// The component's currently scheduled event time, if any.
+    pub fn scheduled_at(&self, id: ComponentId) -> Option<f64> {
+        self.sched[id].map(|(at, _)| at)
+    }
+
+    /// The time of the most recently popped event.
+    pub fn clock(&self) -> f64 {
+        self.last_popped
+    }
+}
+
+/// Drain the system to quiescence through the binary-heap queue: seed
+/// each component's `next_tick`, then pop-and-tick in `(time, id)` order
+/// until no component has an event scheduled.
+pub fn drive<S>(components: &mut [Box<dyn Component<S> + '_>], sys: &mut S) -> Result<QueueStats> {
+    let mut q = EventQueue::new(components.len());
+    for (id, c) in components.iter().enumerate() {
+        if let Some(at) = c.next_tick(sys) {
+            q.schedule(id, at);
+        }
+    }
+    let mut wake = Waker::default();
+    while let Some((now, id)) = q.pop_next() {
+        let next = components[id].tick(now, sys, &mut wake)?;
+        if let Some(at) = next {
+            q.schedule(id, at);
+        }
+        for (c, at) in wake.drain() {
+            q.schedule(c, at);
+        }
+    }
+    Ok(q.stats)
+}
+
+/// The retired lockstep driver, kept as the equivalence oracle: a naive
+/// O(n) scan over every component's scheduled time per event, applying
+/// the identical `(time, lowest id)` dispatch law and the identical
+/// tick/waker semantics. Slow by design — its value is that it is
+/// obviously correct, so `drive` can be pinned against it bit-for-bit
+/// (the PR-5 dense-gather-oracle pattern).
+pub fn drive_lockstep<S>(
+    components: &mut [Box<dyn Component<S> + '_>],
+    sys: &mut S,
+) -> Result<QueueStats> {
+    let mut sched: Vec<Option<f64>> = components.iter().map(|c| c.next_tick(sys)).collect();
+    let mut stats = QueueStats::default();
+    let mut last_popped = f64::NEG_INFINITY;
+    stats.scheduled = sched.iter().flatten().count() as u64;
+    let mut wake = Waker::default();
+    loop {
+        // earliest time wins; the first minimal index is the lowest id
+        let mut pick: Option<(f64, ComponentId)> = None;
+        for (id, s) in sched.iter().enumerate() {
+            if let Some(at) = *s {
+                if pick.map(|(best, _)| at < best).unwrap_or(true) {
+                    pick = Some((at, id));
+                }
+            }
+        }
+        let Some((now, id)) = pick else {
+            return Ok(stats);
+        };
+        assert!(now >= last_popped, "time travel in the lockstep oracle");
+        last_popped = now;
+        sched[id] = None;
+        stats.popped += 1;
+        let next = components[id].tick(now, sys, &mut wake)?;
+        if let Some(at) = next {
+            assert!(!at.is_nan() && at >= now, "component {id} scheduled the past");
+            sched[id] = Some(at);
+            stats.scheduled += 1;
+        }
+        for (c, at) in wake.drain() {
+            assert!(!at.is_nan() && at >= now, "wake_at({c}) into the past");
+            if sched[c].map(|existing| at < existing).unwrap_or(true) {
+                sched[c] = Some(at);
+                stats.scheduled += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_then_id_order_regardless_of_insertion() {
+        let mut q = EventQueue::new(5);
+        // insertion order deliberately scrambled; ids 1/3/0 tie at t=2.0
+        for (id, at) in [(4usize, 9.0f64), (1, 2.0), (2, 5.0), (3, 2.0), (0, 2.0)] {
+            q.schedule(id, at);
+        }
+        let mut popped = Vec::new();
+        while let Some(e) = q.pop_next() {
+            popped.push(e);
+        }
+        assert_eq!(
+            popped,
+            vec![(2.0, 0), (2.0, 1), (2.0, 3), (5.0, 2), (9.0, 4)]
+        );
+        assert_eq!(q.stats.popped, 5);
+        assert_eq!(q.stats.stale, 0);
+    }
+
+    #[test]
+    fn wake_semantics_pull_forward_never_push_back() {
+        let mut q = EventQueue::new(1);
+        q.schedule(0, 5.0);
+        q.schedule(0, 7.0); // later: no-op
+        assert_eq!(q.scheduled_at(0), Some(5.0));
+        q.schedule(0, 3.0); // earlier: supersedes
+        assert_eq!(q.scheduled_at(0), Some(3.0));
+        assert_eq!(q.pop_next(), Some((3.0, 0)));
+        assert_eq!(q.pop_next(), None, "superseded entry must be skipped");
+        assert_eq!(q.stats.stale, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "time travel")]
+    fn scheduling_the_past_panics() {
+        let mut q = EventQueue::new(2);
+        q.schedule(0, 10.0);
+        q.pop_next();
+        q.schedule(1, 9.0);
+    }
+
+    /// Toy component for driver-parity checks: fires at fixed offsets,
+    /// appending `(time, id)` to the shared log.
+    struct Beeper {
+        id: ComponentId,
+        times: Vec<f64>,
+        next: usize,
+    }
+
+    impl Component<Vec<(f64, ComponentId)>> for Beeper {
+        fn next_tick(&self, _sys: &Vec<(f64, ComponentId)>) -> Option<f64> {
+            self.times.first().copied()
+        }
+        fn tick(
+            &mut self,
+            now: f64,
+            sys: &mut Vec<(f64, ComponentId)>,
+            _wake: &mut Waker,
+        ) -> Result<Option<f64>> {
+            sys.push((now, self.id));
+            self.next += 1;
+            Ok(self.times.get(self.next).copied())
+        }
+    }
+
+    fn beepers(spec: &[&[f64]]) -> Vec<Box<dyn Component<Vec<(f64, ComponentId)>>>> {
+        spec.iter()
+            .enumerate()
+            .map(|(id, times)| {
+                Box::new(Beeper {
+                    id,
+                    times: times.to_vec(),
+                    next: 0,
+                }) as Box<dyn Component<Vec<(f64, ComponentId)>>>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn heap_and_lockstep_drivers_agree_on_interleaved_components() {
+        let spec: &[&[f64]] = &[
+            &[0.0, 1.0, 1.0, 4.0],
+            &[0.0, 2.5],
+            &[],           // starts parked, never woken: zero ticks
+            &[1.0, 1.0, 3.0],
+        ];
+        let mut log_heap = Vec::new();
+        drive(&mut beepers(spec), &mut log_heap).unwrap();
+        let mut log_scan = Vec::new();
+        drive_lockstep(&mut beepers(spec), &mut log_scan).unwrap();
+        assert_eq!(log_heap, log_scan);
+        // ties at t=0.0 and t=1.0 resolve to the lowest id in both
+        assert_eq!(log_heap[0], (0.0, 0));
+        assert_eq!(log_heap[1], (0.0, 1));
+        assert!(!log_heap.iter().any(|&(_, id)| id == 2), "parked = no ticks");
+    }
+}

@@ -17,7 +17,9 @@
 //!   H100 model and advances a virtual clock (the performance figures).
 //!
 //! Above the single engine sits the **cluster layer**: [`cluster`] drives
-//! N replica engines on one shared virtual clock, [`router`] picks a
+//! N replica engines as components of a deterministic discrete-event
+//! scheduler ([`event_core`]: min-heap event queue, ties broken by
+//! component id, idle replicas parked at zero cost), [`router`] picks a
 //! replica per arriving request (round-robin / least-loaded-KV /
 //! SLO-headroom / seeded-random), and the closed-loop [`autopilot`]
 //! (sliding-window SLO tracking, per-replica FP16 → Mixed → FP8
@@ -36,11 +38,13 @@ pub mod backend;
 pub mod engine;
 pub mod router;
 pub mod autopilot;
+pub mod event_core;
 pub mod cluster;
 pub mod server;
 
 pub use autopilot::{Autopilot, AutopilotConfig, ModeStats, SloTracker, SurgePredictor};
-pub use cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
+pub use cluster::{ClusterConfig, ClusterReport, ClusterRouter, EventStats, SurgeConfig};
+pub use event_core::{Component, ComponentId, EventQueue, QueueStats, Waker};
 pub use engine::{Engine, EngineConfig, EngineStep};
 pub use kv::{KvCacheManager, KvGeometry, KvPressureConfig};
 pub use precision::{PrecisionDirective, PrecisionPolicy, SloConfig};

@@ -40,7 +40,11 @@ pub enum RoutingPolicy {
 }
 
 /// What the router sees of one replica at dispatch time.
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// `PartialEq` because the cluster's event-core driver keeps a snapshot
+/// cache and cross-checks it against freshly built snapshots in debug
+/// builds.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ReplicaSnapshot {
     /// Free device budget in f32-equivalent blocks (FP8 demotion shows up
     /// here: a replica storing cold KV at half the bytes has more free).

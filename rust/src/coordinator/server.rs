@@ -58,10 +58,12 @@ pub fn engine_worker<B: Backend>(mut engine: Engine<B>, jobs: mpsc::Receiver<Job
 /// [`engine_worker`] plus a cluster-control side channel: before each
 /// batch the worker drains `directives` and applies the latest one to its
 /// [`PrecisionController`](super::precision::PrecisionController) — the
-/// live-serving (wall-clock) analogue of the virtual-clock autopilot loop
-/// in [`cluster`](super::cluster). `repro serve --autopilot` feeds this
+/// live-serving (wall-clock) analogue of the event-core control loop in
+/// [`cluster`](super::cluster). `repro serve --autopilot` feeds this
 /// from a monitor thread that runs `Autopilot::control_at` over the
-/// frontend's jobs-in-flight counts.
+/// frontend's jobs-in-flight counts; unlike the virtual-clock driver it
+/// keeps the `due()` interval gate, because wall-clock polling has no
+/// event schedule to lean on.
 pub fn engine_worker_controlled<B: Backend>(
     engine: &mut Engine<B>,
     jobs: mpsc::Receiver<Job>,

@@ -9,8 +9,12 @@
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
 //!        [--json FILE]       also write the reports as machine-readable
 //!                            JSON (perf-trajectory tracking across PRs)
-//!        [--quick]           gemm/attention/autopilot: reduced scenario,
-//!                            CI budget
+//!        [--quick]           gemm/attention/autopilot/cluster: reduced
+//!                            scenario, CI budget
+//!        [--scale]           cluster only: the discrete-event scale arm
+//!                            (100+ replicas over a multi-hour Azure day
+//!                            slice, per-event accounting; --quick keeps
+//!                            the replica floor on a 15-min slice)
 //!        [--update-trajectory]
 //!                            gemm only: rewrite GEMM_BENCH.json from this
 //!                            run's measured GFLOP/s
@@ -53,7 +57,7 @@ fn main() {
         _ => {
             eprintln!(
                 "nestedfp repro — usage:\n  \
-                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|attention|cluster|kvcache|autopilot|all> [--json FILE] [--quick]\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|attention|cluster|kvcache|autopilot|all> [--json FILE] [--quick] [--scale]\n  \
                  repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N] [--autopilot]\n  \
                  repro analyze\n  \
                  repro gemm --m M --n N --k K [--format ...]"
@@ -97,7 +101,13 @@ fn run_one(
         "fig10" => fig8::fig10()?,
         "fig13" => vec![fig7::fig13()],
         "gemm" => gemmbench::gemm_bench(&gemm_opts)?,
-        "cluster" => vec![cluster::cluster_scaling()?],
+        "cluster" => {
+            if gemm_opts.scale {
+                vec![cluster::cluster_scale(gemm_opts.quick)?]
+            } else {
+                vec![cluster::cluster_scaling()?]
+            }
+        }
         "kvcache" => vec![kvcache::kvcache_pressure()?, kvcache::codec_error()],
         other => anyhow::bail!("unknown experiment '{other}'"),
     })
@@ -141,6 +151,7 @@ fn cmd_reproduce(args: &Args) -> i32 {
     let gemm_opts = BenchOpts {
         quick: args.flag("quick"),
         update_trajectory: args.flag("update-trajectory"),
+        scale: args.flag("scale"),
     };
     let mut collected: Vec<(String, Vec<Report>)> = Vec::new();
     let mut run_and_print = |e: &str| -> anyhow::Result<()> {

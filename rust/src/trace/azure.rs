@@ -130,6 +130,18 @@ pub fn downscale(rates: &[f64], factor: f64) -> Vec<f64> {
     rates.iter().map(|r| r * factor).collect()
 }
 
+/// An arbitrary multi-hour window of the day trace: `len_s` seconds of
+/// per-second rates from `start_s`, rebased to timestamp 0 and clamped
+/// to the series length. This is the `--scale` bench's workload source —
+/// a 100+-replica fleet replaying hours of the diurnal curve (bursty
+/// minutes included) rather than the few minutes around one spike.
+pub fn day_slice(cfg: &AzureTraceConfig, start_s: usize, len_s: usize) -> Vec<f64> {
+    let rates = generate_rate_series(cfg);
+    let start = start_s.min(rates.len());
+    let end = (start + len_s).min(rates.len());
+    rates[start..end].to_vec()
+}
+
 /// A time-shifted window of the day trace: `len_s` seconds of per-second
 /// rates starting `lead_s` seconds *before* `center_s`. The autopilot
 /// bench replays the window around the busiest minute (18:12) — a calm
@@ -141,10 +153,7 @@ pub fn surge_slice(
     lead_s: usize,
     len_s: usize,
 ) -> Vec<f64> {
-    let rates = generate_rate_series(cfg);
-    let start = center_s.saturating_sub(lead_s).min(rates.len());
-    let end = (start + len_s).min(rates.len());
-    rates[start..end].to_vec()
+    day_slice(cfg, center_s.saturating_sub(lead_s), len_s)
 }
 
 #[cfg(test)]
@@ -186,6 +195,29 @@ mod tests {
     fn downscale_scales() {
         let rates = vec![10.0, 50.0];
         assert_eq!(downscale(&rates, 0.2), vec![2.0, 10.0]);
+    }
+
+    #[test]
+    fn day_slice_windows_and_clamps() {
+        let cfg = AzureTraceConfig {
+            seconds: 3600,
+            ..Default::default()
+        };
+        let full = generate_rate_series(&cfg);
+        // an interior window is exactly the corresponding span, rebased
+        let mid = day_slice(&cfg, 600, 1200);
+        assert_eq!(mid.len(), 1200);
+        assert_eq!(mid[..], full[600..1800]);
+        // windows clamp to the series instead of panicking
+        let tail = day_slice(&cfg, 3000, 10_000);
+        assert_eq!(tail.len(), 600);
+        assert_eq!(tail[..], full[3000..]);
+        assert!(day_slice(&cfg, 10_000, 100).is_empty());
+        // surge_slice is a day_slice with a lead offset
+        assert_eq!(
+            surge_slice(&cfg, 900, 300, 120),
+            day_slice(&cfg, 600, 120)
+        );
     }
 
     #[test]

@@ -4,5 +4,5 @@
 pub mod azure;
 pub mod workload;
 
-pub use azure::{AzureTraceConfig, TraceStats, generate_rate_series};
+pub use azure::{AzureTraceConfig, TraceStats, day_slice, generate_rate_series};
 pub use workload::{WorkloadConfig, build_requests, poisson_arrivals};

@@ -1,0 +1,516 @@
+//! Event-core equivalence and property suite.
+//!
+//! The cluster's discrete-event driver (`event_core::drive`, a binary
+//! min-heap) replaced the lockstep iteration loop, which survives only
+//! as the test oracle (`event_core::drive_lockstep`, a naive O(n) scan
+//! per event with the identical dispatch law). This suite pins the two
+//! against each other **bit-for-bit** on full cluster scenarios — every
+//! routing policy, autopilot on and off — and checks the event queue's
+//! own laws (clock monotonicity, deterministic tie-breaking, idle
+//! components cost nothing) plus the control-tick cadence fix and
+//! `Metrics::merge` pooling at fleet scale.
+
+use anyhow::Result;
+
+use nestedfp::bench::autopilot::{arm_cluster, run_arm, surge_workload, Arm, SurgeScenario};
+use nestedfp::bench::cluster::{run_scale, ScaleScenario};
+use nestedfp::coordinator::autopilot::AutopilotConfig;
+use nestedfp::coordinator::backend::SimBackend;
+use nestedfp::coordinator::cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
+use nestedfp::coordinator::engine::EngineConfig;
+use nestedfp::coordinator::event_core::{drive, drive_lockstep, Component, ComponentId, Waker};
+use nestedfp::coordinator::metrics::Metrics;
+use nestedfp::coordinator::precision::{PrecisionPolicy, SloConfig};
+use nestedfp::coordinator::request::{FinishReason, Request, RequestState};
+use nestedfp::coordinator::router::RoutingPolicy;
+use nestedfp::gpusim::WeightFormat;
+use nestedfp::kvcache::KvPressureConfig;
+use nestedfp::model::zoo;
+use nestedfp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// Fingerprinting: every observable of a cluster run, with f64s encoded
+// as raw bits so "equal" means bit-for-bit, not approximately.
+// ---------------------------------------------------------------------
+
+fn fingerprint(r: &ClusterReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for c in &r.completions {
+        writeln!(
+            s,
+            "c {} {} {:016x} {:016x}",
+            c.id,
+            c.tokens.len(),
+            c.ttft_s.to_bits(),
+            c.mean_tpot_s.to_bits()
+        )
+        .unwrap();
+    }
+    for (i, rep) in r.replicas.iter().enumerate() {
+        writeln!(
+            s,
+            "r{i} routed={} iters={} fp16={} fp8={} free={} host={} total={}",
+            rep.routed,
+            rep.iterations,
+            rep.controller.iters_fp16,
+            rep.controller.iters_fp8,
+            rep.final_free_kv_blocks,
+            rep.final_host_kv_blocks,
+            rep.total_kv_blocks
+        )
+        .unwrap();
+        for &(t, fp8) in &rep.mode_timeline {
+            writeln!(s, "  m {:016x} {fp8}", t.to_bits()).unwrap();
+        }
+        for &(t, d) in &rep.directive_timeline {
+            writeln!(s, "  d {:016x} {d:?}", t.to_bits()).unwrap();
+        }
+    }
+    for &(t, k) in &r.demotion_timeline {
+        writeln!(s, "dem {:016x} {k}", t.to_bits()).unwrap();
+    }
+    for &(t, k) in &r.ladder_timeline {
+        writeln!(s, "lad {:016x} {k}", t.to_bits()).unwrap();
+    }
+    writeln!(s, "pre {}", r.pre_escalations).unwrap();
+    for &t in &r.control_ticks {
+        writeln!(s, "ct {:016x}", t.to_bits()).unwrap();
+    }
+    // queue.stale is intentionally excluded: the heap counts lazily
+    // deleted entries, the scan oracle has none. popped and scheduled
+    // must agree.
+    let e = &r.events;
+    writeln!(
+        s,
+        "ev a={} c={} p={} s={} w={} i={} popped={} scheduled={}",
+        e.arrival_events,
+        e.control_events,
+        e.predictor_events,
+        e.replica_step_events,
+        e.replica_blocked_wakes,
+        e.idle_replica_events,
+        e.queue.popped,
+        e.queue.scheduled
+    )
+    .unwrap();
+    writeln!(
+        s,
+        "agg completed={} out={} ttft_n={} tpot_n={} t0={:016x} t1={:016x}",
+        r.aggregate.completed,
+        r.aggregate.total_output_tokens,
+        r.aggregate.ttft.len(),
+        r.aggregate.tpot.len(),
+        r.aggregate.t_start.to_bits(),
+        r.aggregate.t_end.to_bits()
+    )
+    .unwrap();
+    s
+}
+
+// ---------------------------------------------------------------------
+// Cluster construction mirroring bench::autopilot::arm_cluster, but
+// parameterized over the routing policy and autopilot switch so the
+// equivalence matrix covers all four policies both with the autopilot's
+// ladder and with the reactive staged-escalation path.
+// ---------------------------------------------------------------------
+
+fn policy_cluster(
+    policy: RoutingPolicy,
+    autopilot: bool,
+    sc: &SurgeScenario,
+) -> ClusterRouter<SimBackend> {
+    let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
+    let max_seq = 1024;
+    let backends: Vec<SimBackend> = (0..sc.replicas)
+        .map(|_| {
+            SimBackend::new(
+                spec,
+                WeightFormat::Nested16,
+                WeightFormat::Nested8,
+                64,
+                max_seq,
+                64 * (max_seq / 16 + 1) * 2,
+            )
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        policy,
+        engine: EngineConfig {
+            policy: PrecisionPolicy::Dual,
+            slo: SloConfig::default(),
+            physical_kv: false,
+            max_iterations: 0,
+            kv: KvPressureConfig::default(),
+        },
+        // autopilot off exercises the reactive staged-escalation control
+        // path instead (finite queue_per_stage keeps the loop armed)
+        surge: if autopilot {
+            SurgeConfig::disabled()
+        } else {
+            SurgeConfig::default()
+        },
+        autopilot: autopilot.then(AutopilotConfig::default),
+    };
+    ClusterRouter::new(backends, cfg)
+}
+
+/// Small-but-busy scenario for the 4-policy × autopilot-on/off matrix
+/// (16 full cluster runs — kept below the golden scenario's budget).
+fn matrix_scenario() -> SurgeScenario {
+    SurgeScenario {
+        lead_s: 10,
+        len_s: 30,
+        scale: 0.12,
+        ..SurgeScenario::golden()
+    }
+}
+
+#[test]
+fn event_driver_matches_lockstep_oracle_across_policies() -> Result<()> {
+    let sc = matrix_scenario();
+    let policies = [
+        RoutingPolicy::RoundRobin,
+        RoutingPolicy::Random { seed: 7 },
+        RoutingPolicy::LeastLoadedKv,
+        RoutingPolicy::SloHeadroom,
+    ];
+    for policy in policies {
+        for autopilot in [false, true] {
+            let heap = policy_cluster(policy, autopilot, &sc).run(surge_workload(&sc))?;
+            let scan =
+                policy_cluster(policy, autopilot, &sc).run_lockstep(surge_workload(&sc))?;
+            assert!(
+                heap.aggregate.completed > 0,
+                "{policy:?}/autopilot={autopilot}: scenario produced no completions"
+            );
+            assert_eq!(
+                fingerprint(&heap),
+                fingerprint(&scan),
+                "{policy:?}/autopilot={autopilot}: heap driver diverged from lockstep oracle"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The bench entry point (`run_arm`) rides the heap driver; pin it to
+/// the oracle on the exact golden-trace scenario the snapshot suite
+/// replays.
+#[test]
+fn golden_autopilot_arm_matches_lockstep_oracle() -> Result<()> {
+    let sc = SurgeScenario::golden();
+    let heap = run_arm(Arm::Autopilot, &sc)?;
+    let scan = arm_cluster(Arm::Autopilot, &sc).run_lockstep(surge_workload(&sc))?;
+    assert!(heap.aggregate.completed > 0);
+    assert_eq!(fingerprint(&heap), fingerprint(&scan));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Event-queue property tests on toy components: monotone clock,
+// deterministic tie-break under shuffled insertion, idle no-op, and
+// heap-vs-scan parity under seeded fuzz.
+// ---------------------------------------------------------------------
+
+/// Fires at a fixed list of (sorted, possibly duplicated) times,
+/// appending `(time, id)` to the shared log.
+struct Ticker {
+    id: ComponentId,
+    times: Vec<f64>,
+    next: usize,
+}
+
+type Log = Vec<(f64, ComponentId)>;
+
+impl Component<Log> for Ticker {
+    fn next_tick(&self, _sys: &Log) -> Option<f64> {
+        self.times.first().copied()
+    }
+    fn tick(&mut self, now: f64, sys: &mut Log, _wake: &mut Waker) -> Result<Option<f64>> {
+        sys.push((now, self.id));
+        self.next += 1;
+        Ok(self.times.get(self.next).copied())
+    }
+}
+
+fn tickers(spec: &[Vec<f64>]) -> Vec<Box<dyn Component<Log>>> {
+    spec.iter()
+        .enumerate()
+        .map(|(id, times)| {
+            Box::new(Ticker {
+                id,
+                times: times.clone(),
+                next: 0,
+            }) as Box<dyn Component<Log>>
+        })
+        .collect()
+}
+
+#[test]
+fn pops_are_monotone_and_ties_break_by_id_under_shuffled_insertion() {
+    use nestedfp::coordinator::event_core::EventQueue;
+    // ids 0..6 all competing, with a 4-way tie at t=2.0; insertion order
+    // must not matter, so shuffle it under several seeds.
+    let events: Vec<(ComponentId, f64)> =
+        vec![(0, 2.0), (1, 2.0), (2, 9.0), (3, 2.0), (4, 0.5), (5, 2.0)];
+    let mut reference: Option<Vec<(f64, ComponentId)>> = None;
+    for seed in 0..16u64 {
+        let mut order = events.clone();
+        Pcg64::seeded(seed).shuffle(&mut order);
+        let mut q = EventQueue::new(events.len());
+        for &(id, at) in &order {
+            q.schedule(id, at);
+        }
+        let mut popped = Vec::new();
+        let mut last = f64::NEG_INFINITY;
+        while let Some((at, id)) = q.pop_next() {
+            assert!(at >= last, "clock went backwards: {at} after {last}");
+            if at == last {
+                let prev = popped.last().map(|&(_, p)| p).unwrap();
+                assert!(id > prev, "tie at t={at} not broken by ascending id");
+            }
+            last = at;
+            popped.push((at, id));
+        }
+        assert_eq!(
+            popped,
+            vec![(0.5, 4), (2.0, 0), (2.0, 1), (2.0, 3), (2.0, 5), (9.0, 2)]
+        );
+        match &reference {
+            None => reference = Some(popped),
+            Some(r) => assert_eq!(&popped, r, "seed {seed} changed the pop order"),
+        }
+    }
+}
+
+#[test]
+fn scheduling_before_the_popped_clock_panics_with_time_travel() {
+    use nestedfp::coordinator::event_core::EventQueue;
+    let err = std::panic::catch_unwind(|| {
+        let mut q = EventQueue::new(2);
+        q.schedule(0, 5.0);
+        q.pop_next();
+        q.schedule(1, 1.0); // the clock already reached 5.0
+    })
+    .expect_err("scheduling the past must panic");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("time travel"), "unexpected panic: {msg}");
+}
+
+#[test]
+fn idle_components_receive_no_ticks_in_either_driver() {
+    // components 1 and 3 have empty schedules: they must never appear in
+    // the log, and the busy components' histories must be unaffected.
+    let spec: Vec<Vec<f64>> = vec![
+        vec![0.0, 1.0, 2.0],
+        vec![],
+        vec![0.5, 1.0],
+        vec![],
+        vec![3.0],
+    ];
+    let mut log_heap = Log::new();
+    let heap = drive(&mut tickers(&spec), &mut log_heap).unwrap();
+    let mut log_scan = Log::new();
+    let scan = drive_lockstep(&mut tickers(&spec), &mut log_scan).unwrap();
+    assert_eq!(log_heap, log_scan);
+    assert!(
+        !log_heap.iter().any(|&(_, id)| id == 1 || id == 3),
+        "idle components were ticked: {log_heap:?}"
+    );
+    assert_eq!(log_heap.len(), 6);
+    assert_eq!(heap.popped, 6);
+    assert_eq!(heap.popped, scan.popped);
+    assert_eq!(heap.scheduled, scan.scheduled);
+}
+
+#[test]
+fn drivers_agree_on_seeded_random_schedules() {
+    for seed in 0..12u64 {
+        let mut rng = Pcg64::new(seed, 4242);
+        // 2..=9 components, each with 0..8 tick times on a coarse grid so
+        // cross-component ties are common.
+        let n = 2 + rng.index(8);
+        let spec: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                let k = rng.index(8);
+                let mut times: Vec<f64> = (0..k).map(|_| rng.index(20) as f64 * 0.5).collect();
+                times.sort_by(f64::total_cmp);
+                times
+            })
+            .collect();
+        let mut log_heap = Log::new();
+        let heap = drive(&mut tickers(&spec), &mut log_heap).unwrap();
+        let mut log_scan = Log::new();
+        let scan = drive_lockstep(&mut tickers(&spec), &mut log_scan).unwrap();
+        let total: usize = spec.iter().map(Vec::len).sum();
+        assert_eq!(log_heap.len(), total, "seed {seed}: ticks lost");
+        assert_eq!(log_heap, log_scan, "seed {seed}: drivers diverged");
+        assert_eq!(heap.popped, scan.popped, "seed {seed}");
+        assert_eq!(heap.scheduled, scan.scheduled, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Control-tick cadence: the skew fix. Ticks land exactly on the 0.25 s
+// grid anchored at the first arrival, even across arrival droughts where
+// no replica event falls on the tick instant.
+// ---------------------------------------------------------------------
+
+#[test]
+fn control_ticks_keep_exact_cadence_across_sparse_arrivals() -> Result<()> {
+    let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
+    let backends: Vec<SimBackend> = (0..2)
+        .map(|_| {
+            SimBackend::new(
+                spec,
+                WeightFormat::Nested16,
+                WeightFormat::Nested8,
+                8,
+                64,
+                80,
+            )
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        policy: RoutingPolicy::SloHeadroom,
+        engine: EngineConfig {
+            policy: PrecisionPolicy::Dual,
+            slo: SloConfig::default(),
+            physical_kv: false,
+            max_iterations: 0,
+            kv: KvPressureConfig::default(),
+        },
+        surge: SurgeConfig::disabled(),
+        autopilot: Some(AutopilotConfig::default()),
+    };
+    let mut cluster = ClusterRouter::new(backends, cfg);
+    // two tiny requests separated by a 6 s drought: the first drains in
+    // well under a second, so the old skewed loop (control piggybacked on
+    // replica events) had nothing to tick on until t=6.
+    let workload = vec![
+        Request::new(0, vec![65; 16], 8, 0.0),
+        Request::new(1, vec![65; 16], 8, 6.0),
+    ];
+    let report = cluster.run(workload)?;
+    assert_eq!(report.aggregate.completed, 2);
+    let ticks = &report.control_ticks;
+    assert!(!ticks.is_empty());
+    assert_eq!(
+        ticks[0].to_bits(),
+        0.0f64.to_bits(),
+        "first control tick must land on the first arrival"
+    );
+    for w in ticks.windows(2) {
+        // 0.25 = 2^-2: every tick k*0.25 is exact in f64, so the cadence
+        // check is bit-exact, not approximate.
+        assert_eq!(
+            (w[1] - w[0]).to_bits(),
+            0.25f64.to_bits(),
+            "control cadence skewed between {} and {}",
+            w[0],
+            w[1]
+        );
+    }
+    assert!(
+        *ticks.last().unwrap() >= 6.0,
+        "control stopped before the late arrival: last tick {}",
+        ticks.last().unwrap()
+    );
+    assert!(
+        ticks.len() >= 25,
+        "control slept through the drought: only {} ticks",
+        ticks.len()
+    );
+    assert_eq!(report.events.control_events, ticks.len());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Metrics::merge at fleet scale: pooled samples, not averaged summaries.
+// ---------------------------------------------------------------------
+
+fn finished_request(arrival: f64, first: f64, done: f64, n_out: usize) -> Request {
+    let mut r = Request::new(1, vec![1, 2], 64, arrival);
+    r.state = RequestState::Finished;
+    r.prefilled = 2;
+    r.generated = vec![0; n_out];
+    r.first_token_at = Some(first);
+    r.finished_at = Some(done);
+    r.finish_reason = Some(FinishReason::Length);
+    r
+}
+
+#[test]
+fn merge_pools_percentiles_across_100_replicas() {
+    // 99 healthy replicas (10 ms TTFT) and one straggler (400 ms). The
+    // pooled p99 must sit in the straggler's tail; averaging per-replica
+    // p99s would report ~14 ms and hide it.
+    let mut merged = Metrics::new();
+    for i in 0..100 {
+        let ttft = if i == 99 { 0.400 } else { 0.010 };
+        let mut m = Metrics::new();
+        m.record_request(&finished_request(0.0, ttft, ttft + 0.5, 8));
+        merged.merge(&m);
+    }
+    assert_eq!(merged.completed, 100);
+    assert_eq!(merged.ttft.len(), 100, "digests must pool samples");
+    let p99 = merged.ttft.percentile(99.0);
+    assert!(
+        p99 > 0.2,
+        "pooled p99 must reach the straggler's tail, got {p99}"
+    );
+    assert!(merged.ttft.percentile(50.0) < 0.02);
+}
+
+// ---------------------------------------------------------------------
+// The ≥100-replica scale path: full drain, zero idle-replica events,
+// KV conservation on every replica, pooled aggregate digests.
+// ---------------------------------------------------------------------
+
+#[test]
+fn scale_run_drains_100_replicas_without_leaks_or_idle_events() -> Result<()> {
+    let sc = ScaleScenario {
+        replicas: 100,
+        len_s: 180,
+        scale: 0.3,
+        ..ScaleScenario::full()
+    };
+    let (report, n_requests) = run_scale(&sc)?;
+    assert!(n_requests > 1_000, "scenario too thin: {n_requests}");
+    assert_eq!(report.replicas.len(), 100);
+    assert_eq!(report.aggregate.completed, n_requests, "requests lost");
+    assert_eq!(
+        report.events.idle_replica_events, 0,
+        "idle replicas must cost zero events"
+    );
+    let mut pooled_ttft = 0usize;
+    for (i, rep) in report.replicas.iter().enumerate() {
+        assert_eq!(
+            rep.final_free_kv_blocks, rep.total_kv_blocks,
+            "replica {i} leaked KV blocks"
+        );
+        assert_eq!(rep.final_host_kv_blocks, 0, "replica {i} left host KV");
+        pooled_ttft += rep.metrics.ttft.len();
+    }
+    assert_eq!(
+        report.aggregate.ttft.len(),
+        pooled_ttft,
+        "aggregate digest must pool every replica's samples"
+    );
+    let e = &report.events;
+    assert_eq!(
+        e.queue.popped as usize,
+        e.arrival_events
+            + e.control_events
+            + e.predictor_events
+            + e.replica_step_events
+            + e.idle_replica_events,
+        "event accounting identity broken"
+    );
+    Ok(())
+}
