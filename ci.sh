@@ -53,6 +53,12 @@ cargo test -q --offline --test attn_props
 echo "== cargo test (event core: heap driver vs lockstep oracle) =="
 cargo test -q --offline --test event_core_props
 
+# The shard layer's invariants (in-flight conservation across reshard
+# windows, two-ladder dwell discipline, resharder state-machine safety)
+# run by name so a reshard regression fails with clear attribution.
+echo "== cargo test (shard layer: reshard + two-ladder invariants) =="
+cargo test -q --offline --test shard_props
+
 echo "== cargo test -q =="
 cargo test -q --offline
 
@@ -61,6 +67,9 @@ echo "== smoke: repro reproduce gemm --quick =="
 
 echo "== smoke: repro reproduce autopilot --quick =="
 ./target/release/repro reproduce autopilot --quick --json /tmp/nestedfp_autopilot_ci.json
+
+echo "== smoke: repro reproduce parallelism --quick =="
+./target/release/repro reproduce parallelism --quick --json /tmp/nestedfp_parallelism_ci.json
 
 echo "== smoke: repro reproduce attention --quick =="
 ./target/release/repro reproduce attention --quick --json /tmp/nestedfp_attention_ci.json

@@ -170,6 +170,7 @@ pub fn arm_cluster(arm: Arm, sc: &SurgeScenario) -> ClusterRouter<SimBackend> {
             physical_kv: false,
             max_iterations: 0,
             kv: KvPressureConfig::default(),
+            devices: 1,
         },
         // static arms must stay static: no reactive stage demotions
         surge: SurgeConfig::disabled(),
@@ -177,6 +178,7 @@ pub fn arm_cluster(arm: Arm, sc: &SurgeScenario) -> ClusterRouter<SimBackend> {
             Arm::Autopilot => Some(AutopilotConfig::default()),
             _ => None,
         },
+        ..ClusterConfig::default()
     };
     ClusterRouter::new(backends, cfg)
 }

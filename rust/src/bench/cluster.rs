@@ -76,9 +76,11 @@ pub fn run_cluster(
             physical_kv: false,
             max_iterations: 0,
             kv: KvPressureConfig::default(),
+            devices: 1,
         },
         surge: SurgeConfig::default(),
         autopilot: None,
+        ..ClusterConfig::default()
     };
     let mut cluster = ClusterRouter::new(backends, cfg);
     cluster.run(surge_workload(seconds, base))
@@ -212,9 +214,15 @@ pub fn run_scale(sc: &ScaleScenario) -> Result<(ClusterReport, usize)> {
             physical_kv: false,
             max_iterations: 0,
             kv: KvPressureConfig::default(),
+            devices: 1,
         },
         surge: SurgeConfig::disabled(),
         autopilot: Some(AutopilotConfig::default()),
+        // the scale arm holds millions of control ticks: keep only the
+        // count and the bounded head/tail window (regression suites that
+        // diff tick times set this true on their small scenarios)
+        record_control_ticks: false,
+        ..ClusterConfig::default()
     };
     let mut cluster = ClusterRouter::new(backends, cfg);
     let report = cluster.run(workload)?;
@@ -295,6 +303,19 @@ pub fn cluster_scale(quick: bool) -> Result<Report> {
     kv("replica_step_events", ev.replica_step_events.to_string());
     kv("replica_blocked_wakes", ev.replica_blocked_wakes.to_string());
     kv("idle_replica_events", ev.idle_replica_events.to_string());
+    kv("reshard_events", ev.reshard_events.to_string());
+    // full per-tick times are not recorded at scale (they'd hold every
+    // 0.25 s tick over the whole day slice); the count plus a head/tail
+    // window is what the report keeps
+    kv("control_ticks", r.control_tick_count.to_string());
+    kv(
+        "control_ticks_head",
+        format!("{:?}", r.control_ticks_head.iter().map(|t| (t * 100.0).round() / 100.0).collect::<Vec<f64>>()),
+    );
+    kv(
+        "control_ticks_tail",
+        format!("{:?}", r.control_ticks_tail.iter().map(|t| (t * 100.0).round() / 100.0).collect::<Vec<f64>>()),
+    );
     kv(
         "events_per_request",
         format!("{:.2}", ev.queue.popped as f64 / n_requests as f64),
@@ -364,8 +385,13 @@ mod tests {
             + r.events.control_events
             + r.events.predictor_events
             + r.events.replica_step_events
-            + r.events.idle_replica_events;
+            + r.events.idle_replica_events
+            + r.events.reshard_events;
         assert_eq!(r.events.queue.popped as usize, dispatched);
+        // scale runs keep only bounded control-tick state
+        assert!(r.control_ticks.is_empty());
+        assert_eq!(r.events.control_events, r.control_tick_count);
+        assert!(r.control_ticks_head.len() <= 16 && r.control_ticks_tail.len() <= 16);
         for rep in &r.replicas {
             assert_eq!(rep.final_free_kv_blocks, rep.total_kv_blocks);
             assert_eq!(rep.final_host_kv_blocks, 0);

@@ -70,6 +70,7 @@ pub fn run_pressure(
             physical_kv: false,
             max_iterations: 0,
             kv,
+            devices: 1,
         },
     );
     let report = engine.run(pressure_workload(seconds, base))?;

@@ -14,5 +14,6 @@ pub mod fig7;
 pub mod fig8;
 pub mod cluster;
 pub mod kvcache;
+pub mod parallelism;
 
 pub use report::Report;

@@ -1,0 +1,369 @@
+//! The parallelism study (`repro reproduce parallelism`): the same
+//! Azure busy-minute surge as the autopilot bench, replayed against a
+//! fleet whose replicas each own a 4-device pool — so the controller
+//! has **two** knobs, arbitrated by the two-ladder autopilot:
+//!
+//! * **static-fp16**     — no control at all (the quality baseline),
+//! * **precision-only**  — the PR-4 autopilot: FP16 → Mixed → FP8,
+//!   tensor parallelism pinned at 1,
+//! * **parallel-only**   — precision pinned at FP16
+//!   (`max_precision_rung: 0`), the parallelism ladder walks tp 1 → 2
+//!   → 4 through clock-billed reshard windows,
+//! * **combined**        — both ladders live; precision moves first
+//!   (cheap, instant), parallelism only once precision is saturated.
+//!
+//! The surge is deliberately heavier than the autopilot bench's
+//! (scale 0.45 full / 0.30 quick vs 0.32 / 0.22): the point of the
+//! second knob is the regime where FP8 alone no longer holds the SLO,
+//! so the scenario must push the precision ladder past saturation.
+//!
+//! The acceptance claim (asserted loosely in tests, reported exactly
+//! here and via `--json`): the combined arm's goodput is at least both
+//! single-knob arms', and its SLO-violation seconds are at most the
+//! precision-only arm's — two knobs beat either alone, and the reshard
+//! windows pay for themselves.
+
+use anyhow::Result;
+
+use crate::bench::autopilot::{summarize, surge_workload, SurgeScenario};
+use crate::bench::report::Report;
+use crate::coordinator::autopilot::AutopilotConfig;
+use crate::coordinator::backend::SimBackend;
+use crate::coordinator::cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::precision::{PrecisionPolicy, SloConfig};
+use crate::coordinator::router::RoutingPolicy;
+use crate::gpusim::WeightFormat;
+use crate::kvcache::KvPressureConfig;
+use crate::model::zoo;
+
+/// Fixed per-replica device pool for every arm — the arms differ only
+/// in which knobs the controller may turn, never in hardware.
+pub const DEVICES_PER_REPLICA: usize = 4;
+
+/// The four bench arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arm {
+    StaticFp16,
+    PrecisionOnly,
+    ParallelOnly,
+    Combined,
+}
+
+impl Arm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Arm::StaticFp16 => "static-fp16",
+            Arm::PrecisionOnly => "precision-only",
+            Arm::ParallelOnly => "parallel-only",
+            Arm::Combined => "combined",
+        }
+    }
+
+    pub fn all() -> [Arm; 4] {
+        [
+            Arm::StaticFp16,
+            Arm::PrecisionOnly,
+            Arm::ParallelOnly,
+            Arm::Combined,
+        ]
+    }
+}
+
+/// The study's surge: the autopilot scenario's trace window at a scale
+/// heavy enough that the precision ladder saturates and the parallelism
+/// ladder has room to matter.
+pub fn scenario(quick: bool) -> SurgeScenario {
+    if quick {
+        SurgeScenario {
+            scale: 0.30,
+            ..SurgeScenario::quick()
+        }
+    } else {
+        SurgeScenario {
+            scale: 0.45,
+            ..SurgeScenario::full()
+        }
+    }
+}
+
+/// Tiny seeded scenario for the bit-identity and property suites: small
+/// enough for a unit-test budget, busy enough to force at least one
+/// reshard window.
+pub fn mini_scenario() -> SurgeScenario {
+    SurgeScenario {
+        scale: 0.30,
+        ..SurgeScenario::golden()
+    }
+}
+
+/// Build one arm's cluster (simulated H100s, llama-3.1-8b, 4 devices
+/// per replica) without running it — the equivalence and property
+/// suites drive the same construction through both the event-core
+/// driver and the lockstep oracle.
+pub fn arm_cluster(arm: Arm, sc: &SurgeScenario) -> ClusterRouter<SimBackend> {
+    let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
+    let max_seq = 1024;
+    let backends: Vec<SimBackend> = (0..sc.replicas)
+        .map(|_| {
+            SimBackend::new(
+                spec,
+                WeightFormat::Nested16,
+                WeightFormat::Nested8,
+                64,
+                max_seq,
+                64 * (max_seq / 16 + 1) * 2,
+            )
+        })
+        .collect();
+    let policy = match arm {
+        // precision pinned at FP16: the engine itself must not demote
+        Arm::StaticFp16 | Arm::ParallelOnly => PrecisionPolicy::Fp16Only,
+        Arm::PrecisionOnly | Arm::Combined => PrecisionPolicy::Dual,
+    };
+    let autopilot = match arm {
+        Arm::StaticFp16 => None,
+        Arm::PrecisionOnly => Some(AutopilotConfig::default()),
+        Arm::ParallelOnly => Some(AutopilotConfig {
+            max_precision_rung: 0,
+            max_tp: DEVICES_PER_REPLICA,
+            ..AutopilotConfig::default()
+        }),
+        Arm::Combined => Some(AutopilotConfig {
+            max_tp: DEVICES_PER_REPLICA,
+            ..AutopilotConfig::default()
+        }),
+    };
+    let cfg = ClusterConfig {
+        policy: RoutingPolicy::SloHeadroom,
+        engine: EngineConfig {
+            policy,
+            slo: SloConfig::default(),
+            physical_kv: false,
+            max_iterations: 0,
+            kv: KvPressureConfig::default(),
+            devices: DEVICES_PER_REPLICA,
+        },
+        // static arms must stay static: no reactive stage demotions
+        surge: SurgeConfig::disabled(),
+        autopilot,
+        ..ClusterConfig::default()
+    };
+    ClusterRouter::new(backends, cfg)
+}
+
+/// Run one arm of the study.
+pub fn run_arm(arm: Arm, sc: &SurgeScenario) -> Result<ClusterReport> {
+    arm_cluster(arm, sc).run(surge_workload(sc))
+}
+
+/// The `repro reproduce parallelism` entry point: the arm table plus
+/// the combined arm's reshard timeline.
+pub fn parallelism_surge(quick: bool) -> Result<Vec<Report>> {
+    let sc = scenario(quick);
+    let slo = SloConfig::default();
+    let n_requests = surge_workload(&sc).len();
+
+    let mut arms = Report::new(
+        "Parallelism — two-knob SLO control (precision ladder + TP ladder) \
+         under an Azure-shaped surge (llama31-8b, sim-H100, 2 replicas x 4 \
+         devices, SLO-headroom routing)",
+        &[
+            "arm",
+            "goodput_req_s",
+            "slo_violation_s",
+            "ttft_p99_ms",
+            "tpot_p99_ms",
+            "fp16_time_frac",
+            "reshards",
+            "repart_ms",
+            "final_tp",
+        ],
+    );
+    arms.note(format!(
+        "{n_requests} requests over {}s (lead {}s, spike minute, drain); \
+         SLO: TTFT <= 200 ms, TPOT <= 33.3 ms; reshard window = drain + \
+         25 ms + weight-shard move over NVLink",
+        sc.len_s, sc.lead_s
+    ));
+    arms.note(
+        "claim: combined goodput >= both single-knob arms, violations <= \
+         precision-only — the controller turns the cheap knob (precision) \
+         first and reshards only once FP8 is saturated",
+    );
+
+    let mut windows = Report::new(
+        "Parallelism — combined-arm reshard timeline (completed windows; \
+         one replica reshards at a time, admission frozen inside a window)",
+        &["t_s", "replica", "new_tp"],
+    );
+
+    for arm in Arm::all() {
+        let mut report = run_arm(arm, &sc)?;
+        let s = summarize(&mut report, &slo);
+        let tps: Vec<String> = report
+            .replicas
+            .iter()
+            .map(|r| r.final_tp_degree.to_string())
+            .collect();
+        arms.row(vec![
+            arm.name().into(),
+            format!("{:.3}", s.goodput_req_s),
+            s.slo_violation_s.to_string(),
+            format!("{:.1}", s.ttft_p99_s * 1e3),
+            format!("{:.1}", s.tpot_p99_s * 1e3),
+            format!("{:.0}%", s.fp16_time_frac * 100.0),
+            report.aggregate.reshards.to_string(),
+            format!("{:.1}", report.aggregate.reshard_repartition_s * 1e3),
+            tps.join("/"),
+        ]);
+        if arm == Arm::Combined {
+            anyhow::ensure!(
+                s.completed == n_requests,
+                "combined arm drained {} of {n_requests} requests",
+                s.completed
+            );
+            for &(t, i, tp) in &report.reshard_timeline {
+                windows.row(vec![format!("{t:.2}"), i.to_string(), tp.to_string()]);
+            }
+            windows.note(format!(
+                "{} completed windows, {:.1} ms total repartition time \
+                 (drain time is workload-dependent and excluded)",
+                report.aggregate.reshards,
+                report.aggregate.reshard_repartition_s * 1e3
+            ));
+        }
+    }
+    Ok(vec![arms, windows])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tentpole acceptance property, on the quick scenario (loose
+    /// bounds; the full run reports exact values): two knobs beat either
+    /// alone.
+    #[test]
+    fn combined_control_beats_both_single_knob_arms() {
+        let sc = scenario(true);
+        let slo = SloConfig::default();
+        let n = surge_workload(&sc).len();
+        let mut f16 = run_arm(Arm::StaticFp16, &sc).unwrap();
+        let mut prec = run_arm(Arm::PrecisionOnly, &sc).unwrap();
+        let mut par = run_arm(Arm::ParallelOnly, &sc).unwrap();
+        let mut comb = run_arm(Arm::Combined, &sc).unwrap();
+        let s16 = summarize(&mut f16, &slo);
+        let sp = summarize(&mut prec, &slo);
+        let sl = summarize(&mut par, &slo);
+        let sc2 = summarize(&mut comb, &slo);
+        // every arm drains the same workload
+        assert_eq!(s16.completed, n);
+        assert_eq!(sp.completed, n);
+        assert_eq!(sl.completed, n);
+        assert_eq!(sc2.completed, n);
+        // the surge must actually hurt the uncontrolled baseline, or the
+        // scenario tests nothing
+        assert!(
+            s16.slo_violation_s >= 3,
+            "surge too gentle: static fp16 violated only {}s",
+            s16.slo_violation_s
+        );
+        // the combined arm must actually have used both knobs
+        assert!(
+            comb.aggregate.reshards >= 1,
+            "combined arm never resharded — the surge never saturated FP8"
+        );
+        assert!(
+            comb.replicas.iter().any(|r| r.controller.iters_fp8 > 0),
+            "combined arm never demoted precision"
+        );
+        // acceptance: goodput >= both single-knob arms (2% slack for
+        // scheduling noise; the headline report carries exact values)
+        assert!(
+            sc2.goodput_req_s >= sp.goodput_req_s * 0.98,
+            "combined goodput {} < precision-only {}",
+            sc2.goodput_req_s,
+            sp.goodput_req_s
+        );
+        assert!(
+            sc2.goodput_req_s >= sl.goodput_req_s * 0.98,
+            "combined goodput {} < parallel-only {}",
+            sc2.goodput_req_s,
+            sl.goodput_req_s
+        );
+        // acceptance: violations <= the precision-only arm
+        assert!(
+            sc2.slo_violation_s <= sp.slo_violation_s,
+            "combined violated {}s vs precision-only {}s",
+            sc2.slo_violation_s,
+            sp.slo_violation_s
+        );
+    }
+
+    /// Each single-knob arm must turn only its own knob — otherwise the
+    /// three-way comparison measures nothing.
+    #[test]
+    fn single_knob_arms_use_only_their_knob() {
+        let sc = scenario(true);
+        let prec = run_arm(Arm::PrecisionOnly, &sc).unwrap();
+        assert_eq!(
+            prec.aggregate.reshards, 0,
+            "precision-only arm resharded"
+        );
+        assert!(prec.reshard_timeline.is_empty());
+        assert!(prec.replicas.iter().all(|r| r.final_tp_degree == 1));
+
+        let par = run_arm(Arm::ParallelOnly, &sc).unwrap();
+        assert!(
+            par.aggregate.reshards >= 1,
+            "parallel-only arm never resharded under the surge"
+        );
+        assert!(
+            par.replicas.iter().all(|r| r.controller.iters_fp8 == 0),
+            "parallel-only arm demoted precision"
+        );
+
+        let f16 = run_arm(Arm::StaticFp16, &sc).unwrap();
+        assert_eq!(f16.aggregate.reshards, 0);
+        assert!(f16.replicas.iter().all(|r| r.controller.iters_fp8 == 0));
+    }
+
+    /// The bit-identity harness extended over reshard events on the real
+    /// sim backend: heap driver vs lockstep oracle on the combined arm's
+    /// mini scenario (the cheap-backend version lives in
+    /// `coordinator::cluster`'s tests).
+    #[test]
+    fn combined_arm_matches_lockstep_with_reshards() {
+        let sc = mini_scenario();
+        let wl = surge_workload(&sc);
+        let a = arm_cluster(Arm::Combined, &sc).run(wl.clone()).unwrap();
+        let b = arm_cluster(Arm::Combined, &sc).run_lockstep(wl).unwrap();
+        assert!(
+            a.aggregate.reshards >= 1,
+            "mini scenario must actually reshard to pin anything"
+        );
+        let ids = |r: &ClusterReport| -> Vec<u64> {
+            r.completions.iter().map(|c| c.id).collect()
+        };
+        assert_eq!(ids(&a), ids(&b));
+        let timeline_bits = |r: &ClusterReport| -> Vec<(u64, usize, usize)> {
+            r.reshard_timeline
+                .iter()
+                .map(|&(t, i, tp)| (t.to_bits(), i, tp))
+                .collect()
+        };
+        assert_eq!(timeline_bits(&a), timeline_bits(&b));
+        // dispatch counters agree (heap lazy deletions excepted)
+        assert_eq!(a.events.arrival_events, b.events.arrival_events);
+        assert_eq!(a.events.control_events, b.events.control_events);
+        assert_eq!(a.events.replica_step_events, b.events.replica_step_events);
+        assert_eq!(a.events.reshard_events, b.events.reshard_events);
+        assert_eq!(a.ladder_timeline, b.ladder_timeline);
+        for (x, y) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.final_tp_degree, y.final_tp_degree);
+            assert_eq!(x.directive_timeline, y.directive_timeline);
+        }
+    }
+}

@@ -26,10 +26,22 @@
 //!    a rising short-horizon slope *pre-escalates* the fleet to `Mixed`
 //!    before the queue backs up, and the pinned-FP8 rungs are reserved
 //!    for measured (not predicted) pressure.
+//! 5. **A second, parallelism ladder** — per-replica tensor-parallel
+//!    targets over the shard layer's rungs (powers of two up to
+//!    [`AutopilotConfig::max_tp`]), with its own much longer dwell times
+//!    because a TP move costs a drain → repartition → resume window
+//!    ([`crate::shard::Resharder`]) rather than a kernel switch. The two
+//!    ladders are arbitrated: the cheap knob (precision) moves first, TP
+//!    escalates only once a replica's precision rung is saturated and
+//!    measured pressure persists, TP releases only after precision has
+//!    fully recovered to FP16, and a replica never moves both knobs in
+//!    the same control tick.
 //!
 //! The autopilot only *directs*; the per-engine
 //! [`PrecisionController`](super::precision::PrecisionController) still
-//! owns the iteration-level decision whenever its rung is `Mixed`.
+//! owns the iteration-level decision whenever its rung is `Mixed`, and
+//! the cluster's resharder reconciles actual backend TP degrees toward
+//! the ladder's targets.
 
 use std::collections::VecDeque;
 
@@ -68,6 +80,21 @@ pub struct AutopilotConfig {
     /// Rate floor for the predictor's relative-slope normalization, req/s
     /// (prevents divide-by-tiny on idle fleets).
     pub predictor_floor_rate: f64,
+    /// Highest precision rung the ladder may assign: 0 pins FP16 (the
+    /// bench's parallelism-only arm), 1 caps at Mixed, 2 (default)
+    /// allows the full FP16 → Mixed → FP8 walk.
+    pub max_precision_rung: usize,
+    /// Highest tensor-parallel degree the parallelism ladder may target
+    /// (power of two). 1 disables the second ladder entirely — the
+    /// pre-shard-layer behavior, bit for bit.
+    pub max_tp: usize,
+    /// Minimum time at a TP degree before escalating (more shards).
+    pub tp_escalate_dwell_s: f64,
+    /// Minimum time at a TP degree before releasing (fewer shards).
+    pub tp_promote_dwell_s: f64,
+    /// After a TP release, no TP re-escalation of that replica for this
+    /// long.
+    pub tp_cooldown_s: f64,
 }
 
 impl Default for AutopilotConfig {
@@ -85,6 +112,14 @@ impl Default for AutopilotConfig {
             sticky_bonus: 0.15,
             predictor_gain: 0.6,
             predictor_floor_rate: 1.0,
+            max_precision_rung: 2,
+            max_tp: 1,
+            // a reshard bills a full drain + weight-move window, so the
+            // parallelism ladder dwells an order of magnitude longer
+            // than the precision ladder before touching the knob again
+            tp_escalate_dwell_s: 2.0,
+            tp_promote_dwell_s: 6.0,
+            tp_cooldown_s: 4.0,
         }
     }
 }
@@ -312,6 +347,44 @@ impl ReplicaFsm {
     }
 }
 
+/// The parallelism ladder's per-replica state machine: the desired
+/// tensor-parallel degree, walked one power-of-two rung at a time under
+/// its own (much longer) dwell discipline. This is a *target* — the
+/// cluster's resharder reconciles the actual backend degree toward it
+/// through drain → repartition → resume windows, so the FSM never
+/// assumes a move is instantaneous.
+#[derive(Clone, Debug)]
+struct TpFsm {
+    tp: usize,
+    entered_at: f64,
+    last_release_at: f64,
+    switches: usize,
+    timeline: Vec<(f64, usize)>,
+}
+
+impl TpFsm {
+    fn new() -> TpFsm {
+        TpFsm {
+            // boot state mirrors ReplicaFsm: "has been tp=1 forever"
+            tp: 1,
+            entered_at: f64::NEG_INFINITY,
+            last_release_at: f64::NEG_INFINITY,
+            switches: 0,
+            timeline: Vec::new(),
+        }
+    }
+
+    fn step_to(&mut self, now: f64, tp: usize, released: bool) {
+        self.tp = tp;
+        self.entered_at = now;
+        if released {
+            self.last_release_at = now;
+        }
+        self.switches += 1;
+        self.timeline.push((now, tp));
+    }
+}
+
 /// The cluster-level closed-loop controller. Owned by
 /// [`ClusterRouter`](super::cluster::ClusterRouter) when
 /// [`ClusterConfig::autopilot`](super::cluster::ClusterConfig) is set;
@@ -321,6 +394,7 @@ pub struct Autopilot {
     cfg: AutopilotConfig,
     trackers: Vec<SloTracker>,
     fsms: Vec<ReplicaFsm>,
+    tp_fsms: Vec<TpFsm>,
     predictor: SurgePredictor,
     /// Cluster ladder position: total demotion rungs distributed over the
     /// fleet, in `0..=2 * n_replicas` (0 = all FP16, 2n = all FP8).
@@ -337,10 +411,17 @@ pub struct Autopilot {
 impl Autopilot {
     pub fn new(n_replicas: usize, cfg: AutopilotConfig) -> Autopilot {
         assert!(n_replicas > 0, "autopilot needs at least one replica");
+        assert!(
+            cfg.max_tp >= 1 && cfg.max_tp.is_power_of_two(),
+            "max_tp must be a power of two, got {}",
+            cfg.max_tp
+        );
+        assert!(cfg.max_precision_rung <= 2, "precision rungs are 0..=2");
         Autopilot {
             cfg,
             trackers: vec![SloTracker::default(); n_replicas],
             fsms: (0..n_replicas).map(|_| ReplicaFsm::new()).collect(),
+            tp_fsms: (0..n_replicas).map(|_| TpFsm::new()).collect(),
             predictor: SurgePredictor::default(),
             severity: 0,
             last_control: f64::NEG_INFINITY,
@@ -370,6 +451,23 @@ impl Autopilot {
     /// One replica's directive change points `(time, new directive)`.
     pub fn directive_timeline(&self, i: usize) -> &[(f64, PrecisionDirective)] {
         &self.fsms[i].timeline
+    }
+
+    /// Current per-replica tensor-parallel *targets* — the parallelism
+    /// ladder's desired degrees. The cluster's resharder reconciles the
+    /// actual backend degrees toward these through clock-billed windows.
+    pub fn tp_targets(&self) -> Vec<usize> {
+        self.tp_fsms.iter().map(|f| f.tp).collect()
+    }
+
+    /// One replica's TP-target change points `(time, new tp)`.
+    pub fn tp_timeline(&self, i: usize) -> &[(f64, usize)] {
+        &self.tp_fsms[i].timeline
+    }
+
+    /// Total parallelism-ladder moves across the fleet.
+    pub fn tp_switches(&self) -> usize {
+        self.tp_fsms.iter().map(|f| f.switches).sum()
     }
 
     /// One replica's dwell/switch accounting (call [`Autopilot::finish`]
@@ -484,9 +582,15 @@ impl Autopilot {
     /// * severity rungs go to the replicas with the least SLO headroom
     ///   (highest pressure, sticky toward already-demoted replicas,
     ///   ties by the router's `slo_headroom`, then highest index), two
-    ///   rungs max per replica;
+    ///   rungs max per replica (capped by `max_precision_rung`);
     /// * each replica's FSM walks toward its assigned rung under its
-    ///   dwell/cooldown discipline.
+    ///   dwell/cooldown discipline;
+    /// * then the parallelism ladder runs, arbitrated second: for each
+    ///   replica whose precision knob did *not* move this tick, TP
+    ///   escalates one power-of-two rung when measured pressure persists
+    ///   with the precision rung saturated at `max_precision_rung`, and
+    ///   releases one rung when the replica is calm with precision fully
+    ///   recovered to FP16 — both under the TP dwell/cooldown times.
     pub fn control_at(
         &mut self,
         now: f64,
@@ -557,16 +661,53 @@ impl Autopilot {
             left -= take;
         }
 
-        (0..n)
-            .map(|i| {
-                let target = match rungs[i] {
-                    0 => PrecisionDirective::Fp16,
-                    1 => PrecisionDirective::Mixed,
-                    _ => PrecisionDirective::Fp8,
-                };
-                self.fsms[i].tick(now, target, &self.cfg)
-            })
-            .collect()
+        let mut out = Vec::with_capacity(n);
+        let mut precision_moved = vec![false; n];
+        for i in 0..n {
+            let target = match rungs[i].min(self.cfg.max_precision_rung) {
+                0 => PrecisionDirective::Fp16,
+                1 => PrecisionDirective::Mixed,
+                _ => PrecisionDirective::Fp8,
+            };
+            let before = self.fsms[i].state;
+            let after = self.fsms[i].tick(now, target, &self.cfg);
+            precision_moved[i] = after != before;
+            out.push(after);
+        }
+
+        // the parallelism ladder, arbitrated second: precision is the
+        // cheap knob (an iteration-level kernel switch), a TP move bills
+        // a full drain + weight-move window — so TP only escalates once
+        // the precision ladder has nothing left to give on that replica,
+        // only releases once precision has fully recovered, and a
+        // replica never moves both knobs in one control tick.
+        if self.cfg.max_tp > 1 {
+            for i in 0..n {
+                if precision_moved[i] {
+                    continue;
+                }
+                let rung = out[i].rung();
+                let f = &mut self.tp_fsms[i];
+                let in_state = now - f.entered_at;
+                if pressures[i] > self.cfg.up_pressure
+                    && rung >= self.cfg.max_precision_rung
+                    && f.tp < self.cfg.max_tp
+                    && in_state >= self.cfg.tp_escalate_dwell_s
+                    && now - f.last_release_at >= self.cfg.tp_cooldown_s
+                {
+                    let tp = f.tp * 2;
+                    f.step_to(now, tp, false);
+                } else if pressures[i] < self.cfg.down_pressure
+                    && rung == 0
+                    && f.tp > 1
+                    && in_state >= self.cfg.tp_promote_dwell_s
+                {
+                    let tp = f.tp / 2;
+                    f.step_to(now, tp, true);
+                }
+            }
+        }
+        out
     }
 
     /// Bill the trailing dwell up to `end` (call once when a run ends,
@@ -746,6 +887,104 @@ mod tests {
             t_re - t_promoted,
             cfg.cooldown_s
         );
+    }
+
+    #[test]
+    fn tp_ladder_waits_for_precision_saturation() {
+        let cfg = AutopilotConfig {
+            max_tp: 4,
+            ..AutopilotConfig::default()
+        };
+        let mut a = Autopilot::new(1, cfg);
+        let hr = [0.0];
+        let mut t = 0.0;
+        // sustained measured pressure: precision must walk its whole
+        // ladder before the first TP move, and no tick moves both knobs
+        for _ in 0..80 {
+            a.control_at(t, &[2.0], 0.0, &hr);
+            t += 0.25;
+        }
+        assert_eq!(a.directives(), vec![Fp8]);
+        assert_eq!(a.tp_targets(), vec![4]);
+        let first_tp = a.tp_timeline(0).first().unwrap().0;
+        let fp8_at = a
+            .directive_timeline(0)
+            .iter()
+            .find(|&&(_, d)| d == Fp8)
+            .unwrap()
+            .0;
+        assert!(
+            first_tp > fp8_at,
+            "TP moved at {first_tp} before precision saturated at {fp8_at}"
+        );
+        for &(tt, _) in a.tp_timeline(0) {
+            assert!(
+                !a.directive_timeline(0).iter().any(|&(pt, _)| pt == tt),
+                "both knobs moved in the tick at {tt}"
+            );
+        }
+        // drain: precision must fully recover to FP16 before TP releases
+        for _ in 0..200 {
+            a.control_at(t, &[0.1], 0.0, &hr);
+            t += 0.25;
+        }
+        assert_eq!(a.directives(), vec![Fp16]);
+        assert_eq!(a.tp_targets(), vec![1]);
+        let fp16_at = a
+            .directive_timeline(0)
+            .iter()
+            .rev()
+            .find(|&&(_, d)| d == Fp16)
+            .unwrap()
+            .0;
+        let first_release = a
+            .tp_timeline(0)
+            .windows(2)
+            .find(|w| w[1].1 < w[0].1)
+            .unwrap()[1]
+            .0;
+        assert!(
+            first_release > fp16_at,
+            "TP released at {first_release} before precision recovered at {fp16_at}"
+        );
+    }
+
+    #[test]
+    fn parallelism_only_mode_pins_precision_and_climbs_tp() {
+        let cfg = AutopilotConfig {
+            max_tp: 4,
+            max_precision_rung: 0,
+            ..AutopilotConfig::default()
+        };
+        let mut a = Autopilot::new(2, cfg);
+        let hr = [0.0; 2];
+        let mut t = 0.0;
+        for _ in 0..60 {
+            let d = a.control_at(t, &[2.0, 0.1], 0.0, &hr);
+            assert_eq!(d, vec![Fp16, Fp16], "rung 0 cap pins FP16");
+            t += 0.25;
+        }
+        assert_eq!(a.tp_targets(), vec![4, 1], "only the pressured replica shards");
+        // every TP move respects the tighter of the two TP dwells
+        for w in a.tp_timeline(0).windows(2) {
+            assert!(
+                w[1].0 - w[0].0 >= cfg.tp_escalate_dwell_s.min(cfg.tp_promote_dwell_s) - 1e-9,
+                "TP switch gap {} under dwell",
+                w[1].0 - w[0].0
+            );
+        }
+        assert_eq!(a.tp_switches(), 2, "1 -> 2 -> 4 is two moves");
+    }
+
+    #[test]
+    fn default_config_disables_the_tp_ladder() {
+        let mut a = ap(2);
+        let hr = [0.0; 2];
+        for k in 0..120 {
+            a.control_at(k as f64 * 0.25, &[3.0, 3.0], 0.0, &hr);
+        }
+        assert_eq!(a.tp_targets(), vec![1, 1]);
+        assert_eq!(a.tp_switches(), 0);
     }
 
     #[test]

@@ -38,6 +38,25 @@ pub trait Backend {
     fn prefill_chunks(&self) -> Vec<usize>;
     fn max_decode_batch(&self) -> usize;
 
+    /// The active tensor-parallel degree. Backends without a shard
+    /// dimension report 1 (the degenerate [`crate::shard::ShardPlan`]).
+    fn tp_degree(&self) -> usize {
+        1
+    }
+
+    /// Re-shard to `tp` devices. Only the resharder should call this —
+    /// it owns the drain → repartition → resume discipline that makes
+    /// the switch safe; the default (single-device backends) ignores it.
+    fn set_tp_degree(&mut self, _tp: usize) {}
+
+    /// The model served, when the backend knows it. The resharder uses
+    /// this to bill the weight-move term of a repartition window;
+    /// backends without a spec (accounting-only test backends) keep the
+    /// `None` default and are billed the fixed latency floor alone.
+    fn model_spec(&self) -> Option<&'static ModelSpec> {
+        None
+    }
+
     /// Prefill `tokens` for `slot` starting at `start_pos`; scatter the
     /// new KV into the slot.
     fn prefill(
@@ -348,6 +367,9 @@ pub struct SimBackend {
     pub max_batch: usize,
     pub chunks: Vec<usize>,
     geo: KvGeometry,
+    /// Active tensor-parallel degree (1 = the whole model on one sim
+    /// device; see `gpusim::step_latency_tp` for the shard cost law).
+    tp: usize,
 }
 
 impl SimBackend {
@@ -374,6 +396,7 @@ impl SimBackend {
             max_batch,
             chunks: vec![64, 128, 256, 512],
             geo,
+            tp: 1,
         }
     }
 
@@ -396,6 +419,19 @@ impl Backend for SimBackend {
 
     fn max_decode_batch(&self) -> usize {
         self.max_batch
+    }
+
+    fn tp_degree(&self) -> usize {
+        self.tp
+    }
+
+    fn set_tp_degree(&mut self, tp: usize) {
+        assert!(tp >= 1 && tp.is_power_of_two(), "bad tp degree {tp}");
+        self.tp = tp;
+    }
+
+    fn model_spec(&self) -> Option<&'static ModelSpec> {
+        Some(self.spec)
     }
 
     fn prefill(
@@ -421,7 +457,7 @@ impl Backend for SimBackend {
         let ctx = (start_pos + tokens.len()).min(g.max_seq);
         Ok(StepRun {
             logits: None,
-            latency: gpusim::step_latency(self.spec, &q),
+            latency: gpusim::step_latency_tp(self.spec, &q, self.tp),
             attn_dense_bytes: g.n_layers * g.layer_dense_bytes(),
             attn_touched_bytes: g.n_layers * kv.seq_touched_bytes(slot, ctx),
         })
@@ -454,7 +490,7 @@ impl Backend for SimBackend {
         }
         Ok(StepRun {
             logits: None,
-            latency: gpusim::step_latency(self.spec, &q),
+            latency: gpusim::step_latency_tp(self.spec, &q, self.tp),
             attn_dense_bytes: slots.len() * g.n_layers * g.layer_dense_bytes(),
             attn_touched_bytes: touched,
         })

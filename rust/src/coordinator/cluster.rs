@@ -35,6 +35,9 @@ use std::collections::VecDeque;
 
 use anyhow::{anyhow, Result};
 
+use crate::model::zoo::ModelSpec;
+use crate::shard::{ReshardCost, ReshardState, Resharder, ShardPlan};
+
 use super::autopilot::{Autopilot, AutopilotConfig, ModeStats};
 use super::backend::Backend;
 use super::engine::{CompletedRequest, Engine, EngineConfig};
@@ -105,8 +108,19 @@ pub struct ClusterConfig {
     /// Closed-loop SLO autopilot. When set it **replaces** the staged
     /// escalation: sliding-window SLO tracking, per-replica
     /// FP16 → Mixed → FP8 hysteresis ladders, and the surge predictor
-    /// drive every [`PrecisionController::apply_directive`] call.
+    /// drive every [`PrecisionController::apply_directive`] call. Its
+    /// `max_tp` also arms the second (parallelism) ladder, whose targets
+    /// the cluster's [`Resharder`] executes as drain → repartition →
+    /// resume windows.
     pub autopilot: Option<AutopilotConfig>,
+    /// Repartition-window cost law for TP changes.
+    pub reshard: ReshardCost,
+    /// Keep the full [`ClusterReport::control_ticks`] vector. Golden and
+    /// regression suites need every tick; multi-hour `--scale` runs set
+    /// this `false` and get the bounded count + first/last 16 instead
+    /// (a 21600 s trace at 0.25 s cadence is ~86k f64s per run kept
+    /// alive for nothing).
+    pub record_control_ticks: bool,
 }
 
 impl Default for ClusterConfig {
@@ -116,6 +130,8 @@ impl Default for ClusterConfig {
             engine: EngineConfig::default(),
             surge: SurgeConfig::default(),
             autopilot: None,
+            reshard: ReshardCost::default(),
+            record_control_ticks: true,
         }
     }
 }
@@ -142,6 +158,8 @@ pub struct ReplicaReport {
     /// Host-tier blocks still resident at the end (must be 0 drained).
     pub final_host_kv_blocks: usize,
     pub total_kv_blocks: usize,
+    /// Tensor-parallel degree the replica finished the run at.
+    pub final_tp_degree: usize,
 }
 
 /// Per-event accounting of one cluster run: how many times each
@@ -167,6 +185,9 @@ pub struct EventStats {
     /// parked, not polled — the `--scale` arm asserts it at 100+
     /// replicas.
     pub idle_replica_events: usize,
+    /// Resharder dispatches (repartition-window deadlines). Zero on any
+    /// run that never moves the parallelism knob — the resharder parks.
+    pub reshard_events: usize,
     /// Driver-level queue counters (scheduled / popped / stale).
     pub queue: QueueStats,
 }
@@ -190,8 +211,19 @@ pub struct ClusterReport {
     /// schedules these exactly `control_interval_s` apart from the first
     /// arrival onward — including across arrival droughts where no
     /// replica event lands on the same instant (the control-tick-skew
-    /// regression suite asserts the cadence).
+    /// regression suite asserts the cadence). Empty when
+    /// [`ClusterConfig::record_control_ticks`] is off — use the bounded
+    /// `control_tick_count` / head / tail fields instead.
     pub control_ticks: Vec<f64>,
+    /// Control ticks fired, counted regardless of recording mode.
+    pub control_tick_count: usize,
+    /// First ≤16 control-tick times (always populated).
+    pub control_ticks_head: Vec<f64>,
+    /// Last ≤16 control-tick times (always populated).
+    pub control_ticks_tail: Vec<f64>,
+    /// `(time, replica, new tp)` per completed reshard, in completion
+    /// order (the resharder's own timeline).
+    pub reshard_timeline: Vec<(f64, usize, usize)>,
     /// Per-event accounting for the run.
     pub events: EventStats,
 }
@@ -220,7 +252,11 @@ impl ClusterReport {
 const ARRIVALS: ComponentId = 0;
 const CONTROL: ComponentId = 1;
 const PREDICTOR: ComponentId = 2;
-/// Replica `i` is component `REPLICA0 + i`.
+/// Replica `i` is component `REPLICA0 + i`; the resharder is appended
+/// *after* the replicas (id `REPLICA0 + n`) so existing replica ids —
+/// and therefore every tie-break in pre-shard-layer runs — are
+/// unchanged. It is parked whenever no repartition window is open, so
+/// runs that never reshard cost zero extra events.
 const REPLICA0: ComponentId = 3;
 
 /// N engine replicas + router + cluster precision control, drained from
@@ -252,6 +288,15 @@ pub struct ClusterRouter<B: Backend> {
     /// builds cross-check the cache against fresh snapshots.
     snaps: Vec<ReplicaSnapshot>,
     control_ticks: Vec<f64>,
+    control_tick_count: usize,
+    control_ticks_head: Vec<f64>,
+    control_ticks_tail: VecDeque<f64>,
+    /// TP-transition state machine for every replica (Serving when the
+    /// parallelism ladder is disabled — then it never schedules events).
+    resharder: Resharder,
+    /// The served model, when the backends know it (bills the
+    /// weight-move term of repartition windows).
+    model: Option<&'static ModelSpec>,
     events: EventStats,
 }
 
@@ -283,11 +328,21 @@ impl<B: Backend> ClusterRouter<B> {
     pub fn new(backends: Vec<B>, cfg: ClusterConfig) -> ClusterRouter<B> {
         assert!(!backends.is_empty(), "cluster needs at least one replica");
         let n = backends.len();
+        if let Some(ap) = &cfg.autopilot {
+            assert!(
+                ap.max_tp <= cfg.engine.devices.max(1),
+                "autopilot max_tp {} exceeds the replica device pool {}",
+                ap.max_tp,
+                cfg.engine.devices
+            );
+        }
+        let model = backends[0].model_spec();
         let replicas: Vec<Engine<B>> = backends
             .into_iter()
             .map(|b| Engine::new(b, cfg.engine.clone()))
             .collect();
         let autopilot = cfg.autopilot.map(|ap_cfg| Autopilot::new(n, ap_cfg));
+        let resharder = Resharder::new(n, cfg.reshard);
         ClusterRouter {
             router: Router::new(cfg.policy),
             replicas,
@@ -305,6 +360,11 @@ impl<B: Backend> ClusterRouter<B> {
             completions: Vec::new(),
             snaps: Vec::new(),
             control_ticks: Vec::new(),
+            control_tick_count: 0,
+            control_ticks_head: Vec::new(),
+            control_ticks_tail: VecDeque::new(),
+            resharder,
+            model,
             events: EventStats::default(),
         }
     }
@@ -342,6 +402,16 @@ impl<B: Backend> ClusterRouter<B> {
         &self.replicas[i]
     }
 
+    /// The resharder's reshard state machine (tests, inspection).
+    pub fn resharder(&self) -> &Resharder {
+        &self.resharder
+    }
+
+    /// The resharder's component id: appended after the replicas.
+    fn resharder_id(&self) -> ComponentId {
+        REPLICA0 + self.replicas.len()
+    }
+
     fn snapshot(&self, i: usize) -> ReplicaSnapshot {
         let e = &self.replicas[i];
         ReplicaSnapshot {
@@ -354,6 +424,8 @@ impl<B: Backend> ClusterRouter<B> {
             forced_fp8: e.controller.forced() == Some(Precision::Fp8),
             fp8_kv_blocks: e.kv.fp8_blocks(),
             host_kv_blocks: e.kv.host_blocks(),
+            tp_degree: e.backend.tp_degree(),
+            resharding: self.resharder.resharding(i),
         }
     }
 
@@ -440,21 +512,56 @@ impl<B: Backend> ClusterRouter<B> {
     /// pre-event-core driver gated on `due()` from whatever iteration
     /// time happened to be near, which both skewed tick times and
     /// skipped ticks entirely across arrival droughts).
-    fn control_tick(&mut self, now: f64) {
+    fn control_tick(&mut self, now: f64, wake: &mut Waker) {
         self.now = now;
         self.events.control_events += 1;
-        self.control_ticks.push(now);
+        self.control_tick_count += 1;
+        if self.cfg.record_control_ticks {
+            self.control_ticks.push(now);
+        }
+        if self.control_ticks_head.len() < 16 {
+            self.control_ticks_head.push(now);
+        }
+        self.control_ticks_tail.push_back(now);
+        if self.control_ticks_tail.len() > 16 {
+            self.control_ticks_tail.pop_front();
+        }
         if self.autopilot.is_some() {
             self.debug_check_snaps();
             let snaps = &self.snaps;
             let ap = self.autopilot.as_mut().expect("autopilot enabled");
             let dirs = ap.control_with_snapshots(now, snaps);
+            let tp_targets = ap.tp_targets();
             let fp8 = dirs
                 .iter()
                 .filter(|d| **d == PrecisionDirective::Fp8)
                 .count();
             for (e, d) in self.replicas.iter_mut().zip(&dirs) {
                 e.controller.apply_directive(*d);
+            }
+            // reconcile actual TP degrees toward the parallelism
+            // ladder's targets: a mismatched serving replica starts a
+            // drain; anything mid-window is left alone (the next tick
+            // re-checks — the ladder's dwell discipline keeps targets
+            // stable across a window). At most one replica reshards at
+            // a time: a drain freezes admission, so letting the whole
+            // fleet drain simultaneously would stall every arrival
+            // behind frozen queues — serializing windows caps the
+            // availability loss at one replica, and the ladder's
+            // persistent targets let the others catch up at later
+            // ticks.
+            for i in 0..self.replicas.len() {
+                if self.resharder.any_pending() {
+                    break;
+                }
+                let want = tp_targets[i];
+                if want != self.replicas[i].backend.tp_degree()
+                    && self.resharder.begin(i, want)
+                {
+                    self.replicas[i].set_admission_frozen(true);
+                    // a replica with no admitted work drains instantly
+                    self.try_open_window(i, now, wake);
+                }
             }
             self.refresh_all_snaps();
             let changed = self
@@ -499,7 +606,7 @@ impl<B: Backend> ClusterRouter<B> {
     /// replica's next event time — its new clock while it holds active
     /// work, a re-arm at the next arrival when blocked, `None` (parked)
     /// when drained.
-    fn replica_tick(&mut self, i: usize, now: f64) -> Result<Option<f64>> {
+    fn replica_tick(&mut self, i: usize, now: f64, wake: &mut Waker) -> Result<Option<f64>> {
         self.now = now;
         if self.replicas[i].is_idle() {
             // contract tripwire: parked replicas must receive no events
@@ -537,26 +644,77 @@ impl<B: Backend> ClusterRouter<B> {
             let e = &self.replicas[i];
             (e.active_requests() > 0).then(|| e.now())
         } else {
-            // replica i has queued work it cannot admit and no decode in
-            // flight; only time (the next arrival) can change that
             self.events.replica_blocked_wakes += 1;
-            match self.pending.front() {
-                Some(next_req) => {
-                    let t = next_req.arrival.max(t0 + 1e-4);
-                    self.replicas[i].set_clock(t);
-                    Some(self.replicas[i].now())
-                }
-                None => {
-                    return Err(anyhow!(
-                        "cluster deadlock: replica {i} has {} active requests \
-                         but nothing runnable and no arrivals left",
-                        self.replicas[i].active_requests()
-                    ));
+            if self.replicas[i].admission_frozen() {
+                // reshard drain: only queued (unadmitted) work is left
+                // and the freeze — not time — is what blocks it. Park;
+                // the window's close unfreezes admission and wakes us.
+                None
+            } else {
+                // replica i has queued work it cannot admit and no
+                // decode in flight; only time (the next arrival) can
+                // change that
+                match self.pending.front() {
+                    Some(next_req) => {
+                        let t = next_req.arrival.max(t0 + 1e-4);
+                        self.replicas[i].set_clock(t);
+                        Some(self.replicas[i].now())
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "cluster deadlock: replica {i} has {} active requests \
+                             but nothing runnable and no arrivals left",
+                            self.replicas[i].active_requests()
+                        ));
+                    }
                 }
             }
         };
+        // a draining replica whose last admitted request just finished
+        // (or which had none) opens its repartition window at its own
+        // engine clock — the drain is billed at replica time, not at
+        // whatever event time happened to dispatch us
+        if self.resharder.resharding(i) {
+            let t = self.replicas[i].now().max(now);
+            self.try_open_window(i, t, wake);
+        }
         self.refresh_snap(i);
         Ok(next)
+    }
+
+    /// If the draining replica `i` has no admitted work left, open its
+    /// repartition window at `t` and arm the resharder component at the
+    /// window's deadline.
+    fn try_open_window(&mut self, i: usize, t: f64, wake: &mut Waker) {
+        if matches!(self.resharder.state(i), ReshardState::Draining { .. })
+            && self.replicas[i].admitted_requests() == 0
+        {
+            let from = ShardPlan {
+                devices: self.cfg.engine.devices.max(1),
+                tp: self.replicas[i].backend.tp_degree(),
+            };
+            let until = self.resharder.drained(i, t, self.model, from);
+            wake.wake_at(self.resharder_id(), until);
+        }
+    }
+
+    /// One resharder event: close every repartition window due at `now`.
+    /// Each closed window's replica switches its backend to the new TP
+    /// degree, unfreezes admission, and — if it still owns work — wakes
+    /// to admit its queue at the new degree.
+    fn resharder_tick(&mut self, now: f64, wake: &mut Waker) -> Option<f64> {
+        self.now = now;
+        self.events.reshard_events += 1;
+        for (i, tp) in self.resharder.complete_due(now) {
+            self.replicas[i].backend.set_tp_degree(tp);
+            self.replicas[i].set_admission_frozen(false);
+            if self.replicas[i].active_requests() > 0 {
+                self.replicas[i].set_clock(now);
+                wake.wake_at(REPLICA0 + i, self.replicas[i].now());
+            }
+            self.refresh_snap(i);
+        }
+        self.resharder.next_deadline()
     }
 
     /// Staged escalation: compare cluster queue pressure (queued requests
@@ -604,8 +762,12 @@ impl<B: Backend> ClusterRouter<B> {
         workload.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         self.pending = VecDeque::from(workload);
         self.completions = Vec::new();
+        self.resharder = Resharder::new(self.replicas.len(), self.cfg.reshard);
         self.snaps = self.snapshots();
         self.control_ticks = Vec::new();
+        self.control_tick_count = 0;
+        self.control_ticks_head = Vec::new();
+        self.control_ticks_tail = VecDeque::new();
         self.events = EventStats::default();
     }
 
@@ -618,6 +780,9 @@ impl<B: Backend> ClusterRouter<B> {
         for i in 0..n {
             cs.push(Box::new(ReplicaComponent { i }));
         }
+        // appended after the replicas so their ids — and every event
+        // tie-break of a run that never reshards — are unchanged
+        cs.push(Box::new(ResharderComponent));
         cs
     }
 
@@ -672,12 +837,16 @@ impl<B: Backend> ClusterRouter<B> {
                 final_free_kv_blocks: e.kv.free_blocks(),
                 final_host_kv_blocks: e.kv.host_blocks(),
                 total_kv_blocks: e.kv.geo.total_blocks,
+                final_tp_degree: e.backend.tp_degree(),
             });
         }
         let mut aggregate = Metrics::new();
         for r in &replicas {
             aggregate.merge(&r.metrics);
         }
+        // reshard counters are cluster-owned (the resharder is shared),
+        // so they land on the aggregate directly rather than per replica
+        aggregate.observe_reshards(self.resharder.reshards, self.resharder.repartition_s);
         Ok(ClusterReport {
             replicas,
             aggregate,
@@ -694,6 +863,10 @@ impl<B: Backend> ClusterRouter<B> {
                 .map(|ap| ap.pre_escalations)
                 .unwrap_or(0),
             control_ticks: std::mem::take(&mut self.control_ticks),
+            control_tick_count: self.control_tick_count,
+            control_ticks_head: std::mem::take(&mut self.control_ticks_head),
+            control_ticks_tail: std::mem::take(&mut self.control_ticks_tail).into(),
+            reshard_timeline: self.resharder.timeline.clone(),
             events: self.events,
         })
     }
@@ -737,9 +910,9 @@ impl<B: Backend> Component<ClusterRouter<B>> for ControlLoop {
         &mut self,
         now: f64,
         sys: &mut ClusterRouter<B>,
-        _wake: &mut Waker,
+        wake: &mut Waker,
     ) -> Result<Option<f64>> {
-        sys.control_tick(now);
+        sys.control_tick(now, wake);
         Ok(sys.next_control_after(now))
     }
 }
@@ -780,9 +953,28 @@ impl<B: Backend> Component<ClusterRouter<B>> for ReplicaComponent {
         &mut self,
         now: f64,
         sys: &mut ClusterRouter<B>,
-        _wake: &mut Waker,
+        wake: &mut Waker,
     ) -> Result<Option<f64>> {
-        sys.replica_tick(self.i, now)
+        sys.replica_tick(self.i, now, wake)
+    }
+}
+
+/// Component 3+N: the resharder's repartition-window deadline clock.
+/// Parked (no events, zero cost) whenever no window is open — a run
+/// that never moves the parallelism knob never dispatches it.
+struct ResharderComponent;
+
+impl<B: Backend> Component<ClusterRouter<B>> for ResharderComponent {
+    fn next_tick(&self, sys: &ClusterRouter<B>) -> Option<f64> {
+        sys.resharder.next_deadline()
+    }
+    fn tick(
+        &mut self,
+        now: f64,
+        sys: &mut ClusterRouter<B>,
+        wake: &mut Waker,
+    ) -> Result<Option<f64>> {
+        Ok(sys.resharder_tick(now, wake))
     }
 }
 
@@ -798,6 +990,7 @@ mod tests {
     struct TestBackend {
         geo: KvGeometry,
         latency: f64,
+        tp: usize,
     }
 
     impl TestBackend {
@@ -812,7 +1005,15 @@ mod tests {
                     total_blocks: 256,
                 },
                 latency,
+                tp: 1,
             }
+        }
+        /// Sharded steps run proportionally faster (perfectly linear —
+        /// the sublinear law lives in `gpusim::step_latency_tp`; the
+        /// cluster tests only need *a* speedup). `x / 1.0 == x` exactly,
+        /// so tp = 1 runs are bit-identical to the pre-shard backend.
+        fn step_latency(&self) -> f64 {
+            self.latency / self.tp as f64
         }
     }
 
@@ -826,6 +1027,12 @@ mod tests {
         fn max_decode_batch(&self) -> usize {
             4
         }
+        fn tp_degree(&self) -> usize {
+            self.tp
+        }
+        fn set_tp_degree(&mut self, tp: usize) {
+            self.tp = tp;
+        }
         fn prefill(
             &mut self,
             _kv: &mut KvCacheManager,
@@ -836,7 +1043,7 @@ mod tests {
         ) -> Result<StepRun> {
             Ok(StepRun {
                 logits: None,
-                latency: self.latency,
+                latency: self.step_latency(),
                 ..StepRun::default()
             })
         }
@@ -850,7 +1057,7 @@ mod tests {
         ) -> Result<StepRun> {
             Ok(StepRun {
                 logits: None,
-                latency: self.latency,
+                latency: self.step_latency(),
                 ..StepRun::default()
             })
         }
@@ -868,6 +1075,7 @@ mod tests {
             physical_kv: false,
             max_iterations: 0,
             kv: crate::kvcache::KvPressureConfig::default(),
+            devices: 1,
         }
     }
 
@@ -884,6 +1092,7 @@ mod tests {
             engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
             surge: SurgeConfig::default(),
             autopilot: None,
+            ..ClusterConfig::default()
         };
         let mut c = cluster(2, 0.001, cfg);
         let report = c.run(burst(6, 0.0)).unwrap();
@@ -901,6 +1110,7 @@ mod tests {
                 engine: sim_engine_cfg(PrecisionPolicy::Dual),
                 surge: SurgeConfig::default(),
                 autopilot: None,
+                ..ClusterConfig::default()
             };
             cluster(3, 0.004, cfg)
         };
@@ -926,6 +1136,7 @@ mod tests {
             engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
             surge: SurgeConfig::default(),
             autopilot: None,
+            ..ClusterConfig::default()
         };
         let mut c = cluster(2, 0.050, cfg);
         // first request lands on replica 0 (tie); by the second arrival
@@ -954,6 +1165,7 @@ mod tests {
                 control_interval_s: 0.25,
             },
             autopilot: None,
+            ..ClusterConfig::default()
         };
         let mut c = cluster(3, 0.002, cfg);
         // 8 simultaneous arrivals -> pressure 8/3 = 2.67 -> stage 1:
@@ -991,6 +1203,7 @@ mod tests {
             engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
             surge: SurgeConfig::disabled(),
             autopilot: Some(AutopilotConfig::default()),
+            ..ClusterConfig::default()
         };
         let mut c = cluster(2, 0.020, cfg);
         // 14 simultaneous arrivals with enough decode work (~1 s of
@@ -1041,6 +1254,7 @@ mod tests {
                 engine: sim_engine_cfg(PrecisionPolicy::Dual),
                 surge: SurgeConfig::disabled(),
                 autopilot: Some(AutopilotConfig::default()),
+                ..ClusterConfig::default()
             };
             cluster(3, 0.008, cfg)
         };
@@ -1070,6 +1284,7 @@ mod tests {
                 engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
                 surge: SurgeConfig::default(),
                 autopilot: None,
+                ..ClusterConfig::default()
             };
             let mut c = cluster(n, 0.010, cfg);
             c.run(burst(8, 0.0)).unwrap()
@@ -1100,6 +1315,7 @@ mod tests {
                 engine: sim_engine_cfg(PrecisionPolicy::Dual),
                 surge: SurgeConfig::disabled(),
                 autopilot: Some(AutopilotConfig::default()),
+                ..ClusterConfig::default()
             };
             cluster(3, 0.008, cfg)
         };
@@ -1142,6 +1358,7 @@ mod tests {
             engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
             surge: SurgeConfig::disabled(),
             autopilot: None,
+            ..ClusterConfig::default()
         };
         let mut c = cluster(8, 0.002, cfg);
         let report = c.run(vec![Request::new(1, vec![1; 16], 8, 0.0)]).unwrap();
@@ -1158,5 +1375,140 @@ mod tests {
         );
         let working: usize = report.replicas.iter().filter(|r| r.iterations > 0).count();
         assert_eq!(working, 1, "exactly one replica should ever run");
+    }
+
+    /// Config for the reshard tests: precision pinned at FP16
+    /// (`max_precision_rung: 0`) so queue pressure flows straight into
+    /// the parallelism ladder, over a 2-device pool.
+    fn tp_cluster_cfg() -> ClusterConfig {
+        let mut engine = sim_engine_cfg(PrecisionPolicy::Fp16Only);
+        engine.devices = 2;
+        ClusterConfig {
+            policy: RoutingPolicy::RoundRobin,
+            engine,
+            surge: SurgeConfig::disabled(),
+            autopilot: Some(AutopilotConfig {
+                max_precision_rung: 0,
+                max_tp: 2,
+                ..AutopilotConfig::default()
+            }),
+            ..ClusterConfig::default()
+        }
+    }
+
+    /// The reshard lifecycle end to end on the cheap backend: a burst
+    /// pressures both replicas, the parallelism ladder escalates, the
+    /// resharder drains → repartitions → resumes each replica at tp 2,
+    /// and every request submitted before, during, and after the window
+    /// completes exactly once.
+    #[test]
+    fn reshard_window_drains_and_resumes_without_losing_requests() {
+        let mut c = cluster(2, 0.020, tp_cluster_cfg());
+        let mut workload: Vec<Request> = (0..14)
+            .map(|i| Request::new(i as u64, vec![1; 16], 24, 0.0))
+            .collect();
+        // arrivals that land inside and after the reshard windows
+        workload.extend(
+            (0..6).map(|i| Request::new(100 + i as u64, vec![1; 16], 8, 0.01 + 0.1 * i as f64)),
+        );
+        let report = c.run(workload).unwrap();
+        assert_eq!(report.aggregate.completed, 20, "requests lost across reshard");
+        let ids: std::collections::HashSet<u64> =
+            report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids.len(), 20, "a request completed twice");
+        assert!(
+            report.aggregate.reshards >= 1,
+            "queue pressure never triggered a reshard"
+        );
+        assert_eq!(report.aggregate.reshards, report.reshard_timeline.len());
+        assert!(report.aggregate.reshard_repartition_s > 0.0);
+        assert!(report.events.reshard_events >= 1);
+        // the timeline records the resume at the escalated degree, and
+        // the replicas end the run actually sharded
+        assert!(report.reshard_timeline.iter().any(|&(_, _, tp)| tp == 2));
+        assert!(report.replicas.iter().any(|r| r.final_tp_degree == 2));
+    }
+
+    /// Bit-identity of the heap driver vs the lockstep oracle must
+    /// survive reshard events: the resharder component's window
+    /// deadlines, the frozen-replica parks, and the resume wakes all
+    /// replay identically.
+    #[test]
+    fn lockstep_oracle_agrees_across_reshard_events() {
+        let make = || cluster(2, 0.020, tp_cluster_cfg());
+        let mut workload: Vec<Request> = (0..14)
+            .map(|i| Request::new(i as u64, vec![1; 16], 24, 0.0))
+            .collect();
+        workload.extend(
+            (0..6).map(|i| Request::new(100 + i as u64, vec![1; 16], 8, 0.01 + 0.1 * i as f64)),
+        );
+        let a = make().run(workload.clone()).unwrap();
+        let b = make().run_lockstep(workload).unwrap();
+        assert!(a.aggregate.reshards >= 1, "scenario must actually reshard");
+        let ids = |r: &ClusterReport| -> Vec<u64> { r.completions.iter().map(|c| c.id).collect() };
+        assert_eq!(ids(&a), ids(&b));
+        let timeline_bits = |r: &ClusterReport| -> Vec<(u64, usize, usize)> {
+            r.reshard_timeline
+                .iter()
+                .map(|&(t, i, tp)| (t.to_bits(), i, tp))
+                .collect()
+        };
+        assert_eq!(timeline_bits(&a), timeline_bits(&b));
+        // dispatch counters agree (heap lazy deletions excepted)
+        assert_eq!(a.events.arrival_events, b.events.arrival_events);
+        assert_eq!(a.events.control_events, b.events.control_events);
+        assert_eq!(a.events.replica_step_events, b.events.replica_step_events);
+        assert_eq!(a.events.reshard_events, b.events.reshard_events);
+        assert_eq!(a.aggregate.reshards, b.aggregate.reshards);
+        assert_eq!(
+            a.aggregate.reshard_repartition_s.to_bits(),
+            b.aggregate.reshard_repartition_s.to_bits()
+        );
+        assert_eq!(a.control_tick_count, b.control_tick_count);
+        for (x, y) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(x.iterations, y.iterations);
+            assert_eq!(x.final_tp_degree, y.final_tp_degree);
+        }
+    }
+
+    /// Satellite: `record_control_ticks: false` keeps only the count and
+    /// a bounded head/tail window, and those must agree exactly with the
+    /// full vector a recording run produces.
+    #[test]
+    fn control_tick_recording_can_be_bounded() {
+        let run_with = |record: bool| {
+            let cfg = ClusterConfig {
+                policy: RoutingPolicy::RoundRobin,
+                engine: sim_engine_cfg(PrecisionPolicy::Fp16Only),
+                surge: SurgeConfig::disabled(),
+                autopilot: Some(AutopilotConfig::default()),
+                record_control_ticks: record,
+                ..ClusterConfig::default()
+            };
+            let mut c = cluster(2, 0.020, cfg);
+            // long decode tail -> well over 16 control ticks
+            let reqs: Vec<Request> = (0..8)
+                .map(|i| Request::new(i as u64, vec![1; 16], 160, 0.0))
+                .collect();
+            c.run(reqs).unwrap()
+        };
+        let full = run_with(true);
+        assert_eq!(full.control_ticks.len(), full.control_tick_count);
+        assert!(
+            full.control_tick_count > 32,
+            "scenario too short to exercise the bound: {}",
+            full.control_tick_count
+        );
+        assert_eq!(full.control_ticks_head, full.control_ticks[..16]);
+        assert_eq!(
+            full.control_ticks_tail,
+            full.control_ticks[full.control_tick_count - 16..]
+        );
+
+        let bounded = run_with(false);
+        assert!(bounded.control_ticks.is_empty(), "bounded run kept the vec");
+        assert_eq!(bounded.control_tick_count, full.control_tick_count);
+        assert_eq!(bounded.control_ticks_head, full.control_ticks_head);
+        assert_eq!(bounded.control_ticks_tail, full.control_ticks_tail);
     }
 }

@@ -31,6 +31,10 @@ pub struct EngineConfig {
     pub max_iterations: usize,
     /// Paged-KV policy: admission mode, FP8 demotion, host-offload tier.
     pub kv: KvPressureConfig,
+    /// Devices in the replica's shard pool (the parallelism ladder's
+    /// ceiling; see [`crate::shard::ShardPlan`]). 1 = the pre-shard-layer
+    /// world: no reshards possible, every run bit-identical to before.
+    pub devices: usize,
 }
 
 impl Default for EngineConfig {
@@ -41,6 +45,7 @@ impl Default for EngineConfig {
             physical_kv: true,
             max_iterations: 0,
             kv: KvPressureConfig::default(),
+            devices: 1,
         }
     }
 }
@@ -94,6 +99,9 @@ pub struct Engine<B: Backend> {
     cfg: EngineConfig,
     requests: Vec<Request>,
     now: f64,
+    /// Reshard drain mode: no new admissions (queued requests wait),
+    /// in-flight requests keep running to completion.
+    admission_frozen: bool,
 }
 
 impl<B: Backend> Engine<B> {
@@ -114,6 +122,7 @@ impl<B: Backend> Engine<B> {
             cfg,
             requests: Vec::new(),
             now: 0.0,
+            admission_frozen: false,
         }
     }
 
@@ -155,6 +164,29 @@ impl<B: Backend> Engine<B> {
             .count()
     }
 
+    /// Admitted (in-flight) unfinished requests: everything past the
+    /// queue — prefilling, decoding, or host-offloaded. The reshard
+    /// drain completes when this reaches zero (queued requests survive
+    /// the window; they are admitted again at resume).
+    pub fn admitted_requests(&self) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| !r.is_finished() && r.state != RequestState::Queued)
+            .count()
+    }
+
+    /// Freeze (or thaw) admission for a reshard drain window. While
+    /// frozen the scheduler never admits queued requests and the
+    /// admission-assist/offload machinery stands down, but in-flight
+    /// work keeps stepping normally.
+    pub fn set_admission_frozen(&mut self, frozen: bool) {
+        self.admission_frozen = frozen;
+    }
+
+    pub fn admission_frozen(&self) -> bool {
+        self.admission_frozen
+    }
+
     /// Fast-forward the engine clock (never moves backwards).
     pub fn set_clock(&mut self, t: f64) {
         if t > self.now {
@@ -179,11 +211,15 @@ impl<B: Backend> Engine<B> {
         let t0 = self.now;
 
         // ---- host tier: resume offloaded sequences that now fit ----
+        // (runs even during a reshard drain: offloaded sequences are
+        // in-flight work the drain must keep alive, not new admissions)
         self.try_resume()?;
         // ---- paged admission assist: demote cold blocks (and at the
         // limit preempt a sequence to the host tier) so the oldest
         // queued request can be admitted instead of stalling ---------
-        self.admission_assist()?;
+        if !self.admission_frozen {
+            self.admission_assist()?;
+        }
 
         // ---- precision decision -----------------------------------
         // load signal: queued + still-prefilling requests (each one
@@ -217,7 +253,11 @@ impl<B: Backend> Engine<B> {
 
         // ---- plan & execute ---------------------------------------
         let mut tpot_worst = None;
-        let plan = self.scheduler.plan(&self.requests, &self.kv);
+        let plan = if self.admission_frozen {
+            self.scheduler.plan_frozen(&self.requests, &self.kv)
+        } else {
+            self.scheduler.plan(&self.requests, &self.kv)
+        };
         match plan {
             IterationPlan::Idle => {
                 // blocked on KV space with decodes all finished — the

@@ -52,6 +52,13 @@ pub struct Metrics {
     pub mode_dwell_s: [f64; 3],
     /// Directive switches (one ladder rung each). Summed over merge.
     pub mode_switches: usize,
+    // ---- shard-layer counters (mirrored from the cluster's resharder) ----
+    /// Completed reshards (TP-degree changes). Summed over merge.
+    pub reshards: usize,
+    /// Virtual-clock seconds spent inside repartition windows (the
+    /// weight-move part of drain → repartition → resume). Summed over
+    /// merge: cluster aggregate is total replica-seconds repartitioning.
+    pub reshard_repartition_s: f64,
     // ---- attention-traffic counters (mirrored from StepRun) ----
     /// Cumulative bytes a dense-gather attention path would have copied
     /// (the pre-PR 5 `gather_seq`/`gather_batch` traffic). Summed over
@@ -192,6 +199,13 @@ impl Metrics {
         self.mode_switches = switches;
     }
 
+    /// Mirror the cluster resharder's cumulative counters (monotone, so
+    /// overwriting is exact — same convention as [`Metrics::observe_kv`]).
+    pub fn observe_reshards(&mut self, reshards: usize, repartition_s: f64) {
+        self.reshards = reshards;
+        self.reshard_repartition_s = repartition_s;
+    }
+
     /// Fold another replica's metrics into this one (cluster aggregation).
     ///
     /// Digests concatenate — merged percentile summaries
@@ -223,6 +237,8 @@ impl Metrics {
             *d += o;
         }
         self.mode_switches += other.mode_switches;
+        self.reshards += other.reshards;
+        self.reshard_repartition_s += other.reshard_repartition_s;
         self.attn_dense_bytes += other.attn_dense_bytes;
         self.attn_touched_bytes += other.attn_touched_bytes;
         let mut by_sec: BTreeMap<u64, f64> = self.tpot_by_second.iter().cloned().collect();
@@ -364,13 +380,17 @@ mod tests {
     fn mode_counters_merge_by_sum() {
         let mut a = Metrics::new();
         a.observe_modes([10.0, 4.0, 1.0], 3);
+        a.observe_reshards(2, 0.25);
         let mut b = Metrics::new();
         b.observe_modes([2.0, 0.5, 7.5], 5);
+        b.observe_reshards(1, 0.10);
         let mut m = Metrics::new();
         m.merge(&a);
         m.merge(&b);
         assert_eq!(m.mode_dwell_s, [12.0, 4.5, 8.5]);
         assert_eq!(m.mode_switches, 8);
+        assert_eq!(m.reshards, 3);
+        assert!((m.reshard_repartition_s - 0.35).abs() < 1e-12);
     }
 
     #[test]

@@ -65,6 +65,11 @@ pub struct ReplicaSnapshot {
     /// Blocks preempted to the replica's host tier (latency debt: each
     /// one implies a pending fetch before its sequence decodes again).
     pub host_kv_blocks: usize,
+    /// Active tensor-parallel degree (1 = unsharded).
+    pub tp_degree: usize,
+    /// Replica inside a reshard window (draining or repartitioning) —
+    /// it admits nothing, so the router must not send it work.
+    pub resharding: bool,
 }
 
 /// SLO-headroom score: higher is a better dispatch target. Ties are
@@ -93,6 +98,10 @@ pub fn slo_headroom(s: &ReplicaSnapshot) -> f64 {
         - if s.forced_fp8 { 0.25 } else { 0.0 }
         - 0.3 * host_debt
         - 0.1 * fp8_debt
+        // a resharding replica admits nothing until its window closes;
+        // the penalty dwarfs every other term so both the router and the
+        // autopilot's ladder ordering treat it as the worst target
+        - if s.resharding { 4.0 } else { 0.0 }
 }
 
 /// A routing-policy instance (cursor / RNG state included).
@@ -117,32 +126,45 @@ impl Router {
 
     /// Pick a replica index for the next request.
     ///
+    /// Replicas mid-reshard admit nothing, so every policy routes around
+    /// them; if the whole fleet is resharding the router falls back to
+    /// considering everyone (the request queues at its replica until the
+    /// window closes — nothing is dropped).
+    ///
     /// Deterministic for every policy (the `Random` policy draws from a
     /// fixed-seed PCG64, so replays are bit-identical). Panics if
     /// `replicas` is empty.
     pub fn pick(&mut self, replicas: &[ReplicaSnapshot]) -> usize {
         assert!(!replicas.is_empty(), "router has no replicas");
+        let mut eligible: Vec<usize> = (0..replicas.len())
+            .filter(|&i| !replicas[i].resharding)
+            .collect();
+        if eligible.is_empty() {
+            eligible = (0..replicas.len()).collect();
+        }
         match self.policy {
             RoutingPolicy::RoundRobin => {
-                let i = self.rr % replicas.len();
+                // with no reshard in flight `eligible` is the identity
+                // mapping and this is the classic `rr % n` cursor
+                let i = eligible[self.rr % eligible.len()];
                 self.rr += 1;
                 i
             }
-            RoutingPolicy::Random { .. } => self.rng.index(replicas.len()),
+            RoutingPolicy::Random { .. } => eligible[self.rng.index(eligible.len())],
             RoutingPolicy::LeastLoadedKv => {
-                let mut best = 0;
-                for (i, s) in replicas.iter().enumerate().skip(1) {
-                    if s.free_kv_blocks > replicas[best].free_kv_blocks {
+                let mut best = eligible[0];
+                for &i in &eligible[1..] {
+                    if replicas[i].free_kv_blocks > replicas[best].free_kv_blocks {
                         best = i;
                     }
                 }
                 best
             }
             RoutingPolicy::SloHeadroom => {
-                let mut best = 0;
-                let mut best_score = slo_headroom(&replicas[0]);
-                for (i, s) in replicas.iter().enumerate().skip(1) {
-                    let score = slo_headroom(s);
+                let mut best = eligible[0];
+                let mut best_score = slo_headroom(&replicas[best]);
+                for &i in &eligible[1..] {
+                    let score = slo_headroom(&replicas[i]);
                     if score > best_score {
                         best = i;
                         best_score = score;
@@ -169,6 +191,8 @@ mod tests {
             forced_fp8: false,
             fp8_kv_blocks: 0,
             host_kv_blocks: 0,
+            tp_degree: 1,
+            resharding: false,
         }
     }
 
@@ -219,6 +243,32 @@ mod tests {
         let mut busy = b;
         busy.queued_requests = 6;
         assert_eq!(r.pick(&[a, busy]), 0);
+    }
+
+    #[test]
+    fn every_policy_routes_around_a_resharding_replica() {
+        let mut draining = snap(64, 64, 0, 0.0);
+        draining.resharding = true;
+        let healthy = snap(10, 64, 5, 0.030);
+        for policy in [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::Random { seed: 7 },
+            RoutingPolicy::LeastLoadedKv,
+            RoutingPolicy::SloHeadroom,
+        ] {
+            let mut r = Router::new(policy);
+            for _ in 0..8 {
+                assert_eq!(
+                    r.pick(&[draining, healthy]),
+                    1,
+                    "{policy:?} routed into a reshard window"
+                );
+            }
+        }
+        // whole fleet resharding: fall back to considering everyone
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        assert_eq!(r.pick(&[draining, draining]), 0);
+        assert_eq!(r.pick(&[draining, draining]), 1);
     }
 
     #[test]

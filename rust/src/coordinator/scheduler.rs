@@ -59,6 +59,22 @@ impl Scheduler {
     ///
     /// `requests` is the full table; the scheduler inspects states.
     pub fn plan(&mut self, requests: &[Request], kv: &KvCacheManager) -> IterationPlan {
+        self.plan_inner(requests, kv, true)
+    }
+
+    /// [`Scheduler::plan`] with admission disabled — the reshard drain
+    /// mode: in-flight prefills continue and decodes run, but queued
+    /// requests stay queued until the replica resumes.
+    pub fn plan_frozen(&mut self, requests: &[Request], kv: &KvCacheManager) -> IterationPlan {
+        self.plan_inner(requests, kv, false)
+    }
+
+    fn plan_inner(
+        &mut self,
+        requests: &[Request],
+        kv: &KvCacheManager,
+        admit: bool,
+    ) -> IterationPlan {
         // 1. continue a prefill already in flight (holds a slot)
         if let Some(r) = requests
             .iter()
@@ -75,17 +91,20 @@ impl Scheduler {
         // conservative full-context (Reserve) or prompt-only paging
         // (Paged, where decode growth is backed by demotion and
         // preempt-by-offload). Admission is gated by real free-block
-        // counts alone — there is no slot cap.
-        if let Some(r) = requests
-            .iter()
-            .filter(|r| r.state == RequestState::Queued)
-            .min_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap())
-        {
-            if kv.can_admit(kv.admit_len(r.prompt.len(), r.max_new_tokens)) {
-                return IterationPlan::Prefill {
-                    id: r.id,
-                    chunk: self.chunk_for(r.prompt.len()),
-                };
+        // counts alone — there is no slot cap. Skipped entirely while a
+        // reshard drain has admission frozen.
+        if admit {
+            if let Some(r) = requests
+                .iter()
+                .filter(|r| r.state == RequestState::Queued)
+                .min_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap())
+            {
+                if kv.can_admit(kv.admit_len(r.prompt.len(), r.max_new_tokens)) {
+                    return IterationPlan::Prefill {
+                        id: r.id,
+                        chunk: self.chunk_for(r.prompt.len()),
+                    };
+                }
             }
         }
 
@@ -225,6 +244,32 @@ mod tests {
         }
         // all five sequences get scheduled within a few rounds
         assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn frozen_plan_never_admits_but_keeps_inflight_work() {
+        let mut s = Scheduler::new(vec![8, 16, 32], 8);
+        let k = kv(64);
+        // a queued request alone: frozen plan idles instead of admitting
+        let queued = vec![req(2, RequestState::Queued, 16, 0.1)];
+        assert_eq!(s.plan_frozen(&queued, &k), IterationPlan::Idle);
+        // in-flight prefill still continues under freeze
+        let mut r1 = req(1, RequestState::Prefilling, 48, 0.0);
+        r1.prefilled = 32;
+        let requests = vec![r1, req(2, RequestState::Queued, 16, 0.1)];
+        assert_eq!(
+            s.plan_frozen(&requests, &k),
+            IterationPlan::Prefill { id: 1, chunk: 16 }
+        );
+        // and decodes keep running while the queue waits
+        let requests = vec![
+            req(1, RequestState::Decoding, 8, 0.0),
+            req(2, RequestState::Queued, 16, 0.1),
+        ];
+        assert_eq!(
+            s.plan_frozen(&requests, &k),
+            IterationPlan::Decode { ids: vec![1] }
+        );
     }
 
     #[test]

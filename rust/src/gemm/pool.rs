@@ -80,8 +80,26 @@ impl ThreadPool {
 }
 
 impl Default for ThreadPool {
+    /// All available cores, overridable with `NESTEDFP_THREADS`.
+    ///
+    /// The pool's partitioning is bit-identical for any worker count
+    /// (see [`ThreadPool::for_each_chunk`]'s determinism contract), so
+    /// defaulting to `std::thread::available_parallelism()` changes
+    /// only speed, never results — the previous default of 1 silently
+    /// pinned every default-constructed GEMM to a single core. Set
+    /// `NESTEDFP_THREADS=<n>` to pin an explicit count (benchmark
+    /// stability, CI core caps); invalid or zero values fall back to
+    /// the detected parallelism.
     fn default() -> Self {
-        ThreadPool::new(1)
+        let detected = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let workers = std::env::var("NESTEDFP_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(detected);
+        ThreadPool::new(workers)
     }
 }
 
@@ -147,5 +165,22 @@ mod tests {
     #[test]
     fn clamps_zero_workers() {
         assert_eq!(ThreadPool::new(0).workers(), 1);
+    }
+
+    #[test]
+    fn default_pool_is_parallel_but_still_deterministic() {
+        // the exact count depends on the machine (and NESTEDFP_THREADS),
+        // so the pinned contract is: at least one worker, and the same
+        // results as the single-threaded pool on a real workload —
+        // worker count changes speed, never bits
+        let pool = ThreadPool::default();
+        assert!(pool.workers() >= 1);
+        let mut data = vec![0usize; 131];
+        pool.for_each_chunk(&mut data, 9, |idx, c| {
+            for (off, v) in c.iter_mut().enumerate() {
+                *v = idx * 1000 + off;
+            }
+        });
+        assert_eq!(data, run_fill(1, 131, 9));
     }
 }

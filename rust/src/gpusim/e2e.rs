@@ -124,6 +124,81 @@ pub fn step_latency(spec: &ModelSpec, q: &StepQuery) -> f64 {
     t + ITER_OVERHEAD_S
 }
 
+/// Time of one tensor-parallel all-reduce over `m` activation rows of
+/// width `d_model` (fp16), ring-style across `tp` ranks: a fixed
+/// per-phase latency times `ceil(log2 tp)` phases plus the classic
+/// `2(tp-1)/tp` bytes-on-the-wire term over NVLink.
+pub fn allreduce_latency(m: usize, d_model: usize, tp: usize) -> f64 {
+    if tp <= 1 {
+        return 0.0;
+    }
+    let phases = (usize::BITS - (tp - 1).leading_zeros()) as f64; // ceil(log2 tp)
+    let bytes = (m * d_model * 2) as f64;
+    h100::ALLREDUCE_BASE_LATENCY_S * phases + 2.0 * (tp - 1) as f64 / tp as f64 * bytes / h100::NVLINK_BW
+}
+
+/// Latency of one serving iteration for `spec` under `q` when the
+/// replica runs tensor-parallel over `tp` devices.
+///
+/// `tp == 1` is *exactly* [`step_latency`] (same call, same bits — the
+/// single-device cost model is the degenerate shard plan). For `tp > 1`
+/// the sharded dimensions shrink — GEMM output columns, KV heads, and
+/// the lm-head vocab split `tp` ways — while the per-layer kernel
+/// launches, elementwise sweeps, and framework overhead do **not**, and
+/// two all-reduces per layer (attention output + MLP down, the Megatron
+/// pattern) plus one lm-head gather are added on top. Speedup is
+/// therefore sublinear, and *precision-dependent*: FP8 GEMMs are
+/// already fast, so the constant collective cost eats a larger fraction
+/// of the win — exactly why the autopilot treats parallelism as the
+/// more expensive knob.
+pub fn step_latency_tp(spec: &ModelSpec, q: &StepQuery, tp: usize) -> f64 {
+    assert!(tp >= 1, "tensor-parallel degree must be >= 1");
+    if tp == 1 {
+        return step_latency(spec, q);
+    }
+    assert!(q.m > 0, "empty step");
+    let mut t = 0.0;
+
+    // linear layers, output dimension sharded tp ways per device
+    for kind in GemmKind::ALL {
+        for (n, k, mult) in spec.gemm_shapes(kind) {
+            t += mult as f64
+                * spec.n_layers as f64
+                * tuned_gemm_latency(q.m, n.div_ceil(tp), k, q.format, q.opt);
+        }
+    }
+
+    // attention: KV heads are sharded, so each device streams 1/tp of
+    // the cache bytes
+    let kv_bytes_per_layer = match q.kind {
+        StepKind::Decode => (q.seqs * q.ctx * 2 * spec.kv_dim() * 2) as f64 / tp as f64,
+        StepKind::Prefill => ((q.ctx + q.m) * 2 * spec.kv_dim() * 2) as f64 / tp as f64,
+    };
+    t += spec.n_layers as f64 * kv_bytes_per_layer / (h100::HBM_BW * h100::HBM_EFF);
+    // attention kernel launches do not shrink with tp
+    t += spec.n_layers as f64 * h100::KERNEL_OVERHEAD_S;
+
+    // elementwise traffic is replicated on every device (norms, rope,
+    // residuals run on full activations)
+    let elem_bytes = (q.m * spec.d_model * 2) as f64 * 10.0;
+    t += spec.n_layers as f64 * elem_bytes / (h100::HBM_BW * h100::HBM_EFF);
+
+    // lm head, vocab sharded
+    t += tuned_gemm_latency(
+        q.m.min(q.seqs.max(1)),
+        spec.vocab.div_ceil(tp),
+        spec.d_model,
+        WeightFormat::Fp16,
+        q.opt,
+    );
+
+    // two all-reduces per layer (attn out-proj + MLP down) plus the
+    // lm-head logits gather
+    t += (2 * spec.n_layers + 1) as f64 * allreduce_latency(q.m, spec.d_model, tp);
+
+    t + ITER_OVERHEAD_S
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +276,62 @@ mod tests {
         let t1 = step_latency(spec, &q1);
         let t2 = step_latency(spec, &q2);
         assert!(t2 > 2.0 * t1, "{t1} vs {t2}");
+    }
+
+    #[test]
+    fn tp1_is_bit_identical_to_the_dense_model() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        for b in [1, 8, 64, 256] {
+            for fmt in [WeightFormat::Nested16, WeightFormat::Nested8] {
+                let a = step_latency(spec, &dq(b, fmt));
+                let t = step_latency_tp(spec, &dq(b, fmt), 1);
+                assert_eq!(a.to_bits(), t.to_bits(), "b={b} fmt={fmt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn tp_speedup_is_sublinear() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        let q = dq(64, WeightFormat::Nested16);
+        let t1 = step_latency_tp(spec, &q, 1);
+        let t2 = step_latency_tp(spec, &q, 2);
+        let t4 = step_latency_tp(spec, &q, 4);
+        assert!(t2 < t1, "tp=2 must beat tp=1 at batch 64: {t2} vs {t1}");
+        assert!(t4 < t2, "tp=4 must beat tp=2 at batch 64: {t4} vs {t2}");
+        // sublinear: 2 devices buy less than 2x, 4 less than 4x
+        assert!(t1 / t2 < 2.0, "tp=2 speedup {} superlinear", t1 / t2);
+        assert!(t1 / t4 < 4.0, "tp=4 speedup {} superlinear", t1 / t4);
+        // and the second doubling buys less than the first
+        assert!(t1 / t4 < 2.0 * (t1 / t2), "no collective cost visible");
+    }
+
+    #[test]
+    fn tp_speedup_is_precision_dependent() {
+        // FP8 GEMMs are already fast, so the (precision-independent)
+        // all-reduce bill eats a larger fraction of the TP win
+        let spec = zoo::find("llama31-8b").unwrap();
+        let s = |fmt: WeightFormat| {
+            let t1 = step_latency_tp(spec, &dq(128, fmt), 1);
+            let t4 = step_latency_tp(spec, &dq(128, fmt), 4);
+            t1 / t4
+        };
+        let s16 = s(WeightFormat::Nested16);
+        let s8 = s(WeightFormat::Nested8);
+        assert!(
+            s16 > s8,
+            "FP16 must gain more from TP than FP8: {s16} vs {s8}"
+        );
+    }
+
+    #[test]
+    fn allreduce_law_shape() {
+        assert_eq!(allreduce_latency(64, 4096, 1), 0.0);
+        let t2 = allreduce_latency(64, 4096, 2);
+        let t4 = allreduce_latency(64, 4096, 4);
+        assert!(t2 > 0.0 && t4 > t2, "more ranks cost more: {t2} vs {t4}");
+        // bytes term grows with m
+        assert!(allreduce_latency(512, 4096, 2) > t2);
     }
 
     #[test]

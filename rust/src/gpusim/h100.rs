@@ -32,6 +32,15 @@ pub const SIMT_OVERLAP_NONCOOP: f64 = 0.60;
 /// Cooperative kernels contend for the SIMT pipe; the NVVM fence recovers
 /// most but not all of the overlap.
 pub const SIMT_OVERLAP_COOP: f64 = 0.52;
+/// NVLink 4 per-direction bandwidth per GPU, bytes/s (900 GB/s
+/// bidirectional on H100 SXM → 450 GB/s each way; ring all-reduce is
+/// unidirectional per step).
+pub const NVLINK_BW: f64 = 450e9;
+/// Fixed per-hop latency of one collective phase (launch + NVLink
+/// round-trip + NCCL protocol overhead). Billed per `ceil(log2 tp)`
+/// stages, so it grows with the tensor-parallel degree but not with
+/// message size.
+pub const ALLREDUCE_BASE_LATENCY_S: f64 = 8.0e-6;
 /// Stream-K fix-up (partial reduction) cost factor.
 pub const STREAMK_FIXUP: f64 = 0.03;
 /// cuBLAS-vs-tuned-CUTLASS gap modelled for Fig. 13: cuBLAS uses a

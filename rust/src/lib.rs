@@ -46,6 +46,13 @@
 //! * [`gpusim`] — a tile-level analytical H100 GEMM cost model (the
 //!   hardware substitute; see DESIGN.md §2) with the paper's kernel config
 //!   search space, used to regenerate the performance figures.
+//! * [`shard`] — the device-shard layer: per-replica [`shard::ShardPlan`]s
+//!   (tensor-parallel degree over a fixed device pool with per-shard
+//!   weight/KV byte accounting), the sublinear precision-dependent TP
+//!   cost law extending `gpusim`, and the [`shard::Resharder`] that
+//!   executes plan transitions as clock-billed
+//!   drain → repartition → resume windows under the autopilot's second
+//!   (parallelism) hysteresis ladder.
 //! * [`trace`] — Azure-trace-like synthetic workload generation.
 //! * [`eval`] — accuracy harness comparing FP16 / baseline FP8 / NestedFP8.
 //! * [`bench`] — the reproduction harness behind `repro reproduce <exp>`.
@@ -59,6 +66,7 @@ pub mod attn;
 pub mod model;
 pub mod gemm;
 pub mod gpusim;
+pub mod shard;
 pub mod trace;
 pub mod eval;
 pub mod runtime;

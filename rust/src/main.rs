@@ -4,13 +4,14 @@
 //! repro reproduce <exp>      regenerate a paper table/figure
 //!                            exp: table1|table2|table3|fig1a|fig1b|fig3|
 //!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|
-//!                                 gemm|attention|cluster|kvcache|autopilot|all
+//!                                 gemm|attention|cluster|kvcache|autopilot|
+//!                                 parallelism|all
 //!        [--artifacts DIR]   artifact directory (default: artifacts)
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
 //!        [--json FILE]       also write the reports as machine-readable
 //!                            JSON (perf-trajectory tracking across PRs)
-//!        [--quick]           gemm/attention/autopilot/cluster: reduced
-//!                            scenario, CI budget
+//!        [--quick]           gemm/attention/autopilot/parallelism/cluster:
+//!                            reduced scenario, CI budget
 //!        [--scale]           cluster only: the discrete-event scale arm
 //!                            (100+ replicas over a multi-hour Azure day
 //!                            slice, per-event accounting; --quick keeps
@@ -35,7 +36,7 @@ use std::path::{Path, PathBuf};
 use nestedfp::bench::gemm::{self as gemmbench, BenchOpts};
 use nestedfp::bench::{
     attention as attnbench, autopilot as autopilotbench, cluster, fig1, fig3, fig7, fig8,
-    kvcache, report::Report, table1, table3,
+    kvcache, parallelism as parallelismbench, report::Report, table1, table3,
 };
 use nestedfp::coordinator::autopilot::{Autopilot, AutopilotConfig};
 use nestedfp::coordinator::backend::{ModeMap, RealBackend};
@@ -57,7 +58,7 @@ fn main() {
         _ => {
             eprintln!(
                 "nestedfp repro — usage:\n  \
-                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|attention|cluster|kvcache|autopilot|all> [--json FILE] [--quick] [--scale]\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|attention|cluster|kvcache|autopilot|parallelism|all> [--json FILE] [--quick] [--scale]\n  \
                  repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N] [--autopilot]\n  \
                  repro analyze\n  \
                  repro gemm --m M --n N --k K [--format ...]"
@@ -89,6 +90,7 @@ fn run_one(
     Ok(match exp {
         "attention" => attnbench::attention_sweep(gemm_opts.quick)?,
         "autopilot" => autopilotbench::autopilot_surge(gemm_opts.quick)?,
+        "parallelism" => parallelismbench::parallelism_surge(gemm_opts.quick)?,
         "table1" | "table2" => vec![table1::table12(dir, eval_n)?, table1::table2_weights(dir)?],
         "table3" => vec![table3::table3()],
         "fig1a" => vec![fig1::fig1a()],
@@ -164,7 +166,8 @@ fn cmd_reproduce(args: &Args) -> i32 {
         let mut r = Ok(());
         for e in [
             "fig1a", "fig1b", "fig3", "fig7a", "fig7b", "fig9", "fig13", "fig8", "fig10",
-            "gemm", "attention", "cluster", "kvcache", "autopilot", "table3", "table1",
+            "gemm", "attention", "cluster", "kvcache", "autopilot", "parallelism", "table3",
+            "table1",
         ] {
             eprintln!("[reproduce] running {e} ...");
             r = run_and_print(e);

@@ -1,0 +1,36 @@
+//! The device-shard layer: tensor parallelism as a *runtime knob*.
+//!
+//! NestedFP makes precision a runtime control input for SLO management;
+//! FLYING SERVING (PAPERS.md, arxiv 2602.22593) shows parallelism degree
+//! is a second, independent knob worth switching on the fly. This module
+//! gives each replica a fixed pool of devices and a [`ShardPlan`] — the
+//! tensor-parallel degree currently active over that pool — plus the
+//! machinery to *change* plans while serving:
+//!
+//! * [`ShardPlan`] — the plan itself, with per-shard weight and KV byte
+//!   accounting derived from [`ModelSpec`](crate::model::zoo::ModelSpec)
+//!   GEMM shapes, [`GemmWeights`](crate::gemm::GemmWeights) stores, and
+//!   the paged cache's [`KvGeometry`](crate::kvcache::KvGeometry).
+//! * The shard-aware cost model lives in `gpusim`
+//!   ([`step_latency_tp`](crate::gpusim::step_latency_tp)): per-shard
+//!   GEMM/attention kernel time plus a latency+bandwidth all-reduce
+//!   term, so TP speedup is sublinear and precision-dependent (FP8
+//!   gains less — the collective does not shrink with the GEMMs).
+//! * [`Resharder`] — the bookkeeper for plan transitions. A reshard is
+//!   never free: the replica **drains** (admits nothing, finishes
+//!   in-flight work), **repartitions** (a clock-billed window moving
+//!   weight shards over the interconnect), then **resumes** at the new
+//!   degree. The cluster's event core drives this as a real component
+//!   (`coordinator::cluster`); this module owns the states, the cost
+//!   law, and the counters.
+//!
+//! The autopilot arbitrates this ladder against the precision ladder
+//! (`coordinator::autopilot`): precision switches are instant, reshards
+//! cost a downtime window, so the controller always prefers the cheaper
+//! knob first and never moves both on one control tick.
+
+pub mod plan;
+pub mod resharder;
+
+pub use plan::ShardPlan;
+pub use resharder::{ReshardCost, ReshardState, Resharder};

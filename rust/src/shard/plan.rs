@@ -1,0 +1,173 @@
+//! Shard plans: a tensor-parallel degree over a fixed per-replica device
+//! pool, with the byte accounting that makes plan transitions costable.
+
+use anyhow::{ensure, Result};
+
+use crate::gemm::{GemmFormat, GemmWeights};
+use crate::kvcache::KvGeometry;
+use crate::model::zoo::{GemmKind, ModelSpec};
+
+/// One replica's parallelism plan: `tp` tensor-parallel shards over a
+/// pool of `devices` accelerators. `tp == 1` is the degenerate plan —
+/// the whole model on one device, which is exactly the pre-shard-layer
+/// world (and costs exactly the same, see
+/// [`step_latency_tp`](crate::gpusim::step_latency_tp)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Fixed device pool owned by the replica (never changes at runtime).
+    pub devices: usize,
+    /// Active tensor-parallel degree (a power of two `<= devices`).
+    pub tp: usize,
+}
+
+impl ShardPlan {
+    /// The degenerate single-device plan.
+    pub fn single(devices: usize) -> ShardPlan {
+        ShardPlan {
+            devices: devices.max(1),
+            tp: 1,
+        }
+    }
+
+    /// A plan at an explicit degree; rejects degrees the pool cannot
+    /// hold and non-power-of-two degrees (the GEMM/KV head splits only
+    /// tile evenly at powers of two — the same rule real TP launchers
+    /// enforce).
+    pub fn with_tp(devices: usize, tp: usize) -> Result<ShardPlan> {
+        ensure!(tp >= 1, "tensor-parallel degree must be >= 1");
+        ensure!(tp.is_power_of_two(), "tp {tp} is not a power of two");
+        ensure!(
+            tp <= devices.max(1),
+            "tp {tp} exceeds the device pool ({devices})"
+        );
+        Ok(ShardPlan {
+            devices: devices.max(1),
+            tp,
+        })
+    }
+
+    /// The parallelism ladder over a pool: every power of two up to the
+    /// pool size, ascending — the autopilot's rungs.
+    pub fn rungs(devices: usize) -> Vec<usize> {
+        let mut r = Vec::new();
+        let mut tp = 1usize;
+        while tp <= devices.max(1) {
+            r.push(tp);
+            tp *= 2;
+        }
+        r
+    }
+
+    /// Total quantizable linear-layer weight bytes for `spec` at FP16
+    /// master precision (2 bytes/elem), plus the (never-quantized)
+    /// lm head. This is the payload a repartition has to move.
+    pub fn weight_bytes_total(spec: &ModelSpec) -> usize {
+        let mut elems = 0usize;
+        for kind in GemmKind::ALL {
+            for (n, k, mult) in spec.gemm_shapes(kind) {
+                elems += n * k * mult * spec.n_layers;
+            }
+        }
+        elems += spec.vocab * spec.d_model; // lm head
+        2 * elems
+    }
+
+    /// Weight bytes resident on **one** shard under this plan: each
+    /// device holds `1/tp` of every linear layer (column- or row-split)
+    /// and `1/tp` of the vocab-split lm head.
+    pub fn weight_bytes_per_shard(&self, spec: &ModelSpec) -> usize {
+        Self::weight_bytes_total(spec).div_ceil(self.tp)
+    }
+
+    /// Bytes one shard streams for a prepared [`GemmWeights`] store
+    /// under `fmt` — the per-shard share of
+    /// [`GemmWeights::bytes_streamed`] (output channels split `tp`
+    /// ways, so Nested8's half-byte-traffic story composes with
+    /// sharding).
+    pub fn gemm_bytes_per_shard(&self, w: &GemmWeights, fmt: GemmFormat) -> usize {
+        w.bytes_streamed(fmt).div_ceil(self.tp)
+    }
+
+    /// Device KV-cache bytes resident on one shard: the paged cache's
+    /// full f32-resident budget (K + V) split across shards, since TP
+    /// shards the KV heads.
+    pub fn kv_bytes_per_shard(&self, geo: &KvGeometry) -> usize {
+        let total = geo.total_blocks * geo.block_elems() * 2 * 4; // K+V, f32 budget
+        total.div_ceil(self.tp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn plan_validation() {
+        assert_eq!(ShardPlan::single(4).tp, 1);
+        assert!(ShardPlan::with_tp(4, 2).is_ok());
+        assert!(ShardPlan::with_tp(4, 4).is_ok());
+        assert!(ShardPlan::with_tp(4, 8).is_err(), "pool too small");
+        assert!(ShardPlan::with_tp(4, 3).is_err(), "non-power-of-two");
+        assert!(ShardPlan::with_tp(4, 0).is_err());
+    }
+
+    #[test]
+    fn rungs_are_powers_of_two_within_the_pool() {
+        assert_eq!(ShardPlan::rungs(1), vec![1]);
+        assert_eq!(ShardPlan::rungs(4), vec![1, 2, 4]);
+        assert_eq!(ShardPlan::rungs(6), vec![1, 2, 4]);
+        assert_eq!(ShardPlan::rungs(8), vec![1, 2, 4, 8]);
+        assert_eq!(ShardPlan::rungs(0), vec![1], "empty pool still serves");
+    }
+
+    #[test]
+    fn weight_accounting_splits_evenly() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        let total = ShardPlan::weight_bytes_total(spec);
+        // an ~8B model at 2 bytes/elem lands in the 10-20 GB band
+        assert!(
+            total > 8_000_000_000 && total < 25_000_000_000,
+            "implausible weight bytes: {total}"
+        );
+        let p1 = ShardPlan::single(4);
+        let p4 = ShardPlan::with_tp(4, 4).unwrap();
+        assert_eq!(p1.weight_bytes_per_shard(spec), total);
+        let per4 = p4.weight_bytes_per_shard(spec);
+        assert!(per4 >= total / 4 && per4 <= total / 4 + 1);
+    }
+
+    #[test]
+    fn kv_accounting_shards_the_budget() {
+        let geo = KvGeometry {
+            n_layers: 4,
+            n_heads: 2,
+            max_seq: 128,
+            head_dim: 8,
+            block_size: 16,
+            total_blocks: 64,
+        };
+        let p1 = ShardPlan::single(2);
+        let p2 = ShardPlan::with_tp(2, 2).unwrap();
+        let full = p1.kv_bytes_per_shard(&geo);
+        assert_eq!(full, 64 * geo.block_elems() * 8);
+        assert_eq!(p2.kv_bytes_per_shard(&geo), full / 2);
+    }
+
+    #[test]
+    fn gemm_store_bytes_shard() {
+        use crate::format::tensor::Tensor2;
+        let w = Tensor2::from_vec(8, 16, vec![0.5f32; 128]);
+        let g = GemmWeights::prepare(&w, GemmFormat::Nested16).unwrap();
+        let p2 = ShardPlan::with_tp(4, 2).unwrap();
+        assert_eq!(
+            p2.gemm_bytes_per_shard(&g, GemmFormat::Nested16),
+            g.bytes_streamed(GemmFormat::Nested16) / 2
+        );
+        // Nested8 half-traffic composes with sharding
+        assert_eq!(
+            p2.gemm_bytes_per_shard(&g, GemmFormat::Nested8),
+            g.bytes_streamed(GemmFormat::Nested16) / 4
+        );
+    }
+}

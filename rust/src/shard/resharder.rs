@@ -1,0 +1,246 @@
+//! The resharder: plan transitions as an explicit, clock-billed
+//! drain → repartition → resume window.
+//!
+//! Switching a replica's tensor-parallel degree is not a register write.
+//! The replica first **drains** — the router stops sending it work, the
+//! engine freezes admission, and in-flight requests run to completion at
+//! the old degree (nothing is dropped, nothing is double-counted; the
+//! reshard-invariant property suite pins this). Once nothing is admitted,
+//! the **repartition** window opens: weight shards move over the
+//! interconnect, billed on the virtual clock by the cost law below. At
+//! the window's end the replica **resumes** at the new degree and its
+//! frozen queue is admitted again.
+//!
+//! This module owns the per-replica state machine, the window cost law,
+//! and the counters; `coordinator::cluster` drives it from a dedicated
+//! event-core component (parked whenever no reshard is pending, so runs
+//! that never reshard cost zero extra events and stay bit-identical).
+
+use crate::gpusim::h100;
+use crate::model::zoo::ModelSpec;
+
+use super::plan::ShardPlan;
+
+/// Where one replica is in its reshard lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReshardState {
+    /// Serving normally at the current plan.
+    Serving,
+    /// Admission frozen; in-flight requests finishing at the old degree.
+    Draining { target_tp: usize },
+    /// Weights moving; the window closes at `until` (virtual seconds).
+    Repartitioning { target_tp: usize, until: f64 },
+}
+
+/// The repartition window cost law: moving the new plan's weight shards
+/// over the pool interconnect, plus a fixed reconfiguration latency
+/// (process-group teardown/rebuild, allocator reset).
+#[derive(Clone, Copy, Debug)]
+pub struct ReshardCost {
+    /// Interconnect bandwidth for the weight move, bytes/s.
+    pub interconnect_bw: f64,
+    /// Fixed window overhead, seconds.
+    pub base_latency_s: f64,
+}
+
+impl Default for ReshardCost {
+    fn default() -> Self {
+        ReshardCost {
+            interconnect_bw: h100::NVLINK_BW,
+            base_latency_s: 25e-3,
+        }
+    }
+}
+
+impl ReshardCost {
+    /// Window length for re-laying `spec`'s weights from `from.tp` to
+    /// `to.tp` shards. Every device ends up loading its new shard, and
+    /// shard loads proceed in parallel across the pool — so the billed
+    /// time is one per-shard payload (at the *finer* of the two plans,
+    /// which bounds the slice every device must fetch) over the
+    /// interconnect, plus the fixed latency.
+    pub fn window_s(&self, spec: &ModelSpec, from: ShardPlan, to: ShardPlan) -> f64 {
+        let tp = from.tp.max(to.tp).max(1);
+        let bytes = ShardPlan::weight_bytes_total(spec).div_ceil(tp);
+        self.base_latency_s + bytes as f64 / self.interconnect_bw
+    }
+}
+
+/// Per-replica reshard bookkeeping for one cluster run.
+#[derive(Clone, Debug)]
+pub struct Resharder {
+    states: Vec<ReshardState>,
+    cost: ReshardCost,
+    /// `(virtual time, replica, new tp)` — one entry per *completed*
+    /// reshard, appended at resume time.
+    pub timeline: Vec<(f64, usize, usize)>,
+    /// Completed reshards.
+    pub reshards: usize,
+    /// Virtual seconds spent inside repartition windows (drain time is
+    /// workload-dependent and accounted by the engine clock, not here).
+    pub repartition_s: f64,
+}
+
+impl Resharder {
+    pub fn new(n_replicas: usize, cost: ReshardCost) -> Resharder {
+        Resharder {
+            states: vec![ReshardState::Serving; n_replicas],
+            cost,
+            timeline: Vec::new(),
+            reshards: 0,
+            repartition_s: 0.0,
+        }
+    }
+
+    pub fn cost(&self) -> ReshardCost {
+        self.cost
+    }
+
+    pub fn state(&self, i: usize) -> ReshardState {
+        self.states[i]
+    }
+
+    /// Is replica `i` anywhere in a reshard window (draining or
+    /// repartitioning)? Routers must not send it new work.
+    pub fn resharding(&self, i: usize) -> bool {
+        self.states[i] != ReshardState::Serving
+    }
+
+    /// Any replica mid-reshard?
+    pub fn any_pending(&self) -> bool {
+        self.states.iter().any(|s| *s != ReshardState::Serving)
+    }
+
+    /// Begin a reshard on a serving replica. Returns `false` (and does
+    /// nothing) if the replica is already mid-reshard — the autopilot's
+    /// dwell discipline should prevent this, but the state machine stays
+    /// safe regardless.
+    pub fn begin(&mut self, i: usize, target_tp: usize) -> bool {
+        if self.states[i] != ReshardState::Serving {
+            return false;
+        }
+        self.states[i] = ReshardState::Draining { target_tp };
+        true
+    }
+
+    /// The draining replica `i` has no admitted work left: open its
+    /// repartition window at `now` and return the window's end time.
+    ///
+    /// `spec` drives the weight-move term of the window; callers whose
+    /// backend has no model (accounting-only test backends) pass `None`
+    /// and are billed the fixed latency floor alone.
+    pub fn drained(
+        &mut self,
+        i: usize,
+        now: f64,
+        spec: Option<&ModelSpec>,
+        from: ShardPlan,
+    ) -> f64 {
+        let ReshardState::Draining { target_tp } = self.states[i] else {
+            panic!("replica {i} reported drained while not draining");
+        };
+        let to = ShardPlan {
+            devices: from.devices,
+            tp: target_tp,
+        };
+        let window = match spec {
+            Some(s) => self.cost.window_s(s, from, to),
+            None => self.cost.base_latency_s,
+        };
+        let until = now + window;
+        self.repartition_s += window;
+        self.states[i] = ReshardState::Repartitioning { target_tp, until };
+        until
+    }
+
+    /// The earliest repartition-window deadline, if any — the resharder
+    /// component's `next_tick`.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.states
+            .iter()
+            .filter_map(|s| match s {
+                ReshardState::Repartitioning { until, .. } => Some(*until),
+                _ => None,
+            })
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Close every window due at `now` (deadline `<= now`), returning
+    /// `(replica, new_tp)` for each in replica order. Records the
+    /// timeline entries and counters.
+    pub fn complete_due(&mut self, now: f64) -> Vec<(usize, usize)> {
+        let mut done = Vec::new();
+        for (i, s) in self.states.iter_mut().enumerate() {
+            if let ReshardState::Repartitioning { target_tp, until } = *s {
+                if until <= now + 1e-12 {
+                    *s = ReshardState::Serving;
+                    self.timeline.push((now, i, target_tp));
+                    self.reshards += 1;
+                    done.push((i, target_tp));
+                }
+            }
+        }
+        done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn lifecycle_walks_drain_repartition_resume() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        let mut rs = Resharder::new(2, ReshardCost::default());
+        assert!(!rs.any_pending());
+        assert!(rs.begin(0, 2));
+        assert!(!rs.begin(0, 4), "double-begin must be refused");
+        assert!(rs.resharding(0) && !rs.resharding(1));
+        assert_eq!(rs.next_deadline(), None, "draining has no deadline yet");
+
+        let until = rs.drained(0, 10.0, Some(spec), ShardPlan::single(4));
+        assert!(until > 10.0);
+        assert_eq!(rs.next_deadline(), Some(until));
+        assert!(rs.complete_due(10.0).is_empty(), "window still open");
+        let done = rs.complete_due(until);
+        assert_eq!(done, vec![(0, 2)]);
+        assert_eq!(rs.state(0), ReshardState::Serving);
+        assert_eq!(rs.reshards, 1);
+        assert_eq!(rs.timeline, vec![(until, 0, 2)]);
+        assert!(rs.repartition_s > 0.0);
+    }
+
+    #[test]
+    fn window_cost_scales_with_model_and_latency_floor() {
+        let llama = zoo::find("llama31-8b").unwrap();
+        let small = zoo::find("mistral-small-24b").unwrap();
+        let c = ReshardCost::default();
+        let p1 = ShardPlan::single(4);
+        let p2 = ShardPlan::with_tp(4, 2).unwrap();
+        let w_llama = c.window_s(llama, p1, p2);
+        let w_small = c.window_s(small, p1, p2);
+        assert!(w_llama >= c.base_latency_s);
+        assert!(w_small > w_llama, "bigger model, longer window");
+        // finer target shards mean less bytes per device: tp 1->4
+        // is cheaper per device than 1->2
+        let p4 = ShardPlan::with_tp(4, 4).unwrap();
+        assert!(c.window_s(llama, p1, p4) < w_llama);
+    }
+
+    #[test]
+    #[should_panic(expected = "not draining")]
+    fn drained_without_begin_panics() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        let mut rs = Resharder::new(1, ReshardCost::default());
+        rs.drained(0, 0.0, Some(spec), ShardPlan::single(2));
+    }
+
+    #[test]
+    fn specless_backends_pay_the_latency_floor_only() {
+        let mut rs = Resharder::new(1, ReshardCost::default());
+        assert!(rs.begin(0, 2));
+        let until = rs.drained(0, 5.0, None, ShardPlan::single(4));
+        assert!((until - 5.0 - rs.cost().base_latency_s).abs() < 1e-15);
+    }
+}

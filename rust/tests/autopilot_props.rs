@@ -196,9 +196,11 @@ fn mini_surge_violations(
             physical_kv: false,
             max_iterations: 0,
             kv: KvPressureConfig::default(),
+            devices: 1,
         },
         surge: SurgeConfig::disabled(),
         autopilot,
+        ..ClusterConfig::default()
     };
     let rates = surge_rates(3.0, 4.0, 40, 12, 10);
     let arrivals = poisson_arrivals(&rates, seed);

@@ -50,14 +50,15 @@ fn fingerprint(r: &ClusterReport) -> String {
     for (i, rep) in r.replicas.iter().enumerate() {
         writeln!(
             s,
-            "r{i} routed={} iters={} fp16={} fp8={} free={} host={} total={}",
+            "r{i} routed={} iters={} fp16={} fp8={} free={} host={} total={} tp={}",
             rep.routed,
             rep.iterations,
             rep.controller.iters_fp16,
             rep.controller.iters_fp8,
             rep.final_free_kv_blocks,
             rep.final_host_kv_blocks,
-            rep.total_kv_blocks
+            rep.total_kv_blocks,
+            rep.final_tp_degree
         )
         .unwrap();
         for &(t, fp8) in &rep.mode_timeline {
@@ -77,30 +78,36 @@ fn fingerprint(r: &ClusterReport) -> String {
     for &t in &r.control_ticks {
         writeln!(s, "ct {:016x}", t.to_bits()).unwrap();
     }
+    for &(t, i, tp) in &r.reshard_timeline {
+        writeln!(s, "rs {:016x} {i} {tp}", t.to_bits()).unwrap();
+    }
     // queue.stale is intentionally excluded: the heap counts lazily
     // deleted entries, the scan oracle has none. popped and scheduled
     // must agree.
     let e = &r.events;
     writeln!(
         s,
-        "ev a={} c={} p={} s={} w={} i={} popped={} scheduled={}",
+        "ev a={} c={} p={} s={} w={} i={} rs={} popped={} scheduled={}",
         e.arrival_events,
         e.control_events,
         e.predictor_events,
         e.replica_step_events,
         e.replica_blocked_wakes,
         e.idle_replica_events,
+        e.reshard_events,
         e.queue.popped,
         e.queue.scheduled
     )
     .unwrap();
     writeln!(
         s,
-        "agg completed={} out={} ttft_n={} tpot_n={} t0={:016x} t1={:016x}",
+        "agg completed={} out={} ttft_n={} tpot_n={} reshards={} repart={:016x} t0={:016x} t1={:016x}",
         r.aggregate.completed,
         r.aggregate.total_output_tokens,
         r.aggregate.ttft.len(),
         r.aggregate.tpot.len(),
+        r.aggregate.reshards,
+        r.aggregate.reshard_repartition_s.to_bits(),
         r.aggregate.t_start.to_bits(),
         r.aggregate.t_end.to_bits()
     )
@@ -142,6 +149,7 @@ fn policy_cluster(
             physical_kv: false,
             max_iterations: 0,
             kv: KvPressureConfig::default(),
+            devices: 1,
         },
         // autopilot off exercises the reactive staged-escalation control
         // path instead (finite queue_per_stage keeps the loop armed)
@@ -151,6 +159,7 @@ fn policy_cluster(
             SurgeConfig::default()
         },
         autopilot: autopilot.then(AutopilotConfig::default),
+        ..ClusterConfig::default()
     };
     ClusterRouter::new(backends, cfg)
 }
@@ -384,9 +393,11 @@ fn control_ticks_keep_exact_cadence_across_sparse_arrivals() -> Result<()> {
             physical_kv: false,
             max_iterations: 0,
             kv: KvPressureConfig::default(),
+            devices: 1,
         },
         surge: SurgeConfig::disabled(),
         autopilot: Some(AutopilotConfig::default()),
+        ..ClusterConfig::default()
     };
     let mut cluster = ClusterRouter::new(backends, cfg);
     // two tiny requests separated by a 6 s drought: the first drains in
@@ -509,7 +520,8 @@ fn scale_run_drains_100_replicas_without_leaks_or_idle_events() -> Result<()> {
             + e.control_events
             + e.predictor_events
             + e.replica_step_events
-            + e.idle_replica_events,
+            + e.idle_replica_events
+            + e.reshard_events,
         "event accounting identity broken"
     );
     Ok(())

@@ -1,0 +1,287 @@
+//! Property tests on the shard layer's invariants:
+//!
+//! (a) **in-flight conservation** — across any drain → repartition →
+//!     resume window, no request is dropped and none is double-counted:
+//!     every submitted request completes exactly once, and the KV ledger
+//!     balances on every replica, for any workload seed;
+//! (b) **two-ladder dwell discipline** — under adversarial pressure
+//!     series, the precision ladder keeps its dwell bounds, the
+//!     parallelism ladder keeps its own (longer) ones, TP targets walk
+//!     one power-of-two rung at a time, and the arbiter never moves both
+//!     knobs of one replica in the same 0.25 s control tick;
+//! (c) **resharder state-machine safety** — under random operation
+//!     sequences the per-replica lifecycle never skips a state, window
+//!     deadlines and counters stay consistent, and double-begins are
+//!     refused.
+
+use std::collections::HashSet;
+
+use nestedfp::bench::autopilot::surge_workload;
+use nestedfp::bench::parallelism::{arm_cluster, mini_scenario, Arm};
+use nestedfp::coordinator::autopilot::{Autopilot, AutopilotConfig};
+use nestedfp::shard::{ReshardCost, ReshardState, Resharder, ShardPlan};
+use nestedfp::util::prop;
+use nestedfp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// (a) in-flight conservation across reshard windows
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_no_request_dropped_or_double_counted_across_reshard_windows() {
+    // count reshards across all cases: each seed individually may or may
+    // not cross the escalation threshold, but the suite as a whole must
+    // actually exercise windows or it pins nothing
+    let mut total_reshards = 0usize;
+    prop::check_res(
+        "reshard-conservation",
+        6,
+        |rng: &mut Pcg64| (rng.range_u64(1, 1 << 20), rng.range_u64(1, 1 << 20)),
+        |&(arrival_seed, shape_seed)| {
+            let sc = nestedfp::bench::autopilot::SurgeScenario {
+                arrival_seed,
+                shape_seed,
+                ..mini_scenario()
+            };
+            let wl = surge_workload(&sc);
+            let n = wl.len();
+            let report = arm_cluster(Arm::Combined, &sc)
+                .run(wl)
+                .map_err(|e| format!("combined arm failed to drain: {e:#}"))?;
+            if report.aggregate.completed != n {
+                return Err(format!(
+                    "dropped requests: {} of {n} completed",
+                    report.aggregate.completed
+                ));
+            }
+            let ids: HashSet<u64> = report.completions.iter().map(|c| c.id).collect();
+            if ids.len() != n {
+                return Err(format!(
+                    "double-counted requests: {} unique ids for {n} completions",
+                    ids.len()
+                ));
+            }
+            // the KV ledger balances on every replica after the drain —
+            // a request lost inside a freeze would strand its blocks
+            for (i, r) in report.replicas.iter().enumerate() {
+                if r.final_free_kv_blocks != r.total_kv_blocks || r.final_host_kv_blocks != 0 {
+                    return Err(format!(
+                        "replica {i} KV imbalance after reshard: free {}/{} host {}",
+                        r.final_free_kv_blocks, r.total_kv_blocks, r.final_host_kv_blocks
+                    ));
+                }
+            }
+            if report.aggregate.reshards != report.reshard_timeline.len() {
+                return Err(format!(
+                    "reshard counter {} disagrees with timeline {}",
+                    report.aggregate.reshards,
+                    report.reshard_timeline.len()
+                ));
+            }
+            // completion times of windows are non-decreasing, and the
+            // one-at-a-time rule means no two windows close out of order
+            for w in report.reshard_timeline.windows(2) {
+                if w[1].0 < w[0].0 {
+                    return Err(format!(
+                        "reshard windows closed out of order: {w:?}"
+                    ));
+                }
+            }
+            total_reshards += report.aggregate.reshards;
+            Ok(())
+        },
+    );
+    assert!(
+        total_reshards >= 1,
+        "no seed ever resharded — the scenario tests nothing"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (b) two-ladder dwell discipline under adversarial pressure
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_two_ladder_autopilot_obeys_both_dwell_bounds() {
+    prop::check_res(
+        "two-ladder-no-thrash",
+        30,
+        |rng: &mut Pcg64| {
+            // adversarial series: per-tick random per-replica pressures
+            // straddling both thresholds, long enough for several full
+            // escalate/release round trips of either ladder
+            (0..240)
+                .map(|_| [rng.f64() * 2.0, rng.f64() * 2.0])
+                .collect::<Vec<_>>()
+        },
+        |series| {
+            let cfg = AutopilotConfig {
+                max_tp: 4,
+                ..AutopilotConfig::default()
+            };
+            let mut ap = Autopilot::new(2, cfg);
+            let hr = [0.0; 2];
+            let mut t = 0.0;
+            for p in series {
+                ap.control_at(t, p, 0.0, &hr);
+                t += cfg.control_interval_s;
+            }
+            let min_precision_dwell = cfg.escalate_dwell_s.min(cfg.promote_dwell_s);
+            let min_tp_dwell = cfg.tp_escalate_dwell_s.min(cfg.tp_promote_dwell_s);
+            for i in 0..2 {
+                let ptl = ap.directive_timeline(i);
+                for w in ptl.windows(2) {
+                    let gap = w[1].0 - w[0].0;
+                    if gap + 1e-9 < min_precision_dwell {
+                        return Err(format!(
+                            "replica {i}: precision switches {gap:.3}s apart \
+                             (< dwell {min_precision_dwell})"
+                        ));
+                    }
+                }
+                let ttl = ap.tp_timeline(i);
+                for w in ttl.windows(2) {
+                    let gap = w[1].0 - w[0].0;
+                    if gap + 1e-9 < min_tp_dwell {
+                        return Err(format!(
+                            "replica {i}: tp switches {gap:.3}s apart (< dwell {min_tp_dwell})"
+                        ));
+                    }
+                }
+                // the parallelism ladder walks one power-of-two rung at
+                // a time and never leaves [1, max_tp]
+                let mut prev = 1usize;
+                for &(_, tp) in ttl {
+                    if !tp.is_power_of_two() || tp < 1 || tp > cfg.max_tp {
+                        return Err(format!("replica {i}: illegal tp target {tp}"));
+                    }
+                    if tp != prev * 2 && prev != tp * 2 {
+                        return Err(format!(
+                            "replica {i}: tp jumped {prev} -> {tp} (must move one rung)"
+                        ));
+                    }
+                    prev = tp;
+                }
+                // arbitration: never both knobs of one replica in one tick
+                let ptimes: HashSet<u64> = ptl.iter().map(|&(t, _)| t.to_bits()).collect();
+                for &(tt, tp) in ttl {
+                    if ptimes.contains(&tt.to_bits()) {
+                        return Err(format!(
+                            "replica {i}: precision and tp (-> {tp}) both moved at t={tt:.2}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (c) resharder state-machine safety under random operation sequences
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Begin { replica: usize, tp: usize },
+    Drain { replica: usize },
+    Advance { dt_ms: u64 },
+}
+
+#[test]
+fn prop_resharder_state_machine_is_safe_under_random_ops() {
+    prop::check_res(
+        "resharder-fuzz",
+        40,
+        |rng: &mut Pcg64| {
+            (0..60)
+                .map(|_| match rng.index(3) {
+                    0 => Op::Begin {
+                        replica: rng.index(3),
+                        tp: 1 << rng.index(3),
+                    },
+                    1 => Op::Drain {
+                        replica: rng.index(3),
+                    },
+                    _ => Op::Advance {
+                        dt_ms: rng.range_u64(1, 120),
+                    },
+                })
+                .collect::<Vec<Op>>()
+        },
+        |ops| {
+            let mut rs = Resharder::new(3, ReshardCost::default());
+            let mut now = 0.0f64;
+            let mut open_windows = 0usize;
+            for &op in ops {
+                match op {
+                    Op::Begin { replica, tp } => {
+                        let was_serving = rs.state(replica) == ReshardState::Serving;
+                        let began = rs.begin(replica, tp);
+                        if began != was_serving {
+                            return Err(format!(
+                                "begin({replica}, {tp}) = {began} from state {:?}",
+                                rs.state(replica)
+                            ));
+                        }
+                    }
+                    Op::Drain { replica } => {
+                        if let ReshardState::Draining { target_tp } = rs.state(replica) {
+                            let until = rs.drained(replica, now, None, ShardPlan::single(4));
+                            if until <= now {
+                                return Err(format!(
+                                    "window closed before it opened: {until} <= {now}"
+                                ));
+                            }
+                            match rs.state(replica) {
+                                ReshardState::Repartitioning { target_tp: t2, .. }
+                                    if t2 == target_tp => {}
+                                s => {
+                                    return Err(format!(
+                                        "drained({replica}) landed in {s:?}, wanted \
+                                         Repartitioning to tp {target_tp}"
+                                    ))
+                                }
+                            }
+                            open_windows += 1;
+                        }
+                    }
+                    Op::Advance { dt_ms } => {
+                        now += dt_ms as f64 * 1e-3;
+                        let before = rs.reshards;
+                        let done = rs.complete_due(now);
+                        if rs.reshards != before + done.len() {
+                            return Err("reshard counter skipped".into());
+                        }
+                        open_windows -= done.len();
+                        // anything still open must be due strictly later
+                        if let Some(d) = rs.next_deadline() {
+                            if d <= now {
+                                return Err(format!(
+                                    "deadline {d} still pending at now {now}"
+                                ));
+                            }
+                        } else if open_windows != 0 {
+                            return Err(format!(
+                                "{open_windows} windows open but no deadline"
+                            ));
+                        }
+                    }
+                }
+            }
+            if rs.reshards != rs.timeline.len() {
+                return Err(format!(
+                    "counter {} != timeline {}",
+                    rs.reshards,
+                    rs.timeline.len()
+                ));
+            }
+            // repartition time is the sum of billed windows: positive iff
+            // any window ever opened
+            if (rs.repartition_s > 0.0) != (rs.reshards > 0 || open_windows > 0) {
+                return Err("repartition_s inconsistent with window history".into());
+            }
+            Ok(())
+        },
+    );
+}
