@@ -59,6 +59,13 @@ cargo test -q --offline --test event_core_props
 echo "== cargo test (shard layer: reshard + two-ladder invariants) =="
 cargo test -q --offline --test shard_props
 
+# The telemetry layer's invariants (byte-identical trace exports across
+# reruns and drivers, tracing-on == tracing-off bit identity, balanced
+# exports under cap pressure, order-independent registry merge) run by
+# name so an observability regression fails with clear attribution.
+echo "== cargo test (telemetry: trace determinism + registry merge) =="
+cargo test -q --offline --test telemetry_props
+
 echo "== cargo test -q =="
 cargo test -q --offline
 
@@ -76,6 +83,12 @@ echo "== smoke: repro reproduce attention --quick =="
 
 echo "== smoke: repro reproduce cluster --scale --quick =="
 ./target/release/repro reproduce cluster --scale --quick --json /tmp/nestedfp_cluster_scale_ci.json
+
+echo "== smoke: repro reproduce cluster --quick --trace (Perfetto export) =="
+./target/release/repro reproduce cluster --quick --trace /tmp/nestedfp_trace_ci.json
+
+echo "== smoke: repro analyze trace (exported trace validates) =="
+./target/release/repro analyze trace /tmp/nestedfp_trace_ci.json
 
 echo "== smoke: example kernel_tour (real engine vs gpusim) =="
 cargo run --release --offline --example kernel_tour

@@ -18,8 +18,14 @@
 
 use crate::gemm::ThreadPool;
 use crate::kvcache::{BlockKv, PagedKvCache};
+use crate::telemetry::Profiler;
 
 use super::kernel::{axpy_f32, axpy_fp8, dot_f32, dot_fp8, e4m3_lut, OnlineSoftmax};
+
+// Phase indices into [`crate::telemetry::profiler::ATTN_PHASES`].
+const PH_LOAD: usize = 0;
+const PH_DOT: usize = 1;
+const PH_SOFTMAX: usize = 2;
 
 /// One sequence's queries for an `attend` call. All lanes of a call
 /// carry the same token count `t` (1 for decode, the chunk length for
@@ -65,11 +71,16 @@ impl AttnStats {
 
 /// The engine: the worker budget plus the E4M3 dequant table (built
 /// once at construction — `attend` runs per layer per step, so the
-/// 256-entry LUT must not be rebuilt on the hot path).
-#[derive(Clone, Copy, Debug)]
+/// 256-entry LUT must not be rebuilt on the hot path). The profiler
+/// defaults to the disabled no-op handle; benches attach an active one
+/// via [`AttnEngine::set_profiler`] for block_load/dot/softmax phase
+/// timings. Profiling only brackets existing sections and never changes
+/// a single output bit.
+#[derive(Clone, Debug)]
 pub struct AttnEngine {
     threads: usize,
     lut: [f32; 256],
+    profiler: Profiler,
 }
 
 impl Default for AttnEngine {
@@ -85,11 +96,23 @@ impl AttnEngine {
         AttnEngine {
             threads: threads.max(1),
             lut: e4m3_lut(),
+            profiler: Profiler::disabled(),
         }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Attach a profiler handle (use
+    /// [`crate::telemetry::profiler::ATTN_PHASES`]). Clones of the
+    /// handle share accumulators, so the caller keeps one to read.
+    pub fn set_profiler(&mut self, profiler: Profiler) {
+        self.profiler = profiler;
+    }
+
+    pub fn profiler(&self) -> &Profiler {
+        &self.profiler
     }
 
     /// Compute one layer's attention for `lanes`, writing `out` with
@@ -137,6 +160,7 @@ impl AttnEngine {
         assert_eq!(out.len(), lanes.len() * h * t * dh, "out shape [B, H, t, Dh]");
 
         let lut = &self.lut;
+        let prof = &self.profiler;
         let zeros = vec![0.0f32; dh];
         // one (lane, head) task per chunk; each task's loop over its own
         // queries and blocks is fully sequential, so worker count is
@@ -155,6 +179,7 @@ impl AttnEngine {
                     q,
                     lane.positions[ti] as usize,
                     lut,
+                    prof,
                     &zeros,
                     &mut acc,
                     &mut dst[ti * dh..(ti + 1) * dh],
@@ -177,6 +202,7 @@ fn attend_query(
     q: &[f32],
     pos: usize,
     lut: &[f32; 256],
+    prof: &Profiler,
     zeros: &[f32],
     acc: &mut [f32],
     dst: &mut [f32],
@@ -194,12 +220,20 @@ fn attend_query(
     let mut bi = 0usize;
     while bi * bs < ctx {
         let n_tok = bs.min(ctx - bi * bs);
-        match kv.seq_block_kv(seq, bi) {
+        let t0 = prof.start();
+        let blk = kv.seq_block_kv(seq, bi);
+        prof.record(PH_LOAD, t0);
+        match blk {
             BlockKv::F32 { k, v } => {
                 for j in 0..n_tok {
                     let kr = &k[base + j * dh..base + (j + 1) * dh];
-                    let p = sm.admit(dot_f32(q, kr) * inv, acc);
+                    let t0 = prof.start();
+                    let s = dot_f32(q, kr) * inv;
+                    prof.record(PH_DOT, t0);
+                    let t0 = prof.start();
+                    let p = sm.admit(s, acc);
                     axpy_f32(p, &v[base + j * dh..base + (j + 1) * dh], acc);
+                    prof.record(PH_SOFTMAX, t0);
                 }
             }
             BlockKv::Fp8 {
@@ -210,22 +244,34 @@ fn attend_query(
             } => {
                 for j in 0..n_tok {
                     let kr = &k[base + j * dh..base + (j + 1) * dh];
-                    let p = sm.admit(dot_fp8(q, kr, scale_k, lut) * inv, acc);
+                    let t0 = prof.start();
+                    let s = dot_fp8(q, kr, scale_k, lut) * inv;
+                    prof.record(PH_DOT, t0);
+                    let t0 = prof.start();
+                    let p = sm.admit(s, acc);
                     axpy_fp8(p, &v[base + j * dh..base + (j + 1) * dh], scale_v, lut, acc);
+                    prof.record(PH_SOFTMAX, t0);
                 }
             }
             BlockKv::Acct => {
                 // accounting-only pool: the dense gather would have
                 // produced zeros — run the identical law over zeros
                 for _ in 0..n_tok {
-                    let p = sm.admit(dot_f32(q, zeros) * inv, acc);
+                    let t0 = prof.start();
+                    let s = dot_f32(q, zeros) * inv;
+                    prof.record(PH_DOT, t0);
+                    let t0 = prof.start();
+                    let p = sm.admit(s, acc);
                     axpy_f32(p, zeros, acc);
+                    prof.record(PH_SOFTMAX, t0);
                 }
             }
         }
         bi += 1;
     }
+    let t0 = prof.start();
     sm.finish(acc, dst);
+    prof.record(PH_SOFTMAX, t0);
 }
 
 #[cfg(test)]
@@ -357,6 +403,36 @@ mod tests {
             before.touched_bytes
         );
         assert_eq!(after.dense_bytes, before.dense_bytes);
+    }
+
+    #[test]
+    fn profiling_never_changes_bits() {
+        use crate::telemetry::profiler::ATTN_PHASES;
+        let g = geo();
+        let (kv, seqs) = filled_cache(g, &[25], 61, KvPressureConfig::dense_baseline());
+        let (h, dh) = (g.n_heads, g.head_dim);
+        let mut rng = Pcg64::seeded(62);
+        let q = rand_q(&mut rng, h * dh);
+        let pos = [24i32];
+        let lanes = [AttnLane {
+            seq: seqs[0],
+            q: &q,
+            positions: &pos,
+        }];
+        let mut want = vec![0.0f32; h * dh];
+        AttnEngine::new(1).attend(&kv, 0, &lanes, &mut want);
+        let mut engine = AttnEngine::new(1);
+        engine.set_profiler(Profiler::enabled(ATTN_PHASES));
+        let mut got = vec![0.0f32; h * dh];
+        engine.attend(&kv, 0, &lanes, &mut got);
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "profiling changed bits"
+        );
+        assert!(
+            engine.profiler().total_seconds() > 0.0,
+            "an enabled profiler must accumulate time"
+        );
     }
 
     #[test]

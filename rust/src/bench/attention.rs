@@ -22,6 +22,8 @@ use crate::attn::oracle::attend_dense_step_with;
 use crate::attn::{AttnEngine, AttnLane, AttnStats};
 use crate::bench::report::Report;
 use crate::kvcache::{KvGeometry, KvPressureConfig, PagedKvCache};
+use crate::telemetry::profiler::ATTN_PHASES;
+use crate::telemetry::{registry, Profiler, Registry};
 use crate::util::rng::Pcg64;
 
 /// One sweep point.
@@ -47,6 +49,9 @@ pub struct AttnMeasure {
     pub block_s: f64,
     pub stats: AttnStats,
     pub bit_identical: bool,
+    /// Engine phase shares of a profiled pass, in [`ATTN_PHASES`] order
+    /// (block_load, dot, softmax); sums to ~1.
+    pub phase_share: [f64; 3],
 }
 
 impl AttnMeasure {
@@ -176,11 +181,41 @@ pub fn measure(case: &AttnCase, seed: u64) -> AttnMeasure {
     }
     let dense_s = t0.elapsed().as_secs_f64() / case.reps as f64;
 
+    // one profiled step, separate from the timed reps so the per-token
+    // clock reads never skew the measured speedups; phase totals also
+    // fold into the global registry for --json
+    let mut prof_engine = AttnEngine::new(1);
+    prof_engine.set_profiler(Profiler::enabled(ATTN_PHASES));
+    for layer in 0..l {
+        prof_engine.attend(
+            &kv,
+            layer,
+            &lanes,
+            &mut out_block[layer * per_layer..(layer + 1) * per_layer],
+        );
+    }
+    let p = prof_engine.profiler();
+    let total = p.total_seconds();
+    let share = |i: usize| {
+        if total > 0.0 {
+            p.seconds(i) / total
+        } else {
+            0.0
+        }
+    };
+    let phase_share = [share(0), share(1), share(2)];
+    registry::with_global(|r| {
+        let mut tmp = Registry::new();
+        p.register_into(&mut tmp, "attn.profile");
+        r.merge(&tmp);
+    });
+
     AttnMeasure {
         dense_s,
         block_s,
         stats,
         bit_identical,
+        phase_share,
     }
 }
 
@@ -208,6 +243,9 @@ pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
             "speedup",
             "gathered_MB",
             "touched_MB",
+            "load%",
+            "dot%",
+            "smax%",
             "bits",
         ],
     );
@@ -218,6 +256,10 @@ pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
     rep.note(
         "acceptance: speedup > 1 whenever max_seq >= 4x mean_ctx, outputs bit-identical \
          (asserted in bench tests)",
+    );
+    rep.note(
+        "load/dot/smax = block-native engine phase shares from a separate profiled step \
+         (load = block fetch incl. fused FP8 dequant; smax = online softmax + PV accumulate)",
     );
     let mut all_bits = true;
     for &arm in arms {
@@ -242,6 +284,9 @@ pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
                     format!("{:.2}x", m.speedup()),
                     mb(m.stats.dense_bytes),
                     mb(m.stats.touched_bytes),
+                    format!("{:.0}%", m.phase_share[0] * 100.0),
+                    format!("{:.0}%", m.phase_share[1] * 100.0),
+                    format!("{:.0}%", m.phase_share[2] * 100.0),
                     if m.bit_identical { "ok" } else { "DIFF" }.into(),
                 ]);
             }
@@ -310,6 +355,6 @@ mod tests {
         let reports = attention_sweep(true).unwrap();
         assert_eq!(reports.len(), 1);
         assert!(!reports[0].rows.is_empty());
-        assert!(reports[0].rows.iter().all(|r| r[9] == "ok"));
+        assert!(reports[0].rows.iter().all(|r| r[12] == "ok"));
     }
 }

@@ -26,6 +26,8 @@ use crate::bench::report::Report;
 use crate::format::tensor::Tensor2;
 use crate::gemm::{GemmEngine, GemmFormat, GemmWeights};
 use crate::gpusim::{self, GemmQuery, OptLevel};
+use crate::telemetry::profiler::GEMM_PHASES;
+use crate::telemetry::{registry, Profiler, Registry};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::timer;
@@ -95,6 +97,9 @@ struct Measured {
     /// anyway (M ≤ mc caps the row-band parallelism at 1).
     gflops_mt: Option<f64>,
     mt_threads: usize,
+    /// Kernel phase shares of a profiled single-thread pass, in
+    /// [`GEMM_PHASES`] order (pack, microkernel, reduce); sums to ~1.
+    phase_share: [f64; 3],
 }
 
 fn gflops(m: usize, n: usize, k: usize, secs: f64) -> f64 {
@@ -155,6 +160,27 @@ fn run_sweep(opts: &BenchOpts) -> Result<(Vec<Measured>, Option<f64>)> {
             } else {
                 None
             };
+            // one profiled pass (separate from the timed ones, so the
+            // per-strip clock reads never skew the reported GFLOP/s);
+            // totals also fold into the global registry for --json
+            let mut prof_engine = GemmEngine::with_threads(1);
+            prof_engine.set_profiler(Profiler::enabled(GEMM_PHASES));
+            std::hint::black_box(prof_engine.matmul(&x, &g, fmt));
+            let p = prof_engine.profiler();
+            let total = p.total_seconds();
+            let share = |i: usize| {
+                if total > 0.0 {
+                    p.seconds(i) / total
+                } else {
+                    0.0
+                }
+            };
+            let phase_share = [share(0), share(1), share(2)];
+            registry::with_global(|r| {
+                let mut tmp = Registry::new();
+                p.register_into(&mut tmp, "gemm.profile");
+                r.merge(&tmp);
+            });
             rows.push(Measured {
                 m,
                 n,
@@ -165,6 +191,7 @@ fn run_sweep(opts: &BenchOpts) -> Result<(Vec<Measured>, Option<f64>)> {
                 gflops_1t: gflops(m, n, k, secs_1t),
                 gflops_mt,
                 mt_threads,
+                phase_share,
             });
         }
         if tag == "acceptance" {
@@ -201,12 +228,17 @@ fn perf_report(rows: &[Measured], naive_secs: Option<f64>) -> Result<Report> {
         "GEMM engine — measured GFLOP/s (packed-tile blocked kernel, fused NestedFP packs)",
         &[
             "m", "n", "k", "tag", "format", "ms_1t", "gflops_1t", "gflops_mt", "vs_fp16",
+            "pack%", "micro%", "reduce%",
         ],
     );
     rep.note("single-threaded times are best-of-N wall clock; vs_fp16 = speedup over the Fp16 path of the same shape");
     rep.note(format!(
         "gflops_mt uses {threads} worker thread(s); '-' = M <= mc, the row-band pool runs a single band anyway"
     ));
+    rep.note(
+        "pack/micro/reduce = kernel phase shares from a separate profiled pass \
+         (pack = fused NestedFP decode into panels; reduce = C tile load/writeback)",
+    );
     for r in rows {
         let base = find(rows, r.m, r.n, r.k, GemmFormat::Fp16).map(|b| b.secs_1t);
         let vs = base.map(|b| b / r.secs_1t).unwrap_or(1.0);
@@ -222,6 +254,9 @@ fn perf_report(rows: &[Measured], naive_secs: Option<f64>) -> Result<Report> {
                 .map(|g| format!("{g:.2}"))
                 .unwrap_or_else(|| "-".into()),
             format!("{vs:.2}x"),
+            format!("{:.0}%", r.phase_share[0] * 100.0),
+            format!("{:.0}%", r.phase_share[1] * 100.0),
+            format!("{:.0}%", r.phase_share[2] * 100.0),
         ]);
     }
     if let Some(naive) = naive_secs {
@@ -496,6 +531,7 @@ mod tests {
             gflops_1t: 2.0, // below the 5.0 floor
             gflops_mt: None,
             mt_threads: 1,
+            phase_share: [0.0; 3],
         };
         let (checked, misses) = trajectory_misses(&traj, &[row.clone()]).unwrap();
         assert_eq!((checked, misses.len()), (1, 1));
@@ -519,6 +555,7 @@ mod tests {
             gflops_1t: 3.17,
             gflops_mt: Some(6.0),
             mt_threads: 2,
+            phase_share: [0.0; 3],
         };
         let j = trajectory_json(&[row]);
         let back = Json::parse(&j.to_string()).unwrap();

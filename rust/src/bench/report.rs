@@ -1,8 +1,11 @@
-//! Experiment output: aligned-table printing + machine-readable JSON.
+//! Experiment output: aligned-table printing + machine-readable JSON,
+//! plus the shared `--trace` hooks every `repro reproduce` bench runs
+//! through ([`traced`] / [`export_trace`]).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+use crate::telemetry::trace::{self, Kind, BENCH_TRACK};
 use crate::util::json::Json;
 
 /// A tabular experiment report.
@@ -84,6 +87,33 @@ impl Report {
     }
 }
 
+/// Run one experiment inside its own trace run, bracketed by a
+/// wall-clock `bench` span on the reserved bench track — the shared
+/// hook `repro reproduce` wraps every experiment in, so a `--trace`
+/// export attributes each arm's events to a named Perfetto process.
+/// When tracing is disabled this is exactly `f()`.
+pub fn traced<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    if !trace::enabled() {
+        return f();
+    }
+    trace::begin_run(label);
+    let t0 = std::time::Instant::now();
+    trace::begin(BENCH_TRACK, Kind::Bench, 0.0, 0, 0);
+    let out = f();
+    trace::end(BENCH_TRACK, Kind::Bench, t0.elapsed().as_secs_f64(), 0, 0);
+    out
+}
+
+/// Uninstall the thread-local tracer and write its recording to `path`
+/// as Chrome-trace/Perfetto JSON. Returns `Ok(None)` when no tracer was
+/// installed, else the recorded event count.
+pub fn export_trace(path: &str) -> anyhow::Result<Option<usize>> {
+    match trace::take() {
+        Some(tr) => Ok(Some(crate::telemetry::export::write_trace(path, &tr)?)),
+        None => Ok(None),
+    }
+}
+
 /// Format seconds as milliseconds with 3 significant decimals.
 pub fn ms(t: f64) -> String {
     format!("{:.3}", t * 1e3)
@@ -118,5 +148,24 @@ mod tests {
     fn helpers() {
         assert_eq!(ms(0.00125), "1.250");
         assert_eq!(pct(1.062), "+6.20%");
+    }
+
+    #[test]
+    fn traced_and_export_trace_round_trip() {
+        trace::install(256);
+        assert_eq!(traced("arm", || 42), 42);
+        let file = format!("nestedfp_trace_{}.json", std::process::id());
+        let path = std::env::temp_dir().join(file);
+        let path = path.to_str().unwrap().to_string();
+        let n = export_trace(&path).unwrap().expect("tracer installed");
+        assert_eq!(n, 2, "one bench begin + one end");
+        let chk =
+            crate::telemetry::export::check_trace(&std::fs::read_to_string(&path).unwrap())
+                .unwrap();
+        assert_eq!(chk.spans, 1);
+        let _ = std::fs::remove_file(&path);
+        // with no tracer installed both hooks are inert
+        assert_eq!(traced("arm", || 7), 7);
+        assert!(export_trace(&path).unwrap().is_none());
     }
 }

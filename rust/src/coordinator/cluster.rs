@@ -37,6 +37,7 @@ use anyhow::{anyhow, Result};
 
 use crate::model::zoo::ModelSpec;
 use crate::shard::{ReshardCost, ReshardState, Resharder, ShardPlan};
+use crate::telemetry::trace::{self, Kind};
 
 use super::autopilot::{Autopilot, AutopilotConfig, ModeStats};
 use super::backend::Backend;
@@ -192,6 +193,24 @@ pub struct EventStats {
     pub queue: QueueStats,
 }
 
+impl EventStats {
+    /// Declare the dispatch counters in a telemetry registry under
+    /// `prefix` (all summed across runs).
+    pub fn register_into(&self, r: &mut crate::telemetry::Registry, prefix: &str) {
+        use crate::telemetry::registry::MergeRule::Sum;
+        r.set_int(&format!("{prefix}.arrival"), Sum, self.arrival_events as u64);
+        r.set_int(&format!("{prefix}.control"), Sum, self.control_events as u64);
+        r.set_int(&format!("{prefix}.predictor"), Sum, self.predictor_events as u64);
+        r.set_int(&format!("{prefix}.replica_step"), Sum, self.replica_step_events as u64);
+        r.set_int(&format!("{prefix}.replica_blocked"), Sum, self.replica_blocked_wakes as u64);
+        r.set_int(&format!("{prefix}.idle_replica"), Sum, self.idle_replica_events as u64);
+        r.set_int(&format!("{prefix}.reshard"), Sum, self.reshard_events as u64);
+        r.set_int(&format!("{prefix}.queue_scheduled"), Sum, self.queue.scheduled);
+        r.set_int(&format!("{prefix}.queue_popped"), Sum, self.queue.popped);
+        r.set_int(&format!("{prefix}.queue_stale"), Sum, self.queue.stale);
+    }
+}
+
 /// Outcome of a full cluster run.
 pub struct ClusterReport {
     pub replicas: Vec<ReplicaReport>,
@@ -337,10 +356,13 @@ impl<B: Backend> ClusterRouter<B> {
             );
         }
         let model = backends[0].model_spec();
-        let replicas: Vec<Engine<B>> = backends
+        let mut replicas: Vec<Engine<B>> = backends
             .into_iter()
             .map(|b| Engine::new(b, cfg.engine.clone()))
             .collect();
+        for (i, e) in replicas.iter_mut().enumerate() {
+            e.set_trace_track(i as u32);
+        }
         let autopilot = cfg.autopilot.map(|ap_cfg| Autopilot::new(n, ap_cfg));
         let resharder = Resharder::new(n, cfg.reshard);
         ClusterRouter {
@@ -530,8 +552,35 @@ impl<B: Backend> ClusterRouter<B> {
             self.debug_check_snaps();
             let snaps = &self.snaps;
             let ap = self.autopilot.as_mut().expect("autopilot enabled");
+            // trace bookkeeping only: captured so rung changes and
+            // predictor pre-escalations can be emitted as instants below
+            let prev_dirs = trace::enabled().then(|| ap.directives());
+            let prev_pre = ap.pre_escalations;
             let dirs = ap.control_with_snapshots(now, snaps);
             let tp_targets = ap.tp_targets();
+            let post_pre = ap.pre_escalations;
+            if let Some(prev) = prev_dirs {
+                for (i, (p, d)) in prev.iter().zip(&dirs).enumerate() {
+                    if p != d {
+                        trace::instant(
+                            trace::CONTROL_TRACK,
+                            Kind::Rung,
+                            now,
+                            i as u64,
+                            d.rung() as i64,
+                        );
+                    }
+                }
+                if post_pre > prev_pre {
+                    trace::instant(
+                        trace::CONTROL_TRACK,
+                        Kind::PreEscalate,
+                        now,
+                        0,
+                        (post_pre - prev_pre) as i64,
+                    );
+                }
+            }
             let fp8 = dirs
                 .iter()
                 .filter(|d| **d == PrecisionDirective::Fp8)
@@ -558,6 +607,7 @@ impl<B: Backend> ClusterRouter<B> {
                 if want != self.replicas[i].backend.tp_degree()
                     && self.resharder.begin(i, want)
                 {
+                    trace::begin(trace::CONTROL_TRACK, Kind::Reshard, now, i as u64, want as i64);
                     self.replicas[i].set_admission_frozen(true);
                     // a replica with no admitted work drains instantly
                     self.try_open_window(i, now, wake);
@@ -706,6 +756,7 @@ impl<B: Backend> ClusterRouter<B> {
         self.now = now;
         self.events.reshard_events += 1;
         for (i, tp) in self.resharder.complete_due(now) {
+            trace::end(trace::CONTROL_TRACK, Kind::Reshard, now, i as u64, tp as i64);
             self.replicas[i].backend.set_tp_degree(tp);
             self.replicas[i].set_admission_frozen(false);
             if self.replicas[i].active_requests() > 0 {
@@ -753,6 +804,7 @@ impl<B: Backend> ClusterRouter<B> {
             }
             self.refresh_all_snaps();
             self.demotion_timeline.push((now, stage));
+            trace::instant(trace::CONTROL_TRACK, Kind::Rung, now, stage as u64, stage as i64);
         }
     }
 
@@ -795,6 +847,9 @@ impl<B: Backend> ClusterRouter<B> {
         let mut components = Self::components(self.replicas.len());
         let queue_stats = event_core::drive(&mut components, self)?;
         self.events.queue = queue_stats;
+        // requests still in flight at the horizon leave open spans;
+        // close them at the final clock so exports stay balanced
+        trace::finish_run(self.now);
         self.build_report()
     }
 
@@ -809,6 +864,7 @@ impl<B: Backend> ClusterRouter<B> {
         let mut components = Self::components(self.replicas.len());
         let queue_stats = event_core::drive_lockstep(&mut components, self)?;
         self.events.queue = queue_stats;
+        trace::finish_run(self.now);
         self.build_report()
     }
 
@@ -847,6 +903,14 @@ impl<B: Backend> ClusterRouter<B> {
         // reshard counters are cluster-owned (the resharder is shared),
         // so they land on the aggregate directly rather than per replica
         aggregate.observe_reshards(self.resharder.reshards, self.resharder.repartition_s);
+        // fold the run into the thread-local global registry, which
+        // `repro reproduce --json` dumps as one flat counter object
+        crate::telemetry::registry::with_global(|g| {
+            g.merge(&aggregate.scalar_registry());
+            let mut ev = crate::telemetry::Registry::new();
+            self.events.register_into(&mut ev, "events");
+            g.merge(&ev);
+        });
         Ok(ClusterReport {
             replicas,
             aggregate,

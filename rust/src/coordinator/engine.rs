@@ -12,6 +12,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::kvcache::KvPressureConfig;
+use crate::telemetry::trace::{self, Kind};
 
 use super::backend::{Backend, StepRun};
 use super::kv::KvCacheManager;
@@ -102,6 +103,13 @@ pub struct Engine<B: Backend> {
     /// Reshard drain mode: no new admissions (queued requests wait),
     /// in-flight requests keep running to completion.
     admission_frozen: bool,
+    /// Telemetry track id for this engine's trace events (the replica
+    /// index in a cluster; 0 standalone). Pure observation — never read
+    /// by any scheduling decision.
+    trace_track: u32,
+    /// Iteration counter used only as the trace-span correlator for
+    /// [`Kind::Step`]; advances only while tracing is enabled.
+    steps: u64,
 }
 
 impl<B: Backend> Engine<B> {
@@ -123,7 +131,15 @@ impl<B: Backend> Engine<B> {
             requests: Vec::new(),
             now: 0.0,
             admission_frozen: false,
+            trace_track: 0,
+            steps: 0,
         }
+    }
+
+    /// Set the telemetry track this engine's trace events attribute to
+    /// (the cluster assigns each replica its index).
+    pub fn set_trace_track(&mut self, track: u32) {
+        self.trace_track = track;
     }
 
     pub fn now(&self) -> f64 {
@@ -135,6 +151,10 @@ impl<B: Backend> Engine<B> {
     /// this only once their clock has reached `r.arrival` (after
     /// [`Engine::set_clock`] when the replica was idle).
     pub fn submit(&mut self, r: Request) {
+        if trace::enabled() {
+            trace::instant(self.trace_track, Kind::Arrival, r.arrival, r.id, 0);
+            trace::begin(self.trace_track, Kind::Queue, r.arrival, r.id, 0);
+        }
         self.requests.push(r);
     }
 
@@ -302,7 +322,19 @@ impl<B: Backend> Engine<B> {
         }
         // drop finished request bodies to keep the table small
         self.requests.retain(|r| !r.is_finished());
-        metrics.observe_kv(&self.kv.stats());
+        let kv_stats = self.kv.stats();
+        if trace::enabled() {
+            // metrics still holds last iteration's cumulative counter,
+            // so the difference is exactly this iteration's demotions
+            let demoted = kv_stats.demoted_blocks.saturating_sub(metrics.kv_demoted_blocks);
+            if demoted > 0 {
+                trace::instant(self.trace_track, Kind::KvDemote, self.now, 0, demoted as i64);
+            }
+            self.steps += 1;
+            trace::begin(self.trace_track, Kind::Step, t0, self.steps, is_fp8 as i64);
+            trace::end(self.trace_track, Kind::Step, self.now, self.steps, is_fp8 as i64);
+        }
+        metrics.observe_kv(&kv_stats);
 
         Ok(EngineStep {
             ran: true,
@@ -342,6 +374,7 @@ impl<B: Backend> Engine<B> {
             // skipped this sequence's growth turn)
             self.kv.grow(seq, ctx.min(self.kv.geo.max_seq))?;
             self.request_mut(id).state = RequestState::Decoding;
+            trace::end(self.trace_track, Kind::Offload, self.now, id, 0);
         }
     }
 
@@ -439,6 +472,9 @@ impl<B: Backend> Engine<B> {
             .find(|r| r.id == id)
             .and_then(|r| r.slot)
             .expect("offload victim without kv seq");
+        // the span covers host residency including both transfers:
+        // preemption start → post-fetch resume (closed in `try_resume`)
+        trace::begin(self.trace_track, Kind::Offload, self.now, id, 0);
         let dt = self.kv.offload_sequence(seq)?;
         self.now += dt;
         self.request_mut(id).state = RequestState::Offloaded;
@@ -488,7 +524,7 @@ impl<B: Backend> Engine<B> {
                 .unwrap_or(false)
             {
                 let r = pending.pop_front().unwrap();
-                self.requests.push(r);
+                self.submit(r);
             }
 
             let active = self.active_requests();
@@ -538,6 +574,12 @@ impl<B: Backend> Engine<B> {
             }
         }
 
+        // close any span still open (requests cut off by max_iterations)
+        // so exported traces stay balanced
+        trace::finish_run(self.now);
+        // single-engine benches fold into the same global counter
+        // registry cluster runs use (dumped by `repro reproduce --json`)
+        crate::telemetry::registry::with_global(|g| g.merge(&metrics.scalar_registry()));
         Ok(RunReport {
             metrics,
             controller: self.controller.clone(),
@@ -578,6 +620,8 @@ impl<B: Backend> Engine<B> {
                 let r = self.request_mut(id);
                 r.slot = Some(slot);
                 r.state = RequestState::Prefilling;
+                trace::end(self.trace_track, Kind::Queue, self.now, id, 0);
+                trace::begin(self.trace_track, Kind::Prefill, self.now, id, 0);
             }
             let r = self.requests.iter().find(|r| r.id == id).unwrap();
             let start = r.prefilled;
@@ -619,6 +663,8 @@ impl<B: Backend> Engine<B> {
             // sample the first output token from the last chunk's logits
             let first_tok = logits.as_ref().map(|lg| argmax(lg)).unwrap_or(0);
             let now = self.now;
+            trace::end(self.trace_track, Kind::Prefill, now, id, 0);
+            trace::begin(self.trace_track, Kind::Decode, now, id, 0);
             let r = self.request_mut(id);
             r.state = RequestState::Decoding;
             r.generated.push(first_tok);
@@ -632,6 +678,8 @@ impl<B: Backend> Engine<B> {
                     FinishReason::Length
                 });
                 r.finished_at = Some(now);
+                trace::end(self.trace_track, Kind::Decode, now, id, 0);
+                trace::instant(self.trace_track, Kind::Completion, now, id, 0);
             }
         }
         Ok(())
@@ -703,6 +751,8 @@ impl<B: Backend> Engine<B> {
                     FinishReason::Length
                 });
                 r.finished_at = Some(now);
+                trace::end(self.trace_track, Kind::Decode, now, id, 0);
+                trace::instant(self.trace_track, Kind::Completion, now, id, 0);
             }
         }
         // grow each still-decoding sequence's KV to cover its next token;

@@ -1,10 +1,18 @@
 //! Serving metrics: TTFT / TPOT digests, SLO-violation accounting, the
 //! per-second violation timeline used by Figure 1b, and cluster-level
 //! aggregation ([`Metrics::merge`], goodput) for multi-replica runs.
+//!
+//! Scalar counters live behind one registration point,
+//! [`Metrics::scalar_registry`]: each counter is declared there once
+//! with its merge rule (sum / max / min), and both cross-replica
+//! aggregation and the `--json` counter dump derive from that single
+//! declaration — the old hand-written field-by-field merge could
+//! silently disagree with the dump; the registry cannot.
 
 use std::collections::BTreeMap;
 
 use crate::kvcache::KvCacheStats;
+use crate::telemetry::registry::{MergeRule, Registry};
 use crate::util::stats::{Digest, Summary};
 
 use super::precision::SloConfig;
@@ -206,8 +214,69 @@ impl Metrics {
         self.reshard_repartition_s = repartition_s;
     }
 
+    /// Declare every scalar counter with its cross-replica merge rule.
+    /// This is the single source of truth: [`Metrics::merge`] aggregates
+    /// by merging two of these registries, and the `--json` counter dump
+    /// serializes the same one — neither can drift from the other.
+    ///
+    /// The `t_start`/`t_end` pair rides along (Min / Max rules), so the
+    /// run span merges through the same mechanism as the counters.
+    pub fn scalar_registry(&self) -> Registry {
+        use MergeRule::{Max, Min, Sum};
+        let mut r = Registry::new();
+        r.set_int("requests.completed", Sum, self.completed as u64);
+        r.set_int("tokens.prompt", Sum, self.total_prompt_tokens as u64);
+        r.set_int("tokens.output", Sum, self.total_output_tokens as u64);
+        r.set_float("run.t_start_s", Min, self.t_start);
+        r.set_float("run.t_end_s", Max, self.t_end);
+        r.set_int("kv.demoted_blocks", Sum, self.kv_demoted_blocks as u64);
+        r.set_int("kv.offload_events", Sum, self.kv_offload_events as u64);
+        r.set_int("kv.fetch_events", Sum, self.kv_fetch_events as u64);
+        r.set_float("kv.transfer_s", Sum, self.kv_transfer_seconds);
+        r.set_float("kv.peak_utilization", Max, self.peak_kv_utilization);
+        // cluster peak = sum of replica peaks (total concurrency reached)
+        r.set_int("kv.peak_live_seqs", Sum, self.peak_live_seqs as u64);
+        r.set_float("mode.dwell_fp16_s", Sum, self.mode_dwell_s[0]);
+        r.set_float("mode.dwell_mixed_s", Sum, self.mode_dwell_s[1]);
+        r.set_float("mode.dwell_fp8_s", Sum, self.mode_dwell_s[2]);
+        r.set_int("mode.switches", Sum, self.mode_switches as u64);
+        r.set_int("shard.reshards", Sum, self.reshards as u64);
+        r.set_float("shard.repartition_s", Sum, self.reshard_repartition_s);
+        r.set_int("attn.dense_bytes", Sum, self.attn_dense_bytes as u64);
+        r.set_int("attn.touched_bytes", Sum, self.attn_touched_bytes as u64);
+        r
+    }
+
+    /// Read every scalar back from a merged registry (inverse of
+    /// [`Metrics::scalar_registry`]).
+    fn apply_scalars(&mut self, r: &Registry) {
+        self.completed = r.int("requests.completed") as usize;
+        self.total_prompt_tokens = r.int("tokens.prompt") as usize;
+        self.total_output_tokens = r.int("tokens.output") as usize;
+        self.t_start = r.float("run.t_start_s");
+        self.t_end = r.float("run.t_end_s");
+        self.kv_demoted_blocks = r.int("kv.demoted_blocks") as usize;
+        self.kv_offload_events = r.int("kv.offload_events") as usize;
+        self.kv_fetch_events = r.int("kv.fetch_events") as usize;
+        self.kv_transfer_seconds = r.float("kv.transfer_s");
+        self.peak_kv_utilization = r.float("kv.peak_utilization");
+        self.peak_live_seqs = r.int("kv.peak_live_seqs") as usize;
+        self.mode_dwell_s = [
+            r.float("mode.dwell_fp16_s"),
+            r.float("mode.dwell_mixed_s"),
+            r.float("mode.dwell_fp8_s"),
+        ];
+        self.mode_switches = r.int("mode.switches") as usize;
+        self.reshards = r.int("shard.reshards") as usize;
+        self.reshard_repartition_s = r.float("shard.repartition_s");
+        self.attn_dense_bytes = r.int("attn.dense_bytes") as usize;
+        self.attn_touched_bytes = r.int("attn.touched_bytes") as usize;
+    }
+
     /// Fold another replica's metrics into this one (cluster aggregation).
     ///
+    /// Scalars merge through [`Metrics::scalar_registry`] — each
+    /// counter's rule (sum / max / min) is declared exactly once there.
     /// Digests concatenate — merged percentile summaries
     /// ([`Metrics::ttft_summary`] / [`Metrics::tpot_summary`]) are
     /// therefore recomputed from the **pooled samples**, never from
@@ -220,27 +289,11 @@ impl Metrics {
         self.ttft.extend_from(&other.ttft);
         self.tpot.extend_from(&other.tpot);
         self.tpot_per_request.extend_from(&other.tpot_per_request);
-        self.completed += other.completed;
-        self.total_prompt_tokens += other.total_prompt_tokens;
-        self.total_output_tokens += other.total_output_tokens;
         self.request_latencies
             .extend_from_slice(&other.request_latencies);
-        self.t_start = self.t_start.min(other.t_start);
-        self.t_end = self.t_end.max(other.t_end);
-        self.kv_demoted_blocks += other.kv_demoted_blocks;
-        self.kv_offload_events += other.kv_offload_events;
-        self.kv_fetch_events += other.kv_fetch_events;
-        self.kv_transfer_seconds += other.kv_transfer_seconds;
-        self.peak_kv_utilization = self.peak_kv_utilization.max(other.peak_kv_utilization);
-        self.peak_live_seqs += other.peak_live_seqs;
-        for (d, o) in self.mode_dwell_s.iter_mut().zip(&other.mode_dwell_s) {
-            *d += o;
-        }
-        self.mode_switches += other.mode_switches;
-        self.reshards += other.reshards;
-        self.reshard_repartition_s += other.reshard_repartition_s;
-        self.attn_dense_bytes += other.attn_dense_bytes;
-        self.attn_touched_bytes += other.attn_touched_bytes;
+        let mut scalars = self.scalar_registry();
+        scalars.merge(&other.scalar_registry());
+        self.apply_scalars(&scalars);
         let mut by_sec: BTreeMap<u64, f64> = self.tpot_by_second.iter().cloned().collect();
         for &(sec, worst) in &other.tpot_by_second {
             let w = by_sec.entry(sec).or_insert(0.0);

@@ -19,10 +19,16 @@
 //! (no `mul_add`, no reassociation, no per-element reordering).
 
 use crate::format::tensor::Tensor2;
+use crate::telemetry::Profiler;
 
 use super::pack::{pack_a, pack_b, PackContext};
 use super::weights::{GemmFormat, GemmWeights};
 use super::GemmConfig;
+
+// Phase indices into [`crate::telemetry::profiler::GEMM_PHASES`].
+const PH_PACK: usize = 0;
+const PH_MICRO: usize = 1;
+const PH_REDUCE: usize = 2;
 
 /// Microkernel row count (X rows per strip).
 pub(crate) const MR: usize = 4;
@@ -54,12 +60,17 @@ fn microkernel(kc: usize, a: &[f32], b: &[f32], acc: &mut [[f32; NR]; MR]) {
 /// of C, where `band = c_band.len() / n`. Each band is self-contained
 /// (it packs its own A and B tiles), which is what lets the thread pool
 /// hand disjoint bands to workers with no shared mutable state.
+///
+/// `prof` times the pack / microkernel / reduce sections (a disabled
+/// handle skips every clock read); it only brackets existing code and
+/// must never reorder it — see the bit-exactness invariant above.
 pub(crate) fn gemm_band(
     x: &Tensor2,
     w: &GemmWeights,
     fmt: GemmFormat,
     ctx: &PackContext,
     cfg: &GemmConfig,
+    prof: &Profiler,
     row0: usize,
     c_band: &mut [f32],
 ) {
@@ -77,11 +88,15 @@ pub(crate) fn gemm_band(
         let mut pc = 0;
         while pc < k {
             let kc_eff = cfg.kc.min(k - pc);
+            let t0 = prof.start();
             pack_b(w, fmt, ctx, jc, nc_eff, pc, kc_eff, &mut bpack);
+            prof.record(PH_PACK, t0);
             let mut ic = 0;
             while ic < band {
                 let mc_eff = cfg.mc.min(band - ic);
+                let t0 = prof.start();
                 pack_a(x, row0 + ic, mc_eff, pc, kc_eff, &mut apack);
+                prof.record(PH_PACK, t0);
                 let n_strips_i = mc_eff.div_ceil(MR);
                 for sj in 0..n_strips_j {
                     let j0 = jc + sj * NR;
@@ -92,17 +107,23 @@ pub(crate) fn gemm_band(
                         let rows = MR.min(ic + mc_eff - i0);
                         let astrip = &apack[si * kc_eff * MR..(si + 1) * kc_eff * MR];
                         // load live accumulators from C (pad lanes stay 0)
+                        let t0 = prof.start();
                         let mut acc = [[0.0f32; NR]; MR];
                         for (ir, acc_row) in acc.iter_mut().enumerate().take(rows) {
                             let crow = &c_band[(i0 + ir) * n + j0..(i0 + ir) * n + j0 + cols];
                             acc_row[..cols].copy_from_slice(crow);
                         }
+                        prof.record(PH_REDUCE, t0);
+                        let t0 = prof.start();
                         microkernel(kc_eff, astrip, bstrip, &mut acc);
+                        prof.record(PH_MICRO, t0);
+                        let t0 = prof.start();
                         for (ir, acc_row) in acc.iter().enumerate().take(rows) {
                             let crow =
                                 &mut c_band[(i0 + ir) * n + j0..(i0 + ir) * n + j0 + cols];
                             crow.copy_from_slice(&acc_row[..cols]);
                         }
+                        prof.record(PH_REDUCE, t0);
                     }
                 }
                 ic += mc_eff;

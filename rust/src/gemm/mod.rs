@@ -58,6 +58,7 @@ pub use pool::ThreadPool;
 pub use weights::{GemmFormat, GemmWeights};
 
 use crate::format::tensor::Tensor2;
+use crate::telemetry::Profiler;
 
 /// Blocking parameters. Defaults target a generic ~32 KiB L1 / ~1 MiB L2
 /// core: the A block (`mc·kc` f32 = 64 KiB) lives in L2, one B strip
@@ -86,16 +87,36 @@ impl Default for GemmConfig {
     }
 }
 
-/// The compute engine. Cheap to construct; holds no operand state.
+/// The compute engine. Cheap to construct; holds no operand state. The
+/// profiler defaults to the disabled no-op handle — benches attach an
+/// active one via [`GemmEngine::set_profiler`] to get per-phase
+/// pack/microkernel/reduce timings. Profiling only reads the clock
+/// around existing sections; it never changes the operation sequence,
+/// so the bit-exactness invariant is untouched either way.
 #[derive(Clone, Debug, Default)]
 pub struct GemmEngine {
     cfg: GemmConfig,
+    profiler: Profiler,
 }
 
 impl GemmEngine {
     pub fn new(cfg: GemmConfig) -> GemmEngine {
         assert!(cfg.mc > 0 && cfg.kc > 0 && cfg.nc > 0, "tile sizes must be positive");
-        GemmEngine { cfg }
+        GemmEngine {
+            cfg,
+            profiler: Profiler::disabled(),
+        }
+    }
+
+    /// Attach a profiler handle (use
+    /// [`crate::telemetry::profiler::GEMM_PHASES`]). Clones of the
+    /// handle share accumulators, so the caller keeps one to read.
+    pub fn set_profiler(&mut self, profiler: Profiler) {
+        self.profiler = profiler;
+    }
+
+    pub fn profiler(&self) -> &Profiler {
+        &self.profiler
     }
 
     /// Default blocking with `threads` workers.
@@ -143,8 +164,9 @@ impl GemmEngine {
         // than workers when M is small (see [`Self::bands`])
         let workers = self.bands(m);
         let band_rows = m.div_ceil(workers).div_ceil(self.cfg.mc) * self.cfg.mc;
+        let prof = &self.profiler;
         ThreadPool::new(workers).for_each_chunk(&mut c.data, band_rows * n, |bi, band| {
-            kernel::gemm_band(x, w, fmt, &ctx, &self.cfg, bi * band_rows, band);
+            kernel::gemm_band(x, w, fmt, &ctx, &self.cfg, prof, bi * band_rows, band);
         });
         c
     }
@@ -275,6 +297,23 @@ mod tests {
         let w = GemmWeights::prepare(&Tensor2::zeros(4, 0), GemmFormat::Fp16).unwrap();
         let c = engine.matmul(&x, &w, GemmFormat::Fp16);
         assert!(c.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn profiling_never_changes_bits() {
+        use crate::telemetry::profiler::GEMM_PHASES;
+        use crate::telemetry::Profiler;
+        let x = gauss(40, 64, 50);
+        let w = GemmWeights::prepare(&gauss(48, 64, 51), GemmFormat::Nested16).unwrap();
+        let want = GemmEngine::default().matmul(&x, &w, GemmFormat::Nested16);
+        let mut engine = GemmEngine::default();
+        engine.set_profiler(Profiler::enabled(GEMM_PHASES));
+        let got = engine.matmul(&x, &w, GemmFormat::Nested16);
+        assert_bits_eq(&got, &want, "profiled");
+        assert!(
+            engine.profiler().total_seconds() > 0.0,
+            "an enabled profiler must accumulate time"
+        );
     }
 
     #[test]

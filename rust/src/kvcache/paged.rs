@@ -41,6 +41,22 @@ pub struct KvCacheStats {
     pub peak_utilization: f64,
 }
 
+impl KvCacheStats {
+    /// Declare these counters in a telemetry registry under `prefix`
+    /// (sums for the cumulative counters, max for the peaks — the same
+    /// rules `coordinator::Metrics` merges them under).
+    pub fn register_into(&self, r: &mut crate::telemetry::Registry, prefix: &str) {
+        use crate::telemetry::registry::MergeRule::{Max, Sum};
+        r.set_int(&format!("{prefix}.demoted_blocks"), Sum, self.demoted_blocks as u64);
+        r.set_int(&format!("{prefix}.offload_events"), Sum, self.offload_events as u64);
+        r.set_int(&format!("{prefix}.offloaded_blocks"), Sum, self.offloaded_blocks as u64);
+        r.set_int(&format!("{prefix}.fetch_events"), Sum, self.fetch_events as u64);
+        r.set_float(&format!("{prefix}.transfer_s"), Sum, self.transfer_seconds);
+        r.set_int(&format!("{prefix}.peak_live_seqs"), Max, self.peak_live_seqs as u64);
+        r.set_float(&format!("{prefix}.peak_utilization"), Max, self.peak_utilization);
+    }
+}
+
 /// Borrowed view of one block's stored K/V payload — what the
 /// block-native attention engine ([`crate::attn`]) reads in place,
 /// fusing FP8 dequantization into the block load instead of gathering.

@@ -53,6 +53,11 @@
 //!   executes plan transitions as clock-billed
 //!   drain → repartition → resume windows under the autopilot's second
 //!   (parallelism) hysteresis ladder.
+//! * [`telemetry`] — the unified observability layer: a virtual-clock
+//!   span/event tracer with Perfetto-exportable timelines
+//!   (`repro reproduce <exp> --trace FILE`), a typed counter registry
+//!   with deterministic cross-replica merge, kernel phase profilers,
+//!   and the `NESTEDFP_LOG` leveled diagnostics facade.
 //! * [`trace`] — Azure-trace-like synthetic workload generation.
 //! * [`eval`] — accuracy harness comparing FP16 / baseline FP8 / NestedFP8.
 //! * [`bench`] — the reproduction harness behind `repro reproduce <exp>`.
@@ -67,6 +72,7 @@ pub mod model;
 pub mod gemm;
 pub mod gpusim;
 pub mod shard;
+pub mod telemetry;
 pub mod trace;
 pub mod eval;
 pub mod runtime;

@@ -9,7 +9,12 @@
 //!        [--artifacts DIR]   artifact directory (default: artifacts)
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
 //!        [--json FILE]       also write the reports as machine-readable
-//!                            JSON (perf-trajectory tracking across PRs)
+//!                            JSON (perf-trajectory tracking across PRs),
+//!                            including the flat telemetry counter dump
+//!        [--trace FILE]      export a Chrome-trace/Perfetto JSON timeline
+//!                            of every experiment (virtual-clock spans per
+//!                            replica + control plane; open in
+//!                            ui.perfetto.dev)
 //!        [--quick]           gemm/attention/autopilot/parallelism/cluster:
 //!                            reduced scenario, CI budget
 //!        [--scale]           cluster only: the discrete-event scale arm
@@ -26,6 +31,8 @@
 //!        [--autopilot]       wall-clock autopilot monitor: jobs-in-flight
 //!                            pressure drives FP16/Mixed/FP8 directives
 //! repro analyze              weight-store + applicability summary
+//! repro analyze trace FILE   validate an exported trace (JSON shape,
+//!                            span balance, timestamp order)
 //! repro gemm --m M --n N --k K [--format fp16|nested16|nested8|fp8]
 //!                            one autotuned gpusim query (debugging)
 //! ```
@@ -45,7 +52,9 @@ use nestedfp::coordinator::precision::PrecisionPolicy;
 use nestedfp::coordinator::server;
 use nestedfp::gpusim::{self, GemmQuery, OptLevel, WeightFormat};
 use nestedfp::runtime::ModelRuntime;
+use nestedfp::telemetry::{export, registry, trace};
 use nestedfp::util::cli::Args;
+use nestedfp::{log_info, log_warn};
 
 fn main() {
     let args = Args::from_env();
@@ -116,7 +125,10 @@ fn run_one(
 }
 
 /// Serialize collected experiment reports as JSON for perf-trajectory
-/// tooling (stable schema; rows are strings exactly as printed).
+/// tooling (stable schema; rows are strings exactly as printed), plus
+/// the flat telemetry counter dump accumulated in the global registry.
+/// Success messaging is the caller's job — it knows whether the run
+/// was complete or a bench failed partway.
 fn write_json(path: &str, experiments: &[(String, Vec<Report>)]) -> anyhow::Result<()> {
     use nestedfp::util::json::Json;
     let exps: Vec<Json> = experiments
@@ -137,8 +149,8 @@ fn write_json(path: &str, experiments: &[(String, Vec<Report>)]) -> anyhow::Resu
         Json::Str("nestedfp/bench-reports@1".to_string()),
     );
     root.insert("experiments".to_string(), Json::Arr(exps));
+    root.insert("counters".to_string(), registry::global_snapshot().to_json());
     std::fs::write(path, Json::Obj(root).to_string() + "\n")?;
-    eprintln!("[reproduce] wrote JSON reports to {path}");
     Ok(())
 }
 
@@ -155,9 +167,16 @@ fn cmd_reproduce(args: &Args) -> i32 {
         update_trajectory: args.flag("update-trajectory"),
         scale: args.flag("scale"),
     };
+    // every invocation starts with a clean counter registry; a --trace
+    // flag additionally installs the span tracer for the whole run
+    registry::reset_global();
+    if args.get("trace").is_some() {
+        trace::install(trace::DEFAULT_CAP);
+    }
     let mut collected: Vec<(String, Vec<Report>)> = Vec::new();
     let mut run_and_print = |e: &str| -> anyhow::Result<()> {
-        let reports = run_one(e, &dir, eval_n, gemm_opts)?;
+        let reports =
+            nestedfp::bench::report::traced(e, || run_one(e, &dir, eval_n, gemm_opts))?;
         collected.push((e.to_string(), reports.clone()));
         print_reports(reports);
         Ok(())
@@ -169,7 +188,7 @@ fn cmd_reproduce(args: &Args) -> i32 {
             "gemm", "attention", "cluster", "kvcache", "autopilot", "parallelism", "table3",
             "table1",
         ] {
-            eprintln!("[reproduce] running {e} ...");
+            log_info!("[reproduce] running {e} ...");
             r = run_and_print(e);
             if r.is_err() {
                 break;
@@ -179,18 +198,38 @@ fn cmd_reproduce(args: &Args) -> i32 {
     } else {
         run_and_print(exp)
     };
-    if let Some(path) = args.get("json") {
-        if !collected.is_empty() {
-            if let Err(e) = write_json(path, &collected) {
-                eprintln!("reproduce --json {path}: {e:#}");
+    if let Some(path) = args.get("trace") {
+        match nestedfp::bench::report::export_trace(path) {
+            Ok(Some(n)) => log_info!("[reproduce] wrote trace ({n} events) to {path}"),
+            Ok(None) => {}
+            Err(e) => {
+                log_warn!("reproduce --trace {path}: {e:#}");
                 return 1;
             }
+        }
+    }
+    if let Some(path) = args.get("json") {
+        if collected.is_empty() {
+            log_warn!("[reproduce] --json {path}: nothing written (no experiment completed)");
+        } else if let Err(e) = write_json(path, &collected) {
+            log_warn!("reproduce --json {path}: {e:#}");
+            return 1;
+        } else if result.is_ok() {
+            log_info!("[reproduce] wrote JSON reports to {path}");
+        } else {
+            // a bench failed after earlier ones succeeded: the file holds
+            // only those, so don't claim a complete run
+            log_warn!(
+                "[reproduce] wrote PARTIAL JSON reports to {path} \
+                 ({} experiment(s) completed before the failure)",
+                collected.len()
+            );
         }
     }
     match result {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("reproduce {exp}: {e:#}");
+            log_warn!("reproduce {exp}: {e:#}");
             1
         }
     }
@@ -223,7 +262,7 @@ fn spawn_autopilot_monitor(
             // directive channels only when a job arrives, so an idle
             // fleet must not accumulate a 4 msg/s backlog forever
             if dirs != last {
-                eprintln!(
+                log_info!(
                     "[autopilot] severity {} directives {dirs:?} (in-flight {outstanding:?})",
                     ap.severity()
                 );
@@ -257,7 +296,7 @@ fn cmd_serve(args: &Args) -> i32 {
             let dir2 = dir.clone();
             std::thread::spawn(move || {
                 let work = || -> anyhow::Result<()> {
-                    eprintln!("[replica {replica}] loading artifacts from {dir2:?} ...");
+                    log_info!("[replica {replica}] loading artifacts from {dir2:?} ...");
                     let rt = ModelRuntime::load(
                         &dir2,
                         &["nested16", "nested8"],
@@ -279,18 +318,18 @@ fn cmd_serve(args: &Args) -> i32 {
                             ..Default::default()
                         },
                     );
-                    eprintln!("[replica {replica}] engine ready");
+                    log_info!("[replica {replica}] engine ready");
                     server::engine_worker_controlled(&mut engine, rx, drx)
                 };
                 if let Err(e) = work() {
-                    eprintln!("[replica {replica}] engine worker died: {e:#}");
+                    log_warn!("[replica {replica}] engine worker died: {e:#}");
                 }
             });
             senders.push(tx);
             directive_senders.push(dtx);
         }
         let listener = std::net::TcpListener::bind(&addr)?;
-        eprintln!(
+        log_info!(
             "listening on {addr} ({replicas} replica(s){}) — protocol: GEN <max_new> <prompt>",
             if autopilot_on { ", autopilot on" } else { "" }
         );
@@ -308,13 +347,42 @@ fn cmd_serve(args: &Args) -> i32 {
     match run() {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("serve: {e:#}");
+            log_warn!("serve: {e:#}");
+            1
+        }
+    }
+}
+
+/// `repro analyze trace <FILE>`: validate an exported trace — parses,
+/// checks span balance per (pid, tid, name, id), timestamp order — and
+/// print a one-line summary. Used by the CI smoke after a `--trace` run.
+fn cmd_analyze_trace(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(2) else {
+        log_warn!("usage: repro analyze trace <FILE>");
+        return 1;
+    };
+    let run = || -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let chk = export::check_trace(&text)?;
+        println!(
+            "trace {path}: {} events ({} spans, {} instants), {} dropped — balanced",
+            chk.events, chk.spans, chk.instants, chk.dropped
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            log_warn!("analyze trace {path}: {e:#}");
             1
         }
     }
 }
 
 fn cmd_analyze(args: &Args) -> i32 {
+    if args.positional.get(1).map(|s| s.as_str()) == Some("trace") {
+        return cmd_analyze_trace(args);
+    }
     let dir = artifacts_dir(args);
     let run = || -> anyhow::Result<()> {
         let ws = nestedfp::runtime::WeightStore::load(&dir.join("weights.bin"))?;
@@ -337,7 +405,7 @@ fn cmd_analyze(args: &Args) -> i32 {
     match run() {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("analyze: {e:#}");
+            log_warn!("analyze: {e:#}");
             1
         }
     }
@@ -371,7 +439,7 @@ fn cmd_gemm(args: &Args) -> i32 {
             0
         }
         None => {
-            eprintln!("no feasible kernel config");
+            log_warn!("no feasible kernel config");
             1
         }
     }

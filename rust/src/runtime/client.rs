@@ -285,25 +285,11 @@ fn literal_to_host(lit: xla::Literal) -> Result<HostTensor> {
     HostTensor::new(dtype, dims, bytes)
 }
 
-/// Tiny leveled logger (std-only).
+/// Leveled diagnostics, delegated to the unified telemetry facade.
+/// Kept as `client::log` so both feature configs expose the same
+/// surface; `set_verbose(true)` raises the global level to debug.
 pub mod log {
-    use std::sync::atomic::{AtomicBool, Ordering};
-
-    static VERBOSE: AtomicBool = AtomicBool::new(false);
-
-    pub fn set_verbose(v: bool) {
-        VERBOSE.store(v, Ordering::Relaxed);
-    }
-
-    pub fn debug(msg: &str) {
-        if VERBOSE.load(Ordering::Relaxed) {
-            eprintln!("[debug] {msg}");
-        }
-    }
-
-    pub fn info(msg: &str) {
-        eprintln!("[info] {msg}");
-    }
+    pub use crate::telemetry::log::{debug, info, set_verbose};
 }
 
 #[cfg(test)]

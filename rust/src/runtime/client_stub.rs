@@ -74,23 +74,8 @@ impl ModelRuntime {
     }
 }
 
-/// Tiny leveled logger (std-only), same surface as the pjrt build's.
+/// Leveled diagnostics, delegated to the unified telemetry facade —
+/// same surface as the pjrt build's `client::log`.
 pub mod log {
-    use std::sync::atomic::{AtomicBool, Ordering};
-
-    static VERBOSE: AtomicBool = AtomicBool::new(false);
-
-    pub fn set_verbose(v: bool) {
-        VERBOSE.store(v, Ordering::Relaxed);
-    }
-
-    pub fn debug(msg: &str) {
-        if VERBOSE.load(Ordering::Relaxed) {
-            eprintln!("[debug] {msg}");
-        }
-    }
-
-    pub fn info(msg: &str) {
-        eprintln!("[info] {msg}");
-    }
+    pub use crate::telemetry::log::{debug, info, set_verbose};
 }

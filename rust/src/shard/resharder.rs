@@ -165,6 +165,14 @@ impl Resharder {
             .min_by(|a, b| a.total_cmp(b))
     }
 
+    /// Declare the reshard counters in a telemetry registry under
+    /// `prefix` (both summed across replicas/runs).
+    pub fn register_into(&self, r: &mut crate::telemetry::Registry, prefix: &str) {
+        use crate::telemetry::registry::MergeRule::Sum;
+        r.set_int(&format!("{prefix}.reshards"), Sum, self.reshards as u64);
+        r.set_float(&format!("{prefix}.repartition_s"), Sum, self.repartition_s);
+    }
+
     /// Close every window due at `now` (deadline `<= now`), returning
     /// `(replica, new_tp)` for each in replica order. Records the
     /// timeline entries and counters.

@@ -1,0 +1,273 @@
+//! Exporters: Chrome-trace/Perfetto JSON and the trace checker.
+//!
+//! The export follows the Chrome Trace Event format (the JSON flavor
+//! Perfetto ingests directly): one `traceEvents` array of `B`/`E` slice
+//! pairs and `i` instants, timestamps in microseconds, with
+//! `pid` = run (one simulation or bench arm) and `tid` = track
+//! (replica index, control plane, or wall-clock bench track).
+//! `M`etadata events name every process and thread, so opening the file
+//! in `ui.perfetto.dev` shows per-replica decode timelines overlapped
+//! with precision-rung and reshard-window markers without any manual
+//! mapping.
+//!
+//! Everything is emitted through [`crate::util::json::Json`] (BTreeMap
+//! keys, deterministic number formatting), so the same recording always
+//! serializes to the same bytes — the property the trace-determinism
+//! test in `rust/tests/telemetry_props.rs` pins.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+use super::trace::{Phase, Trace, BENCH_TRACK, CONTROL_TRACK};
+
+/// Human name for a track id.
+fn track_name(track: u32) -> String {
+    match track {
+        CONTROL_TRACK => "control".to_string(),
+        BENCH_TRACK => "bench".to_string(),
+        r => format!("replica {r}"),
+    }
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Render a recording as a Chrome-trace JSON value.
+pub fn trace_to_json(trace: &Trace) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(trace.events.len() + 16);
+
+    // metadata first: name every (run, track) pair that appears
+    let mut runs_seen: BTreeSet<u32> = BTreeSet::new();
+    let mut tracks_seen: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for e in &trace.events {
+        runs_seen.insert(e.run);
+        tracks_seen.insert((e.run, e.track));
+    }
+    for &run in &runs_seen {
+        let label = trace
+            .runs
+            .get(run as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("run {run}"));
+        events.push(obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("process_name".to_string())),
+            ("pid", Json::Num(run as f64)),
+            ("tid", Json::Num(0.0)),
+            (
+                "args",
+                obj(vec![("name", Json::Str(label))]),
+            ),
+        ]));
+    }
+    for &(run, track) in &tracks_seen {
+        events.push(obj(vec![
+            ("ph", Json::Str("M".to_string())),
+            ("name", Json::Str("thread_name".to_string())),
+            ("pid", Json::Num(run as f64)),
+            ("tid", Json::Num(track as f64)),
+            (
+                "args",
+                obj(vec![("name", Json::Str(track_name(track)))]),
+            ),
+        ]));
+    }
+
+    for e in &trace.events {
+        let ph = match e.phase {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Instant => "i",
+        };
+        let mut fields = vec![
+            ("name", Json::Str(e.kind.name().to_string())),
+            ("cat", Json::Str("sim".to_string())),
+            ("ph", Json::Str(ph.to_string())),
+            ("ts", Json::Num(e.t * 1e6)),
+            ("pid", Json::Num(e.run as f64)),
+            ("tid", Json::Num(e.track as f64)),
+            (
+                "args",
+                obj(vec![
+                    ("id", Json::Num(e.id as f64)),
+                    ("arg", Json::Num(e.arg as f64)),
+                ]),
+            ),
+        ];
+        if e.phase == Phase::Instant {
+            fields.push(("s", Json::Str("t".to_string())));
+        }
+        events.push(obj(fields));
+    }
+
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        (
+            "otherData",
+            obj(vec![
+                ("schema", Json::Str("nestedfp/trace@1".to_string())),
+                ("dropped", Json::Num(trace.dropped as f64)),
+                ("events", Json::Num(trace.events.len() as f64)),
+            ]),
+        ),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Serialize and write a recording; returns the recorded event count.
+pub fn write_trace(path: &str, trace: &Trace) -> Result<usize> {
+    std::fs::write(path, trace_to_json(trace).to_string())
+        .map_err(|e| anyhow!("writing trace to {path}: {e}"))?;
+    Ok(trace.events.len())
+}
+
+/// What [`check_trace`] found in a well-formed trace file.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceCheck {
+    /// Non-metadata events.
+    pub events: usize,
+    /// Completed spans (matched `B`/`E` pairs).
+    pub spans: usize,
+    pub instants: usize,
+    /// Dropped-event count the exporter recorded.
+    pub dropped: u64,
+}
+
+/// Validate an exported trace: well-formed JSON in our schema, every
+/// `B` matched by an `E` on the same `(pid, tid, name, id)` with
+/// non-decreasing timestamps, nothing negative-depth. Backs
+/// `repro analyze trace <FILE>` and the CI smoke.
+pub fn check_trace(text: &str) -> Result<TraceCheck> {
+    let root = Json::parse(text).map_err(|e| anyhow!("trace is not valid JSON: {e}"))?;
+    let events = root
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("trace has no traceEvents array"))?;
+    let dropped = root
+        .get("otherData")
+        .and_then(|o| o.get("dropped"))
+        .and_then(|d| d.as_f64())
+        .unwrap_or(0.0) as u64;
+
+    let mut out = TraceCheck {
+        dropped,
+        ..TraceCheck::default()
+    };
+    // open-span stack depth + last begin ts per (pid, tid, name, id)
+    let mut open: HashMap<(i64, i64, String, i64), Vec<f64>> = HashMap::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| anyhow!("event {i} has no ph"))?;
+        if ph == "M" {
+            continue;
+        }
+        let name = e
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| anyhow!("event {i} has no name"))?
+            .to_string();
+        let ts = e
+            .get("ts")
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| anyhow!("event {i} ({name}) has no ts"))?;
+        let pid = e.get("pid").and_then(|p| p.as_i64()).unwrap_or(0);
+        let tid = e.get("tid").and_then(|t| t.as_i64()).unwrap_or(0);
+        let id = e
+            .get("args")
+            .and_then(|a| a.get("id"))
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0);
+        out.events += 1;
+        match ph {
+            "B" => open.entry((pid, tid, name, id)).or_default().push(ts),
+            "E" => {
+                let key = (pid, tid, name, id);
+                let stack = open.get_mut(&key);
+                let Some(begin_ts) = stack.and_then(|s| s.pop()) else {
+                    bail!(
+                        "event {i}: E without matching B \
+                         (pid {pid}, tid {tid}, {} id {id})",
+                        key.2
+                    );
+                };
+                if ts + 1e-9 < begin_ts {
+                    bail!(
+                        "event {i}: span {} ends at {ts} before it began at {begin_ts}",
+                        key.2
+                    );
+                }
+                out.spans += 1;
+            }
+            "i" => out.instants += 1,
+            other => bail!("event {i}: unsupported phase {other:?}"),
+        }
+    }
+    let unclosed: usize = open.values().map(|s| s.len()).sum();
+    if unclosed > 0 {
+        bail!("{unclosed} span(s) never closed");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::trace::{self, Kind};
+
+    fn sample_trace() -> Trace {
+        trace::install(1024);
+        trace::begin_run("arm");
+        trace::instant(0, Kind::Arrival, 0.25, 7, 0);
+        trace::begin(0, Kind::Decode, 0.5, 7, 0);
+        trace::instant(trace::CONTROL_TRACK, Kind::Rung, 0.75, 0, 2);
+        trace::end(0, Kind::Decode, 1.0, 7, 0);
+        trace::take().unwrap()
+    }
+
+    #[test]
+    fn export_is_deterministic_and_checks_clean() {
+        let a = trace_to_json(&sample_trace()).to_string();
+        let b = trace_to_json(&sample_trace()).to_string();
+        assert_eq!(a, b, "same recording, same bytes");
+        let chk = check_trace(&a).unwrap();
+        assert_eq!(chk.events, 4);
+        assert_eq!(chk.spans, 1);
+        assert_eq!(chk.instants, 2);
+        assert_eq!(chk.dropped, 0);
+        // metadata names both tracks
+        assert!(a.contains("replica 0"));
+        assert!(a.contains("\"control\""));
+        // timestamps are microseconds
+        assert!(a.contains("250000"));
+    }
+
+    #[test]
+    fn checker_rejects_unbalanced_and_reversed_spans() {
+        let unbalanced = r#"{"traceEvents":[
+            {"ph":"B","name":"decode","ts":1,"pid":0,"tid":0,"args":{"id":1}}
+        ]}"#;
+        assert!(check_trace(unbalanced).unwrap_err().to_string().contains("never closed"));
+        let orphan = r#"{"traceEvents":[
+            {"ph":"E","name":"decode","ts":1,"pid":0,"tid":0,"args":{"id":1}}
+        ]}"#;
+        assert!(check_trace(orphan).unwrap_err().to_string().contains("without matching B"));
+        let reversed = r#"{"traceEvents":[
+            {"ph":"B","name":"decode","ts":5,"pid":0,"tid":0,"args":{"id":1}},
+            {"ph":"E","name":"decode","ts":2,"pid":0,"tid":0,"args":{"id":1}}
+        ]}"#;
+        assert!(check_trace(reversed).unwrap_err().to_string().contains("before it began"));
+        assert!(check_trace("not json").is_err());
+        assert!(check_trace("{}").is_err());
+    }
+}

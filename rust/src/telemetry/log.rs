@@ -1,0 +1,149 @@
+//! The leveled diagnostics facade.
+//!
+//! One process-wide level, read lazily from `NESTEDFP_LOG`
+//! (`off | warn | info | debug`; unset and unknown values mean `info`,
+//! which preserves the historical always-print behavior of the serve
+//! path). The [`log_warn!`](crate::log_warn),
+//! [`log_info!`](crate::log_info) and [`log_debug!`](crate::log_debug)
+//! macros check the level *before* touching their format arguments, so
+//! a filtered-out message allocates and formats nothing.
+//!
+//! This replaces both copied `debug/info` helper blocks that
+//! `runtime/client.rs` and `runtime/client_stub.rs` used to carry
+//! (their `set_verbose(true)` switch maps to [`set_verbose`], i.e.
+//! raising the level to `debug`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Diagnostic severity, ordered: a configured level admits itself and
+/// everything below it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+const UNSET: u8 = 0xff;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn init_level() -> u8 {
+    let from_env = match std::env::var("NESTEDFP_LOG").ok().as_deref().map(str::trim) {
+        Some(s) if s.eq_ignore_ascii_case("off") => Level::Off,
+        Some(s) if s.eq_ignore_ascii_case("warn") => Level::Warn,
+        Some(s) if s.eq_ignore_ascii_case("debug") => Level::Debug,
+        // "info", unknown values, and an unset variable all mean info
+        _ => Level::Info,
+    } as u8;
+    // don't clobber an explicit set_level() that ran before first use
+    let _ = LEVEL.compare_exchange(UNSET, from_env, Ordering::Relaxed, Ordering::Relaxed);
+    LEVEL.load(Ordering::Relaxed)
+}
+
+/// Is a message at `level` currently admitted? This is the (cheap)
+/// check the macros perform before formatting anything.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    let cur = if cur == UNSET { init_level() } else { cur };
+    level as u8 <= cur
+}
+
+/// Override the level programmatically (wins over `NESTEDFP_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Legacy verbose switch of the runtime client: `true` raises the
+/// level to `debug`; `false` leaves the configured level alone.
+pub fn set_verbose(v: bool) {
+    if v {
+        set_level(Level::Debug);
+    }
+}
+
+/// Sink for an already-filtered message. Prefer the macros; call this
+/// directly only when the arguments are already formatted.
+pub fn emit(args: std::fmt::Arguments<'_>) {
+    eprintln!("{args}");
+}
+
+/// String-convenience forms for callers holding a finished message.
+pub fn warn(msg: &str) {
+    if enabled(Level::Warn) {
+        emit(format_args!("{msg}"));
+    }
+}
+
+pub fn info(msg: &str) {
+    if enabled(Level::Info) {
+        emit(format_args!("{msg}"));
+    }
+}
+
+pub fn debug(msg: &str) {
+    if enabled(Level::Debug) {
+        emit(format_args!("[debug] {msg}"));
+    }
+}
+
+/// Log at warn level. Arguments are not evaluated when filtered out.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        if $crate::telemetry::log::enabled($crate::telemetry::log::Level::Warn) {
+            $crate::telemetry::log::emit(format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at info level. Arguments are not evaluated when filtered out.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::telemetry::log::enabled($crate::telemetry::log::Level::Info) {
+            $crate::telemetry::log::emit(format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at debug level. Arguments are not evaluated when filtered out.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::telemetry::log::enabled($crate::telemetry::log::Level::Debug) {
+            $crate::telemetry::log::emit(format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests share one process-wide level, so a single test walks the
+    // whole contract instead of racing siblings.
+    #[test]
+    fn level_ordering_and_overrides() {
+        set_level(Level::Info);
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+
+        set_level(Level::Off);
+        assert!(!enabled(Level::Warn));
+
+        set_verbose(false); // must not raise the level
+        assert!(!enabled(Level::Warn));
+        set_verbose(true);
+        assert!(enabled(Level::Debug));
+
+        // the macros compile against all three levels
+        set_level(Level::Off);
+        crate::log_warn!("never printed {}", 1);
+        crate::log_info!("never printed");
+        crate::log_debug!("never printed {:?}", (1, 2));
+        set_level(Level::Info);
+    }
+}

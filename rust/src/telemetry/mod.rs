@@ -1,0 +1,44 @@
+//! The unified observability layer: one pipeline from kernel
+//! microseconds to cluster timelines.
+//!
+//! Every subsystem below the coordinator used to invent its own
+//! introspection story — `Metrics` merged ~15 scalar counters by hand,
+//! reshard/precision timelines were bespoke vectors, kernel timing did
+//! not exist, and diagnostics went through scattered `eprintln!`. This
+//! module is the single layer they all plug into:
+//!
+//! * [`trace`] — a span/event tracer on the **virtual clock**. Request
+//!   lifecycles (queue → prefill → decode → completion, with
+//!   offload/resume windows) and control-plane moments (precision rung
+//!   changes, reshard windows, autopilot pre-escalations, KV demotions)
+//!   are recorded as cheap integer-id events into a bounded buffer.
+//!   Recording is pure observation: it never touches simulation
+//!   arithmetic, so heap/lockstep bit-identity and the golden traces
+//!   hold with tracing enabled or disabled — and when disabled every
+//!   hook is a single thread-local flag check.
+//! * [`registry`] — a typed counter/gauge registry with deterministic
+//!   merge rules (sum / max / min). `Metrics`, `KvCacheStats`,
+//!   `EventStats`, the `Resharder`, and the kernel profilers register
+//!   into it, so cross-replica aggregation is one merge law instead of
+//!   a hand-written field-by-field function.
+//! * [`export`] — exporters: Chrome-trace/Perfetto JSON
+//!   (`repro reproduce <bench> --trace FILE`; tracks = replicas + the
+//!   control plane, one slice per span) plus the flat counter dump
+//!   folded into the `nestedfp/bench-reports@1` JSON, and the
+//!   well-formedness checker behind `repro analyze trace <FILE>`.
+//! * [`log`] — the leveled diagnostics facade (`NESTEDFP_LOG`
+//!   env filter; `log_warn!`/`log_info!`/`log_debug!` allocate nothing
+//!   when filtered out) replacing ad-hoc `eprintln!`.
+//! * [`profiler`] — per-phase wall-time accumulators for the GEMM and
+//!   attention kernels (pack/microkernel/reduce; block-load/dot/softmax)
+//!   behind a cloneable [`profiler::Profiler`] handle that is free when
+//!   disabled.
+
+pub mod export;
+pub mod log;
+pub mod profiler;
+pub mod registry;
+pub mod trace;
+
+pub use profiler::Profiler;
+pub use registry::Registry;

@@ -1,0 +1,165 @@
+//! Per-phase wall-time accumulators for the compute kernels.
+//!
+//! The GEMM and attention engines are multi-threaded (deterministic
+//! fork-join pools), so a profiler handle must be shareable across
+//! workers and must never perturb results: phases accumulate into
+//! relaxed `AtomicU64` nanosecond counters, and a **disabled** handle
+//! (the default) skips the clock reads entirely — [`Profiler::start`]
+//! returns `None` and [`Profiler::record`] is a no-op, so the hot loops
+//! pay one branch.
+//!
+//! Accumulated time is *CPU seconds summed across workers* (a 4-thread
+//! phase running 1 wall second reports ≈4 s); the benches report shares
+//! of total, where the distinction cancels out.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::registry::{MergeRule, Registry};
+
+/// Phase names for the GEMM kernel: operand packing (fused NestedFP
+/// decode), the MR×NR register microkernel, and the edge-tile reduce /
+/// writeback path.
+pub const GEMM_PHASES: &[&str] = &["pack", "microkernel", "reduce"];
+
+/// Phase names for the attention engine: block load (fused FP8
+/// dequant), QK^T dot products, and online softmax + PV accumulation.
+pub const ATTN_PHASES: &[&str] = &["block_load", "dot", "softmax"];
+
+#[derive(Debug)]
+struct Inner {
+    names: &'static [&'static str],
+    nanos: Vec<AtomicU64>,
+}
+
+/// A cloneable per-phase timer. Clones share the same accumulators, so
+/// handing a clone to each pool worker aggregates into one place.
+#[derive(Clone, Debug, Default)]
+pub struct Profiler {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Profiler {
+    /// The no-op handle (also `Default`): timing disabled, zero cost.
+    pub fn disabled() -> Profiler {
+        Profiler::default()
+    }
+
+    /// An active profiler over a fixed phase-name set (use
+    /// [`GEMM_PHASES`] / [`ATTN_PHASES`]).
+    pub fn enabled(names: &'static [&'static str]) -> Profiler {
+        Profiler {
+            inner: Some(Arc::new(Inner {
+                names,
+                nanos: names.iter().map(|_| AtomicU64::new(0)).collect(),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Begin timing a phase section: `None` (no clock read) when
+    /// disabled.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.inner.is_some() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Charge the elapsed time since `start` to `phase`. A `None`
+    /// token (disabled profiler) is a no-op.
+    #[inline]
+    pub fn record(&self, phase: usize, t0: Option<Instant>) {
+        if let (Some(inner), Some(t0)) = (self.inner.as_ref(), t0) {
+            inner.nanos[phase].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Accumulated seconds for one phase (0.0 when disabled).
+    pub fn seconds(&self, phase: usize) -> f64 {
+        self.inner
+            .as_ref()
+            .map(|i| i.nanos[phase].load(Ordering::Relaxed) as f64 * 1e-9)
+            .unwrap_or(0.0)
+    }
+
+    /// Sum over all phases.
+    pub fn total_seconds(&self) -> f64 {
+        (0..self.phase_count()).map(|p| self.seconds(p)).sum()
+    }
+
+    pub fn phase_count(&self) -> usize {
+        self.inner.as_ref().map(|i| i.names.len()).unwrap_or(0)
+    }
+
+    pub fn phase_name(&self, phase: usize) -> &'static str {
+        self.inner.as_ref().map_or("", |i| i.names[phase])
+    }
+
+    /// Zero all accumulators (between bench arms).
+    pub fn reset(&self) {
+        if let Some(i) = self.inner.as_ref() {
+            for n in &i.nanos {
+                n.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Fold the phase totals into a registry as summed float seconds
+    /// (`<prefix>.<phase>_s`).
+    pub fn register_into(&self, r: &mut Registry, prefix: &str) {
+        if let Some(i) = self.inner.as_ref() {
+            for (p, name) in i.names.iter().enumerate() {
+                r.set_float(&format!("{prefix}.{name}_s"), MergeRule::Sum, self.seconds(p));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_free_and_reports_zero() {
+        let p = Profiler::disabled();
+        assert!(!p.is_enabled());
+        assert!(p.start().is_none());
+        p.record(0, None);
+        assert_eq!(p.phase_count(), 0);
+        assert_eq!(p.total_seconds(), 0.0);
+        let mut r = Registry::new();
+        p.register_into(&mut r, "gemm");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn clones_share_accumulators_across_threads() {
+        let p = Profiler::enabled(GEMM_PHASES);
+        let q = p.clone();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let t0 = q.start();
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                q.record(1, t0);
+            });
+            let t0 = p.start();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            p.record(1, t0);
+        });
+        assert!(p.seconds(1) >= 0.004 - 1e-3);
+        assert_eq!(p.seconds(0), 0.0);
+        let mut r = Registry::new();
+        p.register_into(&mut r, "gemm");
+        assert!(r.float("gemm.microkernel_s") > 0.0);
+        assert_eq!(r.len(), GEMM_PHASES.len());
+        p.reset();
+        assert_eq!(p.total_seconds(), 0.0);
+    }
+}

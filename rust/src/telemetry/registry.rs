@@ -1,0 +1,287 @@
+//! The typed counter/gauge registry with deterministic merge.
+//!
+//! Before this module, cross-replica aggregation was a hand-written
+//! field-by-field `Metrics::merge`: every new counter meant touching the
+//! struct, the merge function, and the JSON dump, and nothing checked
+//! that the three agreed. Here a metric is one named [`Entry`] carrying
+//! its own [`MergeRule`], so the merge law and the export are derived
+//! from a single registration point:
+//!
+//! * **Sum** — event counts, accumulated seconds, byte totals.
+//! * **Max** — peaks (utilization, live sequences) and end timestamps.
+//! * **Min** — start timestamps.
+//!
+//! Entries live in a `BTreeMap`, so iteration, merge, and the JSON dump
+//! are deterministic regardless of registration order. Merging is
+//! commutative and associative for `Max`/`Min` and integer `Sum`;
+//! float `Sum` is summed in name order, which is fixed, so merging the
+//! same set of registries always produces bit-identical results.
+//!
+//! Subsystems expose a `register_into(&self, r, prefix)` method (see
+//! `KvCacheStats`, `EventStats`, `Resharder`, [`super::Profiler`]);
+//! benches fold those into the thread-local [`with_global`] registry,
+//! which `repro reproduce --json` dumps as a flat `counters` object in
+//! the `nestedfp/bench-reports@1` report.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// How two values of the same metric combine across replicas/runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeRule {
+    Sum,
+    Max,
+    Min,
+}
+
+/// A metric value: integer counters stay exact; gauges/seconds are f64.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    Int(u64),
+    Float(f64),
+}
+
+impl Value {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Value::Int(v) => v as f64,
+            Value::Float(v) => v,
+        }
+    }
+
+    fn combine(self, other: Value, rule: MergeRule) -> Value {
+        match (self, other) {
+            (Value::Int(a), Value::Int(b)) => Value::Int(match rule {
+                MergeRule::Sum => a + b,
+                MergeRule::Max => a.max(b),
+                MergeRule::Min => a.min(b),
+            }),
+            (a, b) => {
+                let (a, b) = (a.as_f64(), b.as_f64());
+                Value::Float(match rule {
+                    MergeRule::Sum => a + b,
+                    MergeRule::Max => a.max(b),
+                    MergeRule::Min => a.min(b),
+                })
+            }
+        }
+    }
+}
+
+/// One registered metric: its merge rule and current value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Entry {
+    pub rule: MergeRule,
+    pub value: Value,
+}
+
+/// The registry itself — a deterministic name → entry map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    entries: BTreeMap<String, Entry>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Register (or overwrite) an integer metric.
+    pub fn set_int(&mut self, name: &str, rule: MergeRule, v: u64) {
+        self.entries.insert(
+            name.to_string(),
+            Entry {
+                rule,
+                value: Value::Int(v),
+            },
+        );
+    }
+
+    /// Register (or overwrite) a float metric.
+    pub fn set_float(&mut self, name: &str, rule: MergeRule, v: f64) {
+        self.entries.insert(
+            name.to_string(),
+            Entry {
+                rule,
+                value: Value::Float(v),
+            },
+        );
+    }
+
+    /// Fold `v` into an existing metric under its own rule, registering
+    /// it as a `Sum` counter if absent.
+    pub fn add_int(&mut self, name: &str, v: u64) {
+        match self.entries.get_mut(name) {
+            Some(e) => e.value = e.value.combine(Value::Int(v), e.rule),
+            None => self.set_int(name, MergeRule::Sum, v),
+        }
+    }
+
+    /// Current integer value (0 when absent; floats truncate).
+    pub fn int(&self, name: &str) -> u64 {
+        match self.entries.get(name).map(|e| e.value) {
+            Some(Value::Int(v)) => v,
+            Some(Value::Float(v)) => v as u64,
+            None => 0,
+        }
+    }
+
+    /// Current value as f64 (0.0 when absent).
+    pub fn float(&self, name: &str) -> f64 {
+        self.entries.get(name).map(|e| e.value.as_f64()).unwrap_or(0.0)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Entry> {
+        self.entries.get(name).copied()
+    }
+
+    /// Deterministic (name-ordered) iteration.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, Entry)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Merge `other` into `self`, entry by entry, under each entry's
+    /// rule. Names only one side knows are carried over unchanged. The
+    /// same name must be registered with the same rule everywhere —
+    /// a mismatch is a registration bug (debug-asserted).
+    pub fn merge(&mut self, other: &Registry) {
+        for (name, e) in &other.entries {
+            match self.entries.get_mut(name) {
+                Some(mine) => {
+                    debug_assert_eq!(
+                        mine.rule, e.rule,
+                        "metric {name} registered with conflicting merge rules"
+                    );
+                    mine.value = mine.value.combine(e.value, mine.rule);
+                }
+                None => {
+                    self.entries.insert(name.clone(), *e);
+                }
+            }
+        }
+    }
+
+    /// Flat JSON object (name → number), deterministic order.
+    /// Non-finite floats (e.g. an unmerged `Min`-rule start time still
+    /// at +inf) serialize as `null` — JSON has no infinity literal.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(k, e)| {
+                    let v = match e.value {
+                        Value::Int(v) => Json::Num(v as f64),
+                        Value::Float(v) if v.is_finite() => Json::Num(v),
+                        Value::Float(_) => Json::Null,
+                    };
+                    (k.clone(), v)
+                })
+                .collect(),
+        )
+    }
+}
+
+thread_local! {
+    static GLOBAL: RefCell<Registry> = RefCell::new(Registry::new());
+}
+
+/// Run `f` against this thread's global registry — the one bench runs
+/// fold their counters into and `--json` dumps.
+pub fn with_global<R>(f: impl FnOnce(&mut Registry) -> R) -> R {
+    GLOBAL.with(|g| f(&mut g.borrow_mut()))
+}
+
+/// Snapshot the global registry.
+pub fn global_snapshot() -> Registry {
+    GLOBAL.with(|g| g.borrow().clone())
+}
+
+/// Clear the global registry (start of a `repro reproduce` invocation).
+pub fn reset_global() {
+    GLOBAL.with(|g| *g.borrow_mut() = Registry::new());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_merge_as_documented() {
+        let mut a = Registry::new();
+        a.set_int("events", MergeRule::Sum, 3);
+        a.set_float("peak", MergeRule::Max, 0.5);
+        a.set_float("t_start", MergeRule::Min, 10.0);
+        let mut b = Registry::new();
+        b.set_int("events", MergeRule::Sum, 4);
+        b.set_float("peak", MergeRule::Max, 0.25);
+        b.set_float("t_start", MergeRule::Min, 7.0);
+        b.set_int("only_b", MergeRule::Sum, 9);
+        a.merge(&b);
+        assert_eq!(a.int("events"), 7);
+        assert_eq!(a.float("peak"), 0.5);
+        assert_eq!(a.float("t_start"), 7.0);
+        assert_eq!(a.int("only_b"), 9, "one-sided names carry over");
+    }
+
+    #[test]
+    fn merge_is_deterministic_and_order_independent_for_ints() {
+        let regs: Vec<Registry> = (0..10)
+            .map(|i| {
+                let mut r = Registry::new();
+                r.set_int("n", MergeRule::Sum, i);
+                r.set_int("hi", MergeRule::Max, 100 - i);
+                r
+            })
+            .collect();
+        let fold = |order: Vec<usize>| {
+            let mut acc = Registry::new();
+            for i in order {
+                acc.merge(&regs[i]);
+            }
+            acc
+        };
+        let fwd = fold((0..10).collect());
+        let rev = fold((0..10).rev().collect());
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd.int("n"), 45);
+        assert_eq!(fwd.int("hi"), 100);
+    }
+
+    #[test]
+    fn add_int_registers_then_accumulates() {
+        let mut r = Registry::new();
+        r.add_int("c", 2);
+        r.add_int("c", 3);
+        assert_eq!(r.int("c"), 5);
+        assert_eq!(r.get("c").unwrap().rule, MergeRule::Sum);
+    }
+
+    #[test]
+    fn json_dump_is_name_ordered() {
+        let mut r = Registry::new();
+        r.set_int("zz", MergeRule::Sum, 1);
+        r.set_int("aa", MergeRule::Sum, 2);
+        let s = r.to_json().to_string();
+        assert!(s.find("aa").unwrap() < s.find("zz").unwrap());
+    }
+
+    #[test]
+    fn global_registry_folds_and_resets() {
+        reset_global();
+        with_global(|r| r.add_int("g", 1));
+        with_global(|r| r.add_int("g", 1));
+        assert_eq!(global_snapshot().int("g"), 2);
+        reset_global();
+        assert!(global_snapshot().is_empty());
+    }
+}

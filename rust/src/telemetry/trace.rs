@@ -1,0 +1,376 @@
+//! The span/event tracer on the virtual clock.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero interference.** Recording must never perturb the
+//!    simulation: hooks read the virtual clock and integer ids that the
+//!    caller already has, and touch no `f64` state of their own. The
+//!    heap-vs-lockstep bit-identity suites therefore hold with tracing
+//!    on or off (pinned by `rust/tests/telemetry_props.rs`).
+//! 2. **Zero cost when disabled.** Every hook starts with one
+//!    thread-local flag check ([`enabled`]) and returns immediately when
+//!    tracing is not installed — no allocation, no formatting, no clock
+//!    reads.
+//! 3. **Bounded memory.** Events land in a buffer with a hard cap;
+//!    once full, further events are counted as dropped instead of
+//!    recorded, and the exporter surfaces the dropped count so a
+//!    truncated trace is never mistaken for a complete one.
+//!
+//! The tracer is thread-local: cluster simulations are single-threaded
+//! by construction (the event core is a sequential scheduler), and
+//! thread-locality keeps concurrently running tests from contaminating
+//! each other's traces.
+//!
+//! Identity model (mirrors the Perfetto export):
+//! * **run** (`pid`) — one simulation/bench arm; [`begin_run`] opens one.
+//! * **track** (`tid`) — a replica index, or the reserved
+//!   [`CONTROL_TRACK`] / [`BENCH_TRACK`].
+//! * **kind + id** — the event taxonomy plus a correlator (request id,
+//!   replica id, …). Spans are `Begin`/`End` pairs keyed by
+//!   `(run, track, kind, id)`; [`finish_run`] force-closes any span
+//!   still open at the end of a run so exports are always balanced.
+
+use std::cell::{Cell, RefCell};
+
+/// Reserved track id for control-plane events (autopilot, resharder).
+pub const CONTROL_TRACK: u32 = 1_000_000;
+/// Reserved track id for wall-clock bench measurement spans.
+pub const BENCH_TRACK: u32 = 1_000_001;
+
+/// The event taxonomy. Spans: [`Kind::Queue`], [`Kind::Prefill`],
+/// [`Kind::Decode`], [`Kind::Offload`], [`Kind::Step`],
+/// [`Kind::Reshard`], [`Kind::Bench`]. The rest are instants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Kind {
+    /// Request waiting for admission (arrival → KV slot allocated).
+    Queue,
+    /// Admission → first token.
+    Prefill,
+    /// First token → completion.
+    Decode,
+    /// Request preempted to the host tier (offload → resume).
+    Offload,
+    /// One engine iteration on a replica (`arg` = 1 when FP8).
+    Step,
+    /// A reshard window (begin → resume; `id` = replica, `arg` = new tp).
+    Reshard,
+    /// Wall-clock measurement around one bench experiment.
+    Bench,
+    /// Request arrival (routing decision made; `id` = request).
+    Arrival,
+    /// Request completion (`id` = request).
+    Completion,
+    /// Precision rung change (`arg` = mode index).
+    Rung,
+    /// Autopilot staged pre-escalation (`arg` = severity rung).
+    PreEscalate,
+    /// KV blocks demoted to FP8 this iteration (`arg` = block count).
+    KvDemote,
+}
+
+impl Kind {
+    /// Slice/instant name in the exported trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Queue => "queue",
+            Kind::Prefill => "prefill",
+            Kind::Decode => "decode",
+            Kind::Offload => "offload",
+            Kind::Step => "step",
+            Kind::Reshard => "reshard",
+            Kind::Bench => "bench",
+            Kind::Arrival => "arrival",
+            Kind::Completion => "complete",
+            Kind::Rung => "rung",
+            Kind::PreEscalate => "pre_escalate",
+            Kind::KvDemote => "kv_demote",
+        }
+    }
+}
+
+/// Span phase of one record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+    Instant,
+}
+
+/// One recorded event. `t` is virtual seconds for simulation tracks and
+/// wall seconds for [`BENCH_TRACK`]; both export as microseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub run: u32,
+    pub track: u32,
+    pub kind: Kind,
+    pub phase: Phase,
+    pub t: f64,
+    pub id: u64,
+    pub arg: i64,
+}
+
+/// A finished recording, as returned by [`take`].
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    /// Run labels, indexed by run id (`events[i].run`).
+    pub runs: Vec<String>,
+    /// Events discarded after the buffer cap was hit.
+    pub dropped: usize,
+}
+
+struct Tracer {
+    events: Vec<Event>,
+    runs: Vec<String>,
+    cap: usize,
+    dropped: usize,
+    /// Open spans, `(run, track, kind, id)`; closed LIFO by `finish_run`.
+    open: Vec<(u32, u32, Kind, u64)>,
+}
+
+thread_local! {
+    static ENABLED: Cell<bool> = const { Cell::new(false) };
+    static TRACER: RefCell<Option<Tracer>> = const { RefCell::new(None) };
+}
+
+/// Default buffer cap: ~1M events (≈50 MB), plenty for a busy-minute
+/// run and a hard bound for everything larger.
+pub const DEFAULT_CAP: usize = 1 << 20;
+
+/// Install a fresh tracer on this thread with the given event cap.
+/// Replaces any previous recording.
+pub fn install(cap: usize) {
+    TRACER.with(|t| {
+        *t.borrow_mut() = Some(Tracer {
+            events: Vec::new(),
+            runs: vec!["main".to_string()],
+            cap: cap.max(16),
+            dropped: 0,
+            open: Vec::new(),
+        });
+    });
+    ENABLED.with(|e| e.set(true));
+}
+
+/// Is a tracer installed on this thread? This is the check every hook
+/// performs first; when `false` the hook does nothing else.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.with(|e| e.get())
+}
+
+/// Uninstall the tracer and return everything it recorded (`None` when
+/// no tracer was installed).
+pub fn take() -> Option<Trace> {
+    ENABLED.with(|e| e.set(false));
+    TRACER.with(|t| {
+        t.borrow_mut().take().map(|tr| Trace {
+            events: tr.events,
+            runs: tr.runs,
+            dropped: tr.dropped,
+        })
+    })
+}
+
+/// Open a new run (one simulation or bench arm; one Perfetto process).
+/// Subsequent events attribute to it. Returns the run id; a no-op 0
+/// when tracing is disabled.
+pub fn begin_run(label: &str) -> u32 {
+    if !enabled() {
+        return 0;
+    }
+    TRACER.with(|t| {
+        let mut b = t.borrow_mut();
+        let tr = b.as_mut().expect("enabled implies installed");
+        tr.runs.push(label.to_string());
+        (tr.runs.len() - 1) as u32
+    })
+}
+
+/// Close every span still open, LIFO, stamped at `t` — called at the
+/// end of a run so exports are balanced even when requests are still
+/// in flight at the horizon.
+pub fn finish_run(t: f64) {
+    if !enabled() {
+        return;
+    }
+    TRACER.with(|tr| {
+        let mut b = tr.borrow_mut();
+        let tr = b.as_mut().expect("enabled implies installed");
+        // entries in `open` correspond to *recorded* Begins, so their
+        // closing Ends are recorded unconditionally (cap-exempt)
+        while let Some((run, track, kind, id)) = tr.open.pop() {
+            tr.events.push(Event {
+                run,
+                track,
+                kind,
+                phase: Phase::End,
+                t,
+                id,
+                arg: 0,
+            });
+        }
+    });
+}
+
+impl Tracer {
+    fn push(&mut self, ev: Event) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+        } else {
+            self.events.push(ev);
+        }
+    }
+
+    fn current_run(&self) -> u32 {
+        (self.runs.len() - 1) as u32
+    }
+}
+
+fn record(track: u32, kind: Kind, phase: Phase, t: f64, id: u64, arg: i64) {
+    TRACER.with(|tr| {
+        let mut b = tr.borrow_mut();
+        let tr = b.as_mut().expect("enabled implies installed");
+        let run = tr.current_run();
+        match phase {
+            Phase::Begin => {
+                // once the buffer is full a Begin is dropped whole, so
+                // it must not leave an orphan open-span entry behind
+                if tr.events.len() < tr.cap {
+                    tr.open.push((run, track, kind, id));
+                }
+            }
+            Phase::End => {
+                if let Some(i) = tr
+                    .open
+                    .iter()
+                    .rposition(|&(r, tk, k, d)| (r, tk, k, d) == (run, track, kind, id))
+                {
+                    tr.open.remove(i);
+                    // the matching Begin was recorded, so this End must
+                    // be too — even one slot past the cap — or the
+                    // exported trace would be unbalanced
+                    tr.events.push(Event {
+                        run,
+                        track,
+                        kind,
+                        phase,
+                        t,
+                        id,
+                        arg,
+                    });
+                } else {
+                    // no matching Begin (it was dropped at cap, or the
+                    // caller never opened one): skip so traces stay
+                    // balanced by construction
+                    tr.dropped += 1;
+                }
+                return;
+            }
+            Phase::Instant => {}
+        }
+        tr.push(Event {
+            run,
+            track,
+            kind,
+            phase,
+            t,
+            id,
+            arg,
+        });
+    });
+}
+
+/// Open a span. No-op when tracing is disabled.
+#[inline]
+pub fn begin(track: u32, kind: Kind, t: f64, id: u64, arg: i64) {
+    if enabled() {
+        record(track, kind, Phase::Begin, t, id, arg);
+    }
+}
+
+/// Close the innermost open span with this `(track, kind, id)`.
+#[inline]
+pub fn end(track: u32, kind: Kind, t: f64, id: u64, arg: i64) {
+    if enabled() {
+        record(track, kind, Phase::End, t, id, arg);
+    }
+}
+
+/// Record an instant. No-op when tracing is disabled.
+#[inline]
+pub fn instant(track: u32, kind: Kind, t: f64, id: u64, arg: i64) {
+    if enabled() {
+        record(track, kind, Phase::Instant, t, id, arg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        assert!(take().is_none());
+        begin(0, Kind::Decode, 1.0, 7, 0);
+        instant(0, Kind::Arrival, 1.0, 7, 0);
+        end(0, Kind::Decode, 2.0, 7, 0);
+        assert!(!enabled());
+        assert!(take().is_none());
+    }
+
+    #[test]
+    fn spans_and_instants_round_trip() {
+        install(1024);
+        let run = begin_run("arm-a");
+        assert_eq!(run, 1, "run 0 is the implicit main run");
+        instant(0, Kind::Arrival, 0.5, 42, 0);
+        begin(0, Kind::Decode, 1.0, 42, 0);
+        end(0, Kind::Decode, 2.0, 42, 0);
+        let tr = take().expect("installed");
+        assert_eq!(tr.events.len(), 3);
+        assert_eq!(tr.runs, vec!["main", "arm-a"]);
+        assert_eq!(tr.dropped, 0);
+        assert_eq!(tr.events[1].phase, Phase::Begin);
+        assert_eq!(tr.events[2].phase, Phase::End);
+        assert!(tr.events.iter().all(|e| e.run == 1));
+    }
+
+    #[test]
+    fn finish_run_closes_open_spans_lifo() {
+        install(1024);
+        begin(0, Kind::Prefill, 1.0, 1, 0);
+        begin(0, Kind::Decode, 2.0, 1, 0);
+        finish_run(9.0);
+        let tr = take().unwrap();
+        assert_eq!(tr.events.len(), 4);
+        assert_eq!(tr.events[2].kind, Kind::Decode, "LIFO close order");
+        assert_eq!(tr.events[3].kind, Kind::Prefill);
+        assert!(tr.events[2..].iter().all(|e| e.phase == Phase::End && e.t == 9.0));
+    }
+
+    #[test]
+    fn cap_drops_and_counts_without_unbalancing() {
+        install(16);
+        for i in 0..40u64 {
+            begin(0, Kind::Step, i as f64, i, 0);
+            end(0, Kind::Step, i as f64 + 0.5, i, 0);
+        }
+        let tr = take().unwrap();
+        assert_eq!(tr.events.len(), 16);
+        assert!(tr.dropped > 0);
+        // every recorded Begin has its matching End recorded
+        let begins = tr.events.iter().filter(|e| e.phase == Phase::Begin).count();
+        let ends = tr.events.iter().filter(|e| e.phase == Phase::End).count();
+        assert_eq!(begins, ends);
+    }
+
+    #[test]
+    fn unmatched_end_is_not_recorded() {
+        install(64);
+        end(0, Kind::Decode, 1.0, 5, 0);
+        let tr = take().unwrap();
+        assert!(tr.events.is_empty());
+        assert_eq!(tr.dropped, 1);
+    }
+}

@@ -1,21 +1,126 @@
-//! Latency statistics: exact percentile digest + summary helpers.
+//! Latency statistics: bounded-memory percentile digest + summary helpers.
 //!
 //! The serving metrics (TTFT / TPOT p50/p90/p99, Figures 1b, 8, 10) all
-//! flow through [`Digest`]. Sample counts in our experiments are modest
-//! (≤ ~10^6), so we keep exact samples and sort on query; `Summary`
-//! caches the sorted view.
+//! flow through [`Digest`]. Small runs (≤ [`SAMPLE_CAP`] samples) keep
+//! exact samples and sort on query — every percentile is exact, which
+//! the metrics tests rely on. Past the cap the digest folds into a
+//! **fixed-size log-bucketed histogram** (32 sub-buckets per power of
+//! two, ~20 KB regardless of sample count), so a multi-hour
+//! `--scale` run with millions of requests costs constant memory per
+//! metric. Sketched percentiles carry a documented quantization error:
+//! the reported value is the midpoint of a bucket spanning a 2^(1/32)
+//! ratio, i.e. within ~2.2% relative of the exact answer (count, mean,
+//! min and max stay exact in both modes). Sketches merge bucket-wise,
+//! deterministically — same inputs, same bytes out.
 
-/// Accumulates samples; computes exact order statistics on demand.
+/// Exact samples are kept up to this many; the digest then switches to
+/// the bounded sketch for the rest of its life.
+pub const SAMPLE_CAP: usize = 4096;
+
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave (power of two): 2^[`SUB_BITS`].
+const SUB: usize = 1 << SUB_BITS;
+/// Smallest bucketed exponent: values below 2^-40 (≈ 9e-13 — well under
+/// a picosecond for latency metrics) land in the underflow bucket.
+const EXP_MIN: i32 = -40;
+/// Largest bucketed exponent: values ≥ 2^40 (≈ 1.1e12) overflow.
+const EXP_MAX: i32 = 39;
+const N_BUCKETS: usize = ((EXP_MAX - EXP_MIN + 1) as usize) * SUB;
+
+/// The fixed-size streaming histogram backing large digests.
+#[derive(Clone, Debug)]
+struct Sketch {
+    buckets: Vec<u64>,
+    /// Values < 2^[`EXP_MIN`], including zeros and negatives.
+    underflow: u64,
+    /// Values ≥ 2^([`EXP_MAX`]+1).
+    overflow: u64,
+}
+
+impl Sketch {
+    fn new() -> Sketch {
+        Sketch {
+            buckets: vec![0; N_BUCKETS],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    /// Exact power of two via the bit pattern (no libm, deterministic).
+    fn pow2(e: i32) -> f64 {
+        debug_assert!((-1022..=1023).contains(&e));
+        f64::from_bits(((e + 1023) as u64) << 52)
+    }
+
+    fn add(&mut self, v: f64) {
+        debug_assert!(!v.is_nan());
+        if v < Self::pow2(EXP_MIN) {
+            // zeros, negatives, subnormals, tiny values
+            self.underflow += 1;
+            return;
+        }
+        let bits = v.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        if e > EXP_MAX {
+            self.overflow += 1;
+            return;
+        }
+        let j = ((bits >> (52 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        self.buckets[(e - EXP_MIN) as usize * SUB + j] += 1;
+    }
+
+    /// Midpoint representative of bucket `i` (within 2^(1/32) of every
+    /// value the bucket holds — the documented quantization error).
+    fn rep(i: usize) -> f64 {
+        let e = EXP_MIN + (i / SUB) as i32;
+        let j = i % SUB;
+        Self::pow2(e) * (1.0 + (j as f64 + 0.5) / SUB as f64)
+    }
+
+    fn merge(&mut self, other: &Sketch) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+    }
+}
+
+/// Accumulates samples; computes order statistics on demand — exact up
+/// to [`SAMPLE_CAP`] samples, then within the sketch's quantization
+/// error (see module docs).
 ///
-/// NaN samples are tolerated but never poison a query: they sort last
-/// and are dropped (counted in [`Digest::nan_dropped`]) the next time
-/// the digest sorts, and the streaming queries ([`Digest::mean`],
-/// [`Digest::frac_above`]) skip them.
-#[derive(Clone, Debug, Default)]
+/// NaN samples are tolerated but never poison a query: in exact mode
+/// they sort last and are dropped (counted in [`Digest::nan_dropped`])
+/// the next time the digest sorts; in sketch mode they are dropped on
+/// arrival.
+#[derive(Clone, Debug)]
 pub struct Digest {
     samples: Vec<f64>,
     sorted: bool,
     nan_dropped: usize,
+    sketch: Option<Box<Sketch>>,
+    // running aggregates, authoritative in sketch mode (exact mode
+    // derives them from the samples)
+    count: usize,
+    sum: f64,
+    lo: f64,
+    hi: f64,
+}
+
+impl Default for Digest {
+    fn default() -> Self {
+        Digest {
+            samples: Vec::new(),
+            sorted: false,
+            nan_dropped: 0,
+            sketch: None,
+            count: 0,
+            sum: 0.0,
+            lo: f64::INFINITY,
+            hi: f64::NEG_INFINITY,
+        }
+    }
 }
 
 impl Digest {
@@ -23,22 +128,84 @@ impl Digest {
         Self::default()
     }
 
+    /// Has this digest folded into the bounded sketch?
+    pub fn is_sketched(&self) -> bool {
+        self.sketch.is_some()
+    }
+
     pub fn add(&mut self, v: f64) {
-        self.samples.push(v);
+        if self.sketch.is_some() {
+            self.absorb(v);
+        } else {
+            self.samples.push(v);
+            self.sorted = false;
+            if self.samples.len() > SAMPLE_CAP {
+                self.fold_into_sketch();
+            }
+        }
+    }
+
+    /// Fold one value into the sketch-mode aggregates.
+    fn absorb(&mut self, v: f64) {
+        if v.is_nan() {
+            self.nan_dropped += 1;
+            return;
+        }
+        self.count += 1;
+        self.sum += v;
+        self.lo = self.lo.min(v);
+        self.hi = self.hi.max(v);
+        self.sketch.as_mut().expect("sketch mode").add(v);
+    }
+
+    fn fold_into_sketch(&mut self) {
+        self.sketch = Some(Box::new(Sketch::new()));
+        let samples = std::mem::take(&mut self.samples);
+        for v in samples {
+            self.absorb(v);
+        }
         self.sorted = false;
     }
 
     pub fn extend_from(&mut self, other: &Digest) {
-        self.samples.extend_from_slice(&other.samples);
-        self.sorted = false;
+        if self.sketch.is_none()
+            && other.sketch.is_none()
+            && self.samples.len() + other.samples.len() <= SAMPLE_CAP
+        {
+            self.samples.extend_from_slice(&other.samples);
+            self.sorted = false;
+            return;
+        }
+        if self.sketch.is_none() {
+            self.fold_into_sketch();
+        }
+        match &other.sketch {
+            Some(sk) => {
+                self.sketch.as_mut().expect("folded above").merge(sk);
+                self.count += other.count;
+                self.sum += other.sum;
+                self.lo = self.lo.min(other.lo);
+                self.hi = self.hi.max(other.hi);
+                self.nan_dropped += other.nan_dropped;
+            }
+            None => {
+                for &v in &other.samples {
+                    self.absorb(v);
+                }
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        if self.sketch.is_some() {
+            self.count
+        } else {
+            self.samples.len()
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.len() == 0
     }
 
     /// NaN samples seen and discarded so far (diagnostic counter).
@@ -47,6 +214,7 @@ impl Digest {
     }
 
     fn ensure_sorted(&mut self) {
+        debug_assert!(self.sketch.is_none(), "sketch mode never sorts");
         if self.sorted {
             return;
         }
@@ -66,13 +234,52 @@ impl Digest {
         self.sorted = true;
     }
 
-    /// Exact percentile by linear interpolation; `q` in [0, 100].
+    /// Percentile by linear interpolation, `q` in [0, 100] — exact in
+    /// sample mode, bucket-midpoint (nearest rank) in sketch mode.
     pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.sketch.is_some() {
+            return self.sketch_percentile(q);
+        }
         self.ensure_sorted();
         percentile_sorted(&self.samples, q)
     }
 
+    fn sketch_percentile(&self, q: f64) -> f64 {
+        let sk = self.sketch.as_ref().expect("sketch mode");
+        if self.count == 0 || q.is_nan() {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 100.0);
+        // the extremes are tracked exactly; don't quantize them
+        if self.count == 1 || q == 0.0 {
+            return self.lo;
+        }
+        if q == 100.0 {
+            return self.hi;
+        }
+        let target = (q / 100.0 * (self.count - 1) as f64).round() as u64;
+        let mut cum = sk.underflow;
+        if target < cum {
+            // underflow values are the smallest; min is exact
+            return self.lo;
+        }
+        for (i, &c) in sk.buckets.iter().enumerate() {
+            cum += c;
+            if target < cum {
+                return Sketch::rep(i).clamp(self.lo, self.hi);
+            }
+        }
+        self.hi
+    }
+
     pub fn mean(&self) -> f64 {
+        if self.sketch.is_some() {
+            return if self.count == 0 {
+                f64::NAN
+            } else {
+                self.sum / self.count as f64
+            };
+        }
         let mut sum = 0.0f64;
         let mut n = 0usize;
         for &v in &self.samples {
@@ -89,17 +296,39 @@ impl Digest {
     }
 
     pub fn min(&mut self) -> f64 {
+        if self.sketch.is_some() {
+            return if self.count == 0 { f64::NAN } else { self.lo };
+        }
         self.ensure_sorted();
         self.samples.first().copied().unwrap_or(f64::NAN)
     }
 
     pub fn max(&mut self) -> f64 {
+        if self.sketch.is_some() {
+            return if self.count == 0 { f64::NAN } else { self.hi };
+        }
         self.ensure_sorted();
         self.samples.last().copied().unwrap_or(f64::NAN)
     }
 
-    /// Fraction of (non-NaN) samples strictly greater than `threshold`.
+    /// Fraction of (non-NaN) samples strictly greater than `threshold`
+    /// — exact in sample mode, bucket-resolution in sketch mode.
     pub fn frac_above(&self, threshold: f64) -> f64 {
+        if let Some(sk) = &self.sketch {
+            if self.count == 0 {
+                return 0.0;
+            }
+            let mut above = if self.lo > threshold { sk.underflow } else { 0 };
+            for (i, &c) in sk.buckets.iter().enumerate() {
+                if c > 0 && Sketch::rep(i).clamp(self.lo, self.hi) > threshold {
+                    above += c;
+                }
+            }
+            if self.hi > threshold {
+                above += sk.overflow;
+            }
+            return above as f64 / self.count as f64;
+        }
         let n = self.samples.iter().filter(|v| !v.is_nan()).count();
         if n == 0 {
             return 0.0;
@@ -108,7 +337,9 @@ impl Digest {
     }
 
     pub fn summary(&mut self) -> Summary {
-        self.ensure_sorted(); // drop NaNs first so count/mean/order agree
+        if self.sketch.is_none() {
+            self.ensure_sorted(); // drop NaNs first so count/mean/order agree
+        }
         Summary {
             count: self.len(),
             mean: self.mean(),
@@ -299,5 +530,121 @@ mod tests {
         d.add(7.0);
         assert_eq!(d.percentile(-1.0), 5.0);
         assert_eq!(d.percentile(101.0), 7.0);
+    }
+
+    // ---- bounded (sketch) mode --------------------------------------
+
+    /// Deterministic log-uniform-ish positive values for sketch tests.
+    fn synth(n: usize, seed: u64) -> Vec<f64> {
+        let mut x = seed.max(1);
+        (0..n)
+            .map(|_| {
+                // xorshift64*
+                x ^= x >> 12;
+                x ^= x << 25;
+                x ^= x >> 27;
+                let u = (x.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64 / (1u64 << 53) as f64;
+                // span ~5 decades: 1e-4 .. 10
+                1e-4 * (10f64).powf(u * 5.0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn digest_stays_exact_up_to_the_cap() {
+        let mut d = Digest::new();
+        for i in 0..SAMPLE_CAP {
+            d.add(i as f64);
+        }
+        assert!(!d.is_sketched(), "exactly at the cap stays exact");
+        d.add(0.5);
+        assert!(d.is_sketched(), "one past the cap folds");
+        assert_eq!(d.len(), SAMPLE_CAP + 1);
+    }
+
+    #[test]
+    fn sketch_percentiles_within_documented_error() {
+        let vals = synth(50_000, 42);
+        let mut d = Digest::new();
+        for &v in &vals {
+            d.add(v);
+        }
+        assert!(d.is_sketched());
+        assert_eq!(d.len(), vals.len());
+
+        let mut sorted = vals.clone();
+        sorted.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [1.0, 10.0, 50.0, 90.0, 99.0] {
+            let exact = percentile_sorted(&sorted, q);
+            let got = d.percentile(q);
+            let rel = (got - exact).abs() / exact;
+            assert!(
+                rel < 0.025,
+                "p{q}: sketch {got} vs exact {exact} (rel {rel:.4})"
+            );
+        }
+        // count/mean/min/max stay exact
+        let exact_mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        assert!((d.mean() - exact_mean).abs() / exact_mean < 1e-12);
+        assert_eq!(d.min(), sorted[0]);
+        assert_eq!(d.max(), *sorted.last().unwrap());
+        // extremes are exact, interior percentiles clamp into range
+        assert_eq!(d.percentile(0.0), sorted[0]);
+        assert_eq!(d.percentile(100.0), *sorted.last().unwrap());
+    }
+
+    #[test]
+    fn sketch_merge_is_bucketwise_and_deterministic() {
+        let a_vals = synth(10_000, 1);
+        let b_vals = synth(10_000, 2);
+        let build = |vals: &[f64]| {
+            let mut d = Digest::new();
+            for &v in vals {
+                d.add(v);
+            }
+            d
+        };
+        // merged digest == digest of concatenated stream (same buckets)
+        let mut merged = build(&a_vals);
+        merged.extend_from(&build(&b_vals));
+        let mut whole = build(&a_vals);
+        for &v in &b_vals {
+            whole.add(v);
+        }
+        assert_eq!(merged.len(), whole.len());
+        for q in [10.0, 50.0, 99.0] {
+            assert_eq!(merged.percentile(q), whole.percentile(q), "p{q}");
+        }
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+    }
+
+    #[test]
+    fn exact_digest_merging_into_sketched_folds() {
+        let mut big = Digest::new();
+        for &v in &synth(20_000, 7) {
+            big.add(v);
+        }
+        let mut small = Digest::new();
+        for v in [0.25, 0.5, f64::NAN] {
+            small.add(v);
+        }
+        let n = big.len();
+        big.extend_from(&small);
+        assert_eq!(big.len(), n + 2, "NaN dropped on absorption");
+        assert_eq!(big.nan_dropped(), 1);
+        assert!(big.min() <= 0.25, "absorbed samples count toward min");
+    }
+
+    #[test]
+    fn sketch_zero_and_negative_values_underflow_to_exact_min() {
+        let mut d = Digest::new();
+        for i in 0..(SAMPLE_CAP + 100) {
+            d.add(if i % 2 == 0 { 0.0 } else { -1.5 });
+        }
+        assert!(d.is_sketched());
+        assert_eq!(d.min(), -1.5);
+        assert_eq!(d.max(), 0.0);
+        assert_eq!(d.percentile(10.0), -1.5, "underflow reports the exact min");
     }
 }

@@ -1,0 +1,346 @@
+//! Telemetry-layer property suite.
+//!
+//! Pins the three guarantees the observability layer is built on:
+//!
+//! 1. **Determinism** — the exported trace of a cluster run is a pure
+//!    function of (seed, config): rerunning produces a byte-identical
+//!    Chrome-trace JSON, and the lockstep oracle emits the identical
+//!    trace as the heap driver (same dispatch law ⇒ same event order).
+//! 2. **Zero interference** — installing the tracer never perturbs the
+//!    simulation: every observable is bit-for-bit identical with
+//!    tracing on and off, in both drivers. Exports are balanced by
+//!    construction, even when the ring-buffer cap drops events.
+//! 3. **Deterministic merge** — the counter registry's fold is
+//!    order-independent at fleet scale (100 replicas), and
+//!    `Metrics::merge` agrees with folding the registries directly,
+//!    since it is now implemented on top of them.
+
+use anyhow::Result;
+
+use nestedfp::bench::autopilot::{surge_workload, SurgeScenario};
+use nestedfp::coordinator::autopilot::AutopilotConfig;
+use nestedfp::coordinator::backend::SimBackend;
+use nestedfp::coordinator::cluster::{ClusterConfig, ClusterReport, ClusterRouter, SurgeConfig};
+use nestedfp::coordinator::engine::EngineConfig;
+use nestedfp::coordinator::metrics::Metrics;
+use nestedfp::coordinator::precision::{PrecisionPolicy, SloConfig};
+use nestedfp::coordinator::request::{FinishReason, Request, RequestState};
+use nestedfp::coordinator::router::RoutingPolicy;
+use nestedfp::gpusim::WeightFormat;
+use nestedfp::kvcache::KvPressureConfig;
+use nestedfp::model::zoo;
+use nestedfp::telemetry::export::{check_trace, trace_to_json};
+use nestedfp::telemetry::registry::{MergeRule, Registry};
+use nestedfp::telemetry::trace;
+use nestedfp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// Scenario + cluster construction (mirrors event_core_props.rs, scaled
+// down: this suite runs several full cluster simulations per test).
+// ---------------------------------------------------------------------
+
+fn scenario() -> SurgeScenario {
+    SurgeScenario {
+        lead_s: 8,
+        len_s: 24,
+        scale: 0.12,
+        ..SurgeScenario::golden()
+    }
+}
+
+fn cluster(sc: &SurgeScenario) -> ClusterRouter<SimBackend> {
+    let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
+    let max_seq = 1024;
+    let backends: Vec<SimBackend> = (0..sc.replicas)
+        .map(|_| {
+            SimBackend::new(
+                spec,
+                WeightFormat::Nested16,
+                WeightFormat::Nested8,
+                64,
+                max_seq,
+                64 * (max_seq / 16 + 1) * 2,
+            )
+        })
+        .collect();
+    let cfg = ClusterConfig {
+        policy: RoutingPolicy::SloHeadroom,
+        engine: EngineConfig {
+            policy: PrecisionPolicy::Dual,
+            slo: SloConfig::default(),
+            physical_kv: false,
+            max_iterations: 0,
+            kv: KvPressureConfig::default(),
+            devices: 1,
+        },
+        surge: SurgeConfig::disabled(),
+        autopilot: Some(AutopilotConfig::default()),
+        ..ClusterConfig::default()
+    };
+    ClusterRouter::new(backends, cfg)
+}
+
+/// Every observable of a run with f64s as raw bits, so "equal" means
+/// bit-for-bit (trimmed copy of the event_core_props fingerprint).
+fn fingerprint(r: &ClusterReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for c in &r.completions {
+        writeln!(
+            s,
+            "c {} {} {:016x} {:016x}",
+            c.id,
+            c.tokens.len(),
+            c.ttft_s.to_bits(),
+            c.mean_tpot_s.to_bits()
+        )
+        .unwrap();
+    }
+    for (i, rep) in r.replicas.iter().enumerate() {
+        writeln!(
+            s,
+            "r{i} routed={} iters={} fp16={} fp8={} free={} host={} tp={}",
+            rep.routed,
+            rep.iterations,
+            rep.controller.iters_fp16,
+            rep.controller.iters_fp8,
+            rep.final_free_kv_blocks,
+            rep.final_host_kv_blocks,
+            rep.final_tp_degree
+        )
+        .unwrap();
+        for &(t, fp8) in &rep.mode_timeline {
+            writeln!(s, "  m {:016x} {fp8}", t.to_bits()).unwrap();
+        }
+    }
+    for &(t, k) in &r.demotion_timeline {
+        writeln!(s, "dem {:016x} {k}", t.to_bits()).unwrap();
+    }
+    for &(t, i, tp) in &r.reshard_timeline {
+        writeln!(s, "rs {:016x} {i} {tp}", t.to_bits()).unwrap();
+    }
+    writeln!(
+        s,
+        "agg completed={} out={} pre={} t0={:016x} t1={:016x}",
+        r.aggregate.completed,
+        r.aggregate.total_output_tokens,
+        r.pre_escalations,
+        r.aggregate.t_start.to_bits(),
+        r.aggregate.t_end.to_bits()
+    )
+    .unwrap();
+    s
+}
+
+fn run_traced(
+    sc: &SurgeScenario,
+    cap: usize,
+    lockstep: bool,
+) -> Result<(ClusterReport, trace::Trace)> {
+    trace::install(cap);
+    let mut c = cluster(sc);
+    let report = if lockstep {
+        c.run_lockstep(surge_workload(sc))?
+    } else {
+        c.run(surge_workload(sc))?
+    };
+    let tr = trace::take().expect("tracer was installed");
+    Ok((report, tr))
+}
+
+// ---------------------------------------------------------------------
+// 1. Determinism: byte-identical exports across reruns and drivers.
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_export_is_byte_identical_across_reruns_and_drivers() -> Result<()> {
+    let sc = scenario();
+    let (ra, ta) = run_traced(&sc, trace::DEFAULT_CAP, false)?;
+    assert!(ra.aggregate.completed > 0, "scenario produced no completions");
+    assert!(!ta.events.is_empty(), "cluster run recorded no events");
+    assert_eq!(ta.dropped, 0, "default cap must hold the whole scenario");
+    let a = trace_to_json(&ta).to_string();
+
+    let (_, tb) = run_traced(&sc, trace::DEFAULT_CAP, false)?;
+    let b = trace_to_json(&tb).to_string();
+    assert_eq!(a, b, "same seed+config must export a byte-identical trace");
+
+    let (_, tc) = run_traced(&sc, trace::DEFAULT_CAP, true)?;
+    let c = trace_to_json(&tc).to_string();
+    assert_eq!(a, c, "lockstep oracle must emit the identical trace");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// 2a. Zero interference: tracing on vs off is bit-identical.
+// ---------------------------------------------------------------------
+
+#[test]
+fn tracing_never_changes_the_simulation_in_either_driver() -> Result<()> {
+    let sc = scenario();
+    for lockstep in [false, true] {
+        let mut plain_cluster = cluster(&sc);
+        let plain = if lockstep {
+            plain_cluster.run_lockstep(surge_workload(&sc))?
+        } else {
+            plain_cluster.run(surge_workload(&sc))?
+        };
+        let (traced, tr) = run_traced(&sc, trace::DEFAULT_CAP, lockstep)?;
+        assert!(!tr.events.is_empty());
+        assert_eq!(
+            fingerprint(&plain),
+            fingerprint(&traced),
+            "lockstep={lockstep}: tracing perturbed the simulation"
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// 2b. Balance: exports validate, with and without cap pressure.
+// ---------------------------------------------------------------------
+
+#[test]
+fn exported_cluster_trace_is_balanced_and_validates() -> Result<()> {
+    let sc = scenario();
+    let (_, tr) = run_traced(&sc, trace::DEFAULT_CAP, false)?;
+    let chk = check_trace(&trace_to_json(&tr).to_string())?;
+    assert_eq!(chk.events, tr.events.len());
+    assert!(chk.spans > 0, "a cluster run must record spans");
+    assert!(chk.instants > 0, "a cluster run must record instants");
+    assert_eq!(chk.dropped, 0);
+    Ok(())
+}
+
+#[test]
+fn no_lifecycle_span_crosses_its_requests_completion() -> Result<()> {
+    use nestedfp::telemetry::trace::{Kind, Phase};
+    let sc = scenario();
+    let (_, tr) = run_traced(&sc, trace::DEFAULT_CAP, false)?;
+    let mut completion: std::collections::HashMap<u64, f64> = Default::default();
+    for e in &tr.events {
+        if e.kind == Kind::Completion {
+            completion.insert(e.id, e.t);
+        }
+    }
+    assert!(!completion.is_empty(), "run recorded no completion instants");
+    // every queue/prefill/decode/offload span of a completed request must
+    // close at or before that request's completion instant (requests
+    // still in flight at the horizon have no instant and are skipped —
+    // finish_run closes their spans at the horizon by design)
+    let mut checked = 0usize;
+    for e in &tr.events {
+        let lifecycle = matches!(
+            e.kind,
+            Kind::Queue | Kind::Prefill | Kind::Decode | Kind::Offload
+        );
+        if lifecycle && e.phase == Phase::End {
+            if let Some(&done) = completion.get(&e.id) {
+                assert!(
+                    e.t <= done,
+                    "{:?} span of request {} ends at {} after its completion at {}",
+                    e.kind,
+                    e.id,
+                    e.t,
+                    done
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0, "no lifecycle span ends were checked");
+    Ok(())
+}
+
+#[test]
+fn trace_stays_balanced_when_the_cap_drops_events() -> Result<()> {
+    let sc = scenario();
+    // a cap far below the scenario's event count: most events drop, yet
+    // check_trace must still validate (it errors on any unmatched B/E)
+    // and must surface the truncation through the dropped counter.
+    let (_, tr) = run_traced(&sc, 64, false)?;
+    assert!(tr.dropped > 0, "tiny cap must drop events");
+    let chk = check_trace(&trace_to_json(&tr).to_string())?;
+    assert_eq!(chk.dropped, tr.dropped as u64);
+    assert!(chk.events >= chk.spans * 2, "span accounting broken");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// 3. Registry merge at fleet scale: order-independent, and the
+//    Metrics struct's merge agrees with folding registries directly.
+// ---------------------------------------------------------------------
+
+fn finished_request(id: u64, arrival: f64, first: f64, done: f64, n_out: usize) -> Request {
+    let mut r = Request::new(id, vec![1, 2, 3], 64, arrival);
+    r.state = RequestState::Finished;
+    r.prefilled = 3;
+    r.generated = vec![0; n_out];
+    r.first_token_at = Some(first);
+    r.finished_at = Some(done);
+    r.finish_reason = Some(FinishReason::Length);
+    r
+}
+
+/// One replica's metrics: staggered arrivals so `run.t_start_s` (Min)
+/// and `run.t_end_s` (Max) have unique fleet-wide extremes.
+fn replica_metrics(i: usize) -> Metrics {
+    let mut m = Metrics::new();
+    let arrival = 1.0 + i as f64 * 0.25;
+    let ttft = 0.010 + i as f64 * 0.001;
+    m.record_request(&finished_request(
+        i as u64,
+        arrival,
+        arrival + ttft,
+        arrival + ttft + 0.5,
+        4 + i % 7,
+    ));
+    m
+}
+
+#[test]
+fn registry_merge_is_order_independent_across_100_replicas() {
+    let regs: Vec<Registry> = (0..100)
+        .map(|i| replica_metrics(i).scalar_registry())
+        .collect();
+    let fold = |order: &[usize]| {
+        let mut acc = Registry::new();
+        for &i in order {
+            acc.merge(&regs[i]);
+        }
+        acc
+    };
+    let fwd: Vec<usize> = (0..100).collect();
+    let reference = fold(&fwd);
+    for seed in 0..8u64 {
+        let mut order = fwd.clone();
+        Pcg64::seeded(seed).shuffle(&mut order);
+        assert_eq!(
+            fold(&order),
+            reference,
+            "seed {seed}: merge order changed the folded registry"
+        );
+    }
+
+    // each rule lands on its documented fleet-wide aggregate
+    assert_eq!(reference.int("requests.completed"), 100);
+    assert_eq!(reference.get("requests.completed").unwrap().rule, MergeRule::Sum);
+    let out: u64 = (0..100).map(|i| (4 + i % 7) as u64).sum();
+    assert_eq!(reference.int("tokens.output"), out);
+    assert_eq!(reference.float("run.t_start_s").to_bits(), 1.0f64.to_bits());
+    assert_eq!(reference.get("run.t_start_s").unwrap().rule, MergeRule::Min);
+    let last = 1.0 + 99.0 * 0.25;
+    let t_end = last + (0.010 + 99.0 * 0.001) + 0.5;
+    assert_eq!(reference.float("run.t_end_s").to_bits(), t_end.to_bits());
+    assert_eq!(reference.get("run.t_end_s").unwrap().rule, MergeRule::Max);
+
+    // Metrics::merge is registry-backed: folding through the struct
+    // must land on the same scalars as folding the registries directly.
+    let mut merged = Metrics::new();
+    for i in 0..100 {
+        merged.merge(&replica_metrics(i));
+    }
+    assert_eq!(merged.completed, 100);
+    assert_eq!(merged.ttft.len(), 100, "digests must pool samples");
+    assert_eq!(merged.scalar_registry(), reference);
+}
