@@ -66,6 +66,13 @@ cargo test -q --offline --test shard_props
 echo "== cargo test (telemetry: trace determinism + registry merge) =="
 cargo test -q --offline --test telemetry_props
 
+# The per-layer morph's invariants (demotion order == sensitivity
+# ranking, endpoint bit-identity with the legacy single-mode paths,
+# elastic KV watermark monotonicity, fine-ladder dwell discipline) run
+# by name so a morph regression fails with clear attribution.
+echo "== cargo test (morph: schedule + endpoint bit-identity) =="
+cargo test -q --offline --test morph_props
+
 echo "== cargo test -q =="
 cargo test -q --offline
 
@@ -77,6 +84,9 @@ echo "== smoke: repro reproduce autopilot --quick =="
 
 echo "== smoke: repro reproduce parallelism --quick =="
 ./target/release/repro reproduce parallelism --quick --json /tmp/nestedfp_parallelism_ci.json
+
+echo "== smoke: repro reproduce morph --quick =="
+./target/release/repro reproduce morph --quick --json /tmp/nestedfp_morph_ci.json
 
 echo "== smoke: repro reproduce attention --quick =="
 ./target/release/repro reproduce attention --quick --json /tmp/nestedfp_attention_ci.json

@@ -14,6 +14,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod cluster;
 pub mod kvcache;
+pub mod morph;
 pub mod parallelism;
 
 pub use report::Report;

@@ -84,6 +84,16 @@ pub struct AutopilotConfig {
     /// bench's parallelism-only arm), 1 caps at Mixed, 2 (default)
     /// allows the full FP16 → Mixed → FP8 walk.
     pub max_precision_rung: usize,
+    /// Per-layer morphing ladder resolution. 0 (default) keeps the
+    /// legacy three-rung whole-replica ladder, bit for bit. `R >= 2`
+    /// walks `R + 1` fine positions per replica (0 = FP16, `R` = FP8,
+    /// interior = partial layer schedules) under the same macro-scale
+    /// dwell law: escalation jumps `R/2` rungs per allowed move and
+    /// promotion walks one rung at `2/R` of the promote dwell, so
+    /// endpoint-to-endpoint timing matches the coarse arm while the
+    /// interior gains resolution. Engines consume the fine rung through
+    /// [`PrecisionController::apply_layer_rung`](super::precision::PrecisionController::apply_layer_rung).
+    pub morph_rungs: usize,
     /// Highest tensor-parallel degree the parallelism ladder may target
     /// (power of two). 1 disables the second ladder entirely — the
     /// pre-shard-layer behavior, bit for bit.
@@ -113,6 +123,7 @@ impl Default for AutopilotConfig {
             predictor_gain: 0.6,
             predictor_floor_rate: 1.0,
             max_precision_rung: 2,
+            morph_rungs: 0,
             max_tp: 1,
             // a reshard bills a full drain + weight-move window, so the
             // parallelism ladder dwells an order of magnitude longer
@@ -138,11 +149,24 @@ pub struct SloTracker {
 /// delegates to the crate's single percentile definition,
 /// [`crate::util::stats::percentile_sorted`], so the control loop and
 /// the reported metrics can never disagree about what a p99 is.
+///
+/// NaN samples sort last and are dropped (counted in the global
+/// telemetry registry under `autopilot.nan_dropped`) — one poisoned
+/// latency observation must degrade one data point, never panic the
+/// control loop.
 fn percentile_of(mut xs: Vec<f64>, q: f64) -> Option<f64> {
     if xs.is_empty() {
         return None;
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN latency sample"));
+    let dropped = crate::util::stats::sort_drop_nans(&mut xs);
+    if dropped > 0 {
+        crate::telemetry::registry::with_global(|r| {
+            r.add_int("autopilot.nan_dropped", dropped as u64)
+        });
+    }
+    if xs.is_empty() {
+        return None;
+    }
     Some(crate::util::stats::percentile_sorted(&xs, q))
 }
 
@@ -289,61 +313,118 @@ pub struct ModeStats {
 }
 
 /// The per-replica hysteresis state machine. It receives an *assigned*
-/// rung from the cluster ladder every control tick and walks toward it
-/// one rung at a time, subject to dwell times and the post-promotion
-/// cooldown — the assignment can flap, the replica cannot.
+/// rung from the cluster ladder every control tick and walks toward it,
+/// subject to dwell times and the post-promotion cooldown — the
+/// assignment can flap, the replica cannot.
+///
+/// The ladder has `max_rung + 1` positions: 0 is FP16, `max_rung` is
+/// FP8, everything in between maps to the `Mixed` directive (and, under
+/// per-layer morphing, to a partial
+/// [`LayerSchedule`](super::precision::LayerSchedule) demotion — see
+/// [`super::precision::PrecisionController::apply_layer_rung`]). With
+/// `max_rung == 2` this is exactly the legacy coarse FSM: one rung per
+/// move, one directive per rung, same dwell gates, same timeline.
 #[derive(Clone, Debug)]
 struct ReplicaFsm {
-    state: PrecisionDirective,
+    /// Fine ladder position in `0..=max_rung`.
+    state: usize,
+    /// Top rung of this replica's ladder (2 = legacy coarse ladder).
+    max_rung: usize,
     entered_at: f64,
     last_promote_at: f64,
     last_tick: f64,
     stats: ModeStats,
+    /// Coarse directive change points (pushed only when the mapped
+    /// directive changes — identical to the legacy timeline at R = 2).
     timeline: Vec<(f64, PrecisionDirective)>,
+    /// Fine rung change points (every FSM move).
+    rung_timeline: Vec<(f64, usize)>,
+    /// Virtual-clock seconds per fine rung, `[0 ..= max_rung]`.
+    rung_dwell: Vec<f64>,
 }
 
 impl ReplicaFsm {
-    fn new() -> ReplicaFsm {
+    fn new(max_rung: usize) -> ReplicaFsm {
+        assert!(max_rung >= 2, "the ladder needs at least 3 positions");
         ReplicaFsm {
             // boot state: "has been FP16 forever" — the first escalation
             // is never dwell-blocked by an arbitrary t=0 entry stamp
-            state: PrecisionDirective::Fp16,
+            state: 0,
+            max_rung,
             entered_at: f64::NEG_INFINITY,
             last_promote_at: f64::NEG_INFINITY,
             last_tick: 0.0,
             stats: ModeStats::default(),
             timeline: Vec::new(),
+            rung_timeline: Vec::new(),
+            rung_dwell: vec![0.0; max_rung + 1],
         }
     }
 
-    fn tick(
-        &mut self,
-        now: f64,
-        target: PrecisionDirective,
-        cfg: &AutopilotConfig,
-    ) -> PrecisionDirective {
+    /// Map a fine rung to the coarse three-rung directive.
+    fn directive_of(rung: usize, max_rung: usize) -> PrecisionDirective {
+        if rung == 0 {
+            PrecisionDirective::Fp16
+        } else if rung >= max_rung {
+            PrecisionDirective::Fp8
+        } else {
+            PrecisionDirective::Mixed
+        }
+    }
+
+    fn directive(&self) -> PrecisionDirective {
+        Self::directive_of(self.state, self.max_rung)
+    }
+
+    /// Per-move promotion dwell: the fine ladder walks back one rung at
+    /// a time, so the per-rung dwell is scaled to `2/R` of the coarse
+    /// value — a full FP8 → FP16 drain takes exactly as long as the
+    /// coarse ladder's two-rung walk. `max_rung == 2` uses the config
+    /// value untouched (legacy, bit for bit).
+    fn promote_dwell(&self, cfg: &AutopilotConfig) -> f64 {
+        if self.max_rung == 2 {
+            cfg.promote_dwell_s
+        } else {
+            cfg.promote_dwell_s * 2.0 / self.max_rung as f64
+        }
+    }
+
+    fn tick(&mut self, now: f64, target: usize, cfg: &AutopilotConfig) -> PrecisionDirective {
         let dt = (now - self.last_tick).max(0.0);
-        self.stats.dwell_s[self.state.rung()] += dt;
+        self.stats.dwell_s[self.directive().rung()] += dt;
+        self.rung_dwell[self.state] += dt;
         self.last_tick = self.last_tick.max(now);
+        let target = target.min(self.max_rung);
         if target != self.state {
-            let escalating = target.rung() > self.state.rung();
+            let escalating = target > self.state;
             let in_state = now - self.entered_at;
             let allowed = if escalating {
                 in_state >= cfg.escalate_dwell_s && now - self.last_promote_at >= cfg.cooldown_s
             } else {
-                in_state >= cfg.promote_dwell_s
+                in_state >= self.promote_dwell(cfg)
             };
             if allowed {
-                self.state = self.state.step_toward(target);
-                self.entered_at = now;
-                self.stats.switches += 1;
-                if !escalating {
+                let before = self.directive();
+                if escalating {
+                    // escalation jumps R/2 rungs per allowed move, so the
+                    // coarse-directive timing (FP16 -> Mixed -> FP8 in two
+                    // dwell-gated moves) is preserved at every resolution
+                    let step = (self.max_rung / 2).max(1);
+                    self.state = (self.state + step).min(target);
+                } else {
+                    self.state -= 1;
                     self.last_promote_at = now;
                 }
-                self.timeline.push((now, self.state));
+                self.entered_at = now;
+                self.rung_timeline.push((now, self.state));
+                let after = self.directive();
+                if after != before {
+                    self.stats.switches += 1;
+                    self.timeline.push((now, after));
+                }
             }
         }
-        self.state
+        self.directive()
     }
 }
 
@@ -392,12 +473,16 @@ impl TpFsm {
 /// wall-clock monitor) through [`Autopilot::control_at`].
 pub struct Autopilot {
     cfg: AutopilotConfig,
+    /// Top fine rung per replica: 2 in legacy coarse mode
+    /// (`morph_rungs == 0`), else `max(2, morph_rungs)`.
+    rungs: usize,
     trackers: Vec<SloTracker>,
     fsms: Vec<ReplicaFsm>,
     tp_fsms: Vec<TpFsm>,
     predictor: SurgePredictor,
     /// Cluster ladder position: total demotion rungs distributed over the
-    /// fleet, in `0..=2 * n_replicas` (0 = all FP16, 2n = all FP8).
+    /// fleet, in `0..=R * n_replicas` (0 = all FP16, Rn = all FP8; the
+    /// legacy coarse ladder has R = 2).
     severity: usize,
     last_control: f64,
     /// Severity changes driven by the predictor alone (measured pressure
@@ -417,10 +502,16 @@ impl Autopilot {
             cfg.max_tp
         );
         assert!(cfg.max_precision_rung <= 2, "precision rungs are 0..=2");
+        let rungs = if cfg.morph_rungs == 0 {
+            2
+        } else {
+            cfg.morph_rungs.max(2)
+        };
         Autopilot {
             cfg,
+            rungs,
             trackers: vec![SloTracker::default(); n_replicas],
-            fsms: (0..n_replicas).map(|_| ReplicaFsm::new()).collect(),
+            fsms: (0..n_replicas).map(|_| ReplicaFsm::new(rungs)).collect(),
             tp_fsms: (0..n_replicas).map(|_| TpFsm::new()).collect(),
             predictor: SurgePredictor::default(),
             severity: 0,
@@ -445,12 +536,35 @@ impl Autopilot {
 
     /// Current per-replica directives.
     pub fn directives(&self) -> Vec<PrecisionDirective> {
-        self.fsms.iter().map(|f| f.state).collect()
+        self.fsms.iter().map(|f| f.directive()).collect()
     }
 
     /// One replica's directive change points `(time, new directive)`.
     pub fn directive_timeline(&self, i: usize) -> &[(f64, PrecisionDirective)] {
         &self.fsms[i].timeline
+    }
+
+    /// Per-replica fine rungs under per-layer morphing: `None` in legacy
+    /// coarse mode (`morph_rungs == 0`), else `(states, max_rung)` where
+    /// each state is in `0..=max_rung`. The cluster driver feeds these to
+    /// [`PrecisionController::apply_layer_rung`](super::precision::PrecisionController::apply_layer_rung).
+    pub fn fine_rungs(&self) -> Option<(Vec<usize>, usize)> {
+        if self.cfg.morph_rungs == 0 {
+            return None;
+        }
+        Some((self.fsms.iter().map(|f| f.state).collect(), self.rungs))
+    }
+
+    /// One replica's fine-rung change points `(time, new rung)` — every
+    /// FSM move, including the interior steps the coarse
+    /// [`Autopilot::directive_timeline`] collapses.
+    pub fn rung_timeline(&self, i: usize) -> &[(f64, usize)] {
+        &self.fsms[i].rung_timeline
+    }
+
+    /// One replica's virtual-clock seconds per fine rung.
+    pub fn rung_dwell(&self, i: usize) -> &[f64] {
+        &self.fsms[i].rung_dwell
     }
 
     /// Current per-replica tensor-parallel *targets* — the parallelism
@@ -573,16 +687,18 @@ impl Autopilot {
     /// property tests and the live server drive):
     ///
     /// * cluster pressure = mean replica pressure + predictor boost;
-    /// * the severity integrator moves **one rung per tick** (damped):
-    ///   up above `up_pressure`, down below `down_pressure`;
+    /// * the severity integrator moves **R/2 rungs per tick** (damped;
+    ///   one rung on the legacy R = 2 ladder): up above `up_pressure`,
+    ///   down below `down_pressure`;
     /// * predictor-driven escalation (boost lifted the mean over the
-    ///   threshold) is capped at severity `n` — the whole fleet can be
-    ///   *pre-armed* to `Mixed`, but pinned FP8 requires measured
-    ///   pressure;
+    ///   threshold) is capped at half the severity range — the whole
+    ///   fleet can be *pre-armed* to `Mixed`, but pinned FP8 requires
+    ///   measured pressure;
     /// * severity rungs go to the replicas with the least SLO headroom
     ///   (highest pressure, sticky toward already-demoted replicas,
-    ///   ties by the router's `slo_headroom`, then highest index), two
-    ///   rungs max per replica (capped by `max_precision_rung`);
+    ///   ties by the router's `slo_headroom`, then highest index), R
+    ///   rungs max per measured-pressure replica, R/2 otherwise
+    ///   (capped by `max_precision_rung`, scaled to the fine ladder);
     /// * each replica's FSM walks toward its assigned rung under its
     ///   dwell/cooldown discipline;
     /// * then the parallelism ladder runs, arbitrated second: for each
@@ -604,20 +720,22 @@ impl Autopilot {
         self.last_control = now;
         let mean_p = pressures.iter().sum::<f64>() / n as f64;
         let cluster = mean_p + boost.max(0.0);
-        let max_sev = 2 * n;
+        let r = self.rungs;
+        let half = (r / 2).max(1);
+        let max_sev = r * n;
 
         let mut want = self.severity;
         if cluster > self.cfg.up_pressure && self.severity < max_sev {
             let measured = mean_p > self.cfg.up_pressure;
-            let cap = if measured { max_sev } else { n };
+            let cap = if measured { max_sev } else { half * n };
             if self.severity < cap {
-                want = self.severity + 1;
+                want = (self.severity + half).min(cap);
                 if !measured {
                     self.pre_escalations += 1;
                 }
             }
         } else if cluster < self.cfg.down_pressure && self.severity > 0 {
-            want = self.severity - 1;
+            want = self.severity.saturating_sub(half);
         }
         if want != self.severity {
             self.severity = want;
@@ -628,7 +746,7 @@ impl Autopilot {
         let keys: Vec<f64> = (0..n)
             .map(|i| {
                 pressures[i]
-                    + if self.fsms[i].state != PrecisionDirective::Fp16 {
+                    + if self.fsms[i].state != 0 {
                         self.cfg.sticky_bonus
                     } else {
                         0.0
@@ -644,35 +762,34 @@ impl Autopilot {
                 .then(b.cmp(&a))
         });
 
-        // distribute severity: up to two rungs per replica, most
-        // pressured first — but a pinned-FP8 rung requires *measured*
-        // pressure on that replica (predictor-driven arming stops at
-        // Mixed; surplus rungs simply go undistributed until pressure
-        // materializes)
+        // distribute severity: up to R rungs per replica, most
+        // pressured first — but any rung past the ladder's midpoint
+        // (the FP8 half) requires *measured* pressure on that replica
+        // (predictor-driven arming stops at Mixed; surplus rungs simply
+        // go undistributed until pressure materializes)
         let mut rungs = vec![0usize; n];
         let mut left = self.severity;
         for &i in &order {
             if left == 0 {
                 break;
             }
-            let max_rung = if pressures[i] > self.cfg.up_pressure { 2 } else { 1 };
+            let max_rung = if pressures[i] > self.cfg.up_pressure { r } else { half };
             let take = left.min(max_rung);
             rungs[i] = take;
             left -= take;
         }
 
+        // the per-replica precision cap on the fine ladder: coarse cap
+        // `max_precision_rung` scaled by R/2 fine rungs per coarse rung
+        let cap_fine = self.cfg.max_precision_rung * r / 2;
         let mut out = Vec::with_capacity(n);
         let mut precision_moved = vec![false; n];
         for i in 0..n {
-            let target = match rungs[i].min(self.cfg.max_precision_rung) {
-                0 => PrecisionDirective::Fp16,
-                1 => PrecisionDirective::Mixed,
-                _ => PrecisionDirective::Fp8,
-            };
+            let target = rungs[i].min(cap_fine);
             let before = self.fsms[i].state;
-            let after = self.fsms[i].tick(now, target, &self.cfg);
-            precision_moved[i] = after != before;
-            out.push(after);
+            let dir = self.fsms[i].tick(now, target, &self.cfg);
+            precision_moved[i] = self.fsms[i].state != before;
+            out.push(dir);
         }
 
         // the parallelism ladder, arbitrated second: precision is the
@@ -686,11 +803,11 @@ impl Autopilot {
                 if precision_moved[i] {
                     continue;
                 }
-                let rung = out[i].rung();
+                let state = self.fsms[i].state;
                 let f = &mut self.tp_fsms[i];
                 let in_state = now - f.entered_at;
                 if pressures[i] > self.cfg.up_pressure
-                    && rung >= self.cfg.max_precision_rung
+                    && state >= cap_fine
                     && f.tp < self.cfg.max_tp
                     && in_state >= self.cfg.tp_escalate_dwell_s
                     && now - f.last_release_at >= self.cfg.tp_cooldown_s
@@ -698,7 +815,7 @@ impl Autopilot {
                     let tp = f.tp * 2;
                     f.step_to(now, tp, false);
                 } else if pressures[i] < self.cfg.down_pressure
-                    && rung == 0
+                    && state == 0
                     && f.tp > 1
                     && in_state >= self.cfg.tp_promote_dwell_s
                 {
@@ -845,18 +962,18 @@ mod tests {
     #[test]
     fn fsm_dwell_and_cooldown_bound_switch_times() {
         let cfg = AutopilotConfig::default();
-        let mut f = ReplicaFsm::new();
+        let mut f = ReplicaFsm::new(2);
         // rapid-fire escalate demands: first step allowed only after
         // escalate_dwell, the next only escalate_dwell later
         let mut t = 0.0;
-        while f.state != Fp8 {
-            f.tick(t, Fp8, &cfg);
+        while f.state != 2 {
+            f.tick(t, 2, &cfg);
             t += 0.01;
         }
         // then an immediate promote demand must wait out promote_dwell
         let t_fp8 = f.timeline.last().unwrap().0;
-        while f.state == Fp8 {
-            f.tick(t, Fp16, &cfg);
+        while f.state == 2 {
+            f.tick(t, 0, &cfg);
             t += 0.01;
         }
         let t_mixed = f.timeline.last().unwrap().0;
@@ -876,8 +993,8 @@ mod tests {
         }
         // post-promotion cooldown: re-escalation is delayed
         let t_promoted = f.timeline.last().unwrap().0;
-        while f.state == Mixed {
-            f.tick(t, Fp8, &cfg);
+        while f.state == 1 {
+            f.tick(t, 2, &cfg);
             t += 0.01;
         }
         let t_re = f.timeline.last().unwrap().0;
@@ -886,6 +1003,89 @@ mod tests {
             "re-escalated {} s after a promotion (cooldown {})",
             t_re - t_promoted,
             cfg.cooldown_s
+        );
+    }
+
+    #[test]
+    fn nan_latency_sample_no_longer_panics_the_control_loop() {
+        // regression: the old percentile_of sorted with
+        // partial_cmp().expect("NaN latency sample") and panicked on one
+        // poisoned observation — it must now drop the sample and count it
+        crate::telemetry::registry::reset_global();
+        let mut t = SloTracker::default();
+        t.observe_ttft(0.0, 0.050);
+        t.observe_ttft(0.1, f64::NAN);
+        t.observe_ttft(0.2, 0.070);
+        t.observe_tpot(0.2, f64::NAN);
+        let p = t.ttft_percentile(100.0).expect("real samples remain");
+        assert!((p - 0.070).abs() < 1e-12, "NaN dropped, max is 0.070: {p}");
+        assert!(
+            t.tpot_percentile(50.0).is_none(),
+            "all-NaN window reports no percentile instead of panicking"
+        );
+        let snap = crate::telemetry::registry::global_snapshot();
+        assert_eq!(
+            snap.int("autopilot.nan_dropped"),
+            2,
+            "each dropped NaN is counted"
+        );
+        crate::telemetry::registry::reset_global();
+    }
+
+    #[test]
+    fn fine_ladder_matches_coarse_macro_timing_and_refines_interior() {
+        let coarse_cfg = AutopilotConfig::default();
+        let fine_cfg = AutopilotConfig {
+            morph_rungs: 8,
+            ..AutopilotConfig::default()
+        };
+        let mut coarse = Autopilot::new(1, coarse_cfg);
+        let mut fine = Autopilot::new(1, fine_cfg);
+        assert!(coarse.fine_rungs().is_none(), "legacy mode exposes no fine rungs");
+        let hr = [0.0];
+        let mut t = 0.0;
+        // sustained measured pressure: both reach FP8 on the same ticks
+        for _ in 0..40 {
+            let dc = coarse.control_at(t, &[2.0], 0.0, &hr);
+            let df = fine.control_at(t, &[2.0], 0.0, &hr);
+            assert_eq!(dc, df, "coarse directives agree under saturation at t={t}");
+            t += 0.25;
+        }
+        let (states, max_rung) = fine.fine_rungs().expect("morph mode");
+        assert_eq!((states[0], max_rung), (8, 8));
+        // drain: the fine ladder walks back through interior rungs the
+        // coarse arm never visits, same endpoint-to-endpoint time
+        let mut interior = false;
+        for _ in 0..80 {
+            coarse.control_at(t, &[0.1], 0.0, &hr);
+            fine.control_at(t, &[0.1], 0.0, &hr);
+            let s = fine.fine_rungs().unwrap().0[0];
+            interior |= s > 0 && s < 8 && s != 4;
+            t += 0.25;
+        }
+        assert_eq!(coarse.directives(), vec![Fp16]);
+        assert_eq!(fine.fine_rungs().unwrap().0, vec![0]);
+        assert!(interior, "the fine drain must visit interior rungs");
+        let fp16_coarse = coarse
+            .directive_timeline(0)
+            .iter()
+            .rev()
+            .find(|&&(_, d)| d == Fp16)
+            .unwrap()
+            .0;
+        let fp16_fine = fine
+            .directive_timeline(0)
+            .iter()
+            .rev()
+            .find(|&&(_, d)| d == Fp16)
+            .unwrap()
+            .0;
+        // after a long FP8 stay the coarse arm's first promote move is
+        // dwell-free, so the fine drain may trail by up to one coarse
+        // promote dwell — never more
+        assert!(
+            (fp16_fine - fp16_coarse).abs() <= coarse_cfg.promote_dwell_s + 1e-9,
+            "fine drain ends within one promote dwell of coarse: {fp16_fine} vs {fp16_coarse}"
         );
     }
 

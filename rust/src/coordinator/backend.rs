@@ -11,9 +11,9 @@ use crate::gpusim::{self, StepKind, StepQuery, WeightFormat};
 use crate::model::zoo::ModelSpec;
 use crate::runtime::ModelRuntime;
 
-use super::hostforward::{HostForward, StepLane};
+use super::hostforward::{ForwardOut, HostForward, StepLane};
 use super::kv::{KvCacheManager, KvGeometry};
-use super::precision::Precision;
+use super::precision::{LayerSchedule, Precision};
 
 /// Result of one backend step.
 #[derive(Default)]
@@ -56,6 +56,14 @@ pub trait Backend {
     fn model_spec(&self) -> Option<&'static ModelSpec> {
         None
     }
+
+    /// Install (or clear) the engine's per-layer precision schedule.
+    /// The engine re-pushes the schedule whenever its demoted-layer
+    /// count moves, so backends may cache it. Backends without a
+    /// per-layer path (accounting-only test backends) ignore it — the
+    /// `precision` argument of `prefill`/`decode` still carries the
+    /// majority-rounded directive for them.
+    fn set_layer_schedule(&mut self, _schedule: Option<&LayerSchedule>) {}
 
     /// Prefill `tokens` for `slot` starting at `start_pos`; scatter the
     /// new KV into the slot.
@@ -127,6 +135,10 @@ pub struct RealBackend {
     /// Lazily built host step executor (prepares per-mode weight
     /// operands once, then serves every step).
     host: Option<HostForward>,
+    /// Per-layer precision schedule pushed by the engine. `None` (and
+    /// the schedule's endpoints) take the uniform single-mode path;
+    /// interior rungs dispatch [`HostForward::forward_morph`].
+    schedule: Option<LayerSchedule>,
 }
 
 impl RealBackend {
@@ -146,6 +158,7 @@ impl RealBackend {
             gemm: GemmEngine::default(),
             geo,
             host: None,
+            schedule: None,
         }
     }
 
@@ -169,6 +182,49 @@ impl RealBackend {
             Precision::Fp16 => self.modes.fp16_mode,
             Precision::Fp8 => self.modes.fp8_mode,
         }
+    }
+
+    /// Run one host step over `lanes`: the uniform `mode` path when no
+    /// interior schedule is active, the per-layer hot/cold split
+    /// otherwise. Weight-operand preparation happens here, before the
+    /// timer starts — a precision or schedule switch must not bill
+    /// store decoding as step latency (it would spike TPOT into the
+    /// SLO control loop). Returns the forward output and the timed
+    /// step latency.
+    fn host_step(
+        &mut self,
+        kv: &mut KvCacheManager,
+        mode: &'static str,
+        lanes: &[StepLane],
+    ) -> Result<(ForwardOut, f64)> {
+        self.ensure_host()?;
+        let cold_mask = match &self.schedule {
+            Some(s) if s.demoted_layers() > 0 && s.demoted_layers() < s.n_layers() => {
+                Some(s.cold_mask())
+            }
+            _ => None,
+        };
+        let host = self.host.as_mut().expect("ensured above");
+        match &cold_mask {
+            Some(_) => {
+                host.prepare(&self.rt, self.modes.fp16_mode)?;
+                host.prepare(&self.rt, self.modes.fp8_mode)?;
+            }
+            None => host.prepare(&self.rt, mode)?,
+        }
+        let t0 = std::time::Instant::now();
+        let out = match &cold_mask {
+            Some(mask) => host.forward_morph(
+                &self.rt,
+                kv,
+                self.modes.fp16_mode,
+                self.modes.fp8_mode,
+                mask,
+                lanes,
+            )?,
+            None => host.forward(&self.rt, kv, mode, lanes)?,
+        };
+        Ok((out, t0.elapsed().as_secs_f64()))
     }
 
     /// Assemble the engine operand for one weight-store layer under an
@@ -269,6 +325,15 @@ impl Backend for RealBackend {
         self.rt.manifest.decode_buckets.iter().copied().max().unwrap_or(1)
     }
 
+    fn set_layer_schedule(&mut self, schedule: Option<&LayerSchedule>) {
+        // clone only on change: the engine re-pushes every decide()
+        match (schedule, &self.schedule) {
+            (None, None) => {}
+            (Some(s), Some(cur)) if s == cur => {}
+            _ => self.schedule = schedule.cloned(),
+        }
+    }
+
     /// One prompt chunk, host-native: the forward pass scatters each
     /// layer's fresh K/V into the slot's blocks and attends over the
     /// block table directly — the dense `[L, H, max_seq, Dh]` staging
@@ -282,23 +347,16 @@ impl Backend for RealBackend {
         precision: Precision,
     ) -> Result<StepRun> {
         let mode = self.mode_str(precision);
-        self.ensure_host()?;
-        let host = self.host.as_mut().expect("ensured above");
-        // weight-operand preparation happens outside the timed region:
-        // a precision-mode switch must not bill store decoding as step
-        // latency (it would spike TPOT into the SLO control loop)
-        host.prepare(&self.rt, mode)?;
         let positions: Vec<i32> = (0..tokens.len()).map(|i| (start_pos + i) as i32).collect();
         let lanes = [StepLane {
             seq: slot,
             tokens,
             positions: &positions,
         }];
-        let t0 = std::time::Instant::now();
-        let out = host.forward(&self.rt, kv, mode, &lanes)?;
+        let (out, latency) = self.host_step(kv, mode, &lanes)?;
         Ok(StepRun {
             logits: Some(out.logits),
-            latency: t0.elapsed().as_secs_f64(),
+            latency,
             attn_dense_bytes: out.attn.dense_bytes,
             attn_touched_bytes: out.attn.touched_bytes,
         })
@@ -331,10 +389,6 @@ impl Backend for RealBackend {
             return Err(anyhow!("decode batch {n} exceeds max batch {max_batch}"));
         }
         let mode = self.mode_str(precision);
-        self.ensure_host()?;
-        let host = self.host.as_mut().expect("ensured above");
-        // see prefill: mode preparation stays off the step timer
-        host.prepare(&self.rt, mode)?;
         let lanes: Vec<StepLane> = (0..n)
             .map(|i| StepLane {
                 seq: slots[i],
@@ -342,11 +396,10 @@ impl Backend for RealBackend {
                 positions: &positions[i..i + 1],
             })
             .collect();
-        let t0 = std::time::Instant::now();
-        let out = host.forward(&self.rt, kv, mode, &lanes)?;
+        let (out, latency) = self.host_step(kv, mode, &lanes)?;
         Ok(StepRun {
             logits: Some(out.logits),
-            latency: t0.elapsed().as_secs_f64(),
+            latency,
             attn_dense_bytes: out.attn.dense_bytes,
             attn_touched_bytes: out.attn.touched_bytes,
         })
@@ -370,6 +423,10 @@ pub struct SimBackend {
     /// Active tensor-parallel degree (1 = the whole model on one sim
     /// device; see `gpusim::step_latency_tp` for the shard cost law).
     tp: usize,
+    /// Layers currently demoted to the FP8 format by the engine's
+    /// per-layer schedule; 0 (no schedule / FP16 endpoint) and
+    /// `n_layers` (FP8 endpoint) take the legacy uniform cost path.
+    demoted: usize,
 }
 
 impl SimBackend {
@@ -397,6 +454,7 @@ impl SimBackend {
             chunks: vec![64, 128, 256, 512],
             geo,
             tp: 1,
+            demoted: 0,
         }
     }
 
@@ -404,6 +462,23 @@ impl SimBackend {
         match p {
             Precision::Fp16 => self.fp16_format,
             Precision::Fp8 => self.fp8_format,
+        }
+    }
+
+    /// Cost one step: the uniform model when the schedule sits at an
+    /// endpoint (bit-identical to the pre-morph path), the hot/cold
+    /// split otherwise. At the FP8 endpoint the majority-rounded
+    /// `q.format` is already the FP8 format, so the uniform call prices
+    /// every layer cold — no separate branch needed.
+    fn step_cost(&self, q: &StepQuery) -> f64 {
+        if self.demoted > 0 && self.demoted < self.spec.n_layers {
+            let q16 = StepQuery {
+                format: self.fp16_format,
+                ..*q
+            };
+            gpusim::step_latency_split_tp(self.spec, &q16, self.fp8_format, self.demoted, self.tp)
+        } else {
+            gpusim::step_latency_tp(self.spec, q, self.tp)
         }
     }
 }
@@ -434,6 +509,10 @@ impl Backend for SimBackend {
         Some(self.spec)
     }
 
+    fn set_layer_schedule(&mut self, schedule: Option<&LayerSchedule>) {
+        self.demoted = schedule.map_or(0, |s| s.demoted_layers().min(self.spec.n_layers));
+    }
+
     fn prefill(
         &mut self,
         kv: &mut KvCacheManager,
@@ -457,7 +536,7 @@ impl Backend for SimBackend {
         let ctx = (start_pos + tokens.len()).min(g.max_seq);
         Ok(StepRun {
             logits: None,
-            latency: gpusim::step_latency_tp(self.spec, &q, self.tp),
+            latency: self.step_cost(&q),
             attn_dense_bytes: g.n_layers * g.layer_dense_bytes(),
             attn_touched_bytes: g.n_layers * kv.seq_touched_bytes(slot, ctx),
         })
@@ -490,7 +569,7 @@ impl Backend for SimBackend {
         }
         Ok(StepRun {
             logits: None,
-            latency: gpusim::step_latency_tp(self.spec, &q, self.tp),
+            latency: self.step_cost(&q),
             attn_dense_bytes: slots.len() * g.n_layers * g.layer_dense_bytes(),
             attn_touched_bytes: touched,
         })

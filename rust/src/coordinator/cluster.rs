@@ -44,7 +44,7 @@ use super::backend::Backend;
 use super::engine::{CompletedRequest, Engine, EngineConfig};
 use super::event_core::{self, Component, ComponentId, QueueStats, Waker};
 use super::metrics::Metrics;
-use super::precision::{Precision, PrecisionController, PrecisionDirective};
+use super::precision::{LayerSchedule, Precision, PrecisionController, PrecisionDirective};
 use super::request::Request;
 use super::router::{ReplicaSnapshot, Router, RoutingPolicy};
 
@@ -424,6 +424,18 @@ impl<B: Backend> ClusterRouter<B> {
         &self.replicas[i]
     }
 
+    /// Install one per-layer precision schedule on every replica engine
+    /// (each gets its own clone; `None` clears). With a schedule and a
+    /// fine autopilot ladder (`morph_rungs > 2`) interior rungs demote
+    /// layer prefixes; without one the cluster behaves exactly as
+    /// before — installation changes nothing snapshot-visible, so it is
+    /// safe at any point, including before the first run.
+    pub fn set_layer_schedule(&mut self, s: Option<&LayerSchedule>) {
+        for e in &mut self.replicas {
+            e.set_layer_schedule(s.cloned());
+        }
+    }
+
     /// The resharder's reshard state machine (tests, inspection).
     pub fn resharder(&self) -> &Resharder {
         &self.resharder
@@ -585,8 +597,22 @@ impl<B: Backend> ClusterRouter<B> {
                 .iter()
                 .filter(|d| **d == PrecisionDirective::Fp8)
                 .count();
-            for (e, d) in self.replicas.iter_mut().zip(&dirs) {
-                e.controller.apply_directive(*d);
+            // fine ladder (morph_rungs > 2): walk each replica's
+            // controller by rung — endpoints are bit-identical to the
+            // coarse directives; interior rungs pin partial schedules.
+            // The coarse path applies the three-rung directive exactly
+            // as before.
+            match ap.fine_rungs() {
+                Some((states, max_rung)) => {
+                    for (i, e) in self.replicas.iter_mut().enumerate() {
+                        e.controller.apply_layer_rung(states[i], max_rung);
+                    }
+                }
+                None => {
+                    for (e, d) in self.replicas.iter_mut().zip(&dirs) {
+                        e.controller.apply_directive(*d);
+                    }
+                }
             }
             // reconcile actual TP degrees toward the parallelism
             // ladder's targets: a mismatched serving replica starts a

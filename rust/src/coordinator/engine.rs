@@ -17,7 +17,9 @@ use crate::telemetry::trace::{self, Kind};
 use super::backend::{Backend, StepRun};
 use super::kv::KvCacheManager;
 use super::metrics::Metrics;
-use super::precision::{Precision, PrecisionController, PrecisionPolicy, SloConfig};
+use super::precision::{
+    LayerSchedule, Precision, PrecisionController, PrecisionPolicy, SloConfig,
+};
 use super::request::{FinishReason, Request, RequestId, RequestState};
 use super::scheduler::{IterationPlan, Scheduler};
 
@@ -219,6 +221,15 @@ impl<B: Backend> Engine<B> {
         &self.cfg
     }
 
+    /// Install (or clear) a per-layer precision schedule on both the
+    /// controller (which walks its demotion count) and the backend
+    /// (which serves/costs each layer at its scheduled format). `None`
+    /// — the default — keeps every legacy path bit-identical.
+    pub fn set_layer_schedule(&mut self, s: Option<LayerSchedule>) {
+        self.backend.set_layer_schedule(s.as_ref());
+        self.controller.set_schedule(s);
+    }
+
     /// Execute one iteration: precision decision → plan → execute →
     /// harvest. `imminent_arrivals` is the driver's count of requests due
     /// within the next ~20 ms (part of the controller's load signal;
@@ -265,10 +276,18 @@ impl<B: Backend> Engine<B> {
             .controller
             .decide(queue_depth, self.kv.block_utilization());
         let is_fp8 = precision == Precision::Fp8;
-        // precision pressure couples the controller to the KV cache: FP8
-        // iterations tighten the demotion watermark, compressing cold
-        // blocks ahead of demand
-        self.kv.set_precision_pressure(is_fp8);
+        // precision pressure couples the controller to the KV cache.
+        // Under a per-layer schedule the demotion watermark tightens
+        // with the *fraction* of demoted layers (elastic KV resizing,
+        // MorphServe-style); without one the legacy binary FP8 flag
+        // drives the same knob, bit-identically to before.
+        match self.controller.demoted_fraction() {
+            Some(frac) => {
+                self.kv.set_demoted_layer_fraction(frac);
+                self.backend.set_layer_schedule(self.controller.schedule());
+            }
+            None => self.kv.set_precision_pressure(is_fp8),
+        }
         self.kv.maintain();
 
         // ---- plan & execute ---------------------------------------

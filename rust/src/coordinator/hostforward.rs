@@ -176,10 +176,18 @@ impl HostForward {
 
     /// Assemble one linear layer's stored operand for `mode`, honoring
     /// the manifest's exception list (those layers stay FP16 in every
-    /// mode, §4.2).
-    fn load_linear(&self, rt: &ModelRuntime, mode: &str, i: usize, name: &str) -> Result<Linear> {
+    /// mode, §4.2). The caller resolves `exception` against the set
+    /// precomputed in [`Self::prepare_mode`] — this function no longer
+    /// rescans `manifest.exception_layers` per linear.
+    fn load_linear(
+        &self,
+        rt: &ModelRuntime,
+        mode: &str,
+        i: usize,
+        name: &str,
+        exception: bool,
+    ) -> Result<Linear> {
         let key = format!("layers.{i}.{name}");
-        let exception = rt.manifest.exception_layers.iter().any(|e| e == &key);
         let use_mode = if exception { "fp16" } else { mode };
         let (w, fmt) = match use_mode {
             "fp16" => {
@@ -259,16 +267,25 @@ impl HostForward {
         if self.modes.contains_key(mode) {
             return Ok(());
         }
+        // Precompute the manifest's exception set once per mode prepare:
+        // the old code linear-scanned `exception_layers` with a string
+        // compare for every linear of every layer; a set lookup keeps
+        // prepare O(L·log E) and is the same mechanism the per-layer
+        // morph schedule uses to pick a plane per layer.
+        let exceptions: std::collections::BTreeSet<&str> =
+            rt.manifest.exception_layers.iter().map(|s| s.as_str()).collect();
+        let is_exception =
+            |i: usize, name: &str| exceptions.contains(format!("layers.{i}.{name}").as_str());
         let mut layers = Vec::with_capacity(self.n_layers);
         for i in 0..self.n_layers {
             layers.push(ModeLayer {
-                wq: self.load_linear(rt, mode, i, "wq")?,
-                wk: self.load_linear(rt, mode, i, "wk")?,
-                wv: self.load_linear(rt, mode, i, "wv")?,
-                wo: self.load_linear(rt, mode, i, "wo")?,
-                w_gate: self.load_linear(rt, mode, i, "w_gate")?,
-                w_up: self.load_linear(rt, mode, i, "w_up")?,
-                w_down: self.load_linear(rt, mode, i, "w_down")?,
+                wq: self.load_linear(rt, mode, i, "wq", is_exception(i, "wq"))?,
+                wk: self.load_linear(rt, mode, i, "wk", is_exception(i, "wk"))?,
+                wv: self.load_linear(rt, mode, i, "wv", is_exception(i, "wv"))?,
+                wo: self.load_linear(rt, mode, i, "wo", is_exception(i, "wo"))?,
+                w_gate: self.load_linear(rt, mode, i, "w_gate", is_exception(i, "w_gate"))?,
+                w_up: self.load_linear(rt, mode, i, "w_up", is_exception(i, "w_up"))?,
+                w_down: self.load_linear(rt, mode, i, "w_down", is_exception(i, "w_down"))?,
             });
         }
         self.modes.insert(mode.to_string(), layers);
@@ -291,6 +308,39 @@ impl HostForward {
         self.forward_prepared(kv, mode, lanes)
     }
 
+    /// Execute one step with a **per-layer** precision split: layer `i`
+    /// runs under `cold_mode` when `cold_layers[i]` is true and under
+    /// `hot_mode` otherwise. An all-false (or all-true) mask is
+    /// bit-identical to [`Self::forward`] with the corresponding single
+    /// mode — the morph schedule's endpoints cost nothing in fidelity.
+    pub fn forward_morph(
+        &mut self,
+        rt: &ModelRuntime,
+        kv: &mut KvCacheManager,
+        hot_mode: &str,
+        cold_mode: &str,
+        cold_layers: &[bool],
+        lanes: &[StepLane],
+    ) -> Result<ForwardOut> {
+        if cold_layers.len() != self.n_layers {
+            bail!(
+                "host forward: cold mask covers {} layers, model has {}",
+                cold_layers.len(),
+                self.n_layers
+            );
+        }
+        self.prepare_mode(rt, hot_mode)?;
+        self.prepare_mode(rt, cold_mode)?;
+        let hot = self.modes.get(hot_mode).expect("mode prepared");
+        let cold = self.modes.get(cold_mode).expect("mode prepared");
+        let layers: Vec<&ModeLayer> = cold_layers
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| if c { &cold[i] } else { &hot[i] })
+            .collect();
+        self.forward_layers(kv, &layers, lanes)
+    }
+
     fn forward_prepared(
         &self,
         kv: &mut KvCacheManager,
@@ -298,6 +348,16 @@ impl HostForward {
         lanes: &[StepLane],
     ) -> Result<ForwardOut> {
         let layers = self.modes.get(mode).expect("mode prepared");
+        let refs: Vec<&ModeLayer> = layers.iter().collect();
+        self.forward_layers(kv, &refs, lanes)
+    }
+
+    fn forward_layers(
+        &self,
+        kv: &mut KvCacheManager,
+        layers: &[&ModeLayer],
+        lanes: &[StepLane],
+    ) -> Result<ForwardOut> {
         let (h, dh, d) = (self.n_heads, self.head_dim, self.d_model);
         if lanes.is_empty() {
             return Ok(ForwardOut {

@@ -80,6 +80,150 @@ impl PrecisionDirective {
     }
 }
 
+/// A per-layer precision schedule: the generalization of the three-rung
+/// whole-replica directive to per-layer morphing (MorphServe, arxiv
+/// 2506.02006). Layers are ranked once at startup by quantization
+/// sensitivity (least sensitive first — see
+/// `eval::quanterr::gemm_output_error`); demotion always takes a prefix
+/// of that order, so "k layers demoted" is a single integer walked up
+/// and down by the autopilot's fine ladder. The endpoints (`k == 0`,
+/// `k == n`) are exactly the old `Fp16` / `Fp8` directives — every
+/// legacy caller, golden trace, and bit-identity test stays valid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSchedule {
+    /// Layer indices, least sensitive first — the demotion order.
+    order: Vec<usize>,
+    /// Inverse permutation: `rank[layer]` = position of `layer` in
+    /// `order` (demoted iff `rank[layer] < demoted`).
+    rank: Vec<usize>,
+    /// Number of layers currently demoted (always a prefix of `order`).
+    demoted: usize,
+    /// `err_prefix[k]` = quality-proxy error of demoting the first `k`
+    /// layers in `order`, normalized so `err_prefix[n] == 1.0` (the
+    /// all-FP8 error). Monotone non-decreasing by construction.
+    err_prefix: Vec<f64>,
+}
+
+impl LayerSchedule {
+    /// Build from a per-layer sensitivity ranking (higher = more
+    /// quality-sensitive, demoted later). Sensitivities must be finite
+    /// and non-negative; ties break toward the lower layer index so the
+    /// order is deterministic.
+    pub fn from_sensitivity(sensitivity: &[f64]) -> LayerSchedule {
+        assert!(!sensitivity.is_empty(), "schedule needs at least one layer");
+        for (i, s) in sensitivity.iter().enumerate() {
+            assert!(
+                s.is_finite() && *s >= 0.0,
+                "layer {i} sensitivity {s} must be finite and non-negative"
+            );
+        }
+        let n = sensitivity.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| sensitivity[a].total_cmp(&sensitivity[b]).then(a.cmp(&b)));
+        let total: f64 = sensitivity.iter().sum();
+        let mut err_prefix = vec![0.0; n + 1];
+        let mut acc = 0.0;
+        for (k, &l) in order.iter().enumerate() {
+            acc += sensitivity[l];
+            err_prefix[k + 1] = if total > 0.0 {
+                acc / total
+            } else {
+                // degenerate all-zero ranking: uniform per-layer error
+                (k + 1) as f64 / n as f64
+            };
+        }
+        Self::assemble(order, err_prefix)
+    }
+
+    /// Build from an explicit demotion order (a permutation of
+    /// `0..order.len()`), with a uniform per-layer quality proxy.
+    pub fn from_order(order: Vec<usize>) -> LayerSchedule {
+        let n = order.len();
+        assert!(n > 0, "schedule needs at least one layer");
+        let err_prefix = (0..=n).map(|k| k as f64 / n as f64).collect();
+        Self::assemble(order, err_prefix)
+    }
+
+    /// The trivial schedule: layers demote in index order.
+    pub fn identity(n_layers: usize) -> LayerSchedule {
+        Self::from_order((0..n_layers).collect())
+    }
+
+    fn assemble(order: Vec<usize>, err_prefix: Vec<f64>) -> LayerSchedule {
+        let n = order.len();
+        let mut rank = vec![usize::MAX; n];
+        for (pos, &l) in order.iter().enumerate() {
+            assert!(l < n, "layer index {l} out of range for {n} layers");
+            assert!(rank[l] == usize::MAX, "layer {l} repeated in the order");
+            rank[l] = pos;
+        }
+        LayerSchedule {
+            order,
+            rank,
+            demoted: 0,
+            err_prefix,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.order.len()
+    }
+
+    /// Number of layers currently demoted to FP8.
+    pub fn demoted_layers(&self) -> usize {
+        self.demoted
+    }
+
+    /// Demotion order, least sensitive first.
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// Demote exactly the `k` least-sensitive layers (clamped to `n`).
+    pub fn set_demoted(&mut self, k: usize) {
+        self.demoted = k.min(self.n_layers());
+    }
+
+    /// Is `layer` currently served at FP8?
+    pub fn is_demoted(&self, layer: usize) -> bool {
+        self.rank[layer] < self.demoted
+    }
+
+    /// Per-layer demotion flags, indexed by layer.
+    pub fn cold_mask(&self) -> Vec<bool> {
+        (0..self.n_layers()).map(|l| self.is_demoted(l)).collect()
+    }
+
+    /// Fraction of layers demoted — exactly `0.0` / `1.0` at the
+    /// endpoints so the elastic KV watermark reproduces the legacy
+    /// binary pressure flag bit for bit there.
+    pub fn demoted_fraction(&self) -> f64 {
+        let n = self.n_layers();
+        if self.demoted == 0 {
+            0.0
+        } else if self.demoted >= n {
+            1.0
+        } else {
+            self.demoted as f64 / n as f64
+        }
+    }
+
+    /// How many layers a fine ladder rung demotes: `rung == 0` → none,
+    /// `rung == max_rung` → all, interior rungs round up so every
+    /// non-zero rung demotes at least one layer.
+    pub fn demoted_for_rung(rung: usize, max_rung: usize, n_layers: usize) -> usize {
+        assert!(max_rung >= 1 && rung <= max_rung, "rung {rung} > max {max_rung}");
+        (rung * n_layers).div_ceil(max_rung).min(n_layers)
+    }
+
+    /// Quality-proxy error of demoting the `k` least-sensitive layers,
+    /// in `[0, 1]` (1 = the all-FP8 error). The morph bench integrates
+    /// this per iteration to score the quality axis of the frontier.
+    pub fn demotion_error(&self, k: usize) -> f64 {
+        self.err_prefix[k.min(self.n_layers())]
+    }
+}
+
 /// Operating policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PrecisionPolicy {
@@ -113,6 +257,18 @@ pub struct PrecisionController {
     /// Iterations spent in each precision.
     pub iters_fp16: usize,
     pub iters_fp8: usize,
+    /// Optional per-layer schedule (per-layer morphing). `None` keeps
+    /// every legacy path bit-identical.
+    schedule: Option<LayerSchedule>,
+    /// Interior fine-ladder pin: `Some(k)` serves exactly `k` demoted
+    /// layers regardless of the local policy (the autopilot's interior
+    /// rungs). Cleared by any whole-replica directive.
+    partial: Option<usize>,
+    /// Quality-proxy accounting under a schedule: per-iteration
+    /// [`LayerSchedule::demotion_error`] integrated over the run.
+    pub sched_err_iters: f64,
+    /// Iterations accounted in `sched_err_iters`.
+    pub sched_iters: usize,
 }
 
 /// Escalate to FP8 when the TPOT EWMA exceeds this fraction of the SLO.
@@ -145,6 +301,10 @@ impl PrecisionController {
             switches: 0,
             iters_fp16: 0,
             iters_fp8: 0,
+            schedule: None,
+            partial: None,
+            sched_err_iters: 0.0,
+            sched_iters: 0,
         }
     }
 
@@ -170,12 +330,66 @@ impl PrecisionController {
     /// should drive this per control tick (it owns the dwell/cooldown
     /// discipline — the controller just obeys).
     pub fn apply_directive(&mut self, d: PrecisionDirective) {
+        self.partial = None;
         self.directive = d;
     }
 
     /// The current cluster-level directive.
     pub fn directive(&self) -> PrecisionDirective {
         self.directive
+    }
+
+    /// Install (or clear) a per-layer schedule. The schedule's demotion
+    /// count is synced to the controller's current precision so the
+    /// hand-off is seamless at either endpoint.
+    pub fn set_schedule(&mut self, s: Option<LayerSchedule>) {
+        self.partial = None;
+        self.schedule = s;
+        self.sync_schedule(self.current);
+    }
+
+    /// The installed per-layer schedule, if any.
+    pub fn schedule(&self) -> Option<&LayerSchedule> {
+        self.schedule.as_ref()
+    }
+
+    /// Fraction of layers currently demoted under the schedule (`None`
+    /// without one) — the elastic KV watermark's input.
+    pub fn demoted_fraction(&self) -> Option<f64> {
+        self.schedule.as_ref().map(|s| s.demoted_fraction())
+    }
+
+    /// Pin the schedule's endpoints to a whole-replica precision.
+    fn sync_schedule(&mut self, p: Precision) {
+        if let Some(s) = &mut self.schedule {
+            let n = s.n_layers();
+            s.set_demoted(match p {
+                Precision::Fp16 => 0,
+                Precision::Fp8 => n,
+            });
+        }
+    }
+
+    /// Apply one rung of the autopilot's fine ladder (`0..=max_rung`).
+    /// The endpoints are exactly [`PrecisionController::apply_directive`]
+    /// with `Fp16` / `Fp8` — bit-identical to the legacy coarse ladder;
+    /// interior rungs pin a partial schedule (`k` least-sensitive layers
+    /// demoted). Without an installed schedule an interior rung degrades
+    /// to the legacy `Mixed` directive (local policy autonomy).
+    pub fn apply_layer_rung(&mut self, rung: usize, max_rung: usize) {
+        assert!(max_rung >= 1 && rung <= max_rung, "rung {rung} > max {max_rung}");
+        if rung == 0 {
+            self.apply_directive(PrecisionDirective::Fp16);
+        } else if rung == max_rung {
+            self.apply_directive(PrecisionDirective::Fp8);
+        } else if let Some(s) = &mut self.schedule {
+            let k = LayerSchedule::demoted_for_rung(rung, max_rung, s.n_layers());
+            s.set_demoted(k);
+            self.directive = PrecisionDirective::Mixed;
+            self.partial = Some(k);
+        } else {
+            self.apply_directive(PrecisionDirective::Mixed);
+        }
     }
 
     /// Impose (or clear) an external precision override — the PR-1 API,
@@ -203,6 +417,31 @@ impl PrecisionController {
 
     /// Decide the precision for the next iteration.
     pub fn decide(&mut self, queue_depth: usize, kv_utilization: f64) -> Precision {
+        if let Some(k) = self.partial {
+            // interior fine-ladder pin: the backend serves k demoted
+            // layers; the majority precision books the legacy iteration
+            // counters so fp16_fraction stays meaningful
+            let (n, err) = {
+                let s = self
+                    .schedule
+                    .as_ref()
+                    .expect("a partial pin implies an installed schedule");
+                (s.n_layers(), s.demotion_error(k))
+            };
+            let p = if 2 * k >= n { Precision::Fp8 } else { Precision::Fp16 };
+            if p != self.current {
+                self.switches += 1;
+                self.dwell = self.min_dwell_iters;
+                self.current = p;
+            }
+            match p {
+                Precision::Fp16 => self.iters_fp16 += 1,
+                Precision::Fp8 => self.iters_fp8 += 1,
+            }
+            self.sched_err_iters += err;
+            self.sched_iters += 1;
+            return p;
+        }
         if let Some(f) = self.forced() {
             if f != self.current {
                 self.switches += 1;
@@ -213,6 +452,8 @@ impl PrecisionController {
                 Precision::Fp16 => self.iters_fp16 += 1,
                 Precision::Fp8 => self.iters_fp8 += 1,
             }
+            self.sync_schedule(f);
+            self.account_schedule();
             return f;
         }
         let decided = match self.policy {
@@ -250,7 +491,22 @@ impl PrecisionController {
             Precision::Fp16 => self.iters_fp16 += 1,
             Precision::Fp8 => self.iters_fp8 += 1,
         }
+        self.sync_schedule(decided);
+        self.account_schedule();
         decided
+    }
+
+    /// Book one iteration of the schedule's quality proxy (no-op
+    /// without a schedule — the legacy paths never touch these fields).
+    fn account_schedule(&mut self) {
+        let err = self
+            .schedule
+            .as_ref()
+            .map(|s| s.demotion_error(s.demoted_layers()));
+        if let Some(err) = err {
+            self.sched_err_iters += err;
+            self.sched_iters += 1;
+        }
     }
 
     /// Fraction of iterations served at FP16 (the paper reports dual-mode
@@ -440,5 +696,92 @@ mod tests {
             c.decide(0, 0.0);
         }
         assert_eq!(c.fp16_fraction(), 1.0);
+    }
+
+    #[test]
+    fn schedule_demotes_least_sensitive_first() {
+        let sens = [0.5, 0.1, 0.9, 0.3];
+        let mut s = LayerSchedule::from_sensitivity(&sens);
+        assert_eq!(s.order(), &[1, 3, 0, 2], "ascending sensitivity");
+        assert_eq!(s.demoted_layers(), 0);
+        assert_eq!(s.demoted_fraction(), 0.0);
+        s.set_demoted(2);
+        assert!(s.is_demoted(1) && s.is_demoted(3));
+        assert!(!s.is_demoted(0) && !s.is_demoted(2));
+        assert_eq!(s.cold_mask(), vec![false, true, false, true]);
+        s.set_demoted(99);
+        assert_eq!(s.demoted_layers(), 4, "clamped to n");
+        assert_eq!(s.demoted_fraction(), 1.0);
+        // the error prefix is monotone and normalized
+        let mut prev = -1.0;
+        for k in 0..=4 {
+            let e = s.demotion_error(k);
+            assert!(e >= prev, "err must be monotone in k");
+            prev = e;
+        }
+        assert_eq!(s.demotion_error(0), 0.0);
+        assert!((s.demotion_error(4) - 1.0).abs() < 1e-12);
+        // sensitivity ties break toward the lower layer index
+        let tied = LayerSchedule::from_sensitivity(&[0.2, 0.2, 0.1]);
+        assert_eq!(tied.order(), &[2, 0, 1]);
+    }
+
+    #[test]
+    fn rung_to_layer_mapping_covers_endpoints() {
+        for (r, n) in [(8usize, 32usize), (8, 5), (2, 32), (16, 3)] {
+            assert_eq!(LayerSchedule::demoted_for_rung(0, r, n), 0);
+            assert_eq!(LayerSchedule::demoted_for_rung(r, r, n), n);
+            let mut prev = 0;
+            for rung in 0..=r {
+                let k = LayerSchedule::demoted_for_rung(rung, r, n);
+                assert!(k >= prev, "monotone in the rung");
+                assert!(rung == 0 || k >= 1, "non-zero rung demotes >= 1 layer");
+                prev = k;
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_endpoints_behave_like_the_old_directives() {
+        // a controller with a schedule at rung 0 / max must decide
+        // exactly like one driven by the legacy Fp16/Fp8 directives
+        let mut with = ctl();
+        with.set_schedule(Some(LayerSchedule::identity(32)));
+        let mut without = ctl();
+        for (rung, d) in [(0usize, PrecisionDirective::Fp16), (8, PrecisionDirective::Fp8)] {
+            with.apply_layer_rung(rung, 8);
+            without.apply_directive(d);
+            for _ in 0..5 {
+                with.observe_tpot(0.02);
+                without.observe_tpot(0.02);
+                assert_eq!(with.decide(1, 0.5), without.decide(1, 0.5), "rung {rung}");
+            }
+        }
+        assert_eq!(with.switches, without.switches);
+        assert_eq!(with.iters_fp16, without.iters_fp16);
+        assert_eq!(with.iters_fp8, without.iters_fp8);
+        assert_eq!(with.demoted_fraction(), Some(1.0));
+    }
+
+    #[test]
+    fn interior_rung_pins_a_partial_schedule() {
+        let mut c = ctl();
+        c.set_schedule(Some(LayerSchedule::identity(32)));
+        c.apply_layer_rung(3, 8);
+        let p = c.decide(0, 0.0);
+        assert_eq!(p, Precision::Fp16, "12/32 demoted: FP16 majority");
+        let s = c.schedule().unwrap();
+        assert_eq!(s.demoted_layers(), 12, "3/8 of 32 layers");
+        assert_eq!(c.demoted_fraction(), Some(12.0 / 32.0));
+        assert!(c.sched_iters == 1 && c.sched_err_iters > 0.0);
+        // walking back to the FP16 endpoint clears the pin
+        c.apply_layer_rung(0, 8);
+        assert_eq!(c.decide(0, 0.0), Precision::Fp16);
+        assert_eq!(c.demoted_fraction(), Some(0.0));
+        // without a schedule an interior rung degrades to Mixed
+        let mut bare = ctl();
+        bare.apply_layer_rung(4, 8);
+        assert_eq!(bare.directive(), PrecisionDirective::Mixed);
+        assert_eq!(bare.forced(), None);
     }
 }

@@ -86,15 +86,51 @@ pub fn tuned_gemm_latency(m: usize, n: usize, k: usize, format: WeightFormat, op
 
 /// Latency of one serving iteration for `spec` under `q`.
 pub fn step_latency(spec: &ModelSpec, q: &StepQuery) -> f64 {
+    step_latency_split(spec, q, q.format, 0)
+}
+
+/// Latency of one serving iteration when `cold_layers` of the model's
+/// layers run at `cold_format` and the rest at `q.format` — the cost
+/// model for a partial [`LayerSchedule`] under per-layer morphing.
+/// `cold_layers == 0` is *exactly* [`step_latency`] (same expressions,
+/// same bits — the uniform model is the degenerate split), and
+/// `cold_layers == n_layers` prices every layer at `cold_format`.
+/// Attention KV streaming, elementwise traffic, and the lm head are
+/// format-independent in this model, so only the linear-layer GEMM term
+/// splits.
+///
+/// [`LayerSchedule`]: crate::coordinator::precision::LayerSchedule
+pub fn step_latency_split(
+    spec: &ModelSpec,
+    q: &StepQuery,
+    cold_format: WeightFormat,
+    cold_layers: usize,
+) -> f64 {
     assert!(q.m > 0, "empty step");
+    assert!(
+        cold_layers <= spec.n_layers,
+        "cold_layers {} > model layers {}",
+        cold_layers,
+        spec.n_layers
+    );
+    let hot = spec.n_layers - cold_layers;
     let mut t = 0.0;
 
-    // linear layers (quantizable; lm_head and embeddings stay fp16)
+    // linear layers (quantizable; lm_head and embeddings stay fp16),
+    // each priced at its own layer's format — the adds are gated so the
+    // all-hot path stays bit-identical to the pre-split model
     for kind in GemmKind::ALL {
         for (n, k, mult) in spec.gemm_shapes(kind) {
-            t += mult as f64
-                * spec.n_layers as f64
-                * tuned_gemm_latency(q.m, n, k, q.format, q.opt);
+            if hot > 0 {
+                t += mult as f64
+                    * hot as f64
+                    * tuned_gemm_latency(q.m, n, k, q.format, q.opt);
+            }
+            if cold_layers > 0 {
+                t += mult as f64
+                    * cold_layers as f64
+                    * tuned_gemm_latency(q.m, n, k, cold_format, q.opt);
+            }
         }
     }
 
@@ -152,19 +188,48 @@ pub fn allreduce_latency(m: usize, d_model: usize, tp: usize) -> f64 {
 /// of the win — exactly why the autopilot treats parallelism as the
 /// more expensive knob.
 pub fn step_latency_tp(spec: &ModelSpec, q: &StepQuery, tp: usize) -> f64 {
+    step_latency_split_tp(spec, q, q.format, 0, tp)
+}
+
+/// Tensor-parallel variant of [`step_latency_split`]: `cold_layers`
+/// priced at `cold_format`, the rest at `q.format`, sharded `tp` ways.
+/// `cold_layers == 0` is exactly [`step_latency_tp`], and `tp == 1` is
+/// exactly [`step_latency_split`] — both degenerate cases preserve the
+/// existing bit-identity guarantees.
+pub fn step_latency_split_tp(
+    spec: &ModelSpec,
+    q: &StepQuery,
+    cold_format: WeightFormat,
+    cold_layers: usize,
+    tp: usize,
+) -> f64 {
     assert!(tp >= 1, "tensor-parallel degree must be >= 1");
     if tp == 1 {
-        return step_latency(spec, q);
+        return step_latency_split(spec, q, cold_format, cold_layers);
     }
     assert!(q.m > 0, "empty step");
+    assert!(
+        cold_layers <= spec.n_layers,
+        "cold_layers {} > model layers {}",
+        cold_layers,
+        spec.n_layers
+    );
+    let hot = spec.n_layers - cold_layers;
     let mut t = 0.0;
 
     // linear layers, output dimension sharded tp ways per device
     for kind in GemmKind::ALL {
         for (n, k, mult) in spec.gemm_shapes(kind) {
-            t += mult as f64
-                * spec.n_layers as f64
-                * tuned_gemm_latency(q.m, n.div_ceil(tp), k, q.format, q.opt);
+            if hot > 0 {
+                t += mult as f64
+                    * hot as f64
+                    * tuned_gemm_latency(q.m, n.div_ceil(tp), k, q.format, q.opt);
+            }
+            if cold_layers > 0 {
+                t += mult as f64
+                    * cold_layers as f64
+                    * tuned_gemm_latency(q.m, n.div_ceil(tp), k, cold_format, q.opt);
+            }
         }
     }
 
@@ -288,6 +353,46 @@ mod tests {
                 assert_eq!(a.to_bits(), t.to_bits(), "b={b} fmt={fmt:?}");
             }
         }
+    }
+
+    #[test]
+    fn split_endpoints_are_bit_identical_to_the_uniform_model() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        for b in [1, 8, 64] {
+            let q = dq(b, WeightFormat::Nested16);
+            let uniform16 = step_latency(spec, &q);
+            let all_hot = step_latency_split(spec, &q, WeightFormat::Nested8, 0);
+            assert_eq!(uniform16.to_bits(), all_hot.to_bits(), "b={b} all-hot");
+            let q8 = dq(b, WeightFormat::Nested8);
+            let uniform8 = step_latency(spec, &q8);
+            let all_cold =
+                step_latency_split(spec, &q, WeightFormat::Nested8, spec.n_layers);
+            assert_eq!(uniform8.to_bits(), all_cold.to_bits(), "b={b} all-cold");
+            for tp in [1, 2, 4] {
+                let u = step_latency_tp(spec, &q, tp);
+                let s = step_latency_split_tp(spec, &q, WeightFormat::Nested8, 0, tp);
+                assert_eq!(u.to_bits(), s.to_bits(), "b={b} tp={tp}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_interpolates_monotonically_between_the_formats() {
+        let spec = zoo::find("llama31-8b").unwrap();
+        let q = dq(64, WeightFormat::Nested16);
+        let mut prev = f64::INFINITY;
+        for cold in (0..=spec.n_layers).step_by(4) {
+            let t = step_latency_split(spec, &q, WeightFormat::Nested8, cold);
+            assert!(
+                t <= prev + 1e-15,
+                "more FP8 layers must never cost more: cold={cold}"
+            );
+            prev = t;
+        }
+        let t16 = step_latency_split(spec, &q, WeightFormat::Nested8, 0);
+        let t8 = step_latency_split(spec, &q, WeightFormat::Nested8, spec.n_layers);
+        let half = step_latency_split(spec, &q, WeightFormat::Nested8, spec.n_layers / 2);
+        assert!(t8 < half && half < t16, "interior strictly between endpoints");
     }
 
     #[test]

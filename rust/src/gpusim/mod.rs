@@ -26,4 +26,7 @@ pub mod e2e;
 pub use gemm::{gemm_latency, GemmQuery, WeightFormat};
 pub use kernel::{KernelConfig, OptLevel, Scheduler};
 pub use search::{best_config, best_latency, config_space};
-pub use e2e::{allreduce_latency, step_latency, step_latency_tp, StepKind, StepQuery};
+pub use e2e::{
+    allreduce_latency, step_latency, step_latency_split, step_latency_split_tp,
+    step_latency_tp, StepKind, StepQuery,
+};

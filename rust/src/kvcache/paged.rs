@@ -96,7 +96,9 @@ pub struct PagedKvCache {
     seqs: Vec<Option<Seq>>,
     host: HostTier,
     clock: u64,
-    fp8_pressure: bool,
+    /// Fraction of the model's layers currently demoted to FP8 (0.0 =
+    /// all-FP16, 1.0 = all-FP8) — drives the elastic demotion watermark.
+    demoted_frac: f64,
     stats: KvCacheStats,
     live: usize,
 }
@@ -114,6 +116,7 @@ impl PagedKvCache {
     }
 
     fn build(geo: KvGeometry, policy: KvPressureConfig, physical: bool) -> PagedKvCache {
+        policy.validate();
         PagedKvCache {
             pool: BlockPool::new(geo.total_blocks, geo.block_elems(), physical),
             host: HostTier::new(policy.host_bw_gbps, policy.transfer_base_s),
@@ -122,7 +125,7 @@ impl PagedKvCache {
             physical,
             seqs: Vec::new(),
             clock: 0,
-            fp8_pressure: false,
+            demoted_frac: 0.0,
             stats: KvCacheStats::default(),
             live: 0,
         }
@@ -414,9 +417,19 @@ impl PagedKvCache {
     // ---- demotion (precision pressure) ------------------------------
 
     /// Couple the cache to the engine's precision controller: FP8
-    /// iterations tighten the demotion watermark.
+    /// iterations tighten the demotion watermark. The legacy binary
+    /// view — a shim over [`Self::set_demoted_layer_fraction`]'s
+    /// endpoints.
     pub fn set_precision_pressure(&mut self, fp8: bool) {
-        self.fp8_pressure = fp8;
+        self.set_demoted_layer_fraction(if fp8 { 1.0 } else { 0.0 });
+    }
+
+    /// Couple the cache to a per-layer precision schedule: the demotion
+    /// watermark tightens with the fraction of the model's layers
+    /// currently demoted to FP8 (elastic KV resizing per MorphServe).
+    /// `0.0` and `1.0` reproduce the legacy binary pressure flag.
+    pub fn set_demoted_layer_fraction(&mut self, frac: f64) {
+        self.demoted_frac = frac.clamp(0.0, 1.0);
     }
 
     /// Eligible demotion targets, coldest first: LRU by sequence touch,
@@ -469,7 +482,7 @@ impl PagedKvCache {
         if !self.policy.demote_enabled {
             return 0;
         }
-        let w = self.policy.watermark(self.fp8_pressure);
+        let w = self.policy.watermark_at(self.demoted_frac);
         if self.pool.utilization() <= w {
             return 0;
         }

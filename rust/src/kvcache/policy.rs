@@ -81,13 +81,54 @@ impl KvPressureConfig {
         }
     }
 
-    /// Active demotion watermark given the engine's current precision.
-    pub fn watermark(&self, fp8_pressure: bool) -> f64 {
-        if fp8_pressure {
-            self.demote_watermark_fp8.min(self.demote_watermark)
-        } else {
-            self.demote_watermark
+    /// Reject an inverted watermark pair at construction time instead of
+    /// silently min-clamping it at every query: a
+    /// `demote_watermark_fp8 > demote_watermark` config is a bug (the
+    /// "pressure" watermark would *loosen* demotion), so debug builds
+    /// panic and release builds log one warning through the telemetry
+    /// log facade and proceed with the clamped value.
+    pub fn validate(&self) {
+        if self.demote_watermark_fp8 > self.demote_watermark {
+            if cfg!(debug_assertions) {
+                panic!(
+                    "inverted KV watermarks: demote_watermark_fp8 {} > demote_watermark {}",
+                    self.demote_watermark_fp8, self.demote_watermark
+                );
+            }
+            use std::sync::atomic::{AtomicBool, Ordering};
+            static WARNED: AtomicBool = AtomicBool::new(false);
+            if !WARNED.swap(true, Ordering::Relaxed) {
+                crate::log_warn!(
+                    "inverted KV watermarks: demote_watermark_fp8 {} > demote_watermark {} (clamping)",
+                    self.demote_watermark_fp8,
+                    self.demote_watermark
+                );
+            }
         }
+    }
+
+    /// Active demotion watermark given the fraction of the model's
+    /// layers currently demoted to FP8 (`0.0` = all-FP16, `1.0` =
+    /// all-FP8). The endpoints reproduce the legacy binary watermarks
+    /// bit for bit; interior fractions blend linearly — elastic KV
+    /// resizing per MorphServe: the more layers run demoted, the harder
+    /// cold KV state is compressed.
+    pub fn watermark_at(&self, demoted_frac: f64) -> f64 {
+        let tight = self.demote_watermark_fp8.min(self.demote_watermark);
+        if demoted_frac <= 0.0 {
+            self.demote_watermark
+        } else if demoted_frac >= 1.0 {
+            tight
+        } else {
+            self.demote_watermark + demoted_frac * (tight - self.demote_watermark)
+        }
+    }
+
+    /// Active demotion watermark given the engine's current precision —
+    /// the legacy binary view, now a shim over [`Self::watermark_at`]'s
+    /// endpoints.
+    pub fn watermark(&self, fp8_pressure: bool) -> f64 {
+        self.watermark_at(if fp8_pressure { 1.0 } else { 0.0 })
     }
 }
 
@@ -114,13 +155,46 @@ mod tests {
     #[test]
     fn fp8_pressure_tightens_the_watermark() {
         let p = KvPressureConfig::default();
+        p.validate();
         assert!(p.watermark(true) < p.watermark(false));
-        // a config with an inverted pair still never loosens under pressure
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "demote_watermark_fp8"))]
+    fn inverted_watermarks_are_rejected_not_clamped() {
+        // an inverted pair is a config bug: debug builds panic at
+        // validation (release builds warn once through the log facade
+        // and clamp — the old silent min-clamp is no longer blessed)
         let odd = KvPressureConfig {
             demote_watermark: 0.5,
             demote_watermark_fp8: 0.9,
             ..Default::default()
         };
+        odd.validate();
+        // release-path behavior: queries still never loosen under pressure
         assert!(odd.watermark(true) <= odd.watermark(false));
+    }
+
+    #[test]
+    fn watermark_at_is_monotone_and_endpoint_exact() {
+        let p = KvPressureConfig::default();
+        // endpoints reproduce the legacy binary watermarks bit for bit
+        assert_eq!(p.watermark_at(0.0).to_bits(), p.demote_watermark.to_bits());
+        assert_eq!(
+            p.watermark_at(1.0).to_bits(),
+            p.demote_watermark_fp8.min(p.demote_watermark).to_bits()
+        );
+        assert_eq!(p.watermark(false).to_bits(), p.watermark_at(0.0).to_bits());
+        assert_eq!(p.watermark(true).to_bits(), p.watermark_at(1.0).to_bits());
+        // monotone non-increasing in the demoted fraction
+        let mut prev = f64::INFINITY;
+        for k in 0..=16 {
+            let w = p.watermark_at(k as f64 / 16.0);
+            assert!(w <= prev + 1e-15, "watermark rose at frac {}", k as f64 / 16.0);
+            prev = w;
+        }
+        // out-of-range fractions clamp to the endpoints
+        assert_eq!(p.watermark_at(-0.5).to_bits(), p.watermark_at(0.0).to_bits());
+        assert_eq!(p.watermark_at(1.5).to_bits(), p.watermark_at(1.0).to_bits());
     }
 }

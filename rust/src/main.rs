@@ -5,7 +5,7 @@
 //!                            exp: table1|table2|table3|fig1a|fig1b|fig3|
 //!                                 fig7a|fig7b|fig8|fig9|fig10|fig13|
 //!                                 gemm|attention|cluster|kvcache|autopilot|
-//!                                 parallelism|all
+//!                                 morph|parallelism|all
 //!        [--artifacts DIR]   artifact directory (default: artifacts)
 //!        [--eval-n N]        eval examples per task for table1 (default 24)
 //!        [--json FILE]       also write the reports as machine-readable
@@ -15,8 +15,8 @@
 //!                            of every experiment (virtual-clock spans per
 //!                            replica + control plane; open in
 //!                            ui.perfetto.dev)
-//!        [--quick]           gemm/attention/autopilot/parallelism/cluster:
-//!                            reduced scenario, CI budget
+//!        [--quick]           gemm/attention/autopilot/morph/parallelism/
+//!                            cluster: reduced scenario, CI budget
 //!        [--scale]           cluster only: the discrete-event scale arm
 //!                            (100+ replicas over a multi-hour Azure day
 //!                            slice, per-event accounting; --quick keeps
@@ -43,7 +43,8 @@ use std::path::{Path, PathBuf};
 use nestedfp::bench::gemm::{self as gemmbench, BenchOpts};
 use nestedfp::bench::{
     attention as attnbench, autopilot as autopilotbench, cluster, fig1, fig3, fig7, fig8,
-    kvcache, parallelism as parallelismbench, report::Report, table1, table3,
+    kvcache, morph as morphbench, parallelism as parallelismbench, report::Report, table1,
+    table3,
 };
 use nestedfp::coordinator::autopilot::{Autopilot, AutopilotConfig};
 use nestedfp::coordinator::backend::{ModeMap, RealBackend};
@@ -67,7 +68,7 @@ fn main() {
         _ => {
             eprintln!(
                 "nestedfp repro — usage:\n  \
-                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|attention|cluster|kvcache|autopilot|parallelism|all> [--json FILE] [--quick] [--scale]\n  \
+                 repro reproduce <table1|table2|table3|fig1a|fig1b|fig3|fig7a|fig7b|fig8|fig9|fig10|fig13|gemm|attention|cluster|kvcache|autopilot|morph|parallelism|all> [--json FILE] [--quick] [--scale]\n  \
                  repro serve [--addr HOST:PORT] [--mode dual|fp16|fp8] [--replicas N] [--autopilot]\n  \
                  repro analyze\n  \
                  repro gemm --m M --n N --k K [--format ...]"
@@ -99,6 +100,7 @@ fn run_one(
     Ok(match exp {
         "attention" => attnbench::attention_sweep(gemm_opts.quick)?,
         "autopilot" => autopilotbench::autopilot_surge(gemm_opts.quick)?,
+        "morph" => morphbench::morph_frontier(gemm_opts.quick)?,
         "parallelism" => parallelismbench::parallelism_surge(gemm_opts.quick)?,
         "table1" | "table2" => vec![table1::table12(dir, eval_n)?, table1::table2_weights(dir)?],
         "table3" => vec![table3::table3()],
@@ -185,8 +187,8 @@ fn cmd_reproduce(args: &Args) -> i32 {
         let mut r = Ok(());
         for e in [
             "fig1a", "fig1b", "fig3", "fig7a", "fig7b", "fig9", "fig13", "fig8", "fig10",
-            "gemm", "attention", "cluster", "kvcache", "autopilot", "parallelism", "table3",
-            "table1",
+            "gemm", "attention", "cluster", "kvcache", "autopilot", "morph", "parallelism",
+            "table3", "table1",
         ] {
             log_info!("[reproduce] running {e} ...");
             r = run_and_print(e);

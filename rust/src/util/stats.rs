@@ -220,17 +220,7 @@ impl Digest {
         }
         // total order with NaNs last, then drop them: a poisoned sample
         // must degrade one data point, not panic every percentile query
-        self.samples
-            .sort_unstable_by(|a, b| match (a.is_nan(), b.is_nan()) {
-                (false, false) => a.partial_cmp(b).expect("both non-NaN"),
-                (false, true) => std::cmp::Ordering::Less,
-                (true, false) => std::cmp::Ordering::Greater,
-                (true, true) => std::cmp::Ordering::Equal,
-            });
-        while self.samples.last().is_some_and(|v| v.is_nan()) {
-            self.samples.pop();
-            self.nan_dropped += 1;
-        }
+        self.nan_dropped += sort_drop_nans(&mut self.samples);
         self.sorted = true;
     }
 
@@ -374,6 +364,27 @@ impl std::fmt::Display for Summary {
     }
 }
 
+/// Sort `xs` in place under a total order that puts NaNs last, then pop
+/// the trailing NaNs; returns how many were dropped. The crate's single
+/// NaN-hardening primitive for order statistics: [`Digest`] and the
+/// autopilot's sliding-window SLO tracker both route here, so a
+/// poisoned latency sample degrades one data point instead of panicking
+/// a control loop mid-flight.
+pub fn sort_drop_nans(xs: &mut Vec<f64>) -> usize {
+    xs.sort_unstable_by(|a, b| match (a.is_nan(), b.is_nan()) {
+        (false, false) => a.partial_cmp(b).expect("both non-NaN"),
+        (false, true) => std::cmp::Ordering::Less,
+        (true, false) => std::cmp::Ordering::Greater,
+        (true, true) => std::cmp::Ordering::Equal,
+    });
+    let mut dropped = 0;
+    while xs.last().is_some_and(|v| v.is_nan()) {
+        xs.pop();
+        dropped += 1;
+    }
+    dropped
+}
+
 /// Exact percentile of an already-**sorted** slice by linear
 /// interpolation; `q` clamps to [0, 100] (an out-of-range rank is a
 /// caller bug worth a min/max answer, not a panic in the metrics path);
@@ -515,6 +526,19 @@ mod tests {
         let s = d.summary();
         assert_eq!(s.count, 3);
         assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_drop_nans_sorts_and_counts() {
+        let mut xs = vec![f64::NAN, 3.0, 1.0, f64::NAN, 2.0];
+        assert_eq!(sort_drop_nans(&mut xs), 2);
+        assert_eq!(xs, vec![1.0, 2.0, 3.0]);
+        let mut clean = vec![5.0, 4.0];
+        assert_eq!(sort_drop_nans(&mut clean), 0);
+        assert_eq!(clean, vec![4.0, 5.0]);
+        let mut all_nan = vec![f64::NAN, f64::NAN];
+        assert_eq!(sort_drop_nans(&mut all_nan), 2);
+        assert!(all_nan.is_empty());
     }
 
     #[test]

@@ -1,0 +1,518 @@
+//! Property tests for the per-layer precision morph (ISSUE 9): the
+//! [`LayerSchedule`] demotion order against its sensitivity ranking, the
+//! elastic KV watermark's monotonicity in the demoted-layer fraction,
+//! the fine-ladder FSM's dwell discipline under adversarial pressure
+//! flapping, and — over synthesized tiny artifacts — bit-identity of the
+//! morph path's endpoints with the legacy single-mode forward (which
+//! also pins the exception-set precompute to the old per-linear scan's
+//! semantics).
+
+use nestedfp::coordinator::autopilot::{Autopilot, AutopilotConfig};
+use nestedfp::coordinator::precision::LayerSchedule;
+use nestedfp::kvcache::KvPressureConfig;
+
+// ---------------------------------------------------------------------------
+// Part 1: the schedule itself — ranking, rung mapping, quality proxy.
+// ---------------------------------------------------------------------------
+
+/// The demotion order is exactly the ascending sensitivity argsort
+/// (least sensitive first, ties toward the lower layer index), `rank`
+/// is its inverse, and demotion always takes a prefix of the order.
+#[test]
+fn demotion_order_matches_the_sensitivity_ranking() {
+    let sens = nestedfp::bench::morph::layer_sensitivity(12);
+    let mut sched = LayerSchedule::from_sensitivity(&sens);
+    let order = sched.order().to_vec();
+
+    let mut seen = vec![false; sens.len()];
+    for &l in &order {
+        assert!(!seen[l], "layer {l} repeated in the demotion order");
+        seen[l] = true;
+    }
+    assert!(seen.iter().all(|&s| s), "order must be a permutation");
+
+    for w in order.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        assert!(
+            sens[a] < sens[b] || (sens[a] == sens[b] && a < b),
+            "order not an ascending-sensitivity argsort at ({a}, {b}): \
+             {} vs {}",
+            sens[a],
+            sens[b]
+        );
+    }
+
+    for k in 0..=sens.len() {
+        sched.set_demoted(k);
+        assert_eq!(sched.demoted_layers(), k);
+        let mask = sched.cold_mask();
+        for (pos, &l) in order.iter().enumerate() {
+            assert_eq!(
+                sched.is_demoted(l),
+                pos < k,
+                "k = {k}: layer {l} at rank {pos}"
+            );
+            assert_eq!(mask[l], pos < k);
+        }
+    }
+
+    // endpoint fractions are exact so the elastic KV watermark
+    // reproduces the legacy binary pressure flag bit for bit there
+    sched.set_demoted(0);
+    assert_eq!(sched.demoted_fraction().to_bits(), 0.0f64.to_bits());
+    sched.set_demoted(sens.len());
+    assert_eq!(sched.demoted_fraction().to_bits(), 1.0f64.to_bits());
+}
+
+/// Rung → demoted-prefix mapping: endpoints exact, monotone in the
+/// rung, and every non-zero rung demotes at least one layer.
+#[test]
+fn rung_to_prefix_mapping_covers_the_ladder() {
+    for (max_rung, n_layers) in [(2usize, 32usize), (4, 32), (8, 32), (8, 2), (8, 100)] {
+        let mut prev = 0;
+        for rung in 0..=max_rung {
+            let k = LayerSchedule::demoted_for_rung(rung, max_rung, n_layers);
+            assert!(k <= n_layers);
+            assert!(k >= prev, "non-monotone at rung {rung}/{max_rung}");
+            if rung == 0 {
+                assert_eq!(k, 0, "rung 0 must demote nothing");
+            } else {
+                assert!(k >= 1, "non-zero rung {rung}/{max_rung} demotes nothing");
+            }
+            if rung == max_rung {
+                assert_eq!(k, n_layers, "top rung must demote every layer");
+            }
+            prev = k;
+        }
+    }
+}
+
+/// The quality proxy is pinned at the endpoints (0 = all-FP16, 1 =
+/// the all-FP8 error) and monotone in the demoted prefix.
+#[test]
+fn demotion_error_is_monotone_and_normalized() {
+    let sens = nestedfp::bench::morph::layer_sensitivity(10);
+    let sched = LayerSchedule::from_sensitivity(&sens);
+    assert_eq!(sched.demotion_error(0).to_bits(), 0.0f64.to_bits());
+    assert!((sched.demotion_error(10) - 1.0).abs() < 1e-12);
+    let mut prev = 0.0;
+    for k in 0..=10 {
+        let e = sched.demotion_error(k);
+        assert!(e >= prev, "err not monotone at k = {k}: {e} < {prev}");
+        prev = e;
+    }
+    // the degenerate all-zero ranking falls back to a uniform proxy
+    let flat = LayerSchedule::from_sensitivity(&[0.0; 4]);
+    assert!((flat.demotion_error(2) - 0.5).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: the elastic KV watermark.
+// ---------------------------------------------------------------------------
+
+/// `watermark_at` is monotone non-increasing in the demoted-layer
+/// fraction, exactly reproduces the legacy binary watermarks at the
+/// endpoints, and clamps out-of-range fractions.
+#[test]
+fn kv_watermark_is_monotone_in_the_demoted_fraction() {
+    for cfg in [
+        KvPressureConfig::default(),
+        KvPressureConfig::dense_baseline(),
+        KvPressureConfig::demote_only(),
+    ] {
+        assert_eq!(
+            cfg.watermark_at(0.0).to_bits(),
+            cfg.watermark(false).to_bits(),
+            "frac 0 must equal the legacy calm watermark"
+        );
+        assert_eq!(
+            cfg.watermark_at(1.0).to_bits(),
+            cfg.watermark(true).to_bits(),
+            "frac 1 must equal the legacy pressure watermark"
+        );
+        let mut prev = f64::INFINITY;
+        for i in 0..=32 {
+            let w = cfg.watermark_at(i as f64 / 32.0);
+            assert!(w.is_finite() && w >= 0.0);
+            assert!(
+                w <= prev + 1e-12,
+                "watermark rose with demotion at step {i}: {w} > {prev}"
+            );
+            prev = w;
+        }
+        assert_eq!(cfg.watermark_at(-3.0).to_bits(), cfg.watermark_at(0.0).to_bits());
+        assert_eq!(cfg.watermark_at(7.0).to_bits(), cfg.watermark_at(1.0).to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Part 3: the fine ladder's dwell discipline.
+// ---------------------------------------------------------------------------
+
+/// Drive a single-replica autopilot on an 8-rung morph ladder with
+/// adversarially flapping pressure (3 ticks hot, 3 ticks calm, forever).
+/// The assignment flaps every 0.75 s; the replica may not: every
+/// escalation waits out the escalate dwell (and the post-promotion
+/// cooldown), every promotion walks one rung under the scaled promote
+/// dwell.
+#[test]
+fn fine_ladder_respects_dwell_bounds_under_adversarial_pressure() {
+    let cfg = AutopilotConfig {
+        morph_rungs: 8,
+        ..AutopilotConfig::default()
+    };
+    let esc_dwell = cfg.escalate_dwell_s;
+    let promote_dwell = cfg.promote_dwell_s * 2.0 / 8.0;
+    let cooldown = cfg.cooldown_s;
+    let tick = cfg.control_interval_s;
+    let mut ap = Autopilot::new(1, cfg);
+    assert_eq!(
+        ap.fine_rungs().map(|(s, m)| (s.len(), m)),
+        Some((1, 8)),
+        "morph_rungs = 8 must expose the fine ladder"
+    );
+
+    let ticks = 600usize;
+    for k in 0..ticks {
+        let t = k as f64 * tick;
+        let p = if (k / 3) % 2 == 0 { 2.5 } else { 0.0 };
+        ap.control_at(t, &[p], 0.0, &[1.0]);
+    }
+
+    let tl = ap.rung_timeline(0);
+    assert!(!tl.is_empty(), "the ladder never moved under pressure");
+    assert!(
+        tl.iter().any(|&(_, s)| s > 0) && tl.windows(2).any(|w| w[1].1 < w[0].1),
+        "need both an escalation and a promotion to exercise the law"
+    );
+
+    let mut last_promote_at = f64::NEG_INFINITY;
+    for w in tl.windows(2) {
+        let ((t0, s0), (t1, s1)) = (w[0], w[1]);
+        assert!(t1 > t0, "timeline must advance: {t0} -> {t1}");
+        assert!(s0 <= 8 && s1 <= 8, "rung beyond the ladder top");
+        if s1 > s0 {
+            assert!(
+                t1 - t0 >= esc_dwell - 1e-9,
+                "escalation at {t1} only {} s after the move at {t0}",
+                t1 - t0
+            );
+            assert!(
+                t1 - last_promote_at >= cooldown - 1e-9,
+                "escalation at {t1} inside the cooldown of the promotion at \
+                 {last_promote_at}"
+            );
+            assert!(s1 - s0 <= 4, "escalation jumped {} rungs", s1 - s0);
+        } else {
+            assert_eq!(s0 - s1, 1, "promotion must walk one rung at a time");
+            assert!(
+                t1 - t0 >= promote_dwell - 1e-9,
+                "promotion at {t1} only {} s after the move at {t0}",
+                t1 - t0
+            );
+            last_promote_at = t1;
+        }
+    }
+    if let Some(&(t, s)) = tl.first() {
+        assert!(s > 0 && t >= 0.0, "the first move must be an escalation");
+    }
+}
+
+/// `morph_rungs == 0` keeps the legacy coarse controller: no fine
+/// ladder is exposed, so the cluster driver stays on `apply_directive`.
+#[test]
+fn zero_morph_rungs_keeps_the_coarse_ladder() {
+    let ap = Autopilot::new(2, AutopilotConfig::default());
+    assert!(ap.fine_rungs().is_none(), "fine ladder must be opt-in");
+}
+
+// ---------------------------------------------------------------------------
+// Part 4: morph endpoints over the rewired RealBackend / HostForward,
+// on synthesized tiny artifacts (same fixture shape as attn_props; the
+// pjrt build would try to compile the nonexistent HLO files).
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod host_morph {
+    use std::io::Write as _;
+    use std::path::PathBuf;
+    use std::sync::OnceLock;
+
+    use nestedfp::coordinator::backend::{Backend, ModeMap, RealBackend};
+    use nestedfp::coordinator::hostforward::{HostForward, StepLane};
+    use nestedfp::coordinator::kv::KvCacheManager;
+    use nestedfp::coordinator::precision::{LayerSchedule, Precision};
+    use nestedfp::format::fp16::F16;
+    use nestedfp::format::nested::{self, DecomposeResult};
+    use nestedfp::kvcache::KvPressureConfig;
+    use nestedfp::runtime::ModelRuntime;
+    use nestedfp::util::rng::Pcg64;
+
+    const VOCAB: usize = 16;
+    const D: usize = 8;
+    const L: usize = 2;
+    const DFF: usize = 12;
+
+    struct StoreWriter {
+        tensors: Vec<(String, u8, Vec<usize>, Vec<u8>)>,
+    }
+
+    impl StoreWriter {
+        fn new() -> StoreWriter {
+            StoreWriter {
+                tensors: Vec::new(),
+            }
+        }
+
+        fn u16s(&mut self, name: &str, dims: &[usize], bits: &[u16]) {
+            let mut bytes = Vec::with_capacity(bits.len() * 2);
+            for b in bits {
+                bytes.extend_from_slice(&b.to_le_bytes());
+            }
+            self.tensors.push((name.into(), 1, dims.to_vec(), bytes));
+        }
+
+        fn f32s(&mut self, name: &str, dims: &[usize], vals: &[f32]) {
+            let mut bytes = Vec::with_capacity(vals.len() * 4);
+            for v in vals {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            self.tensors.push((name.into(), 2, dims.to_vec(), bytes));
+        }
+
+        fn u8s(&mut self, name: &str, dims: &[usize], vals: &[u8]) {
+            self.tensors.push((name.into(), 0, dims.to_vec(), vals.to_vec()));
+        }
+
+        fn write(&self, path: &std::path::Path) {
+            let mut f = std::fs::File::create(path).unwrap();
+            f.write_all(b"NFPW").unwrap();
+            f.write_all(&1u32.to_le_bytes()).unwrap();
+            f.write_all(&(self.tensors.len() as u32).to_le_bytes()).unwrap();
+            for (name, code, dims, bytes) in &self.tensors {
+                f.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+                f.write_all(name.as_bytes()).unwrap();
+                f.write_all(&[*code, dims.len() as u8]).unwrap();
+                for &d in dims {
+                    f.write_all(&(d as u32).to_le_bytes()).unwrap();
+                }
+                f.write_all(&(bytes.len() as u64).to_le_bytes()).unwrap();
+                f.write_all(bytes).unwrap();
+            }
+        }
+    }
+
+    fn gauss_bits(rng: &mut Pcg64, n: usize) -> Vec<u16> {
+        (0..n)
+            .map(|_| F16::from_f32((rng.normal() as f32 * 0.3).clamp(-1.7, 1.7)).to_bits())
+            .collect()
+    }
+
+    fn add_linear(w: &mut StoreWriter, rng: &mut Pcg64, key: &str, rows: usize, cols: usize) {
+        let bits = gauss_bits(rng, rows * cols);
+        let DecomposeResult::Nested(t) = nested::decompose_tensor(rows, cols, &bits) else {
+            panic!("{key}: clamped weights must be nestable");
+        };
+        w.u16s(&format!("{key}.f16"), &[rows, cols], &bits);
+        w.u8s(&format!("{key}.upper"), &[rows, cols], &t.upper);
+        w.u8s(&format!("{key}.lower"), &[rows, cols], &t.lower);
+    }
+
+    /// Build the tiny artifact dir once per process. Unlike the
+    /// attn_props fixture, the manifest carries an `exception_layers`
+    /// entry so the morph path exercises the precomputed exception set
+    /// (layers.1.wo stays on its FP16 plane in nested8 mode).
+    fn artifacts() -> &'static PathBuf {
+        static DIR: OnceLock<PathBuf> = OnceLock::new();
+        DIR.get_or_init(|| {
+            let dir =
+                std::env::temp_dir().join(format!("nestedfp_morphprops_{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let manifest = format!(
+                r#"{{
+  "model": {{"vocab": {VOCAB}, "d_model": {D}, "n_layers": {L}, "n_heads": 2,
+            "d_ff": {DFF}, "max_seq": 64, "head_dim": 4}},
+  "decode_buckets": [1, 2, 4],
+  "prefill_chunks": [4, 8],
+  "modes": ["nested16", "nested8"],
+  "act_scales": {{}},
+  "exception_layers": {{"layers.1.wo": true}},
+  "executables": [
+    {{"kind": "decode", "mode": "nested16", "size": 1, "path": "host_native.hlo.txt"}},
+    {{"kind": "prefill", "mode": "nested16", "size": 8, "path": "host_native.hlo.txt"}}
+  ]
+}}
+"#
+            );
+            std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+            let mut w = StoreWriter::new();
+            let mut rng = Pcg64::seeded(0x6d0f);
+            w.u16s("embed", &[VOCAB, D], &gauss_bits(&mut rng, VOCAB * D));
+            w.f32s("final_norm", &[D], &vec![1.0f32; D]);
+            w.u16s("lm_head", &[VOCAB, D], &gauss_bits(&mut rng, VOCAB * D));
+            for i in 0..L {
+                w.f32s(&format!("layers.{i}.attn_norm"), &[D], &vec![1.0f32; D]);
+                w.f32s(&format!("layers.{i}.mlp_norm"), &[D], &vec![1.0f32; D]);
+                for name in ["wq", "wk", "wv", "wo"] {
+                    add_linear(&mut w, &mut rng, &format!("layers.{i}.{name}"), D, D);
+                }
+                add_linear(&mut w, &mut rng, &format!("layers.{i}.w_gate"), DFF, D);
+                add_linear(&mut w, &mut rng, &format!("layers.{i}.w_up"), DFF, D);
+                add_linear(&mut w, &mut rng, &format!("layers.{i}.w_down"), D, DFF);
+            }
+            w.write(&dir.join("weights.bin"));
+            dir
+        })
+    }
+
+    fn runtime() -> ModelRuntime {
+        ModelRuntime::load(artifacts(), &["nested16", "nested8"], &["decode", "prefill"])
+            .expect("stub runtime must load synthesized artifacts")
+    }
+
+    fn backend() -> RealBackend {
+        RealBackend::new(runtime(), ModeMap::default(), 48)
+    }
+
+    fn fresh_kv(b: &RealBackend) -> KvCacheManager {
+        KvCacheManager::new(b.geometry(), KvPressureConfig::dense_baseline())
+    }
+
+    /// One 8-token prefill-shaped host step; `cold` selects the morph
+    /// path (`forward_morph` over nested16/nested8) vs the legacy
+    /// single-mode `forward`.
+    fn host_logits(cold: Option<&[bool]>, mode: &str) -> Vec<f32> {
+        let rt = runtime();
+        let mut host = HostForward::new(&rt).unwrap();
+        let mut kv = KvCacheManager::new(backend().geometry(), KvPressureConfig::dense_baseline());
+        let slot = kv.allocate(8).unwrap();
+        let tokens: Vec<i32> = (0..8).map(|i| (i % VOCAB) as i32).collect();
+        let positions: Vec<i32> = (0..8).collect();
+        let lanes = [StepLane {
+            seq: slot,
+            tokens: &tokens,
+            positions: &positions,
+        }];
+        let out = match cold {
+            Some(mask) => host
+                .forward_morph(&rt, &mut kv, "nested16", "nested8", mask, &lanes)
+                .unwrap(),
+            None => host.forward(&rt, &mut kv, mode, &lanes).unwrap(),
+        };
+        assert_eq!(out.logits.len(), VOCAB);
+        out.logits
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// The tentpole's fidelity claim, at the hostforward layer: an
+    /// all-hot (all-cold) morph mask is **bit-identical** to the legacy
+    /// single-mode forward under the hot (cold) mode — so a schedule
+    /// parked at either endpoint costs nothing, and the precomputed
+    /// exception set reproduces the old per-linear manifest scan.
+    #[test]
+    fn morph_endpoints_are_bit_identical_to_the_single_mode_paths() {
+        let hot = host_logits(None, "nested16");
+        let cold = host_logits(None, "nested8");
+        assert_ne!(
+            bits(&hot),
+            bits(&cold),
+            "the two modes must genuinely differ or the endpoint claim is vacuous"
+        );
+        assert_eq!(
+            bits(&host_logits(Some(&[false; L]), "unused")),
+            bits(&hot),
+            "all-hot morph mask != forward(nested16)"
+        );
+        assert_eq!(
+            bits(&host_logits(Some(&[true; L]), "unused")),
+            bits(&cold),
+            "all-cold morph mask != forward(nested8)"
+        );
+    }
+
+    /// An interior mask genuinely blends the planes: finite logits that
+    /// match neither endpoint.
+    #[test]
+    fn interior_morph_mask_blends_the_planes() {
+        let hot = host_logits(None, "nested16");
+        let cold = host_logits(None, "nested8");
+        let mixed = host_logits(Some(&[true, false]), "unused");
+        assert!(mixed.iter().all(|v| v.is_finite()));
+        assert_ne!(bits(&mixed), bits(&hot), "interior mask ran all-hot");
+        assert_ne!(bits(&mixed), bits(&cold), "interior mask ran all-cold");
+    }
+
+    /// A cold mask that doesn't cover every layer is a hard error, not
+    /// a silent truncation.
+    #[test]
+    fn morph_mask_must_cover_every_layer() {
+        let rt = runtime();
+        let mut host = HostForward::new(&rt).unwrap();
+        let mut kv = KvCacheManager::new(backend().geometry(), KvPressureConfig::dense_baseline());
+        let slot = kv.allocate(8).unwrap();
+        let tokens: Vec<i32> = (0..8).collect();
+        let positions: Vec<i32> = (0..8).collect();
+        let lanes = [StepLane {
+            seq: slot,
+            tokens: &tokens,
+            positions: &positions,
+        }];
+        let err = host
+            .forward_morph(&rt, &mut kv, "nested16", "nested8", &[true], &lanes)
+            .expect_err("short mask must bail");
+        assert!(err.to_string().contains("cold mask"), "{err}");
+    }
+
+    /// One prefill + one decode through the RealBackend; `schedule`
+    /// (if any) is installed via the Backend trait hook before any step.
+    fn backend_decode_logits(schedule: Option<LayerSchedule>, precision: Precision) -> Vec<f32> {
+        let mut b = backend();
+        if let Some(s) = &schedule {
+            b.set_layer_schedule(Some(s));
+        }
+        let mut kv = fresh_kv(&b);
+        let prompt: Vec<i32> = (0..8).map(|i| (i % VOCAB) as i32).collect();
+        let slot = kv.allocate(prompt.len()).unwrap();
+        b.prefill(&mut kv, slot, 0, &prompt, precision).unwrap();
+        kv.grow(slot, prompt.len()).unwrap();
+        let run = b.decode(&mut kv, &[slot], &[3], &[8], precision).unwrap();
+        run.logits.unwrap()
+    }
+
+    /// The same claim one layer up, through the engine-facing backend:
+    /// a schedule parked at either endpoint leaves prefill + decode
+    /// bit-identical to running with no schedule at all, and an
+    /// interior schedule actually engages the morph path.
+    #[test]
+    fn schedule_endpoints_through_the_backend_match_the_legacy_modes() {
+        let base16 = backend_decode_logits(None, Precision::Fp16);
+        let base8 = backend_decode_logits(None, Precision::Fp8);
+        assert_ne!(bits(&base16), bits(&base8));
+
+        let mut s = LayerSchedule::identity(L);
+        s.set_demoted(0);
+        assert_eq!(
+            bits(&backend_decode_logits(Some(s.clone()), Precision::Fp16)),
+            bits(&base16),
+            "schedule endpoint 0 != legacy Fp16 run"
+        );
+        s.set_demoted(L);
+        assert_eq!(
+            bits(&backend_decode_logits(Some(s.clone()), Precision::Fp8)),
+            bits(&base8),
+            "schedule endpoint n != legacy Fp8 run"
+        );
+
+        s.set_demoted(1);
+        let mixed = backend_decode_logits(Some(s), Precision::Fp16);
+        assert!(mixed.iter().all(|v| v.is_finite()));
+        assert_ne!(
+            bits(&mixed),
+            bits(&base16),
+            "interior schedule did not engage the morph path"
+        );
+    }
+}
