@@ -73,6 +73,13 @@ cargo test -q --offline --test telemetry_props
 echo "== cargo test (morph: schedule + endpoint bit-identity) =="
 cargo test -q --offline --test morph_props
 
+# The host-attention piggybacking invariants (HostTier ledger
+# conservation, the resume-headroom anti-thrash margin, host/device
+# attention cost laws, piggybacked-pipeline determinism) run by name so
+# a tier-placement regression fails with clear attribution.
+echo "== cargo test (host tier: ledger + anti-thrash + piggyback) =="
+cargo test -q --offline --test host_attn_props
+
 echo "== cargo test -q =="
 cargo test -q --offline
 
@@ -90,6 +97,9 @@ echo "== smoke: repro reproduce morph --quick =="
 
 echo "== smoke: repro reproduce attention --quick =="
 ./target/release/repro reproduce attention --quick --json /tmp/nestedfp_attention_ci.json
+
+echo "== smoke: repro reproduce kvcache --quick (incl. host-piggyback arm) =="
+./target/release/repro reproduce kvcache --quick --json /tmp/nestedfp_kvcache_ci.json
 
 echo "== smoke: repro reproduce cluster --scale --quick =="
 ./target/release/repro reproduce cluster --scale --quick --json /tmp/nestedfp_cluster_scale_ci.json

@@ -130,6 +130,34 @@ impl AttnEngine {
         lanes: &[AttnLane],
         out: &mut [f32],
     ) -> AttnStats {
+        self.attend_inner(kv, layer, lanes, out, false)
+    }
+
+    /// [`Self::attend`] over lanes on **either tier**: offloaded lanes
+    /// walk their host-resident blocks in place
+    /// ([`PagedKvCache::seq_block_kv_any_tier`]) — the compute half of
+    /// host attention piggybacking. Payloads are tier-invariant, so a
+    /// device-resident lane produces bit-identical output through either
+    /// entry; only where the bytes are billed differs (the backend's
+    /// cost model, not this engine).
+    pub fn attend_any_tier(
+        &self,
+        kv: &PagedKvCache,
+        layer: usize,
+        lanes: &[AttnLane],
+        out: &mut [f32],
+    ) -> AttnStats {
+        self.attend_inner(kv, layer, lanes, out, true)
+    }
+
+    fn attend_inner(
+        &self,
+        kv: &PagedKvCache,
+        layer: usize,
+        lanes: &[AttnLane],
+        out: &mut [f32],
+        allow_host: bool,
+    ) -> AttnStats {
         let g = kv.geo;
         let (h, dh) = (g.n_heads, g.head_dim);
         assert!(layer < g.n_layers, "layer {layer} of {}", g.n_layers);
@@ -144,7 +172,7 @@ impl AttnEngine {
             assert_eq!(lane.positions.len(), t, "lanes must share a token count");
             assert_eq!(lane.q.len(), t * h * dh, "query shape [t, H*Dh]");
             assert!(
-                !kv.is_offloaded(lane.seq),
+                allow_host || !kv.is_offloaded(lane.seq),
                 "attend on offloaded seq {}",
                 lane.seq
             );
@@ -178,6 +206,7 @@ impl AttnEngine {
                     head,
                     q,
                     lane.positions[ti] as usize,
+                    allow_host,
                     lut,
                     prof,
                     &zeros,
@@ -201,6 +230,7 @@ fn attend_query(
     head: usize,
     q: &[f32],
     pos: usize,
+    allow_host: bool,
     lut: &[f32; 256],
     prof: &Profiler,
     zeros: &[f32],
@@ -221,7 +251,11 @@ fn attend_query(
     while bi * bs < ctx {
         let n_tok = bs.min(ctx - bi * bs);
         let t0 = prof.start();
-        let blk = kv.seq_block_kv(seq, bi);
+        let blk = if allow_host {
+            kv.seq_block_kv_any_tier(seq, bi)
+        } else {
+            kv.seq_block_kv(seq, bi)
+        };
         prof.record(PH_LOAD, t0);
         match blk {
             BlockKv::F32 { k, v } => {
@@ -442,6 +476,38 @@ mod tests {
         let mut out: Vec<f32> = Vec::new();
         let stats = AttnEngine::new(4).attend(&kv, 0, &[], &mut out);
         assert_eq!(stats, AttnStats::default());
+    }
+
+    #[test]
+    fn any_tier_attend_matches_device_bits_across_offload() {
+        // offload moves accounting, not payloads — the host walk must
+        // reproduce the device walk bit-for-bit, stats included
+        let g = geo();
+        let (mut kv, seqs) = filled_cache(g, &[16], 77, KvPressureConfig::default());
+        let (h, dh) = (g.n_heads, g.head_dim);
+        let mut rng = Pcg64::seeded(78);
+        let q = rand_q(&mut rng, h * dh);
+        let pos = [15i32];
+        let lanes = [AttnLane {
+            seq: seqs[0],
+            q: &q,
+            positions: &pos,
+        }];
+        let mut want = vec![0.0f32; h * dh];
+        let s_dev = AttnEngine::new(1).attend(&kv, 0, &lanes, &mut want);
+        kv.offload_sequence(seqs[0]).unwrap();
+        let mut got = vec![0.0f32; h * dh];
+        let s_host = AttnEngine::new(1).attend_any_tier(&kv, 0, &lanes, &mut got);
+        assert_eq!(s_host, s_dev, "traffic stats are tier-invariant");
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "host-tier walk changed bits"
+        );
+        // and for device-resident lanes the two entries are one path
+        kv.fetch_sequence(seqs[0]).unwrap();
+        let mut back = vec![0.0f32; h * dh];
+        AttnEngine::new(1).attend_any_tier(&kv, 0, &lanes, &mut back);
+        assert!(want.iter().zip(&back).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -13,18 +13,51 @@
 //! acceptance criterion (asserted in this module's tests and annotated
 //! in the report): block-native decode is strictly faster whenever
 //! `max_seq ≥ 4 ×` the mean context, with bit-identical logits.
+//!
+//! A committed trajectory file (`ATTN_BENCH.json`) carries per-
+//! (arm, batch, mean_ctx) effective-bandwidth floors for the block-native
+//! walk (touched bytes / step time); when present, measured numbers are
+//! checked against it and misses are called out in the report notes.
+//! `--update-trajectory` rewrites the file from the current run (full
+//! sweeps only — a `--quick` subset would drop floors; floors sit at 70%
+//! of measured, the same discipline as `GEMM_BENCH.json`).
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::attn::oracle::attend_dense_step_with;
 use crate::attn::{AttnEngine, AttnLane, AttnStats};
+use crate::bench::gemm::BenchOpts;
 use crate::bench::report::Report;
 use crate::kvcache::{KvGeometry, KvPressureConfig, PagedKvCache};
 use crate::telemetry::profiler::ATTN_PHASES;
 use crate::telemetry::{registry, Profiler, Registry};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+
+/// The committed perf-trajectory file (repo root).
+pub const TRAJECTORY_FILE: &str = "ATTN_BENCH.json";
+/// Trajectory schema tag.
+pub const TRAJECTORY_SCHEMA: &str = "nestedfp/attn-trajectory@1";
+
+/// Where the trajectory file lives: the working directory when it is (or
+/// can become) the repo root's copy, falling back to the crate root for
+/// dev runs started elsewhere.
+fn trajectory_path() -> PathBuf {
+    let cwd = PathBuf::from(TRAJECTORY_FILE);
+    if cwd.exists() {
+        return cwd;
+    }
+    let crate_root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(TRAJECTORY_FILE);
+    if crate_root.exists() {
+        crate_root
+    } else {
+        cwd
+    }
+}
 
 /// One sweep point.
 #[derive(Clone, Copy, Debug)]
@@ -57,6 +90,18 @@ pub struct AttnMeasure {
 impl AttnMeasure {
     pub fn speedup(&self) -> f64 {
         self.dense_s / self.block_s
+    }
+
+    /// Effective KV bandwidth of the block-native walk, GB/s: bytes the
+    /// walk actually touched over the measured step time. This is the
+    /// trajectory metric — it is monotone in walk speed and independent
+    /// of the dense arm.
+    pub fn eff_gbps(&self) -> f64 {
+        if self.block_s > 0.0 {
+            self.stats.touched_bytes as f64 / self.block_s / 1e9
+        } else {
+            0.0
+        }
     }
 }
 
@@ -223,14 +268,21 @@ fn mb(bytes: usize) -> String {
     format!("{:.2}", bytes as f64 / (1 << 20) as f64)
 }
 
+/// The sweep's case grid: (arms, batches, mean lens, max_seq, reps).
+pub fn sweep_grid(
+    quick: bool,
+) -> (&'static [&'static str], &'static [usize], &'static [usize], usize, usize) {
+    if quick {
+        (&["fp16", "fp8"], &[4], &[64], 256, 6)
+    } else {
+        (&["fp16", "mixed", "fp8"], &[1, 4, 8], &[32, 64, 128], 512, 24)
+    }
+}
+
 /// The `repro reproduce attention` sweep.
-pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
-    let (arms, batches, lens, max_seq, reps): (&[&'static str], &[usize], &[usize], usize, usize) =
-        if quick {
-            (&["fp16", "fp8"], &[4], &[64], 256, 6)
-        } else {
-            (&["fp16", "mixed", "fp8"], &[1, 4, 8], &[32, 64, 128], 512, 24)
-        };
+pub fn attention_sweep(opts: &BenchOpts) -> Result<Vec<Report>> {
+    let quick = opts.quick;
+    let (arms, batches, lens, max_seq, reps) = sweep_grid(quick);
     let mut rep = Report::new(
         "Attention — dense-gather oracle vs block-native paged walk (decode step, per-step times)",
         &[
@@ -262,6 +314,7 @@ pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
          (load = block fetch incl. fused FP8 dequant; smax = online softmax + PV accumulate)",
     );
     let mut all_bits = true;
+    let mut cells: Vec<(AttnCase, AttnMeasure)> = Vec::new();
     for &arm in arms {
         for &batch in batches {
             for &mean_len in lens {
@@ -274,6 +327,7 @@ pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
                 };
                 let m = measure(&case, 97);
                 all_bits &= m.bit_identical;
+                cells.push((case, m));
                 rep.row(vec![
                     arm.into(),
                     batch.to_string(),
@@ -296,7 +350,119 @@ pub fn attention_sweep(quick: bool) -> Result<Vec<Report>> {
         all_bits,
         "block-native attention diverged from the dense oracle"
     );
+    let traj_path = trajectory_path();
+    match std::fs::read_to_string(&traj_path) {
+        Ok(text) => match Json::parse(&text).and_then(|t| trajectory_misses(&t, &cells)) {
+            Ok((0, _)) => rep.note(format!(
+                "trajectory {TRAJECTORY_FILE}: no enforceable floors yet (provisional seed) — \
+                 run with --update-trajectory on a pinned machine to set them"
+            )),
+            Ok((checked, misses)) if misses.is_empty() => {
+                rep.note(format!("trajectory {TRAJECTORY_FILE}: {checked} floors checked, all met"))
+            }
+            Ok((checked, misses)) => rep.note(format!(
+                "trajectory {TRAJECTORY_FILE}: {}/{checked} floors MISSED — {}",
+                misses.len(),
+                misses.join("; ")
+            )),
+            Err(e) => rep.note(format!("trajectory {TRAJECTORY_FILE}: unreadable ({e})")),
+        },
+        Err(_) => rep.note(format!("trajectory {TRAJECTORY_FILE}: not found (skipped)")),
+    }
+    if opts.update_trajectory {
+        if quick {
+            // a quick sweep covers a case subset: rewriting would silently
+            // drop the full-sweep floors
+            rep.note(format!(
+                "trajectory {TRAJECTORY_FILE}: NOT rewritten — --quick covers a case subset; \
+                 rerun --update-trajectory without --quick"
+            ));
+        } else {
+            std::fs::write(&traj_path, trajectory_json(&cells).to_string() + "\n")?;
+            rep.note(format!("trajectory {}: rewritten from this run", traj_path.display()));
+        }
+    }
     Ok(vec![rep])
+}
+
+// ---------------------------------------------------------------------------
+// Trajectory file
+// ---------------------------------------------------------------------------
+
+/// Floors from `ATTN_BENCH.json` that the given measurements violate.
+/// Entries with a `null` floor (the provisional seed) never miss.
+fn trajectory_misses(
+    traj: &Json,
+    cells: &[(AttnCase, AttnMeasure)],
+) -> Result<(usize, Vec<String>), String> {
+    if traj.get("schema").and_then(|s| s.as_str()) != Some(TRAJECTORY_SCHEMA) {
+        return Err(format!("unexpected schema (want {TRAJECTORY_SCHEMA})"));
+    }
+    let entries = traj
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or("missing 'entries' array")?;
+    let mut checked = 0usize;
+    let mut misses = Vec::new();
+    for e in entries {
+        let (Some(arm), Some(batch), Some(mean_ctx)) = (
+            e.get("arm").and_then(|v| v.as_str()),
+            e.get("batch").and_then(|v| v.as_usize()),
+            e.get("mean_ctx").and_then(|v| v.as_usize()),
+        ) else {
+            return Err("entry missing arm/batch/mean_ctx".into());
+        };
+        let Some(floor) = e.get("floor_eff_gbps").and_then(|v| v.as_f64()) else {
+            continue; // provisional entry: nothing to enforce yet
+        };
+        let Some((_, m)) = cells
+            .iter()
+            .find(|(c, _)| c.arm == arm && c.batch == batch && c.mean_len == mean_ctx)
+        else {
+            continue; // case not in this sweep (e.g. --quick)
+        };
+        checked += 1;
+        if m.eff_gbps() < floor {
+            misses.push(format!(
+                "{arm} b{batch} ctx{mean_ctx}: {:.2} GB/s < floor {floor:.2}",
+                m.eff_gbps()
+            ));
+        }
+    }
+    Ok((checked, misses))
+}
+
+fn trajectory_json(cells: &[(AttnCase, AttnMeasure)]) -> Json {
+    let entries: Vec<Json> = cells
+        .iter()
+        .map(|(c, m)| {
+            let mut e = BTreeMap::new();
+            e.insert("arm".into(), Json::Str(c.arm.into()));
+            e.insert("batch".into(), Json::Num(c.batch as f64));
+            e.insert("mean_ctx".into(), Json::Num(c.mean_len as f64));
+            e.insert(
+                "eff_gbps".into(),
+                Json::Num((m.eff_gbps() * 100.0).round() / 100.0),
+            );
+            e.insert(
+                "floor_eff_gbps".into(),
+                Json::Num((m.eff_gbps() * 0.7 * 100.0).round() / 100.0),
+            );
+            Json::Obj(e)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("schema".into(), Json::Str(TRAJECTORY_SCHEMA.into()));
+    root.insert(
+        "generated_by".into(),
+        Json::Str(
+            "repro reproduce attention --update-trajectory (threads=1, floors = 70% of measured)"
+                .to_string(),
+        ),
+    );
+    root.insert("provisional".into(), Json::Bool(false));
+    root.insert("entries".into(), Json::Arr(entries));
+    Json::Obj(root)
 }
 
 #[cfg(test)]
@@ -352,9 +518,109 @@ mod tests {
 
     #[test]
     fn quick_sweep_runs_and_asserts_bits() {
-        let reports = attention_sweep(true).unwrap();
+        let opts = BenchOpts {
+            quick: true,
+            ..Default::default()
+        };
+        let reports = attention_sweep(&opts).unwrap();
         assert_eq!(reports.len(), 1);
         assert!(!reports[0].rows.is_empty());
         assert!(reports[0].rows.iter().all(|r| r[12] == "ok"));
+    }
+
+    #[test]
+    fn committed_trajectory_parses() {
+        // the repo-root seed file must match the schema this module reads
+        let text = std::fs::read_to_string(trajectory_path())
+            .expect("ATTN_BENCH.json missing from repo root");
+        let traj = Json::parse(&text).expect("ATTN_BENCH.json is not valid JSON");
+        assert_eq!(
+            traj.get("schema").and_then(|s| s.as_str()),
+            Some(TRAJECTORY_SCHEMA)
+        );
+        // provisional seed: structure must be checkable even with no rows
+        let (checked, misses) = trajectory_misses(&traj, &[]).expect("schema walk");
+        assert_eq!(checked, 0, "no measurements given, nothing checkable");
+        assert!(misses.is_empty());
+        // every full-sweep (arm, batch, mean_ctx) cell is present
+        let (arms, batches, lens, _, _) = sweep_grid(false);
+        let entries = traj.get("entries").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(entries.len(), arms.len() * batches.len() * lens.len());
+    }
+
+    #[test]
+    fn misses_flagged_against_floors() {
+        let mut e = BTreeMap::new();
+        e.insert("arm".into(), Json::Str("fp16".into()));
+        e.insert("batch".into(), Json::Num(2.0));
+        e.insert("mean_ctx".into(), Json::Num(64.0));
+        e.insert("floor_eff_gbps".into(), Json::Num(5.0));
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(TRAJECTORY_SCHEMA.into()));
+        root.insert("entries".into(), Json::Arr(vec![Json::Obj(e)]));
+        let traj = Json::Obj(root);
+        let case = AttnCase {
+            arm: "fp16",
+            batch: 2,
+            mean_len: 64,
+            max_seq: 256,
+            reps: 1,
+        };
+        let slow = AttnMeasure {
+            dense_s: 1.0,
+            block_s: 1.0,
+            stats: AttnStats {
+                touched_bytes: 2_000_000_000, // 2 GB/s < 5 floor
+                ..Default::default()
+            },
+            bit_identical: true,
+            phase_share: [0.0; 3],
+        };
+        let (checked, misses) = trajectory_misses(&traj, &[(case, slow)]).unwrap();
+        assert_eq!((checked, misses.len()), (1, 1));
+        let fast = AttnMeasure {
+            stats: AttnStats {
+                touched_bytes: 9_000_000_000,
+                ..Default::default()
+            },
+            ..slow
+        };
+        let (_, misses) = trajectory_misses(&traj, &[(case, fast)]).unwrap();
+        assert!(misses.is_empty());
+
+        // a quick-sweep trajectory write must be refused
+        let opts = BenchOpts {
+            quick: true,
+            update_trajectory: true,
+            ..Default::default()
+        };
+        let reports = attention_sweep(&opts).unwrap();
+        assert!(
+            reports[0].notes.iter().any(|n| n.contains("NOT rewritten")),
+            "--quick --update-trajectory must refuse to rewrite"
+        );
+    }
+
+    #[test]
+    fn trajectory_json_roundtrips() {
+        let case = AttnCase {
+            arm: "fp8",
+            batch: 4,
+            mean_len: 32,
+            max_seq: 128,
+            reps: 1,
+        };
+        let m = AttnMeasure {
+            dense_s: 2.0,
+            block_s: 0.5,
+            stats: AttnStats::default(),
+            bit_identical: true,
+            phase_share: [0.0; 3],
+        };
+        let j = trajectory_json(&[(case, m)]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let (checked, misses) = trajectory_misses(&back, &[]).unwrap();
+        assert_eq!(checked, 0);
+        assert!(misses.is_empty());
     }
 }

@@ -1,5 +1,5 @@
 //! KV-pressure scenario: the same surge and the same device block budget
-//! replayed under three KV policies (`repro reproduce kvcache`).
+//! replayed under four KV policies (`repro reproduce kvcache`).
 //!
 //! * `dense-f32` — the seed behavior: conservative full-context
 //!   reservation, all blocks f32, stall when the budget is gone.
@@ -8,11 +8,16 @@
 //! * `paged+offload` — true paged admission plus the host tier:
 //!   preempt-by-offload instead of stalling, transfer latency charged on
 //!   the virtual clock.
+//! * `host-piggyback` — same tier, but evicted sequences keep decoding
+//!   over their host-resident blocks (attention piggybacked on the host
+//!   cost law) instead of parking until a resume transfer fits.
 //!
 //! The headline column is `admitted_peak`: under the same budget, FP8
 //! demotion must fit measurably more concurrent requests than all-f32
 //! (asserted in this module's tests), with the codec's documented error
-//! bound as the quality price.
+//! bound as the quality price. The piggyback arm's claim is goodput:
+//! host-served lanes keep earning SLO-attaining completions while the
+//! resume-only policy lets them stall (also asserted in tests).
 
 use anyhow::Result;
 
@@ -78,19 +83,22 @@ pub fn run_pressure(
     Ok((report, stats))
 }
 
-/// The three policy variants the scenario compares.
+/// The four policy variants the scenario compares.
 pub fn variants() -> Vec<(&'static str, KvPressureConfig)> {
     vec![
         ("dense-f32", KvPressureConfig::dense_baseline()),
         ("fp8-demote", KvPressureConfig::demote_only()),
         ("paged+offload", KvPressureConfig::default()),
+        ("host-piggyback", KvPressureConfig::piggyback()),
     ]
 }
 
 /// The KV-pressure table (the `kvcache` experiment's main report).
-pub fn kvcache_pressure() -> Result<Report> {
+/// `quick` shortens the surge for CI smokes; the policy arms (including
+/// the piggyback one) are identical in both shapes.
+pub fn kvcache_pressure(quick: bool) -> Result<Report> {
     let slo = SloConfig::default();
-    let (seconds, base, blocks) = (48, 2.0, 384);
+    let (seconds, base, blocks) = if quick { (16, 2.0, 384) } else { (48, 2.0, 384) };
     let mut rep = Report::new(
         "KV cache — paged dual-precision under surge (llama31-8b, sim-H100, same 384-block budget)",
         &[
@@ -105,6 +113,9 @@ pub fn kvcache_pressure() -> Result<Report> {
             "offloads",
             "transfer_ms",
             "kv_read_savings",
+            "piggy_steps",
+            "host_attn_ms",
+            "avoided_ms",
         ],
     );
     rep.note(format!(
@@ -113,6 +124,11 @@ pub fn kvcache_pressure() -> Result<Report> {
     rep.note(
         "kv_read_savings = attention KV traffic avoided by the block-native walk vs the \
          dense gather (PR 5): 1 - touched/gathered bytes",
+    );
+    rep.note(
+        "piggy_steps = decode iterations carrying host-piggybacked lanes; host_attn_ms = \
+         host-tier attention seconds billed on the virtual clock; avoided_ms = resume \
+         transfers never paid because sequences finished on the host",
     );
     for (name, cfg) in variants() {
         let (mut r, st) = run_pressure(cfg, seconds, base, blocks)?;
@@ -130,6 +146,9 @@ pub fn kvcache_pressure() -> Result<Report> {
             st.offload_events.to_string(),
             format!("{:.2}", st.transfer_seconds * 1e3),
             format!("{:.1}%", r.metrics.attn_gather_savings() * 100.0),
+            r.metrics.host_piggybacked_steps.to_string(),
+            format!("{:.2}", r.metrics.host_attn_seconds * 1e3),
+            format!("{:.2}", r.metrics.host_transfer_seconds_avoided * 1e3),
         ]);
     }
     Ok(rep)
@@ -219,6 +238,41 @@ mod tests {
         assert_eq!(
             rep.metrics.kv_offload_events, full.offload_events,
             "metrics must mirror the cache stats"
+        );
+    }
+
+    #[test]
+    fn piggyback_beats_resume_only_goodput_under_pressure() {
+        // the PR's acceptance property: same surge, same budget — serving
+        // evicted sequences on the host tier must earn strictly more
+        // goodput than parking them for a resume transfer
+        let slo = SloConfig::default();
+        let (seconds, base, blocks) = (24, 2.0, 384);
+        let (resume_rep, _) =
+            run_pressure(KvPressureConfig::default(), seconds, base, blocks).unwrap();
+        let (piggy_rep, piggy_st) =
+            run_pressure(KvPressureConfig::piggyback(), seconds, base, blocks).unwrap();
+        assert_eq!(
+            resume_rep.metrics.completed, piggy_rep.metrics.completed,
+            "same workload must drain under both policies"
+        );
+        assert!(
+            piggy_st.offload_events > 0,
+            "tight budget must exercise the host tier"
+        );
+        assert!(
+            piggy_rep.metrics.host_piggybacked_steps > 0,
+            "piggyback arm never served a host lane"
+        );
+        assert!(
+            piggy_rep.metrics.host_attn_seconds > 0.0,
+            "host attention must bill the virtual clock"
+        );
+        let g_resume = resume_rep.metrics.goodput_req_s(&slo);
+        let g_piggy = piggy_rep.metrics.goodput_req_s(&slo);
+        assert!(
+            g_piggy > g_resume,
+            "piggyback goodput must beat resume-only: {g_piggy} !> {g_resume}"
         );
     }
 

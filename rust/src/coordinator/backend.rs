@@ -30,6 +30,13 @@ pub struct StepRun {
     /// KV bytes the block-native attention actually touched, at stored
     /// precision. The engine mirrors both counters into `Metrics`.
     pub attn_touched_bytes: usize,
+    /// Host-side attention seconds this step spent serving piggybacked
+    /// lanes (the sim backend's host cost law; 0 when no lane ran on
+    /// the host tier, and 0 on the real backend whose latency is wall
+    /// time and cannot be split per tier).
+    pub host_attn_seconds: f64,
+    /// Lanes of this step that attended over host-resident blocks.
+    pub host_lanes: usize,
 }
 
 /// A model-execution backend for the engine.
@@ -86,6 +93,26 @@ pub trait Backend {
         positions: &[i32],
         precision: Precision,
     ) -> Result<StepRun>;
+
+    /// One **mixed-tier** decode iteration: the last `n_host` lanes
+    /// attend over host-resident blocks (piggybacked), the rest over
+    /// device blocks; the non-attention stages (QKV / FFN / LM head)
+    /// run as one merged batch either way. With `n_host == 0` this is
+    /// `decode` exactly — same code path, same bits — which is what the
+    /// engine's tier-agnostic pipeline calls when piggybacking is off.
+    /// Backends without a host lane path keep the default and assert.
+    fn decode_mixed(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slots: &[usize],
+        tokens: &[i32],
+        positions: &[i32],
+        precision: Precision,
+        n_host: usize,
+    ) -> Result<StepRun> {
+        assert_eq!(n_host, 0, "backend cannot serve host-attention lanes");
+        self.decode(kv, slots, tokens, positions, precision)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -359,6 +386,7 @@ impl Backend for RealBackend {
             latency,
             attn_dense_bytes: out.attn.dense_bytes,
             attn_touched_bytes: out.attn.touched_bytes,
+            ..StepRun::default()
         })
     }
 
@@ -402,7 +430,35 @@ impl Backend for RealBackend {
             latency,
             attn_dense_bytes: out.attn.dense_bytes,
             attn_touched_bytes: out.attn.touched_bytes,
+            ..StepRun::default()
         })
+    }
+
+    /// Mixed-tier decode: same merged batch as [`Self::decode`], with
+    /// the attention walk switched to the any-tier entry so the trailing
+    /// `n_host` lanes read their host-resident blocks in place. Latency
+    /// stays wall time — on the host twin both tiers are the same DRAM,
+    /// so there is no per-tier split to report.
+    fn decode_mixed(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slots: &[usize],
+        tokens: &[i32],
+        positions: &[i32],
+        precision: Precision,
+        n_host: usize,
+    ) -> Result<StepRun> {
+        if n_host == 0 {
+            return self.decode(kv, slots, tokens, positions, precision);
+        }
+        assert!(n_host <= slots.len(), "host lanes exceed batch");
+        self.ensure_host()?;
+        self.host.as_mut().expect("ensured above").set_any_tier(true);
+        let res = self.decode(kv, slots, tokens, positions, precision);
+        self.host.as_mut().expect("ensured above").set_any_tier(false);
+        let mut run = res?;
+        run.host_lanes = n_host;
+        Ok(run)
     }
 }
 
@@ -539,6 +595,7 @@ impl Backend for SimBackend {
             latency: self.step_cost(&q),
             attn_dense_bytes: g.n_layers * g.layer_dense_bytes(),
             attn_touched_bytes: g.n_layers * kv.seq_touched_bytes(slot, ctx),
+            ..StepRun::default()
         })
     }
 
@@ -572,6 +629,71 @@ impl Backend for SimBackend {
             latency: self.step_cost(&q),
             attn_dense_bytes: slots.len() * g.n_layers * g.layer_dense_bytes(),
             attn_touched_bytes: touched,
+            ..StepRun::default()
+        })
+    }
+
+    /// Mixed-tier decode under the cost model: one merged batch for the
+    /// non-attention stages, the attention term split per tier. The
+    /// device keeps its step law minus the attention walk of the
+    /// trailing `n_host` lanes ([`gpusim::device_attention_seconds`] is
+    /// calibrated to isolate exactly that term); those lanes' KV bytes
+    /// are billed on the host law instead
+    /// ([`gpusim::host_attention_seconds`]), and the two tiers overlap:
+    /// iteration latency is the max, not the sum. Under `tp > 1` the
+    /// attention swap still uses the single-device law — slightly
+    /// conservative for the piggyback win, never optimistic.
+    fn decode_mixed(
+        &mut self,
+        kv: &mut KvCacheManager,
+        slots: &[usize],
+        tokens: &[i32],
+        positions: &[i32],
+        precision: Precision,
+        n_host: usize,
+    ) -> Result<StepRun> {
+        if n_host == 0 {
+            // bit-identical to the unsplit path when nothing piggybacks
+            return self.decode(kv, slots, tokens, positions, precision);
+        }
+        let n = slots.len();
+        assert!(n_host <= n, "host lanes exceed batch");
+        let n_dev = n - n_host;
+        let avg_ctx = |ps: &[i32]| {
+            (ps.iter().map(|&p| p as usize).sum::<usize>() / ps.len().max(1)).max(1)
+        };
+        let q = StepQuery {
+            kind: StepKind::Decode,
+            m: n,
+            ctx: avg_ctx(positions),
+            seqs: n,
+            format: self.fmt(precision),
+            opt: gpusim::OptLevel::Level3,
+        };
+        let t_all = self.step_cost(&q);
+        let attn_all = gpusim::device_attention_seconds(self.spec, n, avg_ctx(positions));
+        let attn_dev =
+            gpusim::device_attention_seconds(self.spec, n_dev, avg_ctx(&positions[..n_dev]));
+        let g = self.geo;
+        let mut touched = 0usize;
+        let mut host_bytes = 0usize;
+        for (i, (&slot, &pos)) in slots.iter().zip(positions).enumerate() {
+            let ctx = (pos as usize + 1).min(g.max_seq);
+            let b = g.n_layers * kv.seq_touched_bytes(slot, ctx);
+            touched += b;
+            if i >= n_dev {
+                host_bytes += b;
+            }
+        }
+        let t_host = gpusim::host_attention_seconds(g.n_layers, host_bytes);
+        let t_gpu = (t_all - attn_all + attn_dev).max(0.0);
+        Ok(StepRun {
+            logits: None,
+            latency: t_gpu.max(t_host),
+            attn_dense_bytes: n * g.n_layers * g.layer_dense_bytes(),
+            attn_touched_bytes: touched,
+            host_attn_seconds: t_host,
+            host_lanes: n_host,
         })
     }
 }

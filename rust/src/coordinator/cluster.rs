@@ -458,6 +458,7 @@ impl<B: Backend> ClusterRouter<B> {
             forced_fp8: e.controller.forced() == Some(Precision::Fp8),
             fp8_kv_blocks: e.kv.fp8_blocks(),
             host_kv_blocks: e.kv.host_blocks(),
+            host_serving_lanes: e.host_serving_requests(),
             tp_degree: e.backend.tp_degree(),
             resharding: self.resharder.resharding(i),
         }

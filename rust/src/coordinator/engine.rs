@@ -175,6 +175,9 @@ impl<B: Backend> Engine<B> {
     /// Requests waiting for KV capacity: queued for admission,
     /// mid-prefill, or preempted to the host tier — the controller's
     /// queue-pressure signal, and the router's load signal.
+    /// Host-piggybacked sequences ([`RequestState::HostDecoding`]) are
+    /// *not* waiting — they generate every iteration — so they count as
+    /// served, not queued.
     pub fn queued_requests(&self) -> usize {
         self.requests
             .iter()
@@ -183,6 +186,17 @@ impl<B: Backend> Engine<B> {
                     || r.state == RequestState::Offloaded
                     || (r.state == RequestState::Prefilling && r.remaining_prompt() > 0)
             })
+            .count()
+    }
+
+    /// Requests currently decoding over host-resident KV (piggybacked
+    /// attention). The router folds this into its replica snapshot:
+    /// host-served lanes are progress, but slower progress — a headroom
+    /// signal, not a queue signal.
+    pub fn host_serving_requests(&self) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| r.state == RequestState::HostDecoding)
             .count()
     }
 
@@ -265,10 +279,12 @@ impl<B: Backend> Engine<B> {
             .filter(|r| !r.is_finished())
             .map(|r| r.remaining_prompt())
             .sum();
-        let decoding_now = self
-            .requests
-            .iter()
-            .any(|r| r.state == RequestState::Decoding);
+        let decoding_now = self.requests.iter().any(|r| {
+            matches!(
+                r.state,
+                RequestState::Decoding | RequestState::HostDecoding
+            )
+        });
         if decoding_now {
             queue_depth += backlog_tokens / 192;
         }
@@ -364,15 +380,25 @@ impl<B: Backend> Engine<B> {
         })
     }
 
-    /// Fetch offloaded sequences back from the host tier (oldest arrival
+    /// Fetch host-resident sequences back to the device (oldest arrival
     /// first — FCFS, younger sequences never jump the fetch queue),
-    /// charging transfer latency to the engine clock.
+    /// charging transfer latency to the engine clock. Both host states
+    /// resume here: parked `Offloaded` sequences and piggybacked
+    /// `HostDecoding` ones — placement is reversible, and the device is
+    /// always the better home once `can_fetch` says there is room (the
+    /// resume-headroom margin keeps this from ping-ponging with the
+    /// preemption path).
     fn try_resume(&mut self) -> Result<()> {
         loop {
             let next = self
                 .requests
                 .iter()
-                .filter(|r| r.state == RequestState::Offloaded)
+                .filter(|r| {
+                    matches!(
+                        r.state,
+                        RequestState::Offloaded | RequestState::HostDecoding
+                    )
+                })
                 .min_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap())
                 .map(|r| {
                     (
@@ -419,12 +445,15 @@ impl<B: Backend> Engine<B> {
             return Ok(());
         }
         // bound preemption churn: one admission preemption wave in flight
-        // at a time, and never down to a single running sequence
-        if self
-            .requests
-            .iter()
-            .any(|r| r.state == RequestState::Offloaded)
-        {
+        // at a time (host-piggybacked sequences count — they are a wave
+        // still on the host tier), and never down to a single running
+        // sequence
+        if self.requests.iter().any(|r| {
+            matches!(
+                r.state,
+                RequestState::Offloaded | RequestState::HostDecoding
+            )
+        }) {
             return Ok(());
         }
         // preempt only when the freed blocks can actually complete the
@@ -492,11 +521,19 @@ impl<B: Backend> Engine<B> {
             .and_then(|r| r.slot)
             .expect("offload victim without kv seq");
         // the span covers host residency including both transfers:
-        // preemption start → post-fetch resume (closed in `try_resume`)
+        // preemption start → post-fetch resume (closed in `try_resume`,
+        // or at finish for sequences that complete on the host)
         trace::begin(self.trace_track, Kind::Offload, self.now, id, 0);
         let dt = self.kv.offload_sequence(seq)?;
         self.now += dt;
-        self.request_mut(id).state = RequestState::Offloaded;
+        // the placement decision: with piggybacking on, an evicted
+        // sequence keeps decoding over its host-resident blocks instead
+        // of parking until a resume transfer fits
+        self.request_mut(id).state = if self.kv.policy().host_piggyback {
+            RequestState::HostDecoding
+        } else {
+            RequestState::Offloaded
+        };
         Ok(())
     }
 
@@ -660,6 +697,7 @@ impl<B: Backend> Engine<B> {
             latency,
             attn_dense_bytes,
             attn_touched_bytes,
+            ..
         } = self
             .backend
             .prefill(&mut self.kv, slot, start_pos, &tokens, precision)?;
@@ -706,12 +744,34 @@ impl<B: Backend> Engine<B> {
 
     /// Execute one decode iteration; returns the batch's worst
     /// per-sequence inter-token gap (the iteration's TPOT sample).
+    ///
+    /// The batch is tier-agnostic: device-resident and host-piggybacked
+    /// lanes form one merged batch for the non-attention stages, ordered
+    /// device-first so the backend's [`Backend::decode_mixed`] contract
+    /// (host lanes are the batch tail) holds. With piggybacking off the
+    /// partition is the identity and `n_host == 0` — `decode_mixed`
+    /// then *is* `decode`, bit for bit.
     fn run_decode(
         &mut self,
         ids: &[u64],
         precision: Precision,
         metrics: &mut Metrics,
     ) -> Result<f64> {
+        // tier partition (stable within each tier)
+        let mut order: Vec<u64> = Vec::with_capacity(ids.len());
+        let mut host_tail: Vec<u64> = Vec::new();
+        for &id in ids {
+            let r = self.requests.iter().find(|r| r.id == id).unwrap();
+            if r.state == RequestState::HostDecoding {
+                host_tail.push(id);
+            } else {
+                order.push(id);
+            }
+        }
+        let n_host = host_tail.len();
+        order.extend(host_tail);
+        let ids: &[u64] = &order;
+
         let mut slots = Vec::with_capacity(ids.len());
         let mut tokens = Vec::with_capacity(ids.len());
         let mut positions = Vec::with_capacity(ids.len());
@@ -727,11 +787,30 @@ impl<B: Backend> Engine<B> {
             latency,
             attn_dense_bytes,
             attn_touched_bytes,
-        } = self
-            .backend
-            .decode(&mut self.kv, &slots, &tokens, &positions, precision)?;
+            host_attn_seconds,
+            host_lanes,
+        } = self.backend.decode_mixed(
+            &mut self.kv,
+            &slots,
+            &tokens,
+            &positions,
+            precision,
+            n_host,
+        )?;
         self.now += latency;
         metrics.observe_attn(attn_dense_bytes, attn_touched_bytes);
+        if host_lanes > 0 {
+            metrics.observe_host_decode(host_lanes, host_attn_seconds);
+            if trace::enabled() {
+                trace::instant(
+                    self.trace_track,
+                    Kind::HostStep,
+                    self.now,
+                    0,
+                    host_lanes as i64,
+                );
+            }
+        }
         // true per-sequence TPOT: gap since that sequence's previous token
         // (includes time spent waiting on other iterations)
         let gaps: Vec<f64> = ids
@@ -756,6 +835,21 @@ impl<B: Backend> Engine<B> {
                 None => 0,
             };
             let max_seq = self.kv.geo.max_seq;
+            // a lane finishing on the host tier never pays its resume
+            // transfer: its blocks are discarded in place at release.
+            // Credit the avoided PCIe time before the state flips (the
+            // estimate needs the still-offloaded block table).
+            let was_host = self
+                .requests
+                .iter()
+                .find(|r| r.id == id)
+                .map(|r| r.state == RequestState::HostDecoding)
+                .unwrap_or(false);
+            let avoided = if was_host {
+                self.kv.resume_transfer_estimate(slots[i])
+            } else {
+                0.0
+            };
             let r = self.request_mut(id);
             r.generated.push(tok);
             r.last_token_at = Some(now);
@@ -770,23 +864,42 @@ impl<B: Backend> Engine<B> {
                     FinishReason::Length
                 });
                 r.finished_at = Some(now);
+                if was_host {
+                    metrics.credit_avoided_transfer(avoided);
+                    trace::end(self.trace_track, Kind::Offload, now, id, 0);
+                }
                 trace::end(self.trace_track, Kind::Decode, now, id, 0);
                 trace::instant(self.trace_track, Kind::Completion, now, id, 0);
             }
         }
-        // grow each still-decoding sequence's KV to cover its next token;
-        // preemption mid-loop may flip later entries to Offloaded (their
-        // growth then happens at resume time), so re-read states
+        // grow each still-running sequence's KV to cover its next token;
+        // preemption mid-loop may flip later entries off the device
+        // (their growth then happens at resume time — or right here, on
+        // the host tier, when they piggyback), so re-read states
         for &id in ids {
             let (state, slot, ctx) = {
                 let r = self.requests.iter().find(|r| r.id == id).unwrap();
                 (r.state, r.slot, r.context_len())
             };
-            if state != RequestState::Decoding {
-                continue;
-            }
             let new_len = ctx.min(self.kv.geo.max_seq);
-            self.grow_or_preempt(id, slot.expect("decoding request without slot"), new_len)?;
+            match state {
+                RequestState::Decoding => {
+                    self.grow_or_preempt(
+                        id,
+                        slot.expect("decoding request without slot"),
+                        new_len,
+                    )?;
+                }
+                RequestState::HostDecoding => {
+                    // host growth: no device budget involved, billed as
+                    // write-through transfer on the virtual clock
+                    let dt = self
+                        .kv
+                        .grow_on_host(slot.expect("decoding request without slot"), new_len)?;
+                    self.now += dt;
+                }
+                _ => {}
+            }
         }
         Ok(worst)
     }
@@ -818,6 +931,8 @@ mod tests {
         vocab: usize,
         pub prefills: usize,
         pub decodes: usize,
+        /// Iterations that carried at least one host-piggybacked lane.
+        pub host_decodes: usize,
     }
 
     impl FakeBackend {
@@ -839,6 +954,7 @@ mod tests {
                 vocab: 64,
                 prefills: 0,
                 decodes: 0,
+                host_decodes: 0,
             }
         }
 
@@ -890,6 +1006,23 @@ mod tests {
                 latency: self.latency,
                 ..StepRun::default()
             })
+        }
+        fn decode_mixed(
+            &mut self,
+            kv: &mut KvCacheManager,
+            slots: &[usize],
+            tokens: &[i32],
+            positions: &[i32],
+            p: Precision,
+            n_host: usize,
+        ) -> Result<StepRun> {
+            let mut run = self.decode(kv, slots, tokens, positions, p)?;
+            if n_host > 0 {
+                self.host_decodes += 1;
+                run.host_lanes = n_host;
+                run.host_attn_seconds = n_host as f64 * 1e-4;
+            }
+            Ok(run)
         }
     }
 
@@ -1075,6 +1208,68 @@ mod tests {
             demote > base,
             "fp8 demotion must admit more concurrently: {demote} !> {base}"
         );
+    }
+
+    #[test]
+    fn piggybacked_sequences_keep_decoding_on_host() {
+        // same pressure shape as `preempts_by_offload_instead_of_stalling`
+        // but with piggybacking on: the evicted sequence must keep
+        // generating over host blocks instead of parking for a resume
+        let mut e = Engine::new(
+            FakeBackend::with_blocks(0.001, 4),
+            EngineConfig {
+                policy: PrecisionPolicy::Fp16Only,
+                physical_kv: false,
+                kv: KvPressureConfig::piggyback(),
+                ..Default::default()
+            },
+        );
+        let reqs: Vec<Request> = (0..2)
+            .map(|i| Request::new(i, vec![1; 8], 20, 0.0))
+            .collect();
+        let report = e.run(reqs).unwrap();
+        assert_eq!(report.metrics.completed, 2);
+        assert_eq!(report.metrics.total_output_tokens, 40);
+        assert!(
+            e.backend.host_decodes > 0,
+            "no iteration ever carried a host lane"
+        );
+        assert!(report.metrics.host_piggybacked_steps > 0);
+        assert!(report.metrics.host_attn_seconds > 0.0);
+        assert_eq!(e.kv.free_blocks(), 4, "all device blocks released");
+        assert_eq!(e.kv.host_blocks(), 0, "host tier drained at completion");
+    }
+
+    #[test]
+    fn piggyback_disabled_is_bit_identical_to_the_seed_path() {
+        // the refactored pipeline with piggybacking off must reproduce
+        // the legacy run exactly: same decode count, same clock, same
+        // tokens — decode_mixed(n_host=0) is decode
+        let run = || {
+            let mut e = Engine::new(
+                FakeBackend::with_blocks(0.001, 4),
+                EngineConfig {
+                    policy: PrecisionPolicy::Fp16Only,
+                    physical_kv: false,
+                    ..Default::default()
+                },
+            );
+            let reqs: Vec<Request> = (0..2)
+                .map(|i| Request::new(i, vec![1; 8], 20, 0.0))
+                .collect();
+            let report = e.run(reqs).unwrap();
+            (
+                report.iterations,
+                e.backend.decodes,
+                e.backend.host_decodes,
+                e.now().to_bits(),
+                report.metrics.total_output_tokens,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert_eq!(a.2, 0, "no host lanes with piggybacking off");
     }
 
     #[test]

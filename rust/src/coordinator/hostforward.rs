@@ -103,6 +103,12 @@ pub struct HostForward {
     modes: BTreeMap<String, Vec<ModeLayer>>,
     gemm: GemmEngine,
     attn: AttnEngine,
+    /// When set, attention walks lanes on **either tier**
+    /// ([`AttnEngine::attend_any_tier`]) so host-piggybacked lanes
+    /// decode over their host-resident blocks in place. Off by default:
+    /// the device-only entry keeps its offloaded-lane panic as an
+    /// invariant check for ordinary steps.
+    any_tier: bool,
 }
 
 impl HostForward {
@@ -163,7 +169,16 @@ impl HostForward {
             modes: BTreeMap::new(),
             gemm,
             attn,
+            any_tier: false,
         })
+    }
+
+    /// Toggle the any-tier attention walk for subsequent forwards. The
+    /// backend flips this on only for mixed-tier decode batches; lane
+    /// payloads are tier-invariant, so device-resident lanes produce
+    /// bit-identical output either way.
+    pub fn set_any_tier(&mut self, any_tier: bool) {
+        self.any_tier = any_tier;
     }
 
     /// Prepare (and cache) one mode's linear operands. `forward` calls
@@ -437,7 +452,11 @@ impl HostForward {
                     positions: lane.positions,
                 })
                 .collect();
-            stats.merge(self.attn.attend(kv, i, &attn_lanes, &mut ctx_hm));
+            stats.merge(if self.any_tier {
+                self.attn.attend_any_tier(kv, i, &attn_lanes, &mut ctx_hm)
+            } else {
+                self.attn.attend(kv, i, &attn_lanes, &mut ctx_hm)
+            });
             // [lane, H, T, Dh] -> token rows [M, D]
             let mut ctx = Tensor2::zeros(mtot, d);
             for li in 0..n {

@@ -76,6 +76,20 @@ pub struct Metrics {
     /// at stored precision (FP8 blocks count roughly half). Summed over
     /// merge.
     pub attn_touched_bytes: usize,
+    // ---- host-piggyback counters (mirrored from StepRun / the engine) ----
+    /// Decode iterations that carried at least one host-piggybacked
+    /// attention lane. Summed over merge.
+    pub host_piggybacked_steps: usize,
+    /// Cumulative host-piggybacked lanes served (lanes × iterations).
+    /// Summed over merge.
+    pub host_lanes_served: usize,
+    /// Virtual-clock seconds the host tier spent serving piggybacked
+    /// attention (the sim backend's host cost law). Summed over merge.
+    pub host_attn_seconds: f64,
+    /// PCIe transfer seconds avoided by sequences that finished on the
+    /// host tier (their resume fetch never happened; blocks were
+    /// discarded in place). Summed over merge.
+    pub host_transfer_seconds_avoided: f64,
 }
 
 impl Metrics {
@@ -199,6 +213,20 @@ impl Metrics {
         1.0 - self.attn_touched_bytes as f64 / self.attn_dense_bytes as f64
     }
 
+    /// Accumulate one mixed-tier decode iteration's host-lane counters
+    /// (from `StepRun`). Called only when the iteration actually carried
+    /// host lanes.
+    pub fn observe_host_decode(&mut self, host_lanes: usize, host_attn_s: f64) {
+        self.host_piggybacked_steps += 1;
+        self.host_lanes_served += host_lanes;
+        self.host_attn_seconds += host_attn_s;
+    }
+
+    /// Credit the resume transfer a host-finishing sequence never paid.
+    pub fn credit_avoided_transfer(&mut self, seconds: f64) {
+        self.host_transfer_seconds_avoided += seconds;
+    }
+
     /// Mirror the autopilot's per-replica dwell/switch accounting (see
     /// `coordinator::autopilot::ModeStats`; passed as plain values to
     /// keep this module's dependencies one-directional).
@@ -244,6 +272,14 @@ impl Metrics {
         r.set_float("shard.repartition_s", Sum, self.reshard_repartition_s);
         r.set_int("attn.dense_bytes", Sum, self.attn_dense_bytes as u64);
         r.set_int("attn.touched_bytes", Sum, self.attn_touched_bytes as u64);
+        r.set_int("host.piggybacked_steps", Sum, self.host_piggybacked_steps as u64);
+        r.set_int("host.lanes_served", Sum, self.host_lanes_served as u64);
+        r.set_float("host.attn_s", Sum, self.host_attn_seconds);
+        r.set_float(
+            "host.transfer_s_avoided",
+            Sum,
+            self.host_transfer_seconds_avoided,
+        );
         r
     }
 
@@ -271,6 +307,10 @@ impl Metrics {
         self.reshard_repartition_s = r.float("shard.repartition_s");
         self.attn_dense_bytes = r.int("attn.dense_bytes") as usize;
         self.attn_touched_bytes = r.int("attn.touched_bytes") as usize;
+        self.host_piggybacked_steps = r.int("host.piggybacked_steps") as usize;
+        self.host_lanes_served = r.int("host.lanes_served") as usize;
+        self.host_attn_seconds = r.float("host.attn_s");
+        self.host_transfer_seconds_avoided = r.float("host.transfer_s_avoided");
     }
 
     /// Fold another replica's metrics into this one (cluster aggregation).
@@ -463,6 +503,23 @@ mod tests {
         assert_eq!(m.attn_touched_bytes, 2400);
         assert!((m.attn_gather_savings() - 0.4).abs() < 1e-12);
         assert_eq!(Metrics::new().attn_gather_savings(), 0.0);
+    }
+
+    #[test]
+    fn host_piggyback_counters_merge_by_sum() {
+        let mut a = Metrics::new();
+        a.observe_host_decode(2, 0.001);
+        a.observe_host_decode(1, 0.0005);
+        a.credit_avoided_transfer(0.01);
+        let mut b = Metrics::new();
+        b.observe_host_decode(4, 0.002);
+        let mut m = Metrics::new();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.host_piggybacked_steps, 3);
+        assert_eq!(m.host_lanes_served, 7);
+        assert!((m.host_attn_seconds - 0.0035).abs() < 1e-12);
+        assert!((m.host_transfer_seconds_avoided - 0.01).abs() < 1e-12);
     }
 
     #[test]

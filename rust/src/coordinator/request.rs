@@ -15,6 +15,12 @@ pub enum RequestState {
     /// Admitted, but its KV blocks were preempted to the host tier; the
     /// engine fetches it back (FCFS) before it decodes again.
     Offloaded,
+    /// Generating tokens over **host-resident** KV blocks (attention
+    /// piggybacked on the host tier instead of waiting for a resume
+    /// transfer). Only entered when the policy enables piggybacking;
+    /// promoted back to [`RequestState::Decoding`] when device blocks
+    /// free up.
+    HostDecoding,
     /// Done (completed, or evicted on error).
     Finished,
 }

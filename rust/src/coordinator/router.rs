@@ -65,6 +65,11 @@ pub struct ReplicaSnapshot {
     /// Blocks preempted to the replica's host tier (latency debt: each
     /// one implies a pending fetch before its sequence decodes again).
     pub host_kv_blocks: usize,
+    /// Sequences currently decoding over host-resident KV (attention
+    /// piggybacked). Progress, but slow-lane progress: each one drags
+    /// the batch's TPOT toward the host attention law, so the router
+    /// discounts replicas serving many of them.
+    pub host_serving_lanes: usize,
     /// Active tensor-parallel degree (1 = unsharded).
     pub tp_degree: usize,
     /// Replica inside a reshard window (draining or repartitioning) —
@@ -98,6 +103,10 @@ pub fn slo_headroom(s: &ReplicaSnapshot) -> f64 {
         - if s.forced_fp8 { 0.25 } else { 0.0 }
         - 0.3 * host_debt
         - 0.1 * fp8_debt
+        // host-piggybacked lanes are served, not queued, so they weigh
+        // less than a queued request — but more than nothing: they hold
+        // the decode batch on the slower host attention law
+        - 0.15 * s.host_serving_lanes as f64
         // a resharding replica admits nothing until its window closes;
         // the penalty dwarfs every other term so both the router and the
         // autopilot's ladder ordering treat it as the worst target
@@ -191,6 +200,7 @@ mod tests {
             forced_fp8: false,
             fp8_kv_blocks: 0,
             host_kv_blocks: 0,
+            host_serving_lanes: 0,
             tp_degree: 1,
             resharding: false,
         }
@@ -287,5 +297,22 @@ mod tests {
         let mut fp8_only = clean;
         fp8_only.fp8_kv_blocks = 16;
         assert_eq!(r.pick(&[hosty, fp8_only]), 1);
+    }
+
+    #[test]
+    fn slo_headroom_discounts_host_serving_lanes() {
+        let mut r = Router::new(RoutingPolicy::SloHeadroom);
+        // all else equal, a replica piggybacking lanes on its host tier
+        // loses the tie — but a lane weighs less than a queued request
+        let clean = snap(32, 64, 2, 0.010);
+        let mut piggy = clean;
+        piggy.host_serving_lanes = 2;
+        assert_eq!(r.pick(&[piggy, clean]), 1);
+        let mut queuey = clean;
+        queuey.queued_requests = 2;
+        assert!(
+            slo_headroom(&piggy) > slo_headroom(&queuey),
+            "a served host lane must score above a queued request"
+        );
     }
 }

@@ -108,10 +108,20 @@ impl Scheduler {
             }
         }
 
-        // 3. decode everything running (round-robin window if over cap)
+        // 3. decode everything running (round-robin window if over cap).
+        // The decode set is tier-agnostic: host-piggybacked sequences
+        // (`HostDecoding`) batch together with device-resident ones —
+        // the engine partitions the batch by tier when it runs it. The
+        // state only exists with piggybacking enabled, so disabled runs
+        // plan byte-identically to the pre-piggyback scheduler.
         let decoding: Vec<RequestId> = requests
             .iter()
-            .filter(|r| r.state == RequestState::Decoding)
+            .filter(|r| {
+                matches!(
+                    r.state,
+                    RequestState::Decoding | RequestState::HostDecoding
+                )
+            })
             .map(|r| r.id)
             .collect();
         if decoding.is_empty() {
@@ -223,6 +233,22 @@ mod tests {
             s.plan(&requests, &k),
             IterationPlan::Decode { ids: vec![1] },
             "host-resident sequences must wait for their fetch"
+        );
+    }
+
+    #[test]
+    fn host_decoding_requests_join_the_decode_batch() {
+        let mut s = Scheduler::new(vec![8], 8);
+        let k = kv(64);
+        let requests = vec![
+            req(1, RequestState::Decoding, 8, 0.0),
+            req(2, RequestState::HostDecoding, 8, 0.1),
+            req(3, RequestState::Offloaded, 8, 0.2),
+        ];
+        assert_eq!(
+            s.plan(&requests, &k),
+            IterationPlan::Decode { ids: vec![1, 2] },
+            "piggybacked lanes decode; plain offloaded ones still wait"
         );
     }
 

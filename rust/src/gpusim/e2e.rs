@@ -22,6 +22,45 @@ use super::search;
 /// setup).
 pub const ITER_OVERHEAD_S: f64 = 250e-6;
 
+/// Effective host (CPU DRAM) bandwidth available to a piggybacked
+/// attention walk, bytes/s — DDR5-class, an order of magnitude under
+/// H100 HBM. Host attention is bandwidth-bound just like the device
+/// law; only the roofline moves.
+pub const HOST_MEM_BW: f64 = 120e9;
+/// Achievable fraction of [`HOST_MEM_BW`] for the strided block walk
+/// (the host analogue of `h100::HBM_EFF`).
+pub const HOST_MEM_EFF: f64 = 0.6;
+/// Per-layer dispatch overhead of the host attention walk, seconds —
+/// thread wakeup + block-table chase, far below a CUDA kernel launch.
+pub const HOST_ATTN_LAUNCH_S: f64 = 2e-6;
+
+/// Latency of serving one decode iteration's attention for the
+/// host-resident lanes: stream `kv_bytes` (the touched bytes of every
+/// host lane summed over all layers, at stored precision) at the host
+/// roofline, plus one dispatch per layer. Zero host lanes cost zero —
+/// the piggyback-disabled path adds exactly nothing.
+pub fn host_attention_seconds(n_layers: usize, kv_bytes: usize) -> f64 {
+    if kv_bytes == 0 {
+        return 0.0;
+    }
+    n_layers as f64 * HOST_ATTN_LAUNCH_S + kv_bytes as f64 / (HOST_MEM_BW * HOST_MEM_EFF)
+}
+
+/// The decode-attention term of [`step_latency_split`] in isolation:
+/// what `seqs` device lanes at mean context `ctx` pay for KV streaming
+/// and attention kernel launches. Mixed-tier batches subtract the
+/// all-lanes term and add back the device-lane term, so a batch with no
+/// host lanes reproduces the monolithic law bit for bit. Zero lanes
+/// launch nothing and cost zero.
+pub fn device_attention_seconds(spec: &ModelSpec, seqs: usize, ctx: usize) -> f64 {
+    if seqs == 0 {
+        return 0.0;
+    }
+    let kv_bytes_per_layer = (seqs * ctx * 2 * spec.kv_dim() * 2) as f64;
+    spec.n_layers as f64 * kv_bytes_per_layer / (h100::HBM_BW * h100::HBM_EFF)
+        + spec.n_layers as f64 * h100::KERNEL_OVERHEAD_S
+}
+
 /// What kind of serving step to cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum StepKind {
@@ -437,6 +476,45 @@ mod tests {
         assert!(t2 > 0.0 && t4 > t2, "more ranks cost more: {t2} vs {t4}");
         // bytes term grows with m
         assert!(allreduce_latency(512, 4096, 2) > t2);
+    }
+
+    #[test]
+    fn host_attention_law_shape() {
+        // zero host lanes add exactly nothing (the piggyback-disabled
+        // bit-identity hinges on this)
+        assert_eq!(host_attention_seconds(32, 0), 0.0);
+        // monotone in bytes, launches charged per layer
+        let a = host_attention_seconds(4, 1 << 20);
+        let b = host_attention_seconds(4, 1 << 22);
+        assert!(a > 0.0 && b > a);
+        assert!(host_attention_seconds(8, 1 << 20) > a, "more layers cost more");
+        // calibration: per byte, the host walk is much slower than the
+        // device stream (HBM vs DDR roofline)
+        let spec = zoo::find("llama31-8b").unwrap();
+        let bytes_per_layer = 8 * 512 * 2 * spec.kv_dim() * 2;
+        let host = host_attention_seconds(spec.n_layers, spec.n_layers * bytes_per_layer);
+        let dev = device_attention_seconds(spec, 8, 512);
+        assert!(host > dev, "host attention must be the slower tier: {host} vs {dev}");
+    }
+
+    #[test]
+    fn device_attention_term_matches_the_step_law() {
+        // the isolated term must track the attention slice of the
+        // monolithic decode law: its bytes component equals the law's
+        // KV-streaming expression exactly, so subtract-and-add-back in
+        // the mixed-tier backend preserves the no-host-lane cost
+        let spec = zoo::find("llama31-8b").unwrap();
+        for (seqs, ctx) in [(1usize, 64usize), (8, 512), (64, 1024)] {
+            let kv_term = (seqs * ctx * 2 * spec.kv_dim() * 2) as f64 * spec.n_layers as f64
+                / (h100::HBM_BW * h100::HBM_EFF);
+            let isolated = device_attention_seconds(spec, seqs, ctx)
+                - spec.n_layers as f64 * h100::KERNEL_OVERHEAD_S;
+            assert!(
+                (isolated - kv_term).abs() <= kv_term * 1e-12,
+                "seqs={seqs} ctx={ctx}: {isolated} vs {kv_term}"
+            );
+        }
+        assert_eq!(device_attention_seconds(spec, 0, 4096), 0.0);
     }
 
     #[test]

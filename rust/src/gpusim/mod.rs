@@ -27,6 +27,7 @@ pub use gemm::{gemm_latency, GemmQuery, WeightFormat};
 pub use kernel::{KernelConfig, OptLevel, Scheduler};
 pub use search::{best_config, best_latency, config_space};
 pub use e2e::{
-    allreduce_latency, step_latency, step_latency_split, step_latency_split_tp,
-    step_latency_tp, StepKind, StepQuery,
+    allreduce_latency, device_attention_seconds, host_attention_seconds, step_latency,
+    step_latency_split, step_latency_split_tp, step_latency_tp, StepKind, StepQuery,
+    HOST_ATTN_LAUNCH_S, HOST_MEM_BW, HOST_MEM_EFF,
 };

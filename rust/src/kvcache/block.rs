@@ -149,6 +149,40 @@ impl BlockPool {
         }
     }
 
+    /// Allocate one f32 block **directly on the host tier**: it consumes
+    /// no device units (host capacity is not budgeted here — the
+    /// [`HostTier`](super::offload::HostTier) ledger tracks residency),
+    /// so this never fails on device pressure. Host-piggybacked decode
+    /// grows its context through this path.
+    pub fn alloc_on_host(&mut self) -> BlockId {
+        let payload = if self.physical {
+            BlockPayload::F32 {
+                k: vec![0.0; self.block_elems],
+                v: vec![0.0; self.block_elems],
+            }
+        } else {
+            BlockPayload::Acct
+        };
+        self.n_host += 1;
+        match self.free.pop() {
+            Some(id) => {
+                let b = &mut self.blocks[id as usize];
+                b.payload = payload;
+                b.precision = BlockPrecision::F32;
+                b.on_host = true;
+                id
+            }
+            None => {
+                self.blocks.push(Block {
+                    payload,
+                    precision: BlockPrecision::F32,
+                    on_host: true,
+                });
+                (self.blocks.len() - 1) as BlockId
+            }
+        }
+    }
+
     /// Return a block to the free list, refunding its current units.
     pub fn release(&mut self, id: BlockId) {
         let b = &mut self.blocks[id as usize];
@@ -243,6 +277,21 @@ mod tests {
         p.demote(a);
         assert_eq!(p.free_units(), 1);
         assert!(p.alloc().is_none());
+    }
+
+    #[test]
+    fn host_alloc_charges_no_device_units() {
+        let mut p = BlockPool::new(1, 8, false);
+        let _dev = p.alloc().unwrap();
+        assert!(p.alloc().is_none(), "device budget exhausted");
+        let h = p.alloc_on_host();
+        assert_eq!(p.host_blocks(), 1);
+        assert_eq!(p.used_units(), 2, "host block billed no device units");
+        // fetching it to the device later goes through set_host like any
+        // other host block — but only when the budget allows
+        p.release(h);
+        assert_eq!(p.host_blocks(), 0);
+        assert_eq!(p.used_units(), 2);
     }
 
     #[test]

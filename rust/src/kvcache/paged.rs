@@ -213,8 +213,10 @@ impl PagedKvCache {
     }
 
     /// Borrow block `bi` of `seq`'s table for an in-place read. Panics
-    /// on host-resident blocks — offloaded sequences are never
-    /// scheduled, the same contract [`Self::gather_seq`] asserts.
+    /// on host-resident blocks — device-scheduled sequences never read
+    /// the host plane, the same contract [`Self::gather_seq`] asserts.
+    /// Host attention piggybacking reads through
+    /// [`Self::seq_block_kv_any_tier`] instead.
     pub fn seq_block_kv(&self, seq: usize, bi: usize) -> BlockKv<'_> {
         let id = self.seq(seq).table[bi];
         let b = &self.pool.blocks[id as usize];
@@ -222,6 +224,20 @@ impl PagedKvCache {
             !b.on_host,
             "block-native read of host block (seq {seq}, block {bi})"
         );
+        self.block_kv_of(b)
+    }
+
+    /// Borrow block `bi` of `seq`'s table for an in-place read on
+    /// **either tier**. Host-resident payloads stay byte-identical to
+    /// their device form (offload moves accounting, not contents), so a
+    /// host-side attention walk reads the same values a resumed device
+    /// walk would — the piggybacking correctness contract.
+    pub fn seq_block_kv_any_tier(&self, seq: usize, bi: usize) -> BlockKv<'_> {
+        let id = self.seq(seq).table[bi];
+        self.block_kv_of(&self.pool.blocks[id as usize])
+    }
+
+    fn block_kv_of<'a>(&self, b: &'a super::block::Block) -> BlockKv<'a> {
         match &b.payload {
             super::block::BlockPayload::Acct => BlockKv::Acct,
             super::block::BlockPayload::F32 { k, v } => BlockKv::F32 { k, v },
@@ -515,7 +531,12 @@ impl PagedKvCache {
     /// Would a fetch of this offloaded sequence fit right now? Includes
     /// one f32 block of headroom so the first post-resume grow cannot
     /// immediately strand it (waived when the sequence alone fills the
-    /// budget).
+    /// budget), plus the policy's resume margin
+    /// (`resume_headroom_mult ×` the stored units) so a resume under
+    /// sustained pressure does not ping-pong straight back to the host
+    /// — the anti-thrash rule. The margin is likewise waived when it
+    /// could never be met (it would otherwise strand big sequences on
+    /// the host forever).
     pub fn can_fetch(&self, seq: usize) -> bool {
         let s = self.seq(seq);
         if !s.offloaded {
@@ -527,7 +548,29 @@ impl PagedKvCache {
         } else {
             0
         };
-        self.pool.free_units() >= units + headroom
+        let margin = (units as f64 * self.policy.resume_headroom_mult).ceil() as usize;
+        let want = if units + headroom + margin <= self.pool.total_units() {
+            units + headroom + margin
+        } else {
+            units + headroom
+        };
+        self.pool.free_units() >= want
+    }
+
+    /// The transfer bill a resume of this offloaded sequence would pay
+    /// right now (the cost host-piggybacked decode *avoids* when the
+    /// sequence finishes without ever fetching back).
+    pub fn resume_transfer_estimate(&self, seq: usize) -> f64 {
+        let s = self.seq(seq);
+        if !s.offloaded {
+            return 0.0;
+        }
+        let bytes: usize = s
+            .table
+            .iter()
+            .map(|&id| self.block_bytes(self.pool.blocks[id as usize].precision))
+            .sum();
+        self.host.transfer_seconds(bytes)
     }
 
     /// Device units this sequence's blocks occupy at their stored
@@ -591,6 +634,40 @@ impl PagedKvCache {
         self.stats.fetch_events += 1;
         self.stats.transfer_seconds += dt;
         self.note_utilization();
+        Ok(dt)
+    }
+
+    /// Grow an **offloaded** sequence's context on the host plane —
+    /// host-piggybacked decode appending tokens past its held blocks.
+    /// New blocks allocate directly on the host tier (no device budget,
+    /// so growth never preempts anyone), and each one bills the
+    /// write-through transfer of its K/V bytes on the virtual clock.
+    /// Returns the seconds to charge.
+    pub fn grow_on_host(&mut self, seq: usize, new_len: usize) -> Result<f64> {
+        if new_len > self.geo.max_seq {
+            bail!(
+                "sequence length {new_len} exceeds max_seq {}",
+                self.geo.max_seq
+            );
+        }
+        if !self.seq(seq).offloaded {
+            bail!("grow_on_host on device-resident seq {seq}");
+        }
+        let need = self.geo.blocks_for(new_len);
+        let have = self.seq(seq).table.len();
+        let mut dt = 0.0;
+        if need > have {
+            let extra = need - have;
+            for _ in 0..extra {
+                let id = self.pool.alloc_on_host();
+                self.seq_mut(seq).table.push(id);
+            }
+            let bytes = extra * self.block_bytes(BlockPrecision::F32);
+            dt = self.host.deposit(extra, bytes);
+            self.stats.transfer_seconds += dt;
+        }
+        self.seq_mut(seq).len = new_len;
+        self.touch(seq);
         Ok(dt)
     }
 
@@ -996,8 +1073,11 @@ mod tests {
 
     #[test]
     fn can_fetch_requires_device_room() {
+        // margin 0 pins the legacy resume-the-moment-it-fits rule; the
+        // anti-thrash margin has its own test below
         let mut kv = acct(KvPressureConfig {
             demote_enabled: false,
+            resume_headroom_mult: 0.0,
             ..KvPressureConfig::default()
         });
         let a = kv.allocate(32).unwrap(); // 5 blocks
@@ -1012,6 +1092,111 @@ mod tests {
         kv.release(held.pop().unwrap());
         assert!(kv.can_fetch(a), "6 free blocks fit 5 + headroom");
         kv.fetch_sequence(a).unwrap();
+    }
+
+    #[test]
+    fn resume_margin_delays_fetch_until_growth_room_exists() {
+        let mut kv = acct(KvPressureConfig {
+            demote_enabled: false,
+            resume_headroom_mult: 0.5,
+            ..KvPressureConfig::default()
+        });
+        let a = kv.allocate(32).unwrap(); // 5 blocks = 10 units stored
+        kv.grow(a, 32).unwrap();
+        kv.offload_sequence(a).unwrap();
+        let mut held = Vec::new();
+        for _ in 0..3 {
+            held.push(kv.allocate(32).unwrap());
+        }
+        // exactly-fits (10 + 2 headroom = 12 free) is no longer enough:
+        // the margin wants ceil(10 * 0.5) = 5 more units
+        kv.release(held.pop().unwrap());
+        assert_eq!(kv.free_units(), 12);
+        assert!(!kv.can_fetch(a), "margin withholds an exact-fit resume");
+        kv.release(held.pop().unwrap());
+        assert!(kv.can_fetch(a), "margin satisfied with growth room free");
+        kv.fetch_sequence(a).unwrap();
+    }
+
+    #[test]
+    fn resume_margin_is_waived_when_it_could_never_be_met() {
+        // a sequence whose stored units + margin exceed the whole budget
+        // must still be fetchable on an empty device (liveness)
+        let mut kv = acct(KvPressureConfig {
+            demote_enabled: false,
+            resume_headroom_mult: 4.0,
+            ..KvPressureConfig::default()
+        });
+        let a = kv.allocate(32).unwrap(); // 5 blocks; margin would want 40 units
+        kv.grow(a, 32).unwrap();
+        kv.offload_sequence(a).unwrap();
+        assert!(kv.can_fetch(a), "unmeetable margin is waived");
+        kv.fetch_sequence(a).unwrap();
+    }
+
+    #[test]
+    fn host_grow_extends_context_without_device_budget() {
+        let mut kv = acct(KvPressureConfig::piggyback());
+        let a = kv.allocate(16).unwrap(); // 3 blocks
+        kv.grow(a, 16).unwrap();
+        // exhaust the device so a device grow could not possibly fit
+        let mut held = Vec::new();
+        while kv.can_admit(32) {
+            held.push(kv.allocate(32).unwrap());
+        }
+        kv.offload_sequence(a).unwrap();
+        let free_before = kv.free_units();
+        let host_before = kv.host_blocks();
+        // 16 -> 32 tokens: held 3 blocks, need 4 -> one host block
+        let dt = kv.grow_on_host(a, 32).unwrap();
+        assert!(dt > 0.0, "appended block bills its write-through transfer");
+        assert_eq!(kv.host_blocks(), host_before + 1);
+        assert_eq!(kv.free_units(), free_before, "no device units consumed");
+        assert_eq!(kv.seq_len(a), 32);
+        // growth within held blocks is free
+        let dt2 = kv.grow_on_host(a, 32).unwrap();
+        assert_eq!(dt2, 0.0);
+        assert!(kv.grow_on_host(a, 33).is_err(), "max_seq still enforced");
+        // release drops the host copy: ledger and pool both drain
+        kv.release(a);
+        assert_eq!(kv.host_blocks(), 0);
+    }
+
+    #[test]
+    fn any_tier_view_reads_host_blocks_in_place() {
+        let mut kv = PagedKvCache::new(geo(), KvPressureConfig::piggyback());
+        let g = geo();
+        let (l, h, dh) = (g.n_layers, g.n_heads, g.head_dim);
+        let s = kv.allocate(8).unwrap();
+        let n = l * 8 * h * dh;
+        let nk: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let nv: Vec<f32> = nk.iter().map(|x| -x).collect();
+        kv.scatter_prefill(s, 0, 8, &nk, &nv);
+        kv.grow(s, 8).unwrap();
+        kv.offload_sequence(s).unwrap();
+        // the device-only accessor still refuses host blocks ...
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            kv.seq_block_kv(s, 0);
+        }))
+        .is_err();
+        assert!(panicked, "seq_block_kv must keep its device-only contract");
+        // ... while the any-tier view reads the payload in place
+        let BlockKv::F32 { k, .. } = kv.seq_block_kv_any_tier(s, 0) else {
+            panic!("host payload stays f32 in place");
+        };
+        assert_eq!(k[0], nk[0]);
+        // and a genuinely host-allocated block (past the held table of
+        // 1 prompt + 1 headroom block) is writable through scatter
+        let tok: Vec<f32> = (0..l * h * dh).map(|i| 5.0 + i as f32).collect();
+        let dt = kv.grow_on_host(s, 17).unwrap(); // blocks_for(17) = 3 > 2 held
+        assert!(dt > 0.0);
+        kv.scatter_decode(s, 16, &tok, &tok);
+        let BlockKv::F32 { k, .. } = kv.seq_block_kv_any_tier(s, 2) else {
+            panic!("host-grown block is f32");
+        };
+        assert_eq!(k[0], tok[0]);
+        let est = kv.resume_transfer_estimate(s);
+        assert!(est > 0.0, "a resume would pay a real transfer bill");
     }
 
     // ---- physical-store tests ---------------------------------------

@@ -41,6 +41,18 @@ pub struct KvPressureConfig {
     pub host_bw_gbps: f64,
     /// Fixed per-transfer setup latency, seconds.
     pub transfer_base_s: f64,
+    /// Serve attention for offloaded sequences directly over their
+    /// host-resident blocks (CPU-GPU attention piggybacking) instead of
+    /// parking them until a resume transfer fits. Off by default: the
+    /// engine's behavior with this disabled is bit-identical to the
+    /// pre-piggyback pipeline.
+    pub host_piggyback: bool,
+    /// Resume headroom: a fetch is only attempted once the device has
+    /// `(1 + resume_headroom_mult) ×` the sequence's stored units free,
+    /// so a resumed sequence has growth room and does not ping-pong
+    /// straight back to the host (resume thrash). `0.0` reproduces the
+    /// legacy resume-the-moment-it-fits rule.
+    pub resume_headroom_mult: f64,
 }
 
 impl Default for KvPressureConfig {
@@ -54,6 +66,8 @@ impl Default for KvPressureConfig {
             offload_enabled: true,
             host_bw_gbps: 24.0,
             transfer_base_s: 50e-6,
+            host_piggyback: false,
+            resume_headroom_mult: 0.5,
         }
     }
 }
@@ -77,6 +91,17 @@ impl KvPressureConfig {
             admission: AdmissionMode::Reserve,
             demote_enabled: true,
             offload_enabled: false,
+            ..Default::default()
+        }
+    }
+
+    /// The full paged + offload stack with host attention piggybacking
+    /// on: offloaded sequences keep decoding over their host-resident
+    /// blocks instead of stalling for a resume window. The kvcache
+    /// bench's piggyback arm.
+    pub fn piggyback() -> Self {
+        KvPressureConfig {
+            host_piggyback: true,
             ..Default::default()
         }
     }
@@ -150,6 +175,12 @@ mod tests {
         assert_eq!(full.admission, AdmissionMode::Paged);
         assert!(full.demote_enabled && full.offload_enabled);
         assert!(full.hot_tail_blocks >= 1);
+        assert!(!full.host_piggyback, "piggybacking is opt-in");
+        assert!(full.resume_headroom_mult > 0.0, "anti-thrash margin on by default");
+
+        let piggy = KvPressureConfig::piggyback();
+        assert_eq!(piggy.admission, AdmissionMode::Paged);
+        assert!(piggy.offload_enabled && piggy.host_piggyback);
     }
 
     #[test]

@@ -16,14 +16,16 @@
 //!                            replica + control plane; open in
 //!                            ui.perfetto.dev)
 //!        [--quick]           gemm/attention/autopilot/morph/parallelism/
-//!                            cluster: reduced scenario, CI budget
+//!                            cluster/kvcache: reduced scenario, CI budget
 //!        [--scale]           cluster only: the discrete-event scale arm
 //!                            (100+ replicas over a multi-hour Azure day
 //!                            slice, per-event accounting; --quick keeps
 //!                            the replica floor on a 15-min slice)
 //!        [--update-trajectory]
-//!                            gemm only: rewrite GEMM_BENCH.json from this
-//!                            run's measured GFLOP/s
+//!                            gemm: rewrite GEMM_BENCH.json from this
+//!                            run's measured GFLOP/s; attention: rewrite
+//!                            ATTN_BENCH.json from this run's measured
+//!                            effective bandwidth
 //! repro serve                TCP serving front-end on the real backend
 //!        [--addr HOST:PORT]  default 127.0.0.1:7171
 //!        [--mode dual|fp16|fp8]
@@ -98,7 +100,7 @@ fn run_one(
     gemm_opts: BenchOpts,
 ) -> anyhow::Result<Vec<Report>> {
     Ok(match exp {
-        "attention" => attnbench::attention_sweep(gemm_opts.quick)?,
+        "attention" => attnbench::attention_sweep(&gemm_opts)?,
         "autopilot" => autopilotbench::autopilot_surge(gemm_opts.quick)?,
         "morph" => morphbench::morph_frontier(gemm_opts.quick)?,
         "parallelism" => parallelismbench::parallelism_surge(gemm_opts.quick)?,
@@ -121,7 +123,7 @@ fn run_one(
                 vec![cluster::cluster_scaling()?]
             }
         }
-        "kvcache" => vec![kvcache::kvcache_pressure()?, kvcache::codec_error()],
+        "kvcache" => vec![kvcache::kvcache_pressure(gemm_opts.quick)?, kvcache::codec_error()],
         other => anyhow::bail!("unknown experiment '{other}'"),
     })
 }

@@ -66,6 +66,9 @@ pub enum Kind {
     PreEscalate,
     /// KV blocks demoted to FP8 this iteration (`arg` = block count).
     KvDemote,
+    /// Decode iteration carried host-piggybacked attention lanes
+    /// (`arg` = lane count).
+    HostStep,
 }
 
 impl Kind {
@@ -84,6 +87,7 @@ impl Kind {
             Kind::Rung => "rung",
             Kind::PreEscalate => "pre_escalate",
             Kind::KvDemote => "kv_demote",
+            Kind::HostStep => "host_step",
         }
     }
 }

@@ -1,0 +1,292 @@
+//! Property and regression tests for the host-attention piggybacking PR:
+//! the `HostTier` ledger, the resume-headroom anti-thrash margin, the
+//! host/device attention cost laws, and determinism of the piggybacked
+//! engine pipeline.
+
+use nestedfp::bench::kvcache::run_pressure;
+use nestedfp::gpusim::{
+    device_attention_seconds, host_attention_seconds, HOST_ATTN_LAUNCH_S,
+};
+use nestedfp::kvcache::{HostTier, KvGeometry, KvPressureConfig, PagedKvCache};
+use nestedfp::model::zoo;
+use nestedfp::util::prop::check_res;
+use nestedfp::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// HostTier ledger
+// ---------------------------------------------------------------------------
+
+/// One random op against the tier. Withdraw/discard amounts are bounded
+/// by what a shadow ledger says is resident, the way the paged cache
+/// only ever moves blocks it actually deposited.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Deposit(usize, usize),
+    Withdraw(usize, usize),
+    Discard(usize, usize),
+}
+
+#[derive(Debug)]
+struct LedgerCase {
+    ops: Vec<Op>,
+}
+
+fn gen_ledger(rng: &mut Pcg64) -> LedgerCase {
+    let n = 4 + (rng.next_u32() % 60) as usize;
+    // shadow state used only to keep generated ops legal
+    let (mut blocks, mut bytes) = (0usize, 0usize);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        let kind = rng.next_u32() % 3;
+        let op = if kind == 0 || blocks == 0 {
+            let b = (rng.next_u32() % 8) as usize;
+            let by = b * 1024 + (rng.next_u32() % 512) as usize;
+            blocks += b;
+            bytes += by;
+            Op::Deposit(b, by)
+        } else {
+            let b = (rng.next_u64() % (blocks as u64 + 1)) as usize;
+            let by = (rng.next_u64() % (bytes as u64 + 1)) as usize;
+            blocks -= b;
+            bytes -= by;
+            if kind == 1 {
+                Op::Withdraw(b, by)
+            } else {
+                Op::Discard(b, by)
+            }
+        };
+        ops.push(op);
+    }
+    LedgerCase { ops }
+}
+
+#[test]
+fn host_tier_ledger_never_goes_inconsistent() {
+    check_res(
+        "host-tier-ledger",
+        200,
+        gen_ledger,
+        |case: &LedgerCase| {
+            let mut t = HostTier::new(24.0, 50e-6);
+            let (mut blocks, mut bytes) = (0usize, 0usize);
+            for (i, op) in case.ops.iter().enumerate() {
+                match *op {
+                    Op::Deposit(b, by) => {
+                        let dt = t.deposit(b, by);
+                        if dt < t.transfer_seconds(0) {
+                            return Err(format!("op {i}: deposit cheaper than the base latency"));
+                        }
+                        blocks += b;
+                        bytes += by;
+                    }
+                    Op::Withdraw(b, by) => {
+                        if b > blocks || by > bytes {
+                            continue; // generator shadow drifted: skip illegal op
+                        }
+                        let dt = t.withdraw(b, by);
+                        if dt < t.transfer_seconds(0) {
+                            return Err(format!("op {i}: withdraw cheaper than the base latency"));
+                        }
+                        blocks -= b;
+                        bytes -= by;
+                    }
+                    Op::Discard(b, by) => {
+                        if b > blocks || by > bytes {
+                            continue;
+                        }
+                        t.discard(b, by);
+                        blocks -= b;
+                        bytes -= by;
+                    }
+                }
+                if t.resident_blocks() != blocks || t.resident_bytes() != bytes {
+                    return Err(format!(
+                        "op {i}: ledger ({}, {}) != shadow ({blocks}, {bytes})",
+                        t.resident_blocks(),
+                        t.resident_bytes()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn transfer_seconds_is_monotone_in_bytes() {
+    check_res(
+        "transfer-monotone",
+        300,
+        |rng: &mut Pcg64| {
+            let a = (rng.next_u64() % (1 << 30)) as usize;
+            let b = a + (rng.next_u64() % (1 << 30)) as usize;
+            let bw = 1.0 + (rng.next_u32() % 64) as f64;
+            let base = (rng.next_u32() % 1000) as f64 * 1e-6;
+            (a, b, bw, base)
+        },
+        |&(a, b, bw, base)| {
+            let t = HostTier::new(bw, base);
+            let (sa, sb) = (t.transfer_seconds(a), t.transfer_seconds(b));
+            if sa > sb {
+                return Err(format!("bytes {a} <= {b} but seconds {sa} > {sb}"));
+            }
+            if sa < base {
+                return Err(format!("transfer below the base latency: {sa} < {base}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Resume-thrash regression (the headroom margin)
+// ---------------------------------------------------------------------------
+
+fn thrash_geo() -> KvGeometry {
+    KvGeometry {
+        n_layers: 1,
+        n_heads: 1,
+        max_seq: 256,
+        head_dim: 8,
+        block_size: 16,
+        total_blocks: 8,
+    }
+}
+
+/// Drive the cache to the exact state the margin exists for: a resumed
+/// sequence whose very next grow fails because the fetch consumed the
+/// last free blocks. With `resume_headroom_mult = 0` (the legacy rule)
+/// the sequence ping-pongs straight back to the host.
+#[test]
+fn exact_fit_resume_ping_pongs_without_margin() {
+    let p0 = KvPressureConfig {
+        resume_headroom_mult: 0.0,
+        demote_enabled: false,
+        ..Default::default()
+    };
+    let mut kv = PagedKvCache::accounting_only(thrash_geo(), p0);
+    let a = kv.allocate(32).unwrap(); // 3 blocks
+    kv.grow(a, 32).unwrap();
+    let b = kv.allocate(32).unwrap(); // 3 blocks, 2 free
+    kv.grow(b, 32).unwrap();
+    kv.offload_sequence(b).unwrap(); // 5 free
+    kv.grow(a, 64).unwrap(); // 4 free
+    // legacy rule: the fetch fits (stored 3 blocks + 1 headroom == free),
+    // so the sequence resumes into a device with zero growth room left
+    assert!(kv.can_fetch(b), "margin 0 must reproduce the legacy resume");
+    kv.fetch_sequence(b).unwrap(); // 1 free
+    kv.grow(a, 80).unwrap(); // 0 free
+    // ... and its next grow strands it: straight back to the host
+    assert!(kv.grow(b, 49).is_err(), "no growth room after an exact-fit resume");
+    kv.offload_sequence(b).unwrap();
+    assert_eq!(kv.stats().offload_events, 2, "the ping-pong the margin prevents");
+}
+
+#[test]
+fn resume_headroom_margin_breaks_the_ping_pong() {
+    // identical pressure, default margin: the fetch is refused until the
+    // device has real growth room, and the resumed sequence then grows
+    // without a second offload
+    let mut kv = PagedKvCache::accounting_only(
+        thrash_geo(),
+        KvPressureConfig {
+            demote_enabled: false,
+            ..Default::default()
+        },
+    );
+    let a = kv.allocate(32).unwrap();
+    kv.grow(a, 32).unwrap();
+    let b = kv.allocate(32).unwrap();
+    kv.grow(b, 32).unwrap();
+    kv.offload_sequence(b).unwrap();
+    kv.grow(a, 64).unwrap();
+    assert!(
+        !kv.can_fetch(b),
+        "margin must hold the fetch while growth room is thin"
+    );
+    kv.grow(a, 80).unwrap();
+    assert!(!kv.can_fetch(b));
+    kv.release(a);
+    assert!(kv.can_fetch(b), "margin satisfied once real room frees");
+    kv.fetch_sequence(b).unwrap();
+    kv.grow(b, 49).unwrap(); // the grow that thrashed at margin 0
+    assert_eq!(kv.stats().offload_events, 1, "no ping-pong with the margin");
+}
+
+// ---------------------------------------------------------------------------
+// Cost laws
+// ---------------------------------------------------------------------------
+
+#[test]
+fn host_attention_law_is_monotone_and_zero_at_zero() {
+    assert_eq!(host_attention_seconds(32, 0), 0.0);
+    check_res(
+        "host-attn-monotone",
+        300,
+        |rng: &mut Pcg64| {
+            let l = 1 + (rng.next_u32() % 80) as usize;
+            let a = 1 + (rng.next_u64() % (1 << 32)) as usize;
+            let b = a + (rng.next_u64() % (1 << 32)) as usize;
+            (l, a, b)
+        },
+        |&(l, a, b)| {
+            let (sa, sb) = (host_attention_seconds(l, a), host_attention_seconds(l, b));
+            if sa > sb {
+                return Err(format!("bytes {a} <= {b} but seconds {sa} > {sb}"));
+            }
+            // the launch term scales with layer count
+            if host_attention_seconds(l + 1, a) <= sa {
+                return Err("extra layer must add launch latency".into());
+            }
+            if sa < l as f64 * HOST_ATTN_LAUNCH_S {
+                return Err(format!("below the launch floor: {sa}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn device_attention_law_matches_the_host_law_shape() {
+    let spec = zoo::find("llama31-8b").expect("llama31-8b in the zoo");
+    assert_eq!(device_attention_seconds(spec, 0, 512), 0.0);
+    // both laws are linear-plus-launch; the device one must be far
+    // cheaper per byte (HBM vs host DRAM) — the gap piggybacking trades
+    // against the resume transfer
+    let dev = device_attention_seconds(spec, 4, 512);
+    let kv_bytes = spec.n_layers * 4 * 512 * 2 * spec.kv_dim() * 2;
+    let host = host_attention_seconds(spec.n_layers, kv_bytes);
+    assert!(dev > 0.0 && host > dev, "host serve must cost more than device: {host} !> {dev}");
+    // monotone in batch
+    assert!(device_attention_seconds(spec, 8, 512) > dev);
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn piggybacked_pipeline_is_deterministic() {
+    // the tier-agnostic decode pipeline with host lanes enabled must be
+    // exactly reproducible on the virtual clock — same workload, same
+    // bits, twice
+    let run = || run_pressure(KvPressureConfig::piggyback(), 16, 2.0, 384).unwrap();
+    let (r1, s1) = run();
+    let (r2, s2) = run();
+    assert_eq!(r1.metrics.completed, r2.metrics.completed);
+    assert_eq!(r1.metrics.total_output_tokens, r2.metrics.total_output_tokens);
+    assert_eq!(
+        r1.metrics.host_piggybacked_steps,
+        r2.metrics.host_piggybacked_steps
+    );
+    assert_eq!(
+        r1.metrics.host_attn_seconds.to_bits(),
+        r2.metrics.host_attn_seconds.to_bits()
+    );
+    assert_eq!(
+        r1.metrics.host_transfer_seconds_avoided.to_bits(),
+        r2.metrics.host_transfer_seconds_avoided.to_bits()
+    );
+    assert_eq!(s1.offload_events, s2.offload_events);
+    assert_eq!(s1.transfer_seconds.to_bits(), s2.transfer_seconds.to_bits());
+}
